@@ -1,0 +1,55 @@
+//! Quickstart: load the tiny σ-MoE artifacts, train for a handful of
+//! steps on the synthetic WikiText-like corpus, evaluate, and sample a
+//! few tokens — the whole public API in ~60 lines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use sigma_moe::coordinator::{Metrics, Trainer};
+use sigma_moe::data;
+use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::Result;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    println!("PJRT platform: {}", client.platform());
+
+    let dir = sigma_moe::artifacts_root().join("tiny-moe");
+    let bundle = ModelBundle::load(&client, &dir)?;
+    let m = &bundle.manifest;
+    println!(
+        "model: {} ({} layers, d_model {}, {} experts x G={} with K={})",
+        m.preset, m.model.n_layers, m.model.d_model, m.model.n_experts,
+        m.model.group_size, m.model.expert_k
+    );
+
+    // --- train ---
+    let mut trainer = Trainer::new(&bundle, 42)?;
+    let mut batcher = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 42)?;
+    let mut metrics = Metrics::new(m.batch_size * m.model.context);
+    trainer.train(&mut batcher, 60, |so| {
+        metrics.observe(so).unwrap();
+        if so.step % 10 == 0 {
+            println!("{}", metrics.report(so));
+        }
+    })?;
+
+    // --- evaluate with the 4x-context XL memory ---
+    let mut eval_batcher = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 7)?;
+    let ev = trainer.evaluate(&mut eval_batcher, 8)?;
+    println!("eval: nll {:.4}  ppl {:.2}", ev.nll, ev.perplexity());
+
+    // --- generate ---
+    let mut engine = Engine::new(&bundle, &trainer.params(), 5)?;
+    let mut corpus = data::by_name("wikitext", m.model.vocab_size, 9)?;
+    let rx = engine.submit(GenRequest {
+        prompt: corpus.take_vec(8),
+        max_new_tokens: 16,
+        sampler: Sampler::greedy(),
+    });
+    let out = engine.run_to_completion(vec![rx])?.remove(0);
+    println!("generated {} tokens: {:?}", out.tokens.len(), out.tokens);
+    Ok(())
+}

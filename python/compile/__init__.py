@@ -1,0 +1,5 @@
+"""Build-time Python package: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Never imported at runtime — `make artifacts` runs aot.py once; the Rust
+coordinator (L3) loads the resulting HLO text through PJRT.
+"""

@@ -1,0 +1,211 @@
+"""AOT lowering: JAX functions -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); never on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Per preset this writes::
+
+    artifacts/<preset>/init.hlo.txt
+    artifacts/<preset>/train_step.hlo.txt
+    artifacts/<preset>/eval_step.hlo.txt
+    artifacts/<preset>/step_fwd.hlo.txt
+    artifacts/<preset>/manifest.json
+
+manifest.json describes every function's flattened input/output buffers
+(name, shape, dtype in pytree order) plus the model config and the
+analytic FLOPs summary, so the Rust runtime can address buffers by name.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import api, flops
+from .configs import (ModelConfig, TrainConfig, all_presets, config_to_dict,
+                      get_preset)
+
+# Presets built by a bare `make artifacts` — everything tests, examples
+# and benches need.  Other presets can be built with --preset.
+DEFAULT_PRESETS = [
+    "tiny-moe", "tiny-dense", "tiny-topk", "tiny-pkm",
+    "tiny-moe-softmax_renorm", "tiny-moe-switch",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps exactly one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_name(path) -> str:
+    parts: List[str] = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def spec_of_tree(tree: Any) -> List[Dict[str, Any]]:
+    """Flatten a pytree of arrays into [{name, shape, dtype}] in the exact
+    order jax.jit flattens arguments/results."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        out.append({
+            "name": _leaf_name(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+def abstractify(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_fn(fn, args: Tuple) -> Tuple[str, List[Dict], List[Dict]]:
+    """Lower fn(*args) and return (hlo_text, input_spec, output_spec).
+
+    jax.jit prunes arguments that are provably unused (e.g. the RNG seed
+    when all dropout rates are 0); the manifest reports only the *kept*
+    inputs, in the exact order the compiled executable expects them.
+    """
+    spec_args = abstractify(args)
+    lowered = jax.jit(fn).lower(*spec_args)
+    out_shape = jax.eval_shape(fn, *spec_args)
+    in_spec = spec_of_tree(args)
+    kept = lowered._lowering.compile_args.get("kept_var_idx")
+    if kept is not None:
+        kept = sorted(kept)
+        in_spec = [in_spec[i] for i in kept]
+    return to_hlo_text(lowered), in_spec, spec_of_tree(out_shape)
+
+
+def build_preset(name: str, out_dir: str, batch_size: int | None = None,
+                 total_steps: int = 100_000,
+                 eval_mem_factor: int = 4,
+                 serve_batch: int = 4,
+                 force: bool = False) -> str:
+    cfg = get_preset(name)
+    tcfg = TrainConfig(total_steps=total_steps)
+    if batch_size is not None:
+        tcfg.batch_size = batch_size
+    else:
+        # Scaled-down default batch for the tiny/small presets.
+        tcfg.batch_size = 16 if name.startswith(("tiny", "small")) else 32
+    eval_mem_len = eval_mem_factor * cfg.context
+
+    preset_dir = os.path.join(out_dir, name)
+    os.makedirs(preset_dir, exist_ok=True)
+    stamp_path = os.path.join(preset_dir, ".stamp")
+    stamp = _input_stamp(cfg, tcfg, eval_mem_len, serve_batch)
+    if not force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == stamp:
+                print(f"[aot] {name}: up to date")
+                return preset_dir
+
+    print(f"[aot] building {name} (batch={tcfg.batch_size}) ...")
+    args = api.example_args(cfg, tcfg, eval_mem_len, serve_batch)
+    fns = {
+        "init": api.make_init(cfg),
+        "train_step": api.make_train_step(cfg, tcfg),
+        "eval_step": api.make_eval_step(cfg, eval_mem_len),
+        "step_fwd": api.make_step_fwd(cfg, cfg.mem_len),
+    }
+    manifest: Dict[str, Any] = {
+        "preset": name,
+        "config": config_to_dict(cfg),
+        "train_config": dataclasses.asdict(tcfg),
+        "eval_mem_len": eval_mem_len,
+        "serve_batch": serve_batch,
+        "flops": flops.summarize(cfg),
+        "functions": {},
+    }
+    for fname, fn in fns.items():
+        hlo, in_spec, out_spec = lower_fn(fn, args[fname])
+        path = os.path.join(preset_dir, f"{fname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["functions"][fname] = {
+            "file": f"{fname}.hlo.txt",
+            "inputs": in_spec,
+            "outputs": out_spec,
+        }
+        print(f"[aot]   {fname}: {len(in_spec)} in, {len(out_spec)} out, "
+              f"{len(hlo)//1024} KiB HLO")
+    with open(os.path.join(preset_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+    return preset_dir
+
+
+def _input_stamp(cfg: ModelConfig, tcfg: TrainConfig, eval_mem_len: int,
+                 serve_batch: int) -> str:
+    """Hash of everything that affects the artifacts: configs + the
+    compile-package sources."""
+    h = hashlib.sha256()
+    h.update(json.dumps(dataclasses.asdict(cfg), sort_keys=True).encode())
+    h.update(json.dumps(dataclasses.asdict(tcfg), sort_keys=True).encode())
+    h.update(f"{eval_mem_len}|{serve_batch}".encode())
+    pkg_dir = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(pkg_dir)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="preset name (repeatable); default: the standard "
+                         "test/example set")
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--total-steps", type=int, default=100_000)
+    ap.add_argument("--list", action="store_true",
+                    help="list available presets and exit")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if stamps are current")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for n in sorted(all_presets()):
+            print(n)
+        return
+
+    presets = args.preset or DEFAULT_PRESETS
+    for name in presets:
+        build_preset(name, args.out, batch_size=args.batch_size,
+                     total_steps=args.total_steps, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

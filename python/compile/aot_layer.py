@@ -1,0 +1,128 @@
+"""Single-layer fwd+bwd artifacts for the Fig. 2/8-11 scaling sweeps.
+
+The paper's Fig. 2 measures execution time and memory of one MLP vs one
+MoE layer's forward+backward pass while sweeping d_model (and Figs. 9-11
+sweep N_E, G).  This module lowers exactly that computation — one FF
+block, loss = sum(y), returning input+weight gradients — for a grid of
+configurations, so the Rust bench harness can time them on the CPU PJRT
+backend and report the *scaling shape*.
+
+Output: artifacts/layerbench/<name>.hlo.txt + layerbench.json manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import aot
+from .configs import MoEConfig
+from .layers import feedforward as ffl
+from .layers import moe as moel
+
+# |B| = batch * seq the paper uses is 32768; scaled default here.
+DEFAULT_TOKENS = 2048
+
+
+def dense_case(d_model: int, d_ff: int, n_tokens: int):
+    def fn(w1, b1, w2, b2, x):
+        p = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+
+        def loss(x, w1, w2):
+            y, _ = ffl.dense_ff({**p, "w1": w1, "w2": w2}, x,
+                                jax.random.PRNGKey(0), 0.0, True)
+            return y.sum()
+
+        g = jax.grad(loss, argnums=(0, 1, 2))(x, w1, w2)
+        return g
+
+    args = (
+        jnp.zeros((d_model, d_ff), jnp.float32),
+        jnp.zeros((d_ff,), jnp.float32),
+        jnp.zeros((d_ff, d_model), jnp.float32),
+        jnp.zeros((d_model,), jnp.float32),
+        jnp.zeros((n_tokens, d_model), jnp.float32),
+    )
+    return fn, args
+
+
+def moe_case(d_model: int, n_experts: int, g: int, k: int, n_tokens: int):
+    cfg = MoEConfig(n_experts=n_experts, group_size=g, k=k,
+                    selection="sigmoid", regularization="none")
+
+    def fn(w1, w2, w3, x):
+        def loss(x, w1, w2, w3):
+            y, _ = moel.moe_ff({"w1": w1, "w2": w2, "w3": w3}, x,
+                               jax.random.PRNGKey(0), cfg, True)
+            return y.sum()
+
+        return jax.grad(loss, argnums=(0, 1, 2, 3))(x, w1, w2, w3)
+
+    args = (
+        jnp.zeros((n_experts, d_model, g), jnp.float32),
+        jnp.zeros((n_experts, g, d_model), jnp.float32),
+        jnp.zeros((d_model, n_experts), jnp.float32),
+        jnp.zeros((n_tokens, d_model), jnp.float32),
+    )
+    return fn, args
+
+
+def build(out_dir: str, n_tokens: int) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cases: List[Dict[str, Any]] = []
+
+    # Fig. 2 sweep: d_model with d_ff = 4*d_model, G=128 (scaled), K=4.
+    for d_model in (128, 256, 512):
+        d_ff = 4 * d_model
+        g = 128
+        ne = d_ff // g
+        cases.append({"name": f"dense_d{d_model}", "kind": "dense",
+                      "d_model": d_model, "d_ff": d_ff,
+                      "tokens": n_tokens})
+        cases.append({"name": f"moe_d{d_model}", "kind": "moe",
+                      "d_model": d_model, "n_experts": ne, "g": g,
+                      "k": min(4, ne), "tokens": n_tokens})
+    # Fig. 9 sweep: N_E at fixed d_model=256, G=64, K=4
+    for ne in (4, 8, 16, 32):
+        cases.append({"name": f"moe_ne{ne}", "kind": "moe",
+                      "d_model": 256, "n_experts": ne, "g": 64, "k": 4,
+                      "tokens": n_tokens})
+    # Fig. 10 sweep: G at fixed d_model=256, N_E=16, K=4
+    for g in (16, 32, 64, 128):
+        cases.append({"name": f"moe_g{g}", "kind": "moe",
+                      "d_model": 256, "n_experts": 16, "g": g, "k": 4,
+                      "tokens": n_tokens})
+
+    manifest = []
+    for c in cases:
+        if c["kind"] == "dense":
+            fn, args = dense_case(c["d_model"], c["d_ff"], c["tokens"])
+        else:
+            fn, args = moe_case(c["d_model"], c["n_experts"], c["g"],
+                                c["k"], c["tokens"])
+        hlo, in_spec, out_spec = aot.lower_fn(fn, args)
+        fname = f"{c['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest.append({**c, "file": fname, "inputs": in_spec,
+                         "outputs": out_spec})
+        print(f"[aot_layer] {c['name']}: {len(hlo)//1024} KiB")
+    with open(os.path.join(out_dir, "layerbench.json"), "w") as f:
+        json.dump({"tokens": n_tokens, "cases": manifest}, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/layerbench")
+    ap.add_argument("--tokens", type=int, default=DEFAULT_TOKENS)
+    args = ap.parse_args()
+    build(args.out, args.tokens)
+
+
+if __name__ == "__main__":
+    main()

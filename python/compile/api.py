@@ -1,0 +1,130 @@
+"""Top-level pure functions that get AOT-lowered to HLO artifacts.
+
+Four entry points per model configuration:
+
+* ``init``       (seed)                          -> params
+* ``train_step`` (params, m, v, mems, tokens, step, seed)
+                 -> (loss, gnorm, lr, params', m', v', mems', stats)
+* ``eval_step``  (params, mems, tokens)          -> (loss_sum, n, mems', stats)
+* ``step_fwd``   (params, mems, tokens)          -> (logits_last, mems')
+
+All inputs/outputs are pytrees; jax.jit flattens them in deterministic
+pytree order, which aot.py records (names, shapes, dtypes) in
+manifest.json so the Rust runtime can address every buffer by name.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import compat
+from . import model as M
+from . import optim
+from .configs import ModelConfig, TrainConfig
+
+
+def _zero_mems(cfg: ModelConfig, batch: int, mem_len: int):
+    return [jnp.zeros((batch, mem_len, cfg.d_model), jnp.float32)
+            for _ in range(cfg.n_layers)]
+
+
+def make_init(cfg: ModelConfig):
+    def init(seed: jax.Array):
+        rng = jax.random.PRNGKey(seed)
+        return M.init_params(rng, cfg)
+    return init
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """tokens: [B, T+1] — inputs are [:, :-1], targets [:, 1:]."""
+
+    def train_step(params, m, v, mems, tokens, step, seed):
+        rng = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+        def loss_fn(p):
+            inp = tokens[:, :-1]
+            tgt = tokens[:, 1:]
+            logits, new_mems, aux = M.forward(
+                p, cfg, inp, mems, rng, deterministic=False,
+                mem_len=cfg.mem_len)
+            lm = M.lm_loss(logits, tgt)
+            return lm + aux["reg"], (lm, new_mems, aux)
+
+        grads, (lm, new_mems, aux) = jax.grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_m, new_v, gnorm, lr = optim.adam_update(
+            tcfg, params, grads, m, v, step)
+        stats = {"active_channels": aux["active_channels"]}
+        if "usage" in aux:
+            stats["usage"] = aux["usage"]
+            stats["sel_weight"] = aux["sel_weight"]
+            stats["mean_prob"] = aux["mean_prob"]
+        return (lm, gnorm, lr, new_params, new_m, new_v, new_mems, stats)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, eval_mem_len: int):
+    """Deterministic eval over one segment with the longer XL memory the
+    paper uses at test time (4x context)."""
+
+    def eval_step(params, mems, tokens):
+        inp = tokens[:, :-1]
+        tgt = tokens[:, 1:]
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, aux = M.forward(
+            params, cfg, inp, mems, rng, deterministic=True,
+            mem_len=eval_mem_len)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -compat.take_along_last(logp, tgt[..., None])
+        stats = {
+            "active_channels": aux["active_channels"],
+            "active_channels_std": aux["active_channels_std"],
+        }
+        for key in ("usage", "sel_weight", "mean_prob", "cooccurrence"):
+            if key in aux:
+                stats[key] = aux[key]
+        n = jnp.asarray(nll.size, jnp.float32)
+        return (nll.sum(), n, new_mems, stats)
+
+    return eval_step
+
+
+def make_step_fwd(cfg: ModelConfig, mem_len: int):
+    """Single-token incremental forward for serving: T=1, returns the
+    next-token logits and the updated memory."""
+
+    def step_fwd(params, mems, tokens):
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, _ = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len)
+        return (logits[:, -1, :], new_mems)
+
+    return step_fwd
+
+
+def example_args(cfg: ModelConfig, tcfg: TrainConfig,
+                 eval_mem_len: int, serve_batch: int = 1):
+    """Concrete example arguments (real arrays — also used to seed the
+    numeric cross-check in tests) for each entry point."""
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    m, v = optim.init_opt_state(params)
+    b = tcfg.batch_size
+    mems = _zero_mems(cfg, b, cfg.mem_len)
+    tokens = jnp.zeros((b, cfg.context + 1), jnp.int32)
+    step = jnp.zeros((), jnp.int32)
+    seed = jnp.zeros((), jnp.uint32)
+    emems = _zero_mems(cfg, b, eval_mem_len)
+    smems = _zero_mems(cfg, serve_batch, mem_len=cfg.mem_len)
+    stok = jnp.zeros((serve_batch, 1), jnp.int32)
+    return {
+        "init": (seed,),
+        "train_step": (params, m, v, mems, tokens, step, seed),
+        "eval_step": (params, emems, tokens),
+        "step_fwd": (params, smems, stok),
+    }

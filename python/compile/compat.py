@@ -1,0 +1,93 @@
+"""HLO-compatibility helpers.
+
+The Rust side runs xla_extension 0.5.1 whose HLO *text parser* predates
+some ops modern JAX emits.  Notably ``jax.lax.top_k`` lowers to a native
+``topk(..., k=K, largest=true)`` instruction that the old parser rejects.
+This module provides drop-in replacements that lower to classic HLO
+(sort + slice), which round-trips cleanly.
+
+The pure-jnp oracles in kernels/ref.py intentionally keep
+``jax.lax.top_k`` so tests cross-validate the two implementations.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def top_k(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Values and indices of the k largest entries along the last axis.
+
+    Matches jax.lax.top_k semantics: descending values, ties broken by
+    lower index (achieved by stable-sorting -x).  Lowers to HLO ``sort``
+    + ``slice`` only, and carries a custom VJP (1-D scatter-add) because
+    the built-in sort transpose lowers to a batched gather the 0.5.1-era
+    converter rejects.
+    """
+    return _top_k_impl(x, k)
+
+
+def _top_k_impl(x: jax.Array, k: int):
+    d = x.shape[-1]
+    idx = jnp.broadcast_to(jax.lax.iota(jnp.int32, d), x.shape)
+    # stable ascending sort on -x == descending on x with index tiebreak.
+    neg, sidx = jax.lax.sort((-x, idx), dimension=-1, is_stable=True,
+                             num_keys=1)
+    vals = -neg[..., :k]
+    return vals, sidx[..., :k]
+
+
+def _top_k_fwd(x, k):
+    vals, idx = _top_k_impl(x, k)
+    return (vals, idx), (idx, x.shape)
+
+
+def _top_k_bwd(k, res, g):
+    idx, shape = res
+    gvals, _ = g
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    offs = (jnp.arange(rows, dtype=jnp.int32) * d)[:, None]
+    flat_idx = (idx.reshape(rows, k) + offs).reshape(-1)
+    dx = jnp.zeros((rows * d,), gvals.dtype).at[flat_idx].add(
+        gvals.reshape(-1))
+    return (dx.reshape(shape),)
+
+
+top_k.defvjp(_top_k_fwd, _top_k_bwd)
+
+
+def take_along_last(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """``jnp.take_along_axis(x, idx, axis=-1)`` without batched gather.
+
+    Modern JAX lowers take_along_axis to a gather with
+    ``operand_batching_dims`` which the 0.5.1-era StableHLO→XLA converter
+    rejects; flattening to a 1-D gather side-steps it.
+    x: [..., D], idx: [..., K] int -> [..., K].
+    """
+    d = x.shape[-1]
+    k = idx.shape[-1]
+    lead = x.shape[:-1]
+    assert idx.shape[:-1] == lead, (x.shape, idx.shape)
+    flat = x.reshape(-1)
+    rows = 1
+    for s in lead:
+        rows *= s
+    fidx = idx.reshape(rows, k)
+    offs = (jnp.arange(rows, dtype=fidx.dtype) * d)[:, None]
+    out = jnp.take(flat, (fidx + offs).reshape(-1), axis=0)
+    return out.reshape(*lead, k)
+
+
+def argmax_onehot(x: jax.Array) -> jax.Array:
+    """One-hot of the per-row argmax, via classic reduce ops."""
+    m = x.max(axis=-1, keepdims=True)
+    first = jnp.cumsum((x == m).astype(jnp.int32), axis=-1) == 1
+    return (first & (x == m)).astype(x.dtype)

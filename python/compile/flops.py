@@ -1,0 +1,122 @@
+"""Analytic FLOPs / parameter / activation-memory model.
+
+Regenerates the paper's resource columns: "% FLOPs" of Tab. 3, the
+FLOPs/memory fractions of Tab. 7, and feeds the roofline discussion in
+DESIGN.md §Perf.  Counts follow the paper's convention: the MLP-block
+fraction counts multiply-accumulates in the feedforward path only, and
+the expert-selection projection (d_model x N_E) is reported separately
+(the paper calls it negligible).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from .configs import ModelConfig
+
+
+@dataclass
+class FFCost:
+    """Per-token cost of one feedforward block (forward pass)."""
+
+    flops: float          # MACs * 2
+    act_memory: float     # floats materialized per token
+    params: float
+    selector_flops: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"flops": self.flops, "act_memory": self.act_memory,
+                "params": self.params,
+                "selector_flops": self.selector_flops}
+
+
+def dense_ff_cost(d_model: int, d_ff: int) -> FFCost:
+    return FFCost(flops=2.0 * 2 * d_model * d_ff,
+                  act_memory=float(d_ff),
+                  params=2.0 * d_model * d_ff + d_ff + d_model)
+
+
+def topk_ff_cost(d_model: int, d_ff: int, k: int) -> FFCost:
+    # Up-projection is full; only the down-projection is sparse (Sec. 3.1).
+    return FFCost(flops=2.0 * d_model * d_ff + 2.0 * d_model * k,
+                  act_memory=float(d_ff),
+                  params=2.0 * d_model * d_ff + d_ff + d_model)
+
+
+def moe_ff_cost(d_model: int, n_experts: int, g: int, k: int) -> FFCost:
+    d_ff = n_experts * g
+    return FFCost(flops=2.0 * 2 * d_model * g * k,
+                  act_memory=float(g * k),
+                  params=2.0 * d_model * d_ff + d_model * n_experts,
+                  selector_flops=2.0 * d_model * n_experts)
+
+
+def pkm_ff_cost(d_model: int, n_subkeys: int, knn: int,
+                heads: int) -> FFCost:
+    half = d_model / 2
+    score = 2.0 * half * n_subkeys * 2          # two half projections
+    combine = 2.0 * knn * knn                   # candidate sums + topk
+    readout = 2.0 * knn * d_model
+    return FFCost(flops=heads * (score + combine + readout),
+                  act_memory=float(heads * (2 * n_subkeys + knn)),
+                  params=(heads * 2 * n_subkeys * half
+                          + n_subkeys * n_subkeys * d_model))
+
+
+def ff_cost(cfg: ModelConfig) -> FFCost:
+    if cfg.ff_variant == "dense":
+        return dense_ff_cost(cfg.d_model, cfg.d_ff)
+    if cfg.ff_variant == "topk":
+        return topk_ff_cost(cfg.d_model, cfg.d_ff, cfg.topk.k)
+    if cfg.ff_variant == "moe":
+        return moe_ff_cost(cfg.d_model, cfg.moe.n_experts,
+                           cfg.moe.group_size, cfg.moe.k)
+    if cfg.ff_variant == "pkm":
+        return pkm_ff_cost(cfg.d_model, cfg.pkm.n_subkeys, cfg.pkm.knn,
+                           cfg.pkm.heads)
+    raise ValueError(cfg.ff_variant)
+
+
+def attention_cost(cfg: ModelConfig, seq: int, mem: int) -> float:
+    """Per-token attention FLOPs (projections + score/value matmuls)."""
+    dh = cfg.n_heads * cfg.head_dim
+    proj = 2.0 * cfg.d_model * dh * 4
+    klen = seq + mem
+    scores = 2.0 * dh * klen * 2
+    return proj + scores
+
+
+def model_params(cfg: ModelConfig) -> float:
+    ff = ff_cost(cfg).params
+    dh = cfg.n_heads * cfg.head_dim
+    att = 5.0 * cfg.d_model * dh + 2 * cfg.n_heads * cfg.head_dim
+    ln = 4.0 * cfg.d_model
+    per_layer = ff + att + ln
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tied_embeddings else 2)
+    return cfg.n_layers * per_layer + emb + cfg.vocab_size + 2 * cfg.d_model
+
+
+def ff_fraction_vs_dense(cfg: ModelConfig,
+                         dense_cfg: ModelConfig) -> Dict[str, float]:
+    """Tab. 7: relative FLOPs and activation memory of the FF block vs the
+    parameter-matched dense baseline."""
+    a, b = ff_cost(cfg), ff_cost(dense_cfg)
+    return {
+        "flops_fraction": a.flops / b.flops,
+        "memory_fraction": a.act_memory / b.act_memory,
+        "selector_flops_fraction": a.selector_flops / b.flops,
+    }
+
+
+def summarize(cfg: ModelConfig) -> Dict[str, float]:
+    c = ff_cost(cfg)
+    return {
+        "total_params": model_params(cfg),
+        "ff_flops_per_token": c.flops,
+        "ff_act_memory_per_token": c.act_memory,
+        "ff_params_per_layer": c.params,
+        "selector_flops_per_token": c.selector_flops,
+        "attention_flops_per_token": attention_cost(
+            cfg, cfg.context, cfg.mem_len),
+    }

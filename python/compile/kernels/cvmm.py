@@ -1,0 +1,169 @@
+"""CVMM — conditional vector-matrix multiplication — as Pallas kernels.
+
+This is the paper's kernel contribution (App. B.1, Eq. 26) re-thought for
+TPU instead of mechanically ported from CUDA:
+
+    CVMM(V, S, M)[n, l] = sum_m V[n, m] * M[S[n], m, l]
+
+The CUDA kernel sorts tokens by expert index so consecutive threadblocks
+reuse the same expert matrix from global memory.  On TPU the analogous
+resource is VMEM: we want each expert matrix M[e] staged into VMEM once
+and hit by a whole tile of tokens through the MXU.  Strategy implemented
+here:
+
+* ``cvmm``: grid (token tiles, N_E).  Each grid step stages one expert
+  matrix [M, L] plus one token tile [TN, M] into VMEM, performs a single
+  MXU matmul, and accumulates rows masked by ``S == e`` into the output
+  tile.  The expert axis is the *minor* (fastest-varying) grid dimension
+  so the [TN, L] accumulator stays resident in VMEM across all experts.
+  Exact for any load distribution (no token dropping, no sorting), at the
+  cost of N_E/K× redundant FLOPs — the TPU analogue of the paper's
+  pre-sorting-free fallback.
+
+* capacity-based *grouped* dispatch (python/compile/layers/moe.py) — the
+  TPU-idiomatic equivalent of the CUDA kernel's sort-by-expert
+  preprocessing: tokens are scattered into a dense [N_E, C, M] buffer so
+  each expert's matmul is one contiguous MXU-shaped block.  See DESIGN.md
+  §Hardware-Adaptation.
+
+Backward passes are Pallas kernels too (the gradient w.r.t. the expert
+matrices is itself a CVMM-transpose, mirroring the paper's reuse of the
+same CUDA kernel for fwd and bwd).
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); BlockSpecs are written exactly as they would be for a real
+TPU so the VMEM-footprint analysis in DESIGN.md is faithful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile size: 128 matches the MXU systolic array's 128x128 shape and
+# keeps [TN, M] tile + [M, L] matrix + [TN, L] accumulator within a
+# ~16 MiB VMEM budget for the paper's dimensions (see DESIGN.md §Perf).
+DEFAULT_TOKEN_TILE = 128
+
+
+def _cvmm_kernel(s_ref, v_ref, m_ref, o_ref):
+    """One (token tile t, expert e) grid step of masked-accumulate CVMM.
+
+    s_ref: [TN] expert indices; v_ref: [TN, M] token tile;
+    m_ref: [1, M, L] expert e's matrix; o_ref: [TN, L] accumulator.
+    """
+    e = pl.program_id(1)  # expert = minor grid dim
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    mask = (s_ref[...] == e)
+    prod = jnp.dot(v_ref[...], m_ref[0],
+                   preferred_element_type=o_ref.dtype)
+    o_ref[...] += jnp.where(mask[:, None], prod, 0)
+
+
+def _pallas_cvmm(v, s, m, token_tile):
+    n, dm = v.shape
+    ne, dm2, dl = m.shape
+    assert dm == dm2, (v.shape, m.shape)
+    tn = min(token_tile, max(8, n))
+    # Pad N to a tile multiple; padded rows get expert index -1 which
+    # matches no expert and therefore contributes zeros.
+    n_pad = (-n) % tn
+    if n_pad:
+        v = jnp.pad(v, ((0, n_pad), (0, 0)))
+        s = jnp.pad(s, (0, n_pad), constant_values=-1)
+    n_tiles = (n + n_pad) // tn
+    out = pl.pallas_call(
+        _cvmm_kernel,
+        grid=(n_tiles, ne),
+        in_specs=[
+            pl.BlockSpec((tn,), lambda t, e: (t,)),
+            pl.BlockSpec((tn, dm), lambda t, e: (t, 0)),
+            pl.BlockSpec((1, dm, dl), lambda t, e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, dl), lambda t, e: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, dl), v.dtype),
+        interpret=True,
+    )(s, v, m)
+    return out[:n]
+
+
+def _grad_w_kernel(s_ref, v_ref, g_ref, o_ref):
+    """Backward-w CVMM: dM[e] = sum over token tiles of V^T @ (G | S==e).
+
+    Grid (N_E, token tiles) with the tile index minor so each expert's
+    [M, L] gradient accumulator stays in VMEM across all token tiles.
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    e = pl.program_id(0)
+    mask = (s_ref[...] == e)
+    gm = jnp.where(mask[:, None], g_ref[...], 0)
+    o_ref[0] += jnp.dot(v_ref[...].T, gm,
+                        preferred_element_type=o_ref.dtype)
+
+
+def cvmm_grad_w(v: jax.Array, s: jax.Array, g: jax.Array, ne: int,
+                token_tile: int = DEFAULT_TOKEN_TILE) -> jax.Array:
+    """dCVMM/dM: [NE, M, L] from v [N, M], s [N], upstream g [N, L]."""
+    n, dm = v.shape
+    _, dl = g.shape
+    tn = min(token_tile, max(8, n))
+    n_pad = (-n) % tn
+    if n_pad:
+        v = jnp.pad(v, ((0, n_pad), (0, 0)))
+        g = jnp.pad(g, ((0, n_pad), (0, 0)))
+        s = jnp.pad(s, (0, n_pad), constant_values=-1)
+    n_tiles = (n + n_pad) // tn
+    return pl.pallas_call(
+        _grad_w_kernel,
+        grid=(ne, n_tiles),
+        in_specs=[
+            pl.BlockSpec((tn,), lambda e, t: (t,)),
+            pl.BlockSpec((tn, dm), lambda e, t: (t, 0)),
+            pl.BlockSpec((tn, dl), lambda e, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dm, dl), lambda e, t: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ne, dm, dl), v.dtype),
+        interpret=True,
+    )(s, v, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cvmm_vjp(v, s, m, token_tile):
+    return _pallas_cvmm(v, s, m, token_tile)
+
+
+def _cvmm_fwd_rule(v, s, m, token_tile):
+    return _pallas_cvmm(v, s, m, token_tile), (v, s, m)
+
+
+def _cvmm_bwd_rule(token_tile, res, g):
+    v, s, m = res
+    # dV[n] = g[n] @ M[s[n]]^T -> CVMM against transposed expert matrices.
+    mt = jnp.swapaxes(m, 1, 2)
+    dv = _pallas_cvmm(g, s, mt, token_tile)
+    dm = cvmm_grad_w(v, s, g, m.shape[0], token_tile)
+    return dv, None, dm
+
+
+_cvmm_vjp.defvjp(_cvmm_fwd_rule, _cvmm_bwd_rule)
+
+
+def cvmm(v: jax.Array, s: jax.Array, m: jax.Array,
+         token_tile: int = DEFAULT_TOKEN_TILE) -> jax.Array:
+    """Differentiable conditional vector-matrix multiply.
+
+    out[n] = v[n] @ m[s[n]] for v [N, M], s [N] int32, m [NE, M, L].
+    """
+    return _cvmm_vjp(v, s, m.astype(v.dtype), token_tile)

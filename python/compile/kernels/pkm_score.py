@@ -1,0 +1,112 @@
+"""Product-key candidate search as a Pallas kernel (paper Sec. 3.2).
+
+Given the two half-scores u_a = W_a x_a and u_b = W_b x_b (each [N, S],
+S = sqrt(d_ff) sub-keys), the full score table is the "additive outer
+product" u[b*S + a] = u_b[b] + u_a[a].  The kernel exploits the paper's
+key observation: the top-K of the S^2 table is contained in the K x K
+candidate sums of the per-half top-K — so only K^2 << S^2 sums are formed.
+
+Per row tile, both half-score rows live in VMEM; the candidate table is
+[TN, K, K] which for K<=64 stays well under VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..compat import take_along_last, top_k as compat_top_k
+
+DEFAULT_ROW_TILE = 128
+
+
+def _pkm_topk_kernel(ua_ref, ub_ref, val_ref, idx_ref, *, knn: int, s: int):
+    ua = ua_ref[...]                              # [TN, S]
+    ub = ub_ref[...]
+    kk = min(knn, s)
+    va, ia = compat_top_k(ua, kk)                # [TN, kk]
+    vb, ib = compat_top_k(ub, kk)
+    cand = vb[:, :, None] + va[:, None, :]        # [TN, kk, kk]
+    cidx = ib[:, :, None] * s + ia[:, None, :]    # global flat index
+    tn = cand.shape[0]
+    cand = cand.reshape(tn, kk * kk)
+    cidx = cidx.reshape(tn, kk * kk)
+    v, i = compat_top_k(cand, knn)
+    val_ref[...] = v
+    idx_ref[...] = take_along_last(cidx, i).astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def pkm_topk(ua: jax.Array, ub: jax.Array, knn: int,
+             row_tile: int = DEFAULT_ROW_TILE):
+    """Top-knn of the product-key score table.
+
+    ua, ub: [N, S] -> (scores [N, knn] float, indices [N, knn] int32),
+    indices flattened as b * S + a.
+
+    Differentiable w.r.t. (ua, ub) through the selected scores: the VJP
+    scatter-adds each upstream gradient into both of its constituent
+    half-score positions (score = ub[b] + ua[a]), done on flattened
+    arrays so the lowering stays free of batched scatters.
+    """
+    return _pkm_topk_impl(ua, ub, knn, row_tile)
+
+
+def _pkm_topk_impl(ua: jax.Array, ub: jax.Array, knn: int,
+                   row_tile: int = DEFAULT_ROW_TILE):
+    n, s = ua.shape
+    assert ub.shape == (n, s)
+    assert knn <= s * s
+    tn = min(row_tile, max(8, n))
+    n_pad = (-n) % tn
+    if n_pad:
+        pad = ((0, n_pad), (0, 0))
+        # pad with -inf so padded rows never pollute real rows (they are
+        # sliced off anyway; -inf keeps top_k well defined).
+        ua = jnp.pad(ua, pad, constant_values=-jnp.inf)
+        ub = jnp.pad(ub, pad, constant_values=-jnp.inf)
+    grid = ((n + n_pad) // tn,)
+    val, idx = pl.pallas_call(
+        functools.partial(_pkm_topk_kernel, knn=knn, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, s), lambda t: (t, 0)),
+            pl.BlockSpec((tn, s), lambda t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, knn), lambda t: (t, 0)),
+            pl.BlockSpec((tn, knn), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad, knn), ua.dtype),
+            jax.ShapeDtypeStruct((n + n_pad, knn), jnp.int32),
+        ],
+        interpret=True,
+    )(ua, ub)
+    return val[:n], idx[:n]
+
+
+def _pkm_topk_fwd(ua, ub, knn, row_tile):
+    val, idx = _pkm_topk_impl(ua, ub, knn, row_tile)
+    return (val, idx), (idx, ua.shape)
+
+
+def _pkm_topk_bwd(knn, row_tile, res, g):
+    idx, shape = res
+    gval, _ = g
+    n, s = shape
+    ia = (idx % s).astype(jnp.int32)
+    ib = (idx // s).astype(jnp.int32)
+    offs = (jnp.arange(n, dtype=jnp.int32) * s)[:, None]
+    flat_a = (ia + offs).reshape(-1)
+    flat_b = (ib + offs).reshape(-1)
+    gflat = gval.reshape(-1)
+    dua = jnp.zeros((n * s,), gval.dtype).at[flat_a].add(gflat)
+    dub = jnp.zeros((n * s,), gval.dtype).at[flat_b].add(gflat)
+    return dua.reshape(n, s), dub.reshape(n, s)
+
+
+pkm_topk.defvjp(_pkm_topk_fwd, _pkm_topk_bwd)

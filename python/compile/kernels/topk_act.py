@@ -1,0 +1,77 @@
+"""Top-K activation function as a Pallas kernel (paper Sec. 3.1, Eq. 6-7).
+
+Keeps the K largest entries of each row of the up-projection output
+``u = ReLU(W1 x)`` and zeroes the rest, so the down-projection only sees
+K active channels.  On real hardware the down-projection would consume
+the (value, index) pairs; under XLA we materialize the masked row (the
+dense down-projection is fused by XLA anyway) — the kernel's value is the
+row-local top-k selection itself, tiled so each [TN, D] row block lives
+in VMEM once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..compat import top_k as compat_top_k
+
+DEFAULT_ROW_TILE = 128
+
+
+def _topk_mask_kernel(u_ref, o_ref, *, k: int):
+    u = u_ref[...]
+    # per-row k-th largest value as threshold; ties toward lower index
+    # handled by the strict ">=" on sorted values (matches lax.top_k).
+    kth = compat_top_k(u, k)[0][:, -1:]
+    o_ref[...] = jnp.where(u >= kth, u, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def topk_mask(u: jax.Array, k: int,
+              row_tile: int = DEFAULT_ROW_TILE) -> jax.Array:
+    """Zero all but the top-k entries of each row. u: [N, D] -> [N, D].
+
+    Note on ties: rows where the k-th and (k+1)-th values are exactly
+    equal keep *both* (threshold semantics).  With continuous activations
+    this has probability zero; the reference oracle (ref.topk_mask_ref)
+    breaks ties by index, and tests use inputs without ties.
+
+    VJP: the standard straight-through-the-selection subgradient —
+    upstream gradient passes through kept positions, zero elsewhere
+    (the threshold's dependence on u is ignored, as in lax.top_k).
+    """
+    return _topk_mask_impl(u, k, row_tile)
+
+
+def _topk_mask_fwd(u, k, row_tile):
+    out = _topk_mask_impl(u, k, row_tile)
+    return out, (out != 0)
+
+
+def _topk_mask_bwd(k, row_tile, keep, g):
+    return (jnp.where(keep, g, 0),)
+
+
+def _topk_mask_impl(u: jax.Array, k: int,
+                    row_tile: int = DEFAULT_ROW_TILE) -> jax.Array:
+    n, d = u.shape
+    tn = min(row_tile, max(8, n))
+    n_pad = (-n) % tn
+    if n_pad:
+        u = jnp.pad(u, ((0, n_pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_topk_mask_kernel, k=k),
+        grid=((n + n_pad) // tn,),
+        in_specs=[pl.BlockSpec((tn, d), lambda t: (t, 0))],
+        out_specs=pl.BlockSpec((tn, d), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), u.dtype),
+        interpret=True,
+    )(u)
+    return out[:n]
+
+
+topk_mask.defvjp(_topk_mask_fwd, _topk_mask_bwd)

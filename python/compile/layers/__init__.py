@@ -1,0 +1,1 @@
+"""L2 building blocks: attention, feedforward variants, MoE, PKM."""

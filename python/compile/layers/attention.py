@@ -1,0 +1,99 @@
+"""Transformer-XL relative multi-head self-attention with segment memory.
+
+Follows Dai et al. (2019): content/position attention split with the
+global content bias u and position bias v, relative sinusoidal position
+encodings, and the left-shift trick for the BD term.  The XL memory (the
+previous segment's layer inputs) is passed in and the updated memory is
+returned, so the Rust coordinator owns the recurrence state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dropout, normal_init
+
+
+def rel_pos_encoding(klen: int, d_model: int) -> jax.Array:
+    """Sinusoidal encodings for relative distances klen-1 .. 0."""
+    pos = jnp.arange(klen - 1, -1, -1, dtype=jnp.float32)
+    inv = 1.0 / (10000 ** (jnp.arange(0, d_model, 2, jnp.float32) / d_model))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def attention_init(rng: jax.Array, d_model: int, n_heads: int,
+                   head_dim: int, n_layers: int) -> Params:
+    std = math.sqrt(2.0 / (d_model * n_layers))
+    ks = jax.random.split(rng, 6)
+    dh = n_heads * head_dim
+    return {
+        "wq": normal_init(ks[0], (d_model, dh), std),
+        "wk": normal_init(ks[1], (d_model, dh), std),
+        "wv": normal_init(ks[2], (d_model, dh), std),
+        "wr": normal_init(ks[3], (d_model, dh), std),   # rel-pos projection
+        "wo": normal_init(ks[4], (dh, d_model), std),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),  # content bias
+        "v": jnp.zeros((n_heads, head_dim), jnp.float32),  # position bias
+    }
+
+
+def _rel_shift(x: jax.Array) -> jax.Array:
+    """BD-term left shift (Dai et al. 2019, App. B).
+
+    x: [B, H, T, K] scored against reversed relative positions; shifts row
+    i left by (K - T - i) so that column j aligns with distance i - j + M.
+    """
+    b, h, t, k = x.shape
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (1, 0)))
+    x = x.reshape(b, h, k + 1, t)
+    x = x[:, :, 1:, :]
+    return x.reshape(b, h, t, k)
+
+
+def attention(p: Params, x: jax.Array, mem: jax.Array, rng: jax.Array,
+              n_heads: int, head_dim: int, attn_dropout: float,
+              deterministic: bool) -> jax.Array:
+    """x: [B, T, D]; mem: [B, M, D] previous-segment activations."""
+    b, t, d = x.shape
+    m = mem.shape[1]
+    klen = t + m
+    cat = jnp.concatenate([jax.lax.stop_gradient(mem), x], axis=1)
+
+    def split(h):
+        return h.reshape(b, -1, n_heads, head_dim)
+
+    q = split(x @ p["wq"])                       # [B, T, H, d]
+    k = split(cat @ p["wk"])                     # [B, K, H, d]
+    v = split(cat @ p["wv"])
+    r = rel_pos_encoding(klen, d) @ p["wr"]      # [K, H*d]
+    r = r.reshape(klen, n_heads, head_dim)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    # content term (AC): (q + u) . k
+    ac = jnp.einsum("bthd,bkhd->bhtk", q + p["u"][None, None], k)
+    # position term (BD): (q + v) . r, then rel-shift
+    bd = jnp.einsum("bthd,khd->bhtk", q + p["v"][None, None], r)
+    bd = _rel_shift(bd)
+    score = (ac + bd) * scale
+
+    # causal mask: query i (global pos m+i) attends to keys j <= m+i
+    qpos = jnp.arange(t)[:, None] + m
+    kpos = jnp.arange(klen)[None, :]
+    mask = (kpos <= qpos)[None, None]
+    score = jnp.where(mask, score, -1e30)
+    att = jax.nn.softmax(score, axis=-1)
+    att = dropout(rng, att, attn_dropout, deterministic)
+
+    out = jnp.einsum("bhtk,bkhd->bthd", att, v).reshape(b, t, -1)
+    return out @ p["wo"]
+
+
+def update_memory(x: jax.Array, mem: jax.Array, mem_len: int) -> jax.Array:
+    """New memory = last mem_len positions of [mem | x] (stop-gradient)."""
+    cat = jnp.concatenate([mem, x], axis=1)
+    return jax.lax.stop_gradient(cat[:, -mem_len:])

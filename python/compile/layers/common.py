@@ -1,0 +1,59 @@
+"""Shared L2 building blocks: layernorm, dropout, initializers.
+
+Parameters are plain nested dicts of jnp arrays (no flax/haiku — the AOT
+path needs a stable, dependency-free flattening order that the Rust side
+can mirror from the manifest).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def layer_norm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def dropout(rng: jax.Array, x: jax.Array, rate: float,
+            deterministic: bool) -> jax.Array:
+    """Inverted dropout; identity when rate == 0 or deterministic."""
+    if rate <= 0.0 or deterministic:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, 0)
+
+
+def normal_init(rng: jax.Array, shape, std: float) -> jax.Array:
+    return std * jax.random.normal(rng, shape, jnp.float32)
+
+
+def row_normalized_init(rng: jax.Array, shape, std: float) -> jax.Array:
+    """σ-MoE selection-matrix init (paper Sec. 5): sample N(0,1), rescale
+    every row to unit norm, then rescale the whole matrix to std.  Scores
+    then depend only on the angle between x and the row, not on a random
+    per-row magnitude."""
+    w = jax.random.normal(rng, shape, jnp.float32)
+    w = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-12)
+    # after row normalization each row has norm 1; scale so the matrix has
+    # the desired elementwise std: row norm sqrt(fan_in)*std.
+    return w * (std * jnp.sqrt(jnp.asarray(shape[-1], jnp.float32)))
+
+
+def dense_std(d_in: int, n_layers: int) -> float:
+    """Pre-layernorm dense init std sqrt(2 / (d_in * n_layers)) —
+    the scheme the paper applies identically to experts (Sec. 5)."""
+    import math
+    return math.sqrt(2.0 / (d_in * n_layers))

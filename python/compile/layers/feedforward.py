@@ -1,0 +1,58 @@
+"""Dense and Top-K feedforward blocks (paper Sec. 2 & 3.1).
+
+Both return ``(y, aux)`` where aux carries the per-layer statistics used
+by the analysis tooling (active channel counts, Fig. 1/4/5) and a zero
+regularization loss, so every FF variant shares one interface:
+
+    ff(params, x2d, rng, deterministic) -> (y2d, {"reg": scalar, ...})
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.topk_act import topk_mask
+from .common import Params, dense_std, dropout, normal_init
+
+
+def dense_ff_init(rng: jax.Array, d_model: int, d_ff: int,
+                  n_layers: int) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": normal_init(k1, (d_model, d_ff), dense_std(d_model, n_layers)),
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": normal_init(k2, (d_ff, d_model), dense_std(d_ff, n_layers)),
+        "b2": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def dense_ff(p: Params, x: jax.Array, rng: jax.Array, drop_rate: float,
+             deterministic: bool) -> Tuple[jax.Array, dict]:
+    """Standard 2-layer MLP, Eq. 1-2.  x: [N, D] -> [N, D]."""
+    u = jax.nn.relu(x @ p["w1"] + p["b1"])
+    active = (u > 0).sum(axis=-1).astype(jnp.float32)   # Fig. 1 statistic
+    h = dropout(rng, u, drop_rate, deterministic)
+    y = h @ p["w2"] + p["b2"]
+    return y, {"reg": jnp.zeros((), jnp.float32),
+               "active_channels": active.mean(),
+               "active_channels_std": active.std()}
+
+
+def topk_ff(p: Params, x: jax.Array, rng: jax.Array, k: int,
+            drop_rate: float, deterministic: bool) -> Tuple[jax.Array, dict]:
+    """Top-K activation MLP, Eq. 6-7: keep the K largest channels of u.
+
+    Same parameters as the dense block (it *is* the dense block with a
+    sparsified activation) — Tab. 1 compares them parameter-equal.
+    """
+    u = jax.nn.relu(x @ p["w1"] + p["b1"])
+    u = topk_mask(u, k)
+    active = (u > 0).sum(axis=-1).astype(jnp.float32)
+    h = dropout(rng, u, drop_rate, deterministic)
+    y = h @ p["w2"] + p["b2"]
+    return y, {"reg": jnp.zeros((), jnp.float32),
+               "active_channels": active.mean(),
+               "active_channels_std": active.std()}

@@ -1,0 +1,225 @@
+"""σ-MoE layer and all ablation variants (paper Sec. 3.3, 4, 5).
+
+One implementation parameterized by MoEConfig covers:
+
+* σ-MoE (ours): sigmoid selection, top-K, entropy regularization
+  (Eq. 20-21), expert dropout (Eq. 22), dense-equivalent init.
+* softmax_renorm: softmax then top-K then re-normalize
+  (≡ Sparsely-Gated MoE of Shazeer et al., "softmax (renorm.)" row).
+* softmax: softmax, top-K, no renorm ("softmax before top-k" row —
+  equivalently Switch-style scoring generalized to K>1).
+* switch: softmax + top-1 + Switch load-balancing loss (Eq. 15-17).
+* sbase: sigmoid weighting with Sinkhorn-balanced assignment during
+  training (Clark et al. 2022's S-BASE; Eq. 18-19 approximated by
+  Sinkhorn iterations), argmax/top-K routing at eval.
+
+The expert computation itself goes through the CVMM Pallas kernel
+(kernels/cvmm.py) — the same kernel for forward and both backward
+passes, as in the paper's CUDA implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..compat import take_along_last, top_k as compat_top_k
+from ..configs import MoEConfig
+from ..kernels.cvmm import cvmm
+from .common import (Params, dense_std, dropout, normal_init,
+                     row_normalized_init)
+
+
+def moe_init(rng: jax.Array, d_model: int, cfg: MoEConfig,
+             n_layers: int) -> Params:
+    """Expert + selection parameters.
+
+    init == "ours" (paper Sec. 5): experts are initialized exactly like
+    the dense baseline's W1/W2 — std based on d_model and d_ff = N_E*G,
+    *not* on the per-expert width G.  The selection matrix W3 uses the
+    row-normalized scheme.  init == "standard" uses per-expert fan-in
+    (the Tab. 4 "standard init" ablation).
+    """
+    ne, g, k = cfg.n_experts, cfg.group_size, cfg.k
+    d_ff = ne * g
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.init == "ours":
+        std1 = dense_std(d_model, n_layers)
+        std2 = dense_std(d_ff, n_layers)
+        # Each expert's selector is a *row* of W3 in the paper's notation
+        # (a column of our [d_model, NE] layout): normalize those.
+        w3 = row_normalized_init(k3, (ne, d_model), std1).T
+    elif cfg.init == "standard":
+        # per-expert Glorot-ish fan-in, the scheme the paper argues against
+        std1 = dense_std(d_model, n_layers)
+        std2 = dense_std(g, n_layers)
+        w3 = normal_init(k3, (d_model, ne), std1)
+    else:
+        raise ValueError(f"unknown moe init {cfg.init!r}")
+    return {
+        "w1": normal_init(k1, (ne, d_model, g), std1),
+        "w2": normal_init(k2, (ne, g, d_model), std2),
+        "w3": w3,
+    }
+
+
+def _selection(cfg: MoEConfig, logits: jax.Array, rng: jax.Array,
+               deterministic: bool):
+    """Compute gate values + top-K expert indices for each token.
+
+    logits: [N, NE].  Returns (sel_val [N, K], sel_idx [N, K], probs
+    [N, NE]) where probs is the softmax distribution used by the
+    regularizers (Eq. 20) regardless of the gating activation.
+    """
+    k = cfg.k
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if cfg.selection == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    elif cfg.selection in ("softmax", "softmax_renorm", "switch"):
+        scores = probs
+    elif cfg.selection == "sbase":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(f"unknown selection {cfg.selection!r}")
+
+    route = scores
+    if cfg.selection == "sbase" and not deterministic:
+        # Sinkhorn-balanced routing: iterate row/column normalization of
+        # the (stop-gradient) score matrix over the whole batch, then
+        # top-K on the balanced plan.  Weighting still uses sigmoid
+        # scores (Clark et al. 2022).
+        plan = jax.lax.stop_gradient(jax.nn.softmax(logits, axis=-1))
+        for _ in range(cfg.sinkhorn_iters):
+            plan = plan / (plan.sum(axis=0, keepdims=True) + 1e-9)
+            plan = plan / (plan.sum(axis=1, keepdims=True) + 1e-9)
+        route = plan
+
+    if cfg.expert_dropout > 0.0 and not deterministic:
+        # Expert dropout (Eq. 22): zero whole experts without rescaling,
+        # shared across the batch is NOT what Eq. 22 says — m is sampled
+        # per token.  Masked experts can't be selected.
+        mask = jax.random.bernoulli(rng, 1.0 - cfg.expert_dropout,
+                                    route.shape)
+        route = route * mask
+        scores = scores * mask
+
+    _, sel_idx = compat_top_k(route, k)                  # [N, K]
+    sel_val = take_along_last(scores, sel_idx)
+
+    if cfg.selection == "softmax_renorm":
+        sel_val = sel_val / (sel_val.sum(axis=-1, keepdims=True) + 1e-9)
+
+    return sel_val, sel_idx, probs
+
+
+def _regularization(cfg: MoEConfig, probs: jax.Array,
+                    sel_idx: jax.Array) -> jax.Array:
+    """Load-balancing loss (to be *added* to the LM loss, scaled by γ)."""
+    ne = cfg.n_experts
+    if cfg.regularization == "none" or cfg.reg_gamma == 0.0:
+        return jnp.zeros((), jnp.float32)
+    if cfg.regularization == "entropy":
+        # Eq. 20-21: maximize entropy of the batch-mean softmax
+        # distribution == minimize sum p log p.
+        p = probs.mean(axis=0)
+        return cfg.reg_gamma * jnp.sum(p * jnp.log(p + 1e-10))
+    if cfg.regularization == "switch":
+        # Eq. 15-17: N_E * f . p with f the fraction of tokens routed to
+        # each expert (over all K slots) and p the mean selection prob.
+        n = sel_idx.shape[0] * sel_idx.shape[1]
+        f = jnp.zeros((ne,), jnp.float32).at[sel_idx.reshape(-1)].add(1.0)
+        f = f / n
+        p = probs.mean(axis=0)
+        return cfg.reg_gamma * ne * jnp.dot(f, p)
+    raise ValueError(f"unknown regularization {cfg.regularization!r}")
+
+
+def grouped_dispatch(x: jax.Array, sel_idx: jax.Array, sel_val: jax.Array,
+                     w1: jax.Array, w2: jax.Array,
+                     capacity_factor: float) -> jax.Array:
+    """Capacity-based grouped expert execution — the TPU-idiomatic
+    equivalent of the CUDA kernel's sort-by-expert preprocessing
+    (DESIGN.md §Hardware-Adaptation).
+
+    Tokens are scattered into a dense [NE, C, D] buffer (C = capacity),
+    each expert runs one contiguous batched matmul, and results gather
+    back.  Exact iff no expert receives more than C tokens; overflowing
+    tokens are dropped (zero contribution), which is why the exact CVMM
+    path remains the default for trained comparisons.
+    """
+    n, d = x.shape
+    ne = w1.shape[0]
+    k = sel_idx.shape[1]
+    rows = n * k
+    flat_e = sel_idx.reshape(rows).astype(jnp.int32)       # expert per row
+    cap = max(1, int(capacity_factor * rows / ne))
+    # position of each row within its expert's buffer (rank among equal e)
+    onehot = jax.nn.one_hot(flat_e, ne, dtype=jnp.int32)   # [rows, NE]
+    pos = (jnp.cumsum(onehot, axis=0) - 1)                 # inclusive rank
+    slot = jnp.sum(pos * onehot, axis=1)                   # [rows]
+    keep = slot < cap
+    # scatter rows into [NE * C, D] (dropped rows write to a trash slot)
+    flat_idx = jnp.where(keep, flat_e * cap + slot, ne * cap)
+    xr = jnp.repeat(x, k, axis=0)                          # [rows, D]
+    buf = jnp.zeros((ne * cap + 1, d), x.dtype).at[flat_idx].add(xr)
+    buf = buf[:-1].reshape(ne, cap, d)
+    h = jax.nn.relu(jnp.einsum("ecd,edg->ecg", buf, w1))   # [NE, C, G]
+    out = jnp.einsum("ecg,egd->ecd", h, w2)                # [NE, C, D]
+    out_flat = out.reshape(ne * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.clip(flat_idx, 0, ne * cap - 1)], 0)
+    gathered = gathered * sel_val.reshape(rows, 1)
+    return gathered.reshape(n, k, d).sum(axis=1)
+
+
+def moe_ff(p: Params, x: jax.Array, rng: jax.Array, cfg: MoEConfig,
+           deterministic: bool) -> Tuple[jax.Array, dict]:
+    """σ-MoE feedforward (Eq. 11).  x: [N, D] -> [N, D].
+
+    aux: reg loss, per-expert usage counts [NE] (Fig. 3/7), mean selection
+    probability [NE], and the co-occurrence count matrix [NE, NE] (Fig. 6).
+    """
+    n, d = x.shape
+    ne, g, k = cfg.n_experts, cfg.group_size, cfg.k
+    r1, r2 = jax.random.split(rng)
+
+    logits = x @ p["w3"]                                   # [N, NE]
+    sel_val, sel_idx, probs = _selection(cfg, logits, r1, deterministic)
+    reg = _regularization(cfg, probs, sel_idx)
+
+    # Expert execution through the CVMM kernel: replicate each token K
+    # times, one row per selected expert.
+    xr = jnp.repeat(x, k, axis=0)                          # [N*K, D]
+    sr = sel_idx.reshape(n * k).astype(jnp.int32)
+    h = jax.nn.relu(cvmm(xr, sr, p["w1"]))                 # [N*K, G]
+    hs = h * sel_val.reshape(n * k, 1)
+    if cfg.standard_dropout > 0.0 and not deterministic:
+        hs = dropout(r2, hs, cfg.standard_dropout, deterministic)
+    if cfg.kernel == "grouped" and deterministic \
+            and cfg.standard_dropout == 0.0:
+        # capacity-dispatch path (semantics-validation + TPU-shape bench;
+        # h from the CVMM above still feeds the activity statistics).
+        y = grouped_dispatch(x, sel_idx, sel_val, p["w1"], p["w2"],
+                             cfg.capacity_factor)
+    else:
+        y = cvmm(hs, sr, p["w2"])                          # [N*K, D]
+        y = y.reshape(n, k, d).sum(axis=1)
+
+    onehot = jax.nn.one_hot(sel_idx, ne, dtype=jnp.float32)  # [N, K, NE]
+    usage = onehot.sum(axis=(0, 1))                        # counts per expert
+    sel_weight = (onehot * sel_val[..., None]).sum(axis=(0, 1))
+    tok = onehot.sum(axis=1)                               # [N, NE]
+    cooc = tok.T @ tok                                     # [NE, NE]
+    active = (h > 0).sum(axis=-1).astype(jnp.float32).reshape(n, k)
+    return y, {
+        "reg": reg,
+        "usage": usage,
+        "sel_weight": sel_weight,
+        "mean_prob": probs.mean(axis=0),
+        "cooccurrence": cooc,
+        "active_channels": active.sum(axis=-1).mean(),
+        "active_channels_std": active.sum(axis=-1).std(),
+    }

@@ -1,0 +1,71 @@
+"""Product-Key Memory layer (paper Sec. 3.2, App. A.3).
+
+Modifications relative to Lample et al. (2019), following the paper:
+no batch-norm, no input projection (the input is split directly into the
+two half-keys), the same learning rate as the rest of the network, and —
+the paper's contribution — a choice of ReLU instead of softmax as the
+candidate activation.  Multi-head: each head has its own sub-key
+matrices and selects knn values from a shared value table.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import PKMConfig
+from ..kernels.pkm_score import pkm_topk
+from .common import Params, dense_std, dropout, normal_init
+
+
+def pkm_init(rng: jax.Array, d_model: int, cfg: PKMConfig,
+             n_layers: int) -> Params:
+    s, h = cfg.n_subkeys, cfg.heads
+    n_values = s * s
+    k1, k2, k3 = jax.random.split(rng, 3)
+    half = d_model // 2
+    if cfg.custom_init:
+        # "PKM + init" (Tab. 6): init as if keys/values formed the dense
+        # block of width n_values.
+        std_k = dense_std(half, n_layers)
+        std_v = dense_std(n_values, n_layers)
+    else:
+        std_k = dense_std(half, n_layers)
+        std_v = dense_std(n_values, n_layers)
+    # keys: [H, 2, S, half] — two sub-key sets per head
+    return {
+        "keys": normal_init(k1, (h, 2, s, half), std_k),
+        "values": normal_init(k2, (n_values, d_model), std_v),
+    }
+
+
+def pkm_ff(p: Params, x: jax.Array, rng: jax.Array, cfg: PKMConfig,
+           deterministic: bool) -> Tuple[jax.Array, dict]:
+    """x: [N, D] -> [N, D] through the product-key memory."""
+    n, d = x.shape
+    s, hh, knn = cfg.n_subkeys, cfg.heads, cfg.knn
+    half = d // 2
+    xa, xb = x[:, :half], x[:, half:]
+
+    y = jnp.zeros_like(x)
+    total_active = jnp.zeros((), jnp.float32)
+    for h in range(hh):
+        ua = xa @ p["keys"][h, 0].T                       # [N, S]
+        ub = xb @ p["keys"][h, 1].T
+        scores, idx = pkm_topk(ua, ub, knn)               # [N, knn]
+        if cfg.activation == "relu":
+            w = jax.nn.relu(scores)
+        elif cfg.activation == "softmax":
+            w = jax.nn.softmax(scores, axis=-1)
+        else:
+            raise ValueError(f"unknown pkm activation {cfg.activation!r}")
+        vals = p["values"][idx]                           # [N, knn, D]
+        y = y + jnp.einsum("nk,nkd->nd", w, vals)
+        total_active = total_active + (w > 0).sum(axis=-1).astype(
+            jnp.float32).mean()
+
+    return y, {"reg": jnp.zeros((), jnp.float32),
+               "active_channels": total_active,
+               "active_channels_std": jnp.zeros((), jnp.float32)}

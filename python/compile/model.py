@@ -1,0 +1,141 @@
+"""L2: the Transformer-XL language model assembled from layer variants.
+
+Pre-layernorm Transformer-XL (paper Sec. 6): every MLP block — all
+n_layers of them, not every n-th — is replaced by the configured
+approximation (dense | topk | pkm | moe).  The model is a pure function
+of (params, mems, tokens, rng); all state lives outside (in Rust).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import compat
+from .configs import ModelConfig
+from .layers import attention as att
+from .layers import feedforward as ffl
+from .layers import moe as moel
+from .layers import pkm as pkml
+from .layers.common import (Params, dense_std, dropout, layer_norm,
+                            layer_norm_init, normal_init)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
+    """Initialize the full parameter tree (nested dicts, stable order)."""
+    keys = jax.random.split(rng, cfg.n_layers + 2)
+    emb_std = dense_std(cfg.d_model, 1)
+    params: Params = {
+        "embed": normal_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                             emb_std),
+        "out_bias": jnp.zeros((cfg.vocab_size,), jnp.float32),
+        "ln_final": layer_norm_init(cfg.d_model),
+        "layers": [],
+    }
+    if not cfg.tied_embeddings:
+        params["unembed"] = normal_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), emb_std)
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 3)
+        layer: Params = {
+            "ln1": layer_norm_init(cfg.d_model),
+            "ln2": layer_norm_init(cfg.d_model),
+            "att": att.attention_init(lk[0], cfg.d_model, cfg.n_heads,
+                                      cfg.head_dim, cfg.n_layers),
+        }
+        if cfg.ff_variant in ("dense", "topk"):
+            layer["ff"] = ffl.dense_ff_init(lk[1], cfg.d_model, cfg.d_ff,
+                                            cfg.n_layers)
+        elif cfg.ff_variant == "moe":
+            layer["ff"] = moel.moe_init(lk[1], cfg.d_model, cfg.moe,
+                                        cfg.n_layers)
+        elif cfg.ff_variant == "pkm":
+            layer["ff"] = pkml.pkm_init(lk[1], cfg.d_model, cfg.pkm,
+                                        cfg.n_layers)
+        else:
+            raise ValueError(f"unknown ff variant {cfg.ff_variant!r}")
+        params["layers"].append(layer)
+    return params
+
+
+def _apply_ff(cfg: ModelConfig, p: Params, x2d: jax.Array, rng: jax.Array,
+              deterministic: bool) -> Tuple[jax.Array, dict]:
+    if cfg.ff_variant == "dense":
+        return ffl.dense_ff(p, x2d, rng, cfg.dropout, deterministic)
+    if cfg.ff_variant == "topk":
+        return ffl.topk_ff(p, x2d, rng, cfg.topk.k, cfg.dropout,
+                           deterministic)
+    if cfg.ff_variant == "moe":
+        return moel.moe_ff(p, x2d, rng, cfg.moe, deterministic)
+    if cfg.ff_variant == "pkm":
+        return pkml.pkm_ff(p, x2d, rng, cfg.pkm, deterministic)
+    raise ValueError(cfg.ff_variant)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            mems: List[jax.Array], rng: jax.Array,
+            deterministic: bool, mem_len: int):
+    """Run the LM over one segment.
+
+    tokens: [B, T] int32; mems: n_layers arrays [B, M, D].
+    Returns (logits [B, T, V], new_mems, aux) where aux aggregates the
+    per-layer regularization losses and statistics.
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]                    # [B, T, D]
+    rngs = jax.random.split(rng, cfg.n_layers * 3 + 1)
+    x = dropout(rngs[-1], x, cfg.dropout, deterministic)
+
+    new_mems: List[jax.Array] = []
+    reg_total = jnp.zeros((), jnp.float32)
+    stats: Dict[str, Any] = {"usage": [], "mean_prob": [],
+                             "sel_weight": [], "cooccurrence": [],
+                             "active_channels": [],
+                             "active_channels_std": []}
+    for i, lp in enumerate(params["layers"]):
+        r_att, r_ff, r_do = rngs[3 * i], rngs[3 * i + 1], rngs[3 * i + 2]
+        mem = mems[i]
+        new_mems.append(att.update_memory(x, mem, mem_len))
+        # pre-LN attention block
+        h = layer_norm(lp["ln1"], x)
+        mem_n = layer_norm(lp["ln1"], mem)
+        a = att.attention(lp["att"], h, mem_n, r_att, cfg.n_heads,
+                          cfg.head_dim, cfg.attn_dropout, deterministic)
+        a = dropout(r_do, a, cfg.dropout, deterministic)
+        x = x + a
+        # pre-LN feedforward block (flattened to [B*T, D])
+        h = layer_norm(lp["ln2"], x).reshape(b * t, -1)
+        y, aux = _apply_ff(cfg, lp["ff"], h, r_ff, deterministic)
+        y = dropout(r_ff, y.reshape(b, t, -1), cfg.dropout, deterministic)
+        x = x + y
+        reg_total = reg_total + aux["reg"]
+        for key in ("usage", "mean_prob", "sel_weight", "cooccurrence"):
+            if key in aux:
+                stats[key].append(aux[key])
+        stats["active_channels"].append(aux.get(
+            "active_channels", jnp.zeros((), jnp.float32)))
+        stats["active_channels_std"].append(aux.get(
+            "active_channels_std", jnp.zeros((), jnp.float32)))
+
+    x = layer_norm(params["ln_final"], x)
+    unembed = (params["embed"].T if cfg.tied_embeddings
+               else params["unembed"])
+    logits = x @ unembed + params["out_bias"]
+    aux_out: Dict[str, Any] = {
+        "reg": reg_total,
+        "active_channels": jnp.stack(stats["active_channels"]),
+        "active_channels_std": jnp.stack(stats["active_channels_std"]),
+    }
+    for key in ("usage", "mean_prob", "sel_weight", "cooccurrence"):
+        if stats[key]:
+            aux_out[key] = jnp.stack(stats[key])     # [L, ...]
+    return logits, new_mems, aux_out
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy (nats).  logits [B,T,V], targets [B,T]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -compat.take_along_last(logp, targets[..., None])
+    return nll.mean()

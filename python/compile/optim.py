@@ -1,0 +1,68 @@
+"""Adam + cosine LR decay + global-norm gradient clipping (paper App. B).
+
+Written dependency-free (no optax) so the optimizer state is a plain
+(m, v) tree pair that the AOT manifest can describe to the Rust side.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TrainConfig
+
+
+def init_opt_state(params: Any) -> Tuple[Any, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def cosine_lr(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Cosine decay from cfg.lr to 0 over total_steps, linear warmup."""
+    step_f = step.astype(jnp.float32)
+    total = jnp.asarray(cfg.total_steps, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.asarray(cfg.warmup_steps, jnp.float32)
+        warm_frac = jnp.minimum(step_f / warm, 1.0)
+    else:
+        warm_frac = 1.0
+    prog = jnp.clip(step_f / total, 0.0, 1.0)
+    return cfg.lr * warm_frac * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), gn
+
+
+def adam_update(cfg: TrainConfig, params: Any, grads: Any, m: Any, v: Any,
+                step: jax.Array):
+    """One Adam step with bias correction.  step is 0-based."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    t = step.astype(jnp.float32) + 1.0
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    lr = cosine_lr(cfg, step)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    new_m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    new_v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * (g * g), v, grads)
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        return p - lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_params, new_m, new_v, gnorm, lr

@@ -1,0 +1,83 @@
+"""HLO-compat helpers vs their modern-JAX equivalents."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import compat
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 30), d=st.integers(1, 50), k=st.integers(1, 50))
+def test_top_k_matches_lax(n, d, k):
+    k = min(k, d)
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    v1, i1 = compat.top_k(x, k)
+    v2, i2 = jax.lax.top_k(x, k)
+    np.testing.assert_allclose(v1, v2)
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_top_k_tie_breaking_matches_lax():
+    x = jnp.array([[1.0, 3.0, 3.0, 2.0, 3.0]])
+    v1, i1 = compat.top_k(x, 3)
+    v2, i2 = jax.lax.top_k(x, 3)
+    np.testing.assert_array_equal(i1, i2)  # lower index wins ties
+
+
+def test_top_k_grad_matches_lax():
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 13))
+
+    def f(fn):
+        return jax.grad(lambda x: (fn(x, 4)[0] ** 3).sum())(x)
+
+    np.testing.assert_allclose(f(compat.top_k), f(jax.lax.top_k),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_top_k_3d():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 4, 9))
+    v1, i1 = compat.top_k(x, 2)
+    v2, i2 = jax.lax.top_k(x, 2)
+    np.testing.assert_allclose(v1, v2)
+    np.testing.assert_array_equal(i1, i2)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 10), d=st.integers(1, 20), k=st.integers(1, 8))
+def test_take_along_last_matches_jnp(n, d, k):
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    idx = jax.random.randint(jax.random.PRNGKey(4), (n, k), 0, d)
+    np.testing.assert_allclose(
+        compat.take_along_last(x, idx),
+        jnp.take_along_axis(x, idx, axis=-1))
+
+
+def test_take_along_last_grad():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 7))
+    idx = jax.random.randint(jax.random.PRNGKey(6), (4, 3), 0, 7)
+
+    def loss(fn):
+        return jax.grad(lambda x: (fn(x) ** 2).sum())(x)
+
+    g1 = loss(lambda x: compat.take_along_last(x, idx))
+    g2 = loss(lambda x: jnp.take_along_axis(x, idx, axis=-1))
+    np.testing.assert_allclose(g1, g2, rtol=1e-6)
+
+
+def test_take_along_last_3d():
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 3, 11))
+    idx = jax.random.randint(jax.random.PRNGKey(8), (2, 3, 4), 0, 11)
+    np.testing.assert_allclose(
+        compat.take_along_last(x, idx),
+        jnp.take_along_axis(x, idx, axis=-1))
+
+
+def test_argmax_onehot():
+    x = jnp.array([[0.1, 0.9, 0.3], [0.5, 0.5, 0.2]])
+    oh = compat.argmax_onehot(x)
+    np.testing.assert_allclose(oh, [[0, 1, 0], [1, 0, 0]])

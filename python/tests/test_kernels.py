@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import cvmm, pkm_score, ref, topk_act
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=12, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# --------------------------------------------------------------------- CVMM
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 70),
+    m=st.integers(1, 24),
+    l=st.integers(1, 24),
+    ne=st.integers(1, 9),
+    tile=st.sampled_from([8, 16, 128]),
+)
+def test_cvmm_matches_ref(n, m, l, ne, tile):
+    v = rand(0, (n, m))
+    s = jax.random.randint(jax.random.PRNGKey(1), (n,), 0, ne)
+    mats = rand(2, (ne, m, l))
+    out = cvmm.cvmm(v, s, mats, token_tile=tile)
+    np.testing.assert_allclose(out, ref.cvmm_ref(v, s, mats),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 40), ne=st.integers(1, 6))
+def test_cvmm_grads_match_ref(n, ne):
+    m, l = 12, 10
+    v = rand(3, (n, m))
+    s = jax.random.randint(jax.random.PRNGKey(4), (n,), 0, ne)
+    mats = rand(5, (ne, m, l))
+
+    def f_kernel(v, mats):
+        return (cvmm.cvmm(v, s, mats, token_tile=16) ** 2).sum()
+
+    def f_ref(v, mats):
+        return (ref.cvmm_ref(v, s, mats) ** 2).sum()
+
+    gv1, gm1 = jax.grad(f_kernel, argnums=(0, 1))(v, mats)
+    gv2, gm2 = jax.grad(f_ref, argnums=(0, 1))(v, mats)
+    np.testing.assert_allclose(gv1, gv2, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gm1, gm2, rtol=1e-3, atol=1e-4)
+
+
+def test_cvmm_expert_minus_one_rows_are_zero():
+    # padding-index semantics: s == -1 contributes zeros
+    v = rand(6, (5, 4))
+    s = jnp.array([0, -1, 1, -1, 0], jnp.int32)
+    mats = rand(7, (2, 4, 3))
+    out = cvmm.cvmm(v, s, mats)
+    np.testing.assert_allclose(out[1], np.zeros(3), atol=1e-6)
+    np.testing.assert_allclose(out[3], np.zeros(3), atol=1e-6)
+
+
+def test_cvmm_grad_w_direct():
+    n, m, l, ne = 33, 7, 5, 4
+    v = rand(8, (n, m))
+    s = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, ne)
+    g = rand(10, (n, l))
+    dw = cvmm.cvmm_grad_w(v, s, g, ne, token_tile=8)
+    np.testing.assert_allclose(dw, ref.cvmm_grad_w_ref(v, s, g, ne),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cvmm_single_expert_equals_matmul():
+    v = rand(11, (20, 8))
+    s = jnp.zeros((20,), jnp.int32)
+    mats = rand(12, (1, 8, 6))
+    np.testing.assert_allclose(cvmm.cvmm(v, s, mats), v @ mats[0],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- Top-K
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 50), d=st.integers(2, 64), frac=st.floats(0.1, 1.0))
+def test_topk_mask_matches_ref(n, d, frac):
+    k = max(1, int(d * frac))
+    u = rand(13, (n, d))
+    out = topk_act.topk_mask(u, k)
+    np.testing.assert_allclose(out, ref.topk_mask_ref(u, k),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_topk_mask_keeps_exactly_k():
+    u = rand(14, (30, 40))
+    out = np.asarray(topk_act.topk_mask(u, 5))
+    counts = (out != 0).sum(axis=1)
+    assert (counts == 5).all()
+
+
+def test_topk_mask_full_k_is_identity():
+    u = rand(15, (9, 16))
+    np.testing.assert_allclose(topk_act.topk_mask(u, 16), u)
+
+
+# --------------------------------------------------------------------- PKM
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 30), s_dim=st.integers(2, 20), knn=st.integers(1, 12))
+def test_pkm_topk_matches_full_table(n, s_dim, knn):
+    knn = min(knn, s_dim * s_dim)
+    ua = rand(16, (n, s_dim))
+    ub = rand(17, (n, s_dim))
+    v1, i1 = pkm_score.pkm_topk(ua, ub, knn)
+    v2, i2 = ref.pkm_scores_ref(ua, ub, knn)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+    # same *set* of indices (ordering among exact ties may differ)
+    np.testing.assert_allclose(np.sort(np.asarray(v1), axis=1),
+                               np.sort(np.asarray(v2), axis=1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pkm_fast_ref_equals_full_ref():
+    ua = rand(18, (11, 9))
+    ub = rand(19, (11, 9))
+    v1, i1 = ref.pkm_scores_fast_ref(ua, ub, 6)
+    v2, i2 = ref.pkm_scores_ref(ua, ub, 6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5)
+    np.testing.assert_array_equal(np.sort(i1, 1), np.sort(i2, 1))
+
+
+def test_pkm_index_decomposition():
+    # index = b * S + a must address ub[b] + ua[a]
+    s_dim = 7
+    ua = rand(20, (4, s_dim))
+    ub = rand(21, (4, s_dim))
+    v, i = pkm_score.pkm_topk(ua, ub, 5)
+    ia = np.asarray(i) % s_dim
+    ib = np.asarray(i) // s_dim
+    recomputed = np.take_along_axis(np.asarray(ub), ib, 1) + \
+        np.take_along_axis(np.asarray(ua), ia, 1)
+    np.testing.assert_allclose(np.asarray(v), recomputed, rtol=1e-5)
+
+
+# --------------------------------------------------------- MoE dispatch ref
+
+def test_moe_dispatch_ref_selfconsistent():
+    n, d, ne, g, k = 13, 8, 4, 6, 2
+    x = rand(22, (n, d))
+    w1 = rand(23, (ne, d, g))
+    w2 = rand(24, (ne, g, d))
+    idx = jax.random.randint(jax.random.PRNGKey(25), (n, k), 0, ne)
+    val = jax.nn.sigmoid(rand(26, (n, k)))
+    y = ref.moe_dispatch_ref(x, idx, val, w1, w2)
+    # brute force
+    want = np.zeros((n, d), np.float32)
+    for i in range(n):
+        for j in range(k):
+            e = int(idx[i, j])
+            h = np.maximum(np.asarray(x[i]) @ np.asarray(w1[e]), 0)
+            want[i] += float(val[i, j]) * (h @ np.asarray(w2[e]))
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)

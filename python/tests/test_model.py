@@ -1,0 +1,179 @@
+"""Full-model behaviour for every FF variant + flops model + presets."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import api, flops
+from compile import model as M
+from compile.configs import (ModelConfig, MoEConfig, PKMConfig, TopKConfig,
+                             TrainConfig, all_presets, get_preset)
+
+
+def tiny_cfg(variant, **kw):
+    base = dict(name=f"t-{variant}", vocab_size=64, d_model=16, d_ff=32,
+                n_layers=2, n_heads=2, head_dim=8, context=8, mem_len=8,
+                ff_variant=variant)
+    base.update(kw)
+    if variant == "moe":
+        base.setdefault("moe", MoEConfig(n_experts=4, group_size=8, k=2))
+    if variant == "pkm":
+        base["d_ff"] = 36
+        base.setdefault("pkm", PKMConfig(n_subkeys=6, knn=4, heads=2))
+    if variant == "topk":
+        base.setdefault("topk", TopKConfig(k=8))
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("variant", ["dense", "topk", "moe", "pkm"])
+def test_forward_shapes_and_loss(variant):
+    cfg = tiny_cfg(variant)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, t = 3, cfg.context
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, t), 0,
+                                cfg.vocab_size)
+    mems = [jnp.zeros((b, cfg.mem_len, cfg.d_model))
+            for _ in range(cfg.n_layers)]
+    logits, new_mems, aux = M.forward(params, cfg, tokens, mems,
+                                      jax.random.PRNGKey(2), True,
+                                      cfg.mem_len)
+    assert logits.shape == (b, t, cfg.vocab_size)
+    assert len(new_mems) == cfg.n_layers
+    assert new_mems[0].shape == (b, cfg.mem_len, cfg.d_model)
+    loss = M.lm_loss(logits, tokens)
+    # at init the loss must be in the vicinity of ln(V) (the tiny test
+    # dims make the init variance relatively large, hence the loose bound)
+    assert abs(float(loss) - math.log(cfg.vocab_size)) < 2.5
+
+
+@pytest.mark.parametrize("variant", ["dense", "topk", "moe", "pkm"])
+def test_gradients_flow_everywhere(variant):
+    cfg = tiny_cfg(variant)
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    b, t = 2, cfg.context
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, t), 0,
+                                cfg.vocab_size)
+    mems = [jnp.zeros((b, cfg.mem_len, cfg.d_model))
+            for _ in range(cfg.n_layers)]
+
+    def loss_fn(p):
+        logits, _, aux = M.forward(p, cfg, tokens, mems,
+                                   jax.random.PRNGKey(5), False,
+                                   cfg.mem_len)
+        return M.lm_loss(logits, tokens) + aux["reg"]
+
+    grads = jax.grad(loss_fn)(params)
+    leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+    dead = [jax.tree_util.keystr(path)
+            for path, g in leaves
+            if float(jnp.max(jnp.abs(g))) == 0.0
+            and "out_bias" not in jax.tree_util.keystr(path)
+            and "ln" not in jax.tree_util.keystr(path)
+            and ".u" not in jax.tree_util.keystr(path)
+            and ".v" not in jax.tree_util.keystr(path)
+            and "bias" not in jax.tree_util.keystr(path)]
+    assert not dead, f"dead gradients: {dead}"
+
+
+def test_deterministic_eval_is_reproducible():
+    cfg = tiny_cfg("moe")
+    params = M.init_params(jax.random.PRNGKey(6), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (2, cfg.context),
+                                0, cfg.vocab_size)
+    mems = [jnp.zeros((2, cfg.mem_len, cfg.d_model))
+            for _ in range(cfg.n_layers)]
+    l1, _, _ = M.forward(params, cfg, tokens, mems, jax.random.PRNGKey(8),
+                         True, cfg.mem_len)
+    l2, _, _ = M.forward(params, cfg, tokens, mems, jax.random.PRNGKey(9),
+                         True, cfg.mem_len)
+    np.testing.assert_allclose(l1, l2)
+
+
+def test_train_step_reduces_loss_on_constant_data():
+    cfg = tiny_cfg("moe")
+    tcfg = TrainConfig(batch_size=2, lr=3e-3, total_steps=10_000)
+    ts = jax.jit(api.make_train_step(cfg, tcfg))
+    args = api.example_args(cfg, tcfg, 2 * cfg.context)
+    params, m, v, mems, _, _, _ = args["train_step"]
+    tokens = jax.random.randint(jax.random.PRNGKey(10),
+                                (2, cfg.context + 1), 0, 8)
+    first = last = None
+    for step in range(12):
+        out = ts(params, m, v, mems, tokens, jnp.asarray(step),
+                 jnp.asarray(0, jnp.uint32))
+        loss, _, _, params, m, v, mems, _ = out
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first - 0.5, (first, last)
+
+
+def test_eval_step_counts_tokens():
+    cfg = tiny_cfg("dense")
+    tcfg = TrainConfig(batch_size=2)
+    es = jax.jit(api.make_eval_step(cfg, 2 * cfg.context))
+    args = api.example_args(cfg, tcfg, 2 * cfg.context)
+    params, emems, tokens = args["eval_step"]
+    s, n, _, _ = es(params, emems, tokens)
+    assert float(n) == 2 * cfg.context
+    assert float(s) / float(n) == pytest.approx(math.log(cfg.vocab_size),
+                                                abs=2.5)
+
+
+def test_step_fwd_next_token_logits():
+    cfg = tiny_cfg("moe")
+    tcfg = TrainConfig(batch_size=2)
+    fwd = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
+    args = api.example_args(cfg, tcfg, 2 * cfg.context, serve_batch=3)
+    params, smems, stok = args["step_fwd"]
+    logits, new_mems = fwd(params, smems, stok)
+    assert logits.shape == (3, cfg.vocab_size)
+    assert new_mems[0].shape == smems[0].shape
+
+
+# --------------------------------------------------------------- presets
+
+def test_all_presets_validate():
+    for name, cfg in all_presets().items():
+        cfg.validate()
+
+
+def test_parameter_matching_tiny():
+    """tiny-dense and tiny-moe must be parameter-matched within 1%."""
+    d = flops.model_params(get_preset("tiny-dense"))
+    m = flops.model_params(get_preset("tiny-moe"))
+    assert abs(d - m) / d < 0.01, (d, m)
+
+
+def test_parameter_matching_paper_scale():
+    """The paper-scale presets must land near the advertised counts."""
+    p47 = flops.model_params(get_preset("wt103-s-dense"))
+    assert 40e6 < p47 < 55e6, p47
+    p262 = flops.model_params(get_preset("wt103-b-dense"))
+    assert 240e6 < p262 < 285e6, p262
+    p41 = flops.model_params(get_preset("enwik8-dense"))
+    assert 36e6 < p41 < 46e6, p41
+
+
+def test_flops_fractions_match_paper():
+    """Tab. 3 '% FLOPs' column: 25% small, 12.5% big; Tab. 7 3.1% WT-S*."""
+    s = flops.ff_fraction_vs_dense(get_preset("wt103-s-moe"),
+                                   get_preset("wt103-s-dense"))
+    assert abs(s["flops_fraction"] - 0.25) < 0.01, s
+    b = flops.ff_fraction_vs_dense(get_preset("wt103-b-moe"),
+                                   get_preset("wt103-b-dense"))
+    assert abs(b["flops_fraction"] - 0.125) < 0.005, b
+    star = flops.ff_fraction_vs_dense(get_preset("wt103-s-star-moe"),
+                                      get_preset("wt103-s-star-dense"))
+    assert abs(star["flops_fraction"] - 0.031) < 0.002, star
+
+
+def test_moe_flops_independent_of_n_experts():
+    """App. A.5: MoE cost depends on G and K, not N_E (selector aside)."""
+    a = flops.moe_ff_cost(512, 16, 128, 4)
+    b = flops.moe_ff_cost(512, 64, 128, 4)
+    assert a.flops == b.flops
+    assert b.selector_flops > a.selector_flops

@@ -1,0 +1,215 @@
+"""σ-MoE layer semantics: selection variants, regularizers, expert
+dropout, initialization, and the dense-equivalence property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import MoEConfig
+from compile.kernels import ref
+from compile.layers import moe
+from compile.layers.common import dense_std
+
+
+def mk_params(key, d, ne, g):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    return {
+        "w1": 0.3 * jax.random.normal(k1, (ne, d, g)),
+        "w2": 0.3 * jax.random.normal(k2, (ne, g, d)),
+        "w3": 0.3 * jax.random.normal(k3, (d, ne)),
+    }
+
+
+def run(cfg, p, x, deterministic=True, seed=0):
+    return moe.moe_ff(p, x, jax.random.PRNGKey(seed), cfg, deterministic)
+
+
+def test_moe_matches_dispatch_ref():
+    d, ne, g, k, n = 16, 8, 4, 2, 24
+    cfg = MoEConfig(n_experts=ne, group_size=g, k=k, selection="sigmoid",
+                    regularization="none")
+    p = mk_params(0, d, ne, g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    y, aux = run(cfg, p, x)
+    logits = x @ p["w3"]
+    scores = jax.nn.sigmoid(logits)
+    _, idx = jax.lax.top_k(scores, k)
+    val = jnp.take_along_axis(scores, idx, axis=1)
+    want = ref.moe_dispatch_ref(x, idx, val, p["w1"], p["w2"])
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+def test_all_experts_selected_equals_dense():
+    """K = N_E with unit gates == the dense MLP with concatenated experts
+    (the paper's Sec. 3 equivalence)."""
+    d, ne, g, n = 12, 4, 8, 10
+    cfg = MoEConfig(n_experts=ne, group_size=g, k=ne, selection="sigmoid",
+                    regularization="none")
+    p = mk_params(2, d, ne, g)
+    # force gates to 1: huge positive logits
+    p["w3"] = jnp.zeros_like(p["w3"])
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    y, _ = run(cfg, p, x)
+    # dense equivalent: W1 [d, ne*g], W2 [ne*g, d], gate 0.5 (sigmoid(0))
+    w1 = jnp.concatenate([p["w1"][e] for e in range(ne)], axis=1)
+    w2 = jnp.concatenate([p["w2"][e] for e in range(ne)], axis=0)
+    dense = (0.5 * jax.nn.relu(x @ w1)) @ w2
+    np.testing.assert_allclose(y, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_sigmoid_gates_do_not_compete():
+    """Increasing one expert's logit must not change the other selected
+    expert's gate value (the paper's core argument for sigmoid)."""
+    d, ne, g = 8, 4, 4
+    cfg = MoEConfig(n_experts=ne, group_size=g, k=2, selection="sigmoid",
+                    regularization="none")
+    p = mk_params(4, d, ne, g)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, d))
+    logits = x @ p["w3"]
+    s = jax.nn.sigmoid(logits)
+    _, idx = jax.lax.top_k(s, 2)
+    # bump w3 toward the top expert: other gate unchanged under sigmoid
+    e_top = int(idx[0, 0])
+    e_other = int(idx[0, 1])
+    p2 = dict(p)
+    p2["w3"] = p["w3"].at[:, e_top].multiply(2.0)
+    s2 = jax.nn.sigmoid(x @ p2["w3"])
+    np.testing.assert_allclose(s[0, e_other], s2[0, e_other], rtol=1e-6)
+    # whereas softmax would redistribute mass:
+    sm1 = jax.nn.softmax(x @ p["w3"])[0, e_other]
+    sm2 = jax.nn.softmax(x @ p2["w3"])[0, e_other]
+    assert not np.allclose(sm1, sm2, rtol=1e-6)
+
+
+def test_softmax_renorm_gates_sum_to_one():
+    cfg = MoEConfig(n_experts=8, group_size=4, k=4,
+                    selection="softmax_renorm", regularization="none")
+    p = mk_params(6, 16, 8, 4)
+    x = jax.random.normal(jax.random.PRNGKey(7), (9, 16))
+    logits = x @ p["w3"]
+    val, idx, probs = moe._selection(cfg, logits, jax.random.PRNGKey(0),
+                                     True)
+    np.testing.assert_allclose(val.sum(axis=-1), np.ones(9), rtol=1e-5)
+
+
+def test_switch_selects_top1():
+    cfg = MoEConfig(n_experts=8, group_size=4, k=1, selection="switch",
+                    regularization="switch", reg_gamma=0.01)
+    p = mk_params(8, 16, 8, 4)
+    x = jax.random.normal(jax.random.PRNGKey(9), (5, 16))
+    logits = x @ p["w3"]
+    val, idx, probs = moe._selection(cfg, logits, jax.random.PRNGKey(0),
+                                     True)
+    assert idx.shape == (5, 1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+    # switch gate value is the softmax prob of the selected expert
+    np.testing.assert_allclose(
+        val[:, 0], jnp.max(jax.nn.softmax(logits, -1), axis=-1), rtol=1e-5)
+
+
+def test_sbase_sinkhorn_balances_routing():
+    """With Sinkhorn routing, expert assignment counts must be (nearly)
+    uniform across a random batch, unlike raw top-1."""
+    ne = 8
+    cfg = MoEConfig(n_experts=ne, group_size=4, k=1, selection="sbase",
+                    regularization="none", sinkhorn_iters=20)
+    p = mk_params(10, 16, ne, 4)
+    # skewed logits so that raw argmax collapses
+    x = jax.random.normal(jax.random.PRNGKey(11), (256, 16))
+    p["w3"] = p["w3"].at[:, 0].add(3.0)
+    logits = x @ p["w3"]
+    raw_counts = np.bincount(
+        np.asarray(jnp.argmax(logits, -1)), minlength=ne)
+    _, idx, _ = moe._selection(cfg, logits, jax.random.PRNGKey(0),
+                               deterministic=False)
+    sk_counts = np.bincount(np.asarray(idx[:, 0]), minlength=ne)
+    assert raw_counts.max() > 2 * sk_counts.max() or \
+        sk_counts.std() < raw_counts.std()
+    # deterministic (eval) mode ignores sinkhorn:
+    _, idx_det, _ = moe._selection(cfg, logits, jax.random.PRNGKey(0),
+                                   deterministic=True)
+    np.testing.assert_array_equal(np.asarray(idx_det[:, 0]),
+                                  np.argmax(np.asarray(
+                                      jax.nn.sigmoid(logits)), -1))
+
+
+def test_expert_dropout_masks_experts():
+    """With δ→1-ε, almost all experts are masked; selections must avoid
+    dropped experts and gates of dropped experts are zero."""
+    ne = 16
+    cfg = MoEConfig(n_experts=ne, group_size=2, k=2, selection="sigmoid",
+                    regularization="none", expert_dropout=0.5)
+    p = mk_params(12, 8, ne, 2)
+    x = jax.random.normal(jax.random.PRNGKey(13), (64, 8))
+    logits = x @ p["w3"]
+    val, idx, _ = moe._selection(cfg, logits, jax.random.PRNGKey(3),
+                                 deterministic=False)
+    # no rescaling: every nonzero gate equals the raw sigmoid score
+    sig = np.asarray(jax.nn.sigmoid(logits))
+    val = np.asarray(val)
+    idx = np.asarray(idx)
+    nz = val > 0
+    for i in range(val.shape[0]):
+        for j in range(val.shape[1]):
+            if nz[i, j]:
+                np.testing.assert_allclose(val[i, j], sig[i, idx[i, j]],
+                                           rtol=1e-5)
+
+
+def test_entropy_regularizer_sign_and_minimum():
+    cfg = MoEConfig(n_experts=4, group_size=2, k=1,
+                    regularization="entropy", reg_gamma=1.0)
+    uniform = jnp.full((10, 4), 0.25)
+    sel_idx = jnp.zeros((10, 1), jnp.int32)
+    r_uniform = moe._regularization(cfg, uniform, sel_idx)
+    peaked = jnp.tile(jnp.array([[0.97, 0.01, 0.01, 0.01]]), (10, 1))
+    r_peaked = moe._regularization(cfg, peaked, sel_idx)
+    # entropy reg = sum p log p: minimized (most negative) at uniform
+    assert r_uniform < r_peaked
+
+
+def test_switch_regularizer_uniform_is_one():
+    """N_E * f·p == 1 under perfectly uniform routing (Fedus et al.)."""
+    ne = 4
+    cfg = MoEConfig(n_experts=ne, group_size=2, k=1,
+                    regularization="switch", reg_gamma=1.0)
+    probs = jnp.full((8, ne), 1.0 / ne)
+    sel_idx = jnp.arange(8, dtype=jnp.int32).reshape(8, 1) % ne
+    r = moe._regularization(cfg, probs, sel_idx)
+    np.testing.assert_allclose(r, 1.0, rtol=1e-6)
+
+
+def test_init_ours_vs_standard_scale():
+    d, ne, g, nl = 64, 8, 32, 6
+    p_ours = moe.moe_init(jax.random.PRNGKey(0),
+                          d, MoEConfig(n_experts=ne, group_size=g,
+                                       init="ours"), nl)
+    p_std = moe.moe_init(jax.random.PRNGKey(0),
+                         d, MoEConfig(n_experts=ne, group_size=g,
+                                      init="standard"), nl)
+    # ours: W2 std based on d_ff = ne*g; standard: based on g (larger)
+    s_ours = float(jnp.std(p_ours["w2"]))
+    s_std = float(jnp.std(p_std["w2"]))
+    assert s_std > s_ours * 2
+    np.testing.assert_allclose(s_ours, dense_std(ne * g, nl), rtol=0.05)
+    np.testing.assert_allclose(s_std, dense_std(g, nl), rtol=0.05)
+    # selection rows all same norm for ours
+    norms = jnp.linalg.norm(p_ours["w3"], axis=0)
+    np.testing.assert_allclose(norms, norms[0] * jnp.ones_like(norms),
+                               rtol=1e-4)
+
+
+def test_usage_stats_shapes_and_counts():
+    d, ne, g, k, n = 8, 4, 4, 2, 20
+    cfg = MoEConfig(n_experts=ne, group_size=g, k=k,
+                    regularization="none")
+    p = mk_params(14, d, ne, g)
+    x = jax.random.normal(jax.random.PRNGKey(15), (n, d))
+    _, aux = run(cfg, p, x)
+    assert aux["usage"].shape == (ne,)
+    np.testing.assert_allclose(aux["usage"].sum(), n * k)
+    assert aux["cooccurrence"].shape == (ne, ne)
+    # diagonal of co-occurrence counts each expert's token count
+    np.testing.assert_allclose(jnp.diag(aux["cooccurrence"]).sum(), n * k)

@@ -1,0 +1,74 @@
+"""Optimizer math vs a straightforward numpy Adam."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import optim
+from compile.configs import TrainConfig
+
+
+def test_adam_single_step_matches_numpy():
+    cfg = TrainConfig(lr=1e-3, total_steps=10**9, grad_clip=1e9)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    m, v = optim.init_opt_state(p)
+    np_, nm, nv, gnorm, lr = optim.adam_update(cfg, p, g, m, v,
+                                               jnp.asarray(0))
+    # numpy reference, t=1
+    gm = np.array([0.1, 0.2, -0.3])
+    m1 = 0.1 * gm
+    v1 = 0.001 * gm ** 2
+    mhat = m1 / (1 - 0.9)
+    vhat = v1 / (1 - 0.999)
+    want = np.array([1.0, -2.0, 3.0]) - float(lr) * mhat / (
+        np.sqrt(vhat) + cfg.adam_eps)
+    np.testing.assert_allclose(np_["w"], want, rtol=1e-5)
+    np.testing.assert_allclose(gnorm, np.linalg.norm(gm), rtol=1e-5)
+
+
+def test_grad_clip_scales_to_max_norm():
+    cfg = TrainConfig(grad_clip=0.25)
+    g = {"a": jnp.array([3.0, 4.0])}  # norm 5
+    clipped, gn = optim.clip_by_global_norm(g, cfg.grad_clip)
+    np.testing.assert_allclose(gn, 5.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(clipped["a"]), 0.25, rtol=1e-5)
+
+
+def test_grad_clip_noop_below_threshold():
+    g = {"a": jnp.array([0.1, 0.0])}
+    clipped, gn = optim.clip_by_global_norm(g, 0.25)
+    np.testing.assert_allclose(clipped["a"], g["a"], rtol=1e-6)
+
+
+def test_cosine_schedule_endpoints():
+    cfg = TrainConfig(lr=2.5e-4, total_steps=1000)
+    np.testing.assert_allclose(
+        optim.cosine_lr(cfg, jnp.asarray(0)), 2.5e-4, rtol=1e-6)
+    np.testing.assert_allclose(
+        optim.cosine_lr(cfg, jnp.asarray(500)), 1.25e-4, rtol=1e-5)
+    np.testing.assert_allclose(
+        optim.cosine_lr(cfg, jnp.asarray(1000)), 0.0, atol=1e-10)
+    # clamps past the horizon
+    np.testing.assert_allclose(
+        optim.cosine_lr(cfg, jnp.asarray(2000)), 0.0, atol=1e-10)
+
+
+def test_warmup():
+    cfg = TrainConfig(lr=1e-3, total_steps=10000, warmup_steps=100)
+    lr0 = float(optim.cosine_lr(cfg, jnp.asarray(0)))
+    lr50 = float(optim.cosine_lr(cfg, jnp.asarray(50)))
+    lr100 = float(optim.cosine_lr(cfg, jnp.asarray(100)))
+    assert lr0 == 0.0
+    assert 0 < lr50 < lr100
+
+
+def test_adam_converges_on_quadratic():
+    cfg = TrainConfig(lr=0.05, total_steps=10**9, grad_clip=1e9)
+    p = {"w": jnp.array([5.0])}
+    m, v = optim.init_opt_state(p)
+    for t in range(300):
+        g = {"w": 2 * p["w"]}
+        p, m, v, _, _ = optim.adam_update(cfg, p, g, m, v, jnp.asarray(t))
+    assert abs(float(p["w"][0])) < 0.05

@@ -1,0 +1,98 @@
+//! Fig. 2/8-11 reproduction: execution time (and analytic activation
+//! memory) of a single MLP vs MoE feedforward layer's forward+backward
+//! pass, swept over d_model, N_E, and G.
+//!
+//! Prerequisite: `make layerbench` (AOT-lowers the single-layer cases).
+//! Absolute times are CPU-PJRT; the paper's claim that we check is the
+//! *shape*: MoE time/memory ≈ flat in N_E, linear in G and d_model, and
+//! far below the dense layer at matched d_ff.
+
+use sigma_moe::bench_util::bench_budget;
+use sigma_moe::json::Json;
+use sigma_moe::runtime::{Client, FunctionSpec, Program};
+use sigma_moe::tensor::{DType, HostTensor};
+use std::time::Duration;
+
+fn main() {
+    let root = sigma_moe::artifacts_root().join("layerbench");
+    let manifest_path = root.join("layerbench.json");
+    let Ok(text) = std::fs::read_to_string(&manifest_path) else {
+        eprintln!(
+            "layer_scaling: {} missing — run `make layerbench`; skipping",
+            manifest_path.display()
+        );
+        return;
+    };
+    let manifest = Json::parse(&text).expect("layerbench.json");
+    let tokens = manifest.get("tokens").unwrap().as_usize().unwrap();
+    let client = Client::cpu().expect("pjrt client");
+
+    println!("== Fig. 2/8-11: single FF layer fwd+bwd, |B| = {tokens} ==");
+    println!("(CPU PJRT; compare *scaling shape* with the paper, not ms)");
+    for case in manifest.get("cases").unwrap().as_arr().unwrap() {
+        let name = case.get("name").unwrap().as_str().unwrap();
+        let file = case.get("file").unwrap().as_str().unwrap();
+        let kind = case.get("kind").unwrap().as_str().unwrap();
+
+        let parse_bufs = |key: &str| -> Vec<sigma_moe::runtime::BufferSpec> {
+            case.get(key)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|b| sigma_moe::runtime::BufferSpec {
+                    name: b.get("name").unwrap().as_str().unwrap().to_string(),
+                    shape: b
+                        .get("shape")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|d| d.as_usize().unwrap())
+                        .collect(),
+                    dtype: DType::parse(
+                        b.get("dtype").unwrap().as_str().unwrap(),
+                    )
+                    .unwrap(),
+                })
+                .collect()
+        };
+        let spec = FunctionSpec {
+            file: file.to_string(),
+            inputs: parse_bufs("inputs"),
+            outputs: parse_bufs("outputs"),
+        };
+        let prog = Program::load(&client, name, &root.join(file), spec)
+            .expect("compile layer case");
+
+        // deterministic pseudo-random inputs
+        let inputs: Vec<HostTensor> = prog
+            .spec
+            .inputs
+            .iter()
+            .map(|b| {
+                let n: usize = b.shape.iter().product();
+                let vals: Vec<f32> = (0..n)
+                    .map(|i| {
+                        ((i.wrapping_mul(2654435761)) % 1000) as f32 / 1000.0
+                            - 0.5
+                    })
+                    .collect();
+                HostTensor::from_f32(&b.shape, &vals).unwrap()
+            })
+            .collect();
+
+        let s = bench_budget(name, 1, 50, Duration::from_secs(6), || {
+            prog.run(&inputs).expect("run layer case");
+        });
+        // analytic activation memory per token (paper's dashed lines)
+        let act_mem = match kind {
+            "dense" => case.get("d_ff").unwrap().as_f64().unwrap(),
+            _ => {
+                case.get("g").unwrap().as_f64().unwrap()
+                    * case.get("k").unwrap().as_f64().unwrap()
+            }
+        };
+        println!("{}   act-mem/token {:>6.0} floats", s.report(), act_mem);
+    }
+}

@@ -1,0 +1,60 @@
+//! L3 data-pipeline benchmark: synthetic-corpus generation, batcher
+//! window assembly, tokenizer throughput — establishes that the data
+//! path is far from being the training bottleneck (EXPERIMENTS.md §Perf).
+
+use sigma_moe::bench_util::bench;
+use sigma_moe::data::{self, CharTokenizer, WordTokenizer};
+
+fn main() {
+    println!("== data pipeline throughput ==");
+
+    // corpus generation
+    for name in ["wikitext", "enwik8"] {
+        let mut c = data::by_name(name, 2048, 1).unwrap();
+        let n = 65_536;
+        let s = bench(&format!("corpus::{name} {n} tokens"), 1, 20, || {
+            let _ = c.take_vec(n);
+        });
+        println!(
+            "{}   {:>8.2} Mtok/s",
+            s.report(),
+            n as f64 / s.mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // batcher window assembly (the per-step data cost during training)
+    let mut b = data::batcher_for("wikitext", 2048, 16, 64, 2).unwrap();
+    let s = bench("batcher::next_window 16x64", 2, 200, || {
+        let _ = b.next_window().unwrap();
+    });
+    println!(
+        "{}   {:>8.2} Mtok/s",
+        s.report(),
+        (16.0 * 64.0) / s.mean.as_secs_f64() / 1e6
+    );
+
+    // tokenizers
+    let text = {
+        let mut c = data::by_name("enwik8", 256, 3).unwrap();
+        CharTokenizer.decode(&c.take_vec(100_000))
+    };
+    let ct = CharTokenizer;
+    let s = bench("tokenizer::char encode 100k chars", 1, 50, || {
+        let _ = ct.encode(&text);
+    });
+    println!(
+        "{}   {:>8.2} MB/s",
+        s.report(),
+        text.len() as f64 / s.mean.as_secs_f64() / 1e6
+    );
+
+    let wt = WordTokenizer::build(&text, 4096).unwrap();
+    let s = bench("tokenizer::word encode 100k chars", 1, 50, || {
+        let _ = wt.encode(&text);
+    });
+    println!(
+        "{}   {:>8.2} MB/s",
+        s.report(),
+        text.len() as f64 / s.mean.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,55 @@
+//! End-to-end train-step benchmark: wall time of the full optimization
+//! step for each artifact preset, split into on-device execute vs host
+//! (literal upload + readback), with derived tokens/sec — the L3
+//! hot-path profile recorded in EXPERIMENTS.md §Perf.
+
+use sigma_moe::bench_util::bench_budget;
+use sigma_moe::coordinator::Trainer;
+use sigma_moe::data;
+use sigma_moe::runtime::{Client, ModelBundle};
+use std::time::Duration;
+
+fn main() {
+    let client = Client::cpu().expect("pjrt client");
+    let presets = ["tiny-dense", "tiny-moe", "tiny-topk", "tiny-pkm"];
+    println!("== train_step wall time per preset ==");
+    for preset in presets {
+        let dir = sigma_moe::artifacts_root().join(preset);
+        let bundle = match ModelBundle::load(&client, &dir) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{preset}: skipped ({e})");
+                continue;
+            }
+        };
+        let m = &bundle.manifest;
+        let mut trainer = Trainer::new(&bundle, 1).expect("trainer");
+        let mut batcher = data::batcher_for(
+            "wikitext",
+            m.model.vocab_size,
+            m.batch_size,
+            m.model.context,
+            1,
+        )
+        .expect("batcher");
+        let tokens = m.batch_size * m.model.context;
+
+        let s = bench_budget(preset, 1, 30, Duration::from_secs(8), || {
+            let w = batcher.next_window().unwrap();
+            trainer.step_on(w).unwrap();
+        });
+        let exec = bundle
+            .program("train_step")
+            .unwrap()
+            .mean_exec_time()
+            .unwrap_or(Duration::ZERO);
+        let host = s.mean.saturating_sub(exec);
+        println!(
+            "{}   {:>8.0} tok/s   exec {:.3?} / host {:.3?}",
+            s.report(),
+            tokens as f64 / s.mean.as_secs_f64(),
+            exec,
+            host
+        );
+    }
+}

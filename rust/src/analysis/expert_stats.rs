@@ -1,0 +1,238 @@
+//! Expert-utilization statistics accumulated from the `stats` outputs of
+//! train/eval steps.
+//!
+//! The paper's Fig. 3/7 plot, per layer, the total proportion of
+//! selection weight assigned to each expert over the validation set,
+//! sorted by popularity — expert collapse shows up as a near-delta
+//! distribution.  Fig. 6 plots the co-occurrence of experts selected
+//! together for the same token (K > 1).
+
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+
+/// Accumulator over per-layer expert statistics.
+#[derive(Debug, Clone)]
+pub struct ExpertStats {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// summed selection weights per layer/expert [L][E]
+    pub sel_weight: Vec<Vec<f64>>,
+    /// summed selection counts per layer/expert [L][E]
+    pub usage: Vec<Vec<f64>>,
+    /// summed co-occurrence per layer [L][E*E] (row-major), optional
+    pub cooccurrence: Option<Vec<Vec<f64>>>,
+    pub segments: usize,
+}
+
+impl ExpertStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        ExpertStats {
+            n_layers,
+            n_experts,
+            sel_weight: vec![vec![0.0; n_experts]; n_layers],
+            usage: vec![vec![0.0; n_experts]; n_layers],
+            cooccurrence: None,
+            segments: 0,
+        }
+    }
+
+    /// Accumulate one step's stats map (keys like "7.usage" /
+    /// "3.sel_weight" / "...cooccurrence", each an [L, E] or [L, E, E]
+    /// f32 tensor).
+    pub fn accumulate(
+        &mut self,
+        stats: &std::collections::BTreeMap<String, HostTensor>,
+    ) -> Result<()> {
+        for (key, t) in stats {
+            if key.ends_with(".usage") {
+                self.add_le(&mut |s: &mut Self| &mut s.usage, t)?;
+            } else if key.ends_with(".sel_weight") {
+                self.add_le(&mut |s: &mut Self| &mut s.sel_weight, t)?;
+            } else if key.ends_with(".cooccurrence") {
+                self.add_cooc(t)?;
+            }
+        }
+        self.segments += 1;
+        Ok(())
+    }
+
+    fn add_le(
+        &mut self,
+        field: &mut impl FnMut(&mut Self) -> &mut Vec<Vec<f64>>,
+        t: &HostTensor,
+    ) -> Result<()> {
+        let (l, e) = (self.n_layers, self.n_experts);
+        if t.shape != [l, e] {
+            return Err(Error::Shape(format!(
+                "expected [{l}, {e}] stats, got {:?}",
+                t.shape
+            )));
+        }
+        let vals = t.as_f32()?;
+        let dst = field(self);
+        for li in 0..l {
+            for ei in 0..e {
+                dst[li][ei] += vals[li * e + ei] as f64;
+            }
+        }
+        Ok(())
+    }
+
+    fn add_cooc(&mut self, t: &HostTensor) -> Result<()> {
+        let (l, e) = (self.n_layers, self.n_experts);
+        if t.shape != [l, e, e] {
+            return Err(Error::Shape(format!(
+                "expected [{l}, {e}, {e}] cooccurrence, got {:?}",
+                t.shape
+            )));
+        }
+        let vals = t.as_f32()?;
+        let cooc = self
+            .cooccurrence
+            .get_or_insert_with(|| vec![vec![0.0; e * e]; l]);
+        for li in 0..l {
+            for i in 0..e * e {
+                cooc[li][i] += vals[li * e * e + i] as f64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fig. 3/7 series for one layer: proportions of total selection
+    /// weight per expert, sorted descending.
+    pub fn sorted_proportions(&self, layer: usize) -> Vec<f64> {
+        let total: f64 = self.sel_weight[layer].iter().sum();
+        let mut p: Vec<f64> = self.sel_weight[layer]
+            .iter()
+            .map(|w| if total > 0.0 { w / total } else { 0.0 })
+            .collect();
+        p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        p
+    }
+
+    /// Report for a whole model.
+    pub fn report(&self) -> UtilizationReport {
+        let mut layers = Vec::new();
+        for l in 0..self.n_layers {
+            let p = self.sorted_proportions(l);
+            layers.push(LayerUtilization {
+                proportions: p.clone(),
+                entropy: entropy(&p),
+                max_share: p.first().copied().unwrap_or(0.0),
+                unused: p.iter().filter(|&&x| x < 1e-6).count(),
+            });
+        }
+        UtilizationReport { n_experts: self.n_experts, layers }
+    }
+}
+
+/// Shannon entropy in nats of a probability vector.
+fn entropy(p: &[f64]) -> f64 {
+    -p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| x * x.ln())
+        .sum::<f64>()
+}
+
+/// Per-layer utilization summary.
+#[derive(Debug, Clone)]
+pub struct LayerUtilization {
+    pub proportions: Vec<f64>,
+    pub entropy: f64,
+    pub max_share: f64,
+    pub unused: usize,
+}
+
+/// Whole-model utilization report with collapse detection.
+#[derive(Debug, Clone)]
+pub struct UtilizationReport {
+    pub n_experts: usize,
+    pub layers: Vec<LayerUtilization>,
+}
+
+impl UtilizationReport {
+    /// The paper's collapse criterion (informal): a layer is collapsed
+    /// when a few experts hold almost all selection weight.  We flag a
+    /// layer when its utilization entropy is below half the uniform
+    /// entropy or > 25% of experts are unused.
+    pub fn collapsed_layers(&self) -> Vec<usize> {
+        let uniform = (self.n_experts as f64).ln();
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| {
+                l.entropy < 0.5 * uniform
+                    || l.unused * 4 > self.n_experts
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Render the Fig. 3-style table for one layer.
+    pub fn format_layer(&self, layer: usize) -> String {
+        let l = &self.layers[layer];
+        let mut s = format!(
+            "layer {layer}: entropy {:.3} nats (uniform {:.3}), top share {:.1}%, unused {}\n",
+            l.entropy,
+            (self.n_experts as f64).ln(),
+            100.0 * l.max_share,
+            l.unused
+        );
+        s.push_str("  proportions (sorted): ");
+        for p in &l.proportions {
+            s.push_str(&format!("{:.3} ", p));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn stats_with(key: &str, t: HostTensor) -> BTreeMap<String, HostTensor> {
+        let mut m = BTreeMap::new();
+        m.insert(key.to_string(), t);
+        m
+    }
+
+    #[test]
+    fn accumulates_and_sorts() {
+        let mut s = ExpertStats::new(1, 4);
+        let t = HostTensor::from_f32(&[1, 4], &[1.0, 3.0, 0.0, 0.0]).unwrap();
+        s.accumulate(&stats_with("7.sel_weight", t.clone())).unwrap();
+        s.accumulate(&stats_with("7.sel_weight", t)).unwrap();
+        let p = s.sorted_proportions(0);
+        assert!((p[0] - 0.75).abs() < 1e-9);
+        assert!((p[1] - 0.25).abs() < 1e-9);
+        assert_eq!(s.segments, 2);
+    }
+
+    #[test]
+    fn collapse_detection() {
+        let mut s = ExpertStats::new(2, 8);
+        // layer 0: uniform; layer 1: fully collapsed onto expert 0
+        let mut vals = vec![1.0f32; 8];
+        vals.extend([100.0, 0., 0., 0., 0., 0., 0., 0.]);
+        let t = HostTensor::from_f32(&[2, 8], &vals).unwrap();
+        s.accumulate(&stats_with("7.sel_weight", t)).unwrap();
+        let rep = s.report();
+        assert_eq!(rep.collapsed_layers(), vec![1]);
+        assert!(rep.layers[0].entropy > rep.layers[1].entropy);
+    }
+
+    #[test]
+    fn cooccurrence_shape_checked() {
+        let mut s = ExpertStats::new(1, 2);
+        let bad = HostTensor::from_f32(&[1, 3, 3], &[0.0; 9]).unwrap();
+        assert!(s
+            .accumulate(&stats_with("3.cooccurrence", bad))
+            .is_err());
+        let good = HostTensor::from_f32(&[1, 2, 2], &[1., 2., 3., 4.]).unwrap();
+        let mut s2 = ExpertStats::new(1, 2);
+        s2.accumulate(&stats_with("3.cooccurrence", good)).unwrap();
+        assert_eq!(s2.cooccurrence.as_ref().unwrap()[0], vec![1., 2., 3., 4.]);
+    }
+}

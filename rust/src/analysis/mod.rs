@@ -1,0 +1,6 @@
+//! Analysis tooling: expert utilization (Figs. 3 & 7), co-occurrence
+//! (Fig. 6), active-channel counts (Figs. 1/4/5), collapse detection.
+
+pub mod expert_stats;
+
+pub use expert_stats::{ExpertStats, UtilizationReport};

@@ -1,0 +1,101 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations with mean / median / p10 / p90, and
+//! criterion-like one-line reports.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over N iterations.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl Summary {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3?} median  {:>10.3?} mean  [{:.3?} .. {:.3?}]  n={}",
+            self.name, self.median, self.mean, self.p10, self.p90, self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured and `iters` measured iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize,
+             mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters.max(1) as u32;
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    Summary {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: q(0.5),
+        p10: q(0.1),
+        p90: q(0.9),
+    }
+}
+
+/// Like [`bench`] but stops early once `budget` wall time is spent.
+pub fn bench_budget(name: &str, warmup: usize, max_iters: usize,
+                    budget: Duration, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut times = Vec::new();
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    times.sort();
+    let n = times.len().max(1);
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    let q = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+    Summary {
+        name: name.to_string(),
+        iters: times.len(),
+        mean,
+        median: q(0.5),
+        p10: q(0.1),
+        p90: q(0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench("x", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean >= Duration::ZERO);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let s = bench_budget("y", 0, 1_000_000, Duration::from_millis(30),
+                             || std::thread::sleep(Duration::from_millis(5)));
+        assert!(s.iters < 100);
+    }
+}

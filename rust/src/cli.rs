@@ -1,0 +1,242 @@
+//! Tiny declarative CLI argument parser (clap is not in the offline
+//! vendor set).  Supports `--flag`, `--key value`, `--key=value`,
+//! required/optional/defaulted options, and auto-generated help.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Args { about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false,
+                             required: true });
+        self
+    }
+
+    pub fn optional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false,
+                             required: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true,
+                             required: false });
+        self
+    }
+
+    /// Parse an explicit argv (no program name).  Returns Err on unknown
+    /// options, missing required options or missing values.
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Parsed> {
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Config(self.help_text()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "unknown option --{key}\n\n{}",
+                            self.help_text()
+                        ))
+                    })?
+                    .clone();
+                let value = if opt.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| {
+                            Error::Config(format!("--{key} needs a value"))
+                        })?
+                        .clone()
+                };
+                self.values.insert(key.to_string(), value);
+            } else {
+                self.positional.push(arg.clone());
+            }
+        }
+        for o in &self.opts {
+            if o.required && !self.values.contains_key(o.name) {
+                return Err(Error::Config(format!(
+                    "missing required option --{}\n\n{}",
+                    o.name,
+                    self.help_text()
+                )));
+            }
+            if let Some(d) = &o.default {
+                self.values.entry(o.name.to_string()).or_insert(d.clone());
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{}\n\noptions:\n", self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = &o.default {
+                format!(" <value, default {d}>")
+            } else if o.required {
+                " <value, required>".to_string()
+            } else {
+                " <value>".to_string()
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}\n", o.name, o.help));
+        }
+        let _ = &self.program;
+        s
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::Config(format!("option --{name} not set")))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?.parse().map_err(|e| {
+            Error::Config(format!("--{name}: not an integer: {e}"))
+        })
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)?.parse().map_err(|e| {
+            Error::Config(format!("--{name}: not an integer: {e}"))
+        })
+    }
+
+    pub fn i64(&self, name: &str) -> Result<i64> {
+        self.str(name)?.parse().map_err(|e| {
+            Error::Config(format!("--{name}: not an integer: {e}"))
+        })
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?.parse().map_err(|e| {
+            Error::Config(format!("--{name}: not a float: {e}"))
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = Args::new("t")
+            .opt("steps", "100", "steps")
+            .opt("lr", "0.1", "lr")
+            .parse_from(&argv(&["--steps", "5"]))
+            .unwrap();
+        assert_eq!(p.usize("steps").unwrap(), 5);
+        assert_eq!(p.f64("lr").unwrap(), 0.1);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = Args::new("t")
+            .opt("name", "x", "n")
+            .flag("verbose", "v")
+            .parse_from(&argv(&["--name=abc", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.str("name").unwrap(), "abc");
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn required_enforced() {
+        let r = Args::new("t")
+            .required("preset", "preset name")
+            .parse_from(&argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t").parse_from(&argv(&["--nope", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = Args::new("t")
+            .opt("a", "1", "a")
+            .parse_from(&argv(&["cmd1", "--a", "2", "cmd2"]))
+            .unwrap();
+        assert_eq!(p.positional, vec!["cmd1", "cmd2"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::new("t").opt("a", "1", "a").parse_from(&argv(&["--a"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Checkpoints: params + optimizer state + step counter, in a simple
+//! self-describing container (JSON header + raw little-endian blobs).
+//!
+//! Layout:
+//!   magic "SMOE1\n"
+//!   u64 header_len, then header JSON:
+//!     {"step": n, "preset": "...", "entries": [{"name","dtype","shape",
+//!      "offset","bytes"}...]}
+//!   raw data blobs, concatenated.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::tensor::{DType, HostTensor};
+
+const MAGIC: &[u8] = b"SMOE1\n";
+
+/// A named tensor collection with a step counter.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: i64,
+    pub preset: String,
+    pub params: Vec<(String, HostTensor)>,
+    pub opt: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut blobs: Vec<&[u8]> = Vec::new();
+        let mut offset = 0u64;
+        for (section, list) in [("p", &self.params), ("o", &self.opt)] {
+            for (name, t) in list.iter() {
+                entries.push(json::obj(vec![
+                    ("name", json::s(&format!("{section}:{name}"))),
+                    ("dtype", json::s(t.dtype.name())),
+                    (
+                        "shape",
+                        json::arr(
+                            t.shape.iter().map(|&d| json::num(d as f64)).collect(),
+                        ),
+                    ),
+                    ("offset", json::num(offset as f64)),
+                    ("bytes", json::num(t.data.len() as f64)),
+                ]));
+                blobs.push(&t.data);
+                offset += t.data.len() as u64;
+            }
+        }
+        let header = json::obj(vec![
+            ("step", json::num(self.step as f64)),
+            ("preset", json::s(&self.preset)),
+            ("entries", json::arr(entries)),
+        ])
+        .to_string_compact();
+
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for b in blobs {
+                f.write_all(b)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            return Err(Error::Checkpoint("bad magic".into()));
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        if hlen > 64 << 20 {
+            return Err(Error::Checkpoint("header too large".into()));
+        }
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(
+            std::str::from_utf8(&hbytes)
+                .map_err(|_| Error::Checkpoint("non-utf8 header".into()))?,
+        )?;
+        let step = header.get("step")?.as_i64()?;
+        let preset = header.get("preset")?.as_str()?.to_string();
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+
+        let mut params = Vec::new();
+        let mut opt = Vec::new();
+        for e in header.get("entries")?.as_arr()? {
+            let full = e.get("name")?.as_str()?;
+            let (section, name) = full
+                .split_once(':')
+                .ok_or_else(|| Error::Checkpoint("bad entry name".into()))?;
+            let dtype = DType::parse(e.get("dtype")?.as_str()?)?;
+            let shape: Vec<usize> = e
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<std::result::Result<_, _>>()?;
+            let off = e.get("offset")?.as_usize()?;
+            let nbytes = e.get("bytes")?.as_usize()?;
+            if off + nbytes > rest.len() {
+                return Err(Error::Checkpoint("blob out of range".into()));
+            }
+            let expected: usize =
+                shape.iter().product::<usize>() * dtype.size_bytes();
+            if nbytes != expected {
+                return Err(Error::Checkpoint(format!(
+                    "{full}: blob size {nbytes} != shape size {expected}"
+                )));
+            }
+            let t = HostTensor {
+                dtype,
+                shape,
+                data: rest[off..off + nbytes].to_vec(),
+            };
+            match section {
+                "p" => params.push((name.to_string(), t)),
+                "o" => opt.push((name.to_string(), t)),
+                other => {
+                    return Err(Error::Checkpoint(format!(
+                        "unknown section {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(Checkpoint { step, preset, params, opt })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sigma_moe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 42,
+            preset: "tiny-moe".into(),
+            params: vec![
+                ("embed".into(),
+                 HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.])
+                     .unwrap()),
+                ("w".into(), HostTensor::scalar_f32(7.5)),
+            ],
+            opt: vec![("1.embed".into(),
+                       HostTensor::from_i32(&[2], &[1, 2]).unwrap())],
+        };
+        let path = tmpfile("rt.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.preset, "tiny-moe");
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].1.as_f32().unwrap(),
+                   vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.opt[0].1.as_i32().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let path = tmpfile("bad.ckpt");
+        std::fs::write(&path, b"NOPE!!rest").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_blob() {
+        let ck = Checkpoint {
+            step: 1,
+            preset: "t".into(),
+            params: vec![("w".into(),
+                          HostTensor::from_f32(&[4], &[1., 2., 3., 4.])
+                              .unwrap())],
+            opt: vec![],
+        };
+        let path = tmpfile("trunc.ckpt");
+        ck.save(&path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

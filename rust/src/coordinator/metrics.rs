@@ -1,0 +1,136 @@
+//! Training metrics: loss EMA, throughput, CSV logging.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::trainer::StepOutput;
+use crate::Result;
+
+/// Rolling training metrics + optional CSV sink.
+pub struct Metrics {
+    start: Instant,
+    last_report: Instant,
+    tokens_per_step: usize,
+    steps_since_report: usize,
+    pub loss_ema: Option<f64>,
+    ema_alpha: f64,
+    csv: Option<std::io::BufWriter<std::fs::File>>,
+    pub history: Vec<(i64, f32)>,
+}
+
+impl Metrics {
+    pub fn new(tokens_per_step: usize) -> Self {
+        Metrics {
+            start: Instant::now(),
+            last_report: Instant::now(),
+            tokens_per_step,
+            steps_since_report: 0,
+            loss_ema: None,
+            ema_alpha: 0.05,
+            csv: None,
+            history: Vec::new(),
+        }
+    }
+
+    /// Also append rows to a CSV file (step,loss,grad_norm,lr,tps).
+    pub fn with_csv(mut self, path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "step,loss,grad_norm,lr,tokens_per_sec")?;
+        self.csv = Some(f);
+        Ok(self)
+    }
+
+    pub fn observe(&mut self, so: &StepOutput) -> Result<()> {
+        self.steps_since_report += 1;
+        let l = so.loss as f64;
+        self.loss_ema = Some(match self.loss_ema {
+            None => l,
+            Some(e) => e * (1.0 - self.ema_alpha) + l * self.ema_alpha,
+        });
+        self.history.push((so.step, so.loss));
+        let tps = self.instantaneous_tps();
+        if let Some(csv) = &mut self.csv {
+            writeln!(
+                csv,
+                "{},{},{},{},{:.1}",
+                so.step, so.loss, so.grad_norm, so.lr, tps
+            )?;
+        }
+        Ok(())
+    }
+
+    fn instantaneous_tps(&self) -> f64 {
+        let dt = self.last_report.elapsed().as_secs_f64().max(1e-9);
+        (self.steps_since_report * self.tokens_per_step) as f64 / dt
+    }
+
+    /// Human-readable progress line, resets the reporting window.
+    pub fn report(&mut self, so: &StepOutput) -> String {
+        let tps = self.instantaneous_tps();
+        self.last_report = Instant::now();
+        self.steps_since_report = 0;
+        format!(
+            "step {:>6}  loss {:.4}  ema {:.4}  |g| {:.3}  lr {:.2e}  {:>8.0} tok/s",
+            so.step,
+            so.loss,
+            self.loss_ema.unwrap_or(so.loss as f64),
+            so.grad_norm,
+            so.lr,
+            tps
+        )
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.start.elapsed()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(csv) = &mut self.csv {
+            csv.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn so(step: i64, loss: f32) -> StepOutput {
+        StepOutput { step, loss, grad_norm: 1.0, lr: 1e-4,
+                     stats: BTreeMap::new() }
+    }
+
+    #[test]
+    fn ema_moves_toward_loss() {
+        let mut m = Metrics::new(10);
+        m.observe(&so(0, 10.0)).unwrap();
+        m.observe(&so(1, 0.0)).unwrap();
+        let e = m.loss_ema.unwrap();
+        assert!(e < 10.0 && e > 0.0);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("sigma_moe_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        let mut m = Metrics::new(4).with_csv(&path).unwrap();
+        m.observe(&so(0, 1.0)).unwrap();
+        m.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert!(text.lines().count() >= 2);
+    }
+
+    #[test]
+    fn history_accumulates() {
+        let mut m = Metrics::new(1);
+        for i in 0..5 {
+            m.observe(&so(i, i as f32)).unwrap();
+        }
+        assert_eq!(m.history.len(), 5);
+    }
+}

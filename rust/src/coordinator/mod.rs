@@ -1,0 +1,9 @@
+//! L3 coordination: training loop, evaluation, metrics, checkpointing.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use metrics::Metrics;
+pub use trainer::{EvalOutput, StepOutput, Trainer};

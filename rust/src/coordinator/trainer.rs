@@ -1,0 +1,360 @@
+//! The training coordinator: drives the AOT-compiled `train_step`
+//! executable, owns all model/optimizer/XL-memory state, and wires
+//! buffers **by manifest name** (positions shift when jax prunes unused
+//! inputs, names never do).
+//!
+//! Signature conventions (see python/compile/api.py):
+//!   train_step inputs : "0.<param>" "1.<m>" "2.<v>" "3.<mems>" "4"=tokens
+//!                       "5"=step "6"=seed(optional)
+//!   train_step outputs: "0"=loss "1"=grad_norm "2"=lr "3.<param>"
+//!                       "4.<m>" "5.<v>" "6.<mems>" "7.<stats>"
+//!   eval_step inputs  : "0.<param>" "1.<mems>" "2"=tokens
+//!   eval_step outputs : "0"=nll_sum "1"=count "2.<mems>" "3.<stats>"
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::data::XlBatcher;
+use crate::error::{Error, Result};
+use crate::runtime::{ModelBundle, Program};
+use crate::tensor::HostTensor;
+
+/// Result of one optimization step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub step: i64,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    /// Named auxiliary statistics ("7.usage", "7.mean_prob", ...).
+    pub stats: BTreeMap<String, HostTensor>,
+}
+
+/// Result of an evaluation pass.
+#[derive(Debug, Clone)]
+pub struct EvalOutput {
+    pub nll_sum: f64,
+    pub token_count: f64,
+    /// mean nll in nats/token
+    pub nll: f64,
+    pub stats: BTreeMap<String, HostTensor>,
+}
+
+impl EvalOutput {
+    /// Perplexity (word-level metric).
+    pub fn perplexity(&self) -> f64 {
+        self.nll.exp()
+    }
+
+    /// Bits per character (char-level metric).
+    pub fn bpc(&self) -> f64 {
+        self.nll / std::f64::consts::LN_2
+    }
+}
+
+/// Maps outputs of a program back onto its own (or another program's)
+/// inputs by renaming name prefixes.
+fn feedback_map(
+    prog: &Program,
+    renames: &[(&str, &str)],
+) -> Vec<(usize, usize)> {
+    let by_name: HashMap<&str, usize> = prog
+        .spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, b)| (b.name.as_str(), i))
+        .collect();
+    let mut out = Vec::new();
+    for (oi, ob) in prog.spec.outputs.iter().enumerate() {
+        for (from, to) in renames {
+            if let Some(rest) = ob.name.strip_prefix(from) {
+                let target = format!("{to}{rest}");
+                if let Some(&ii) = by_name.get(target.as_str()) {
+                    out.push((oi, ii));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The trainer: owns the flattened train_step input state.
+pub struct Trainer<'a> {
+    pub bundle: &'a ModelBundle,
+    state: Vec<HostTensor>,
+    input_index: HashMap<String, usize>,
+    feedback: Vec<(usize, usize)>,
+    /// indices of param inputs ("0.*") in `state`, and the matching names
+    param_slots: Vec<(String, usize)>,
+    opt_slots: Vec<(String, usize)>,
+    tok_idx: usize,
+    step_idx: usize,
+    seed_idx: Option<usize>,
+    pub step: i64,
+    pub seed: u32,
+    /// eval-side XL memory (shape differs from train mems)
+    eval_mems: Option<Vec<HostTensor>>,
+}
+
+impl<'a> Trainer<'a> {
+    /// Initialize model parameters via the `init` program and set up all
+    /// buffer wiring.
+    pub fn new(bundle: &'a ModelBundle, seed: u32) -> Result<Self> {
+        let ts = bundle.program("train_step")?;
+        let spec = &ts.spec;
+        let input_index: HashMap<String, usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.clone(), i))
+            .collect();
+        let mut state: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
+            .collect();
+
+        // run init and scatter params into "0.<name>" slots
+        let init = bundle.program("init")?;
+        let params = init.run(&[HostTensor::scalar_u32(seed)])?;
+        if params.len() != init.spec.outputs.len() {
+            return Err(Error::Shape("init output arity mismatch".into()));
+        }
+        let mut param_slots = Vec::new();
+        for (out, ob) in params.into_iter().zip(&init.spec.outputs) {
+            let name = format!("0.{}", ob.name);
+            let idx = *input_index.get(&name).ok_or_else(|| {
+                Error::Manifest(format!("train_step has no input {name}"))
+            })?;
+            state[idx] = out;
+            param_slots.push((ob.name.clone(), idx));
+        }
+        let opt_slots = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.name.starts_with("1.") || b.name.starts_with("2."))
+            .map(|(i, b)| (b.name.clone(), i))
+            .collect();
+
+        let tok_idx = *input_index
+            .get("4")
+            .ok_or_else(|| Error::Manifest("no tokens input '4'".into()))?;
+        let step_idx = *input_index
+            .get("5")
+            .ok_or_else(|| Error::Manifest("no step input '5'".into()))?;
+        let seed_idx = input_index.get("6").copied();
+        let feedback = feedback_map(
+            ts,
+            &[("3.", "0."), ("4.", "1."), ("5.", "2."), ("6.", "3.")],
+        );
+
+        Ok(Trainer {
+            bundle,
+            state,
+            input_index,
+            feedback,
+            param_slots,
+            opt_slots,
+            tok_idx,
+            step_idx,
+            seed_idx,
+            step: 0,
+            seed,
+            eval_mems: None,
+        })
+    }
+
+    /// Expected `[B, T+1]` token-window shape.
+    pub fn token_shape(&self) -> &[usize] {
+        &self.bundle.program("train_step").unwrap().spec.inputs[self.tok_idx].shape
+    }
+
+    /// Run one optimization step on a token window.
+    pub fn step_on(&mut self, tokens: HostTensor) -> Result<StepOutput> {
+        let ts = self.bundle.program("train_step")?;
+        self.state[self.tok_idx] = tokens;
+        self.state[self.step_idx] = HostTensor::scalar_i32(self.step as i32);
+        if let Some(si) = self.seed_idx {
+            self.state[si] = HostTensor::scalar_u32(self.seed);
+        }
+        let out = ts.run(&self.state)?;
+        let loss = out[0].scalar_as_f32()?;
+        let grad_norm = out[1].scalar_as_f32()?;
+        let lr = out[2].scalar_as_f32()?;
+        if !loss.is_finite() {
+            return Err(Error::other(format!(
+                "non-finite loss {loss} at step {}",
+                self.step
+            )));
+        }
+        let mut stats = BTreeMap::new();
+        for (oi, ob) in ts.spec.outputs.iter().enumerate() {
+            if ob.name.starts_with("7.") {
+                stats.insert(ob.name.clone(), out[oi].clone());
+            }
+        }
+        // Feed new state back by *moving* the output tensors into the
+        // input slots (a clone here would memcpy every parameter +
+        // optimizer tensor each step — see EXPERIMENTS.md §Perf).
+        let mut out = out;
+        for (oi, ii) in &self.feedback {
+            self.state[*ii] =
+                std::mem::replace(&mut out[*oi], HostTensor::zeros(
+                    crate::tensor::DType::F32, &[]));
+        }
+        let so = StepOutput { step: self.step, loss, grad_norm, lr, stats };
+        self.step += 1;
+        Ok(so)
+    }
+
+    /// Train for `n` steps pulling windows from `batcher`; calls `on_step`
+    /// after every step (metrics, logging, early stop).
+    pub fn train(
+        &mut self,
+        batcher: &mut XlBatcher,
+        n: usize,
+        mut on_step: impl FnMut(&StepOutput),
+    ) -> Result<Vec<StepOutput>> {
+        let mut outs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let w = batcher.next_window()?;
+            let so = self.step_on(w)?;
+            on_step(&so);
+            outs.push(so);
+        }
+        Ok(outs)
+    }
+
+    /// Current parameters as (name, tensor) pairs.
+    pub fn params(&self) -> Vec<(String, HostTensor)> {
+        self.param_slots
+            .iter()
+            .map(|(name, idx)| (name.clone(), self.state[*idx].clone()))
+            .collect()
+    }
+
+    /// Current optimizer state (m then v) as (name, tensor) pairs.
+    pub fn opt_state(&self) -> Vec<(String, HostTensor)> {
+        self.opt_slots
+            .iter()
+            .map(|(name, idx): &(String, usize)| {
+                (name.clone(), self.state[*idx].clone())
+            })
+            .collect()
+    }
+
+    /// Restore parameters / optimizer state / step counter (from a
+    /// checkpoint).  Missing names are an error; shapes are validated by
+    /// the program on the next run.
+    pub fn restore(
+        &mut self,
+        params: &[(String, HostTensor)],
+        opt: &[(String, HostTensor)],
+        step: i64,
+    ) -> Result<()> {
+        for (name, t) in params {
+            let key = format!("0.{name}");
+            let idx = *self.input_index.get(&key).ok_or_else(|| {
+                Error::Checkpoint(format!("unknown param {name}"))
+            })?;
+            self.state[idx] = t.clone();
+        }
+        for (name, t) in opt {
+            let idx = *self.input_index.get(name).ok_or_else(|| {
+                Error::Checkpoint(format!("unknown opt slot {name}"))
+            })?;
+            self.state[idx] = t.clone();
+        }
+        self.step = step;
+        Ok(())
+    }
+
+    /// Evaluate on `segments` consecutive windows from `batcher` with the
+    /// long XL memory, using the *current* parameters.
+    pub fn evaluate(
+        &mut self,
+        batcher: &mut XlBatcher,
+        segments: usize,
+    ) -> Result<EvalOutput> {
+        let ev = self.bundle.program("eval_step")?;
+        let spec = &ev.spec;
+        let mut inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
+            .collect();
+        let by_name: HashMap<&str, usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.as_str(), i))
+            .collect();
+        // params
+        for (name, idx) in &self.param_slots {
+            let key = format!("0.{name}");
+            if let Some(&ii) = by_name.get(key.as_str()) {
+                inputs[ii] = self.state[*idx].clone();
+            }
+        }
+        // persistent eval mems across segments within this call
+        let mem_slots: Vec<usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.name.starts_with("1."))
+            .map(|(i, _)| i)
+            .collect();
+        if let Some(prev) = &self.eval_mems {
+            if prev.len() == mem_slots.len()
+                && prev
+                    .iter()
+                    .zip(&mem_slots)
+                    .all(|(t, &i)| t.shape == spec.inputs[i].shape)
+            {
+                for (t, &i) in prev.iter().zip(&mem_slots) {
+                    inputs[i] = t.clone();
+                }
+            }
+        }
+        let tok_idx = *by_name
+            .get("2")
+            .ok_or_else(|| Error::Manifest("no eval token input".into()))?;
+        let mem_feedback = feedback_map(ev, &[("2.", "1.")]);
+
+        let mut nll_sum = 0f64;
+        let mut count = 0f64;
+        let mut stats: BTreeMap<String, HostTensor> = BTreeMap::new();
+        for _ in 0..segments {
+            inputs[tok_idx] = batcher.next_window()?;
+            let out = ev.run(&inputs)?;
+            nll_sum += out[0].scalar_as_f32()? as f64;
+            count += out[1].scalar_as_f32()? as f64;
+            for (oi, ob) in ev.spec.outputs.iter().enumerate() {
+                if ob.name.starts_with("3.") {
+                    stats.insert(ob.name.clone(), out[oi].clone());
+                }
+            }
+            for (oi, ii) in &mem_feedback {
+                inputs[*ii] = out[*oi].clone();
+            }
+        }
+        self.eval_mems = Some(
+            mem_slots.iter().map(|&i| inputs[i].clone()).collect(),
+        );
+        if count == 0.0 {
+            return Err(Error::other("evaluate: zero tokens"));
+        }
+        Ok(EvalOutput {
+            nll_sum,
+            token_count: count,
+            nll: nll_sum / count,
+            stats,
+        })
+    }
+
+    /// Reset the persistent eval memory (e.g. between eval corpora).
+    pub fn reset_eval_memory(&mut self) {
+        self.eval_mems = None;
+    }
+}

@@ -1,0 +1,138 @@
+//! Tokenizers for serving and for ingesting real text files when the
+//! user supplies them (the training path normally consumes synthetic
+//! token streams directly).
+//!
+//! * [`CharTokenizer`] — byte-level (enwik8-style), identity vocab of 256.
+//! * [`WordTokenizer`] — whitespace/punctuation word-level with a
+//!   frequency-built vocabulary and `<unk>`, mirroring the paper's
+//!   subword setup at our scale.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+pub const UNK: u32 = 0;
+
+/// Byte-level tokenizer: token = byte value.
+#[derive(Debug, Default, Clone)]
+pub struct CharTokenizer;
+
+impl CharTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    pub fn decode(&self, toks: &[i32]) -> String {
+        let bytes: Vec<u8> = toks
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+/// Word-level tokenizer with a built vocabulary.
+#[derive(Debug, Clone)]
+pub struct WordTokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl WordTokenizer {
+    /// Build from a training text, keeping the `max_vocab - 1` most
+    /// frequent words (id 0 is `<unk>`).  Ties break lexicographically
+    /// so vocabularies are deterministic.
+    pub fn build(text: &str, max_vocab: usize) -> Result<Self> {
+        if max_vocab < 2 {
+            return Err(Error::Data("max_vocab must be >= 2".into()));
+        }
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for w in text.split(|c: char| c.is_whitespace()) {
+            if !w.is_empty() {
+                *counts.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, u64)> = counts.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut vocab = vec!["<unk>".to_string()];
+        vocab.extend(
+            by_freq
+                .into_iter()
+                .take(max_vocab - 1)
+                .map(|(w, _)| w.to_string()),
+        );
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Ok(WordTokenizer { vocab, index })
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split(|c: char| c.is_whitespace())
+            .filter(|w| !w.is_empty())
+            .map(|w| *self.index.get(w).unwrap_or(&UNK) as i32)
+            .collect()
+    }
+
+    pub fn decode(&self, toks: &[i32]) -> String {
+        toks.iter()
+            .map(|&t| {
+                self.vocab
+                    .get(t.max(0) as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<unk>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_roundtrip() {
+        let t = CharTokenizer;
+        let s = "hello <page> world\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn word_build_and_encode() {
+        let t = WordTokenizer::build("a b b c c c", 10).unwrap();
+        assert_eq!(t.vocab_size(), 4); // unk a b c
+        let enc = t.encode("c b a zzz");
+        assert_eq!(enc.len(), 4);
+        assert_eq!(enc[3], UNK as i32);
+        assert_eq!(t.decode(&enc), "c b a <unk>");
+    }
+
+    #[test]
+    fn word_vocab_truncation_keeps_most_frequent() {
+        let t = WordTokenizer::build("x x x y y z", 3).unwrap();
+        // vocab: <unk>, x, y
+        assert_eq!(t.vocab_size(), 3);
+        assert_ne!(t.encode("x")[0], UNK as i32);
+        assert_ne!(t.encode("y")[0], UNK as i32);
+        assert_eq!(t.encode("z")[0], UNK as i32);
+    }
+
+    #[test]
+    fn word_vocab_deterministic() {
+        let a = WordTokenizer::build("p q r p q p", 5).unwrap();
+        let b = WordTokenizer::build("p q r p q p", 5).unwrap();
+        assert_eq!(a.encode("p q r"), b.encode("p q r"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Library-wide error type.
+
+/// Unified error for the sigma-moe library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(#[from] crate::json::JsonError),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+    #[error("data error: {0}")]
+    Data(String),
+    #[error("serving error: {0}")]
+    Serving(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

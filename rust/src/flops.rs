@@ -1,0 +1,165 @@
+//! Analytic FLOPs / parameter / activation-memory model — the Rust twin
+//! of `python/compile/flops.py` (cross-checked against the manifest's
+//! values in tests).  Regenerates the paper's "% FLOPs" column (Tab. 3)
+//! and the fraction table (Tab. 7).
+
+/// Feedforward variant cost summary (per token, forward pass).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FfCost {
+    pub flops: f64,
+    pub act_memory: f64,
+    pub params: f64,
+    pub selector_flops: f64,
+}
+
+pub fn dense_ff(d_model: usize, d_ff: usize) -> FfCost {
+    FfCost {
+        flops: 2.0 * 2.0 * d_model as f64 * d_ff as f64,
+        act_memory: d_ff as f64,
+        params: 2.0 * d_model as f64 * d_ff as f64 + d_ff as f64
+            + d_model as f64,
+        selector_flops: 0.0,
+    }
+}
+
+pub fn topk_ff(d_model: usize, d_ff: usize, k: usize) -> FfCost {
+    FfCost {
+        flops: 2.0 * d_model as f64 * d_ff as f64
+            + 2.0 * d_model as f64 * k as f64,
+        act_memory: d_ff as f64,
+        params: 2.0 * d_model as f64 * d_ff as f64 + d_ff as f64
+            + d_model as f64,
+        selector_flops: 0.0,
+    }
+}
+
+pub fn moe_ff(d_model: usize, n_experts: usize, g: usize, k: usize) -> FfCost {
+    let d_ff = (n_experts * g) as f64;
+    FfCost {
+        flops: 2.0 * 2.0 * d_model as f64 * g as f64 * k as f64,
+        act_memory: (g * k) as f64,
+        params: 2.0 * d_model as f64 * d_ff
+            + d_model as f64 * n_experts as f64,
+        selector_flops: 2.0 * d_model as f64 * n_experts as f64,
+    }
+}
+
+pub fn pkm_ff(d_model: usize, n_subkeys: usize, knn: usize,
+              heads: usize) -> FfCost {
+    let half = d_model as f64 / 2.0;
+    let s = n_subkeys as f64;
+    let score = 2.0 * half * s * 2.0;
+    let combine = 2.0 * (knn * knn) as f64;
+    let readout = 2.0 * knn as f64 * d_model as f64;
+    FfCost {
+        flops: heads as f64 * (score + combine + readout),
+        act_memory: heads as f64 * (2.0 * s + knn as f64),
+        params: heads as f64 * 2.0 * s * half + s * s * d_model as f64,
+        selector_flops: 0.0,
+    }
+}
+
+/// "% FLOPs" of a MoE FF block relative to a dense block (paper Tab. 3
+/// reports K/N_E when d_ff matches: e.g. 25% for K=4, N_E=16).
+pub fn moe_fraction(
+    d_model: usize,
+    n_experts: usize,
+    g: usize,
+    k: usize,
+    dense_d_ff: usize,
+) -> f64 {
+    moe_ff(d_model, n_experts, g, k).flops / dense_ff(d_model, dense_d_ff).flops
+}
+
+/// One row of the paper's Tab. 7: FLOPs + memory fractions vs dense.
+#[derive(Debug, Clone)]
+pub struct FractionRow {
+    pub label: String,
+    pub g: usize,
+    pub k: usize,
+    pub flops_fraction: f64,
+    pub memory_fraction: f64,
+}
+
+/// Regenerate Tab. 7 for a model family (dense d_ff vs expert configs).
+pub fn table7_rows(
+    d_model: usize,
+    dense_d_ff: usize,
+    configs: &[(&str, usize, usize)], // (label, G, K)
+) -> Vec<FractionRow> {
+    let dense = dense_ff(d_model, dense_d_ff);
+    configs
+        .iter()
+        .map(|(label, g, k)| {
+            let ne = dense_d_ff.div_ceil(*g).max(1);
+            let m = moe_ff(d_model, ne, *g, *k);
+            FractionRow {
+                label: label.to_string(),
+                g: *g,
+                k: *k,
+                flops_fraction: m.flops / dense.flops,
+                memory_fraction: m.act_memory / dense.act_memory,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fraction_small() {
+        // WT-S: d_model 412, dense d_ff 2048-ish, MoE G=128 K=4 NE=16
+        let f = moe_fraction(412, 16, 128, 4, 2048);
+        assert!((f - 0.25).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn paper_fraction_big() {
+        // WT-B: NE=32, K=4 -> 12.5%
+        let f = moe_fraction(1024, 32, 128, 4, 4096);
+        assert!((f - 0.125).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn paper_fraction_star() {
+        // WT-S*: NE=128, K=4 -> 3.125% (Tab. 7 prints 3.1%)
+        let f = moe_fraction(412, 128, 128, 4, 128 * 128);
+        assert!((f - 0.03125).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn table7_k_sweep_matches_paper() {
+        // Tab. 7 K-sweep rows at G=128, dense d_ff = 2048: 6.2%, 12.5%,
+        // 25%, 50% for K = 1, 2, 4, 8.
+        let rows = table7_rows(
+            412,
+            2048,
+            &[("K=1", 128, 1), ("K=2", 128, 2), ("K=4", 128, 4),
+              ("K=8", 128, 8)],
+        );
+        let want = [0.0625, 0.125, 0.25, 0.5];
+        for (r, w) in rows.iter().zip(want) {
+            assert!((r.flops_fraction - w).abs() < 1e-9,
+                    "{}: {} != {w}", r.label, r.flops_fraction);
+        }
+    }
+
+    #[test]
+    fn moe_cost_independent_of_ne() {
+        let a = moe_ff(512, 16, 128, 4);
+        let b = moe_ff(512, 64, 128, 4);
+        assert_eq!(a.flops, b.flops);
+        assert!(b.selector_flops > a.selector_flops);
+    }
+
+    #[test]
+    fn gk_constant_product_has_constant_cost() {
+        // Tab. 10 second block: (G, K) with constant G*K cost the same.
+        let a = moe_ff(412, 32, 64, 8);
+        let b = moe_ff(412, 8, 256, 2);
+        assert_eq!(a.flops, b.flops);
+        assert_eq!(a.act_memory, b.act_memory);
+    }
+}

@@ -1,0 +1,34 @@
+//! sigma-moe: a three-layer (Rust ⇄ XLA/PJRT ⇄ JAX+Pallas) reproduction
+//! of "Approximating Two-Layer Feedforward Networks for Efficient
+//! Transformers" (Csordás, Irie & Schmidhuber, EMNLP 2023 Findings).
+//!
+//! * L1 (build time): Pallas kernels — CVMM, Top-K activation, PKM
+//!   candidate search (`python/compile/kernels/`).
+//! * L2 (build time): JAX Transformer-XL with σ-MoE / PKM / Top-K / dense
+//!   feedforward variants, AOT-lowered to HLO text (`python/compile/`).
+//! * L3 (this crate): the coordinator — data pipeline, training loop,
+//!   evaluation, checkpointing, serving, analysis — driving the
+//!   AOT-compiled executables through PJRT.  Python never runs on the
+//!   request path.
+
+pub mod analysis;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod flops;
+pub mod json;
+pub mod rng;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;
+
+pub use error::{Error, Result};
+
+/// Default artifacts directory: `$SIGMA_MOE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var_os("SIGMA_MOE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

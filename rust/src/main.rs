@@ -1,0 +1,500 @@
+//! sigma-moe launcher: train / eval / serve / analyze / paper-table
+//! drivers over AOT-compiled artifacts.
+//!
+//! Examples:
+//!   sigma-moe train --preset tiny-moe --steps 300 --corpus wikitext
+//!   sigma-moe eval  --preset tiny-moe --checkpoint ck.smoe --segments 20
+//!   sigma-moe serve --preset tiny-moe --requests 16 --max-new 32
+//!   sigma-moe flops --table 7
+//!   sigma-moe paper --table 3 --steps 300
+//!   sigma-moe analyze --preset tiny-moe --fig 3
+
+use sigma_moe::analysis::ExpertStats;
+use sigma_moe::cli::Args;
+use sigma_moe::coordinator::{Checkpoint, Metrics, Trainer};
+use sigma_moe::data;
+use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::{flops, Error, Result};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(Error::Config(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let (cmd, rest) = argv
+        .split_first()
+        .map(|(c, r)| (c.as_str(), r))
+        .unwrap_or(("help", &[]));
+    match cmd {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "flops" => cmd_flops(rest),
+        "analyze" => cmd_analyze(rest),
+        "paper" => cmd_paper(rest),
+        "list" => cmd_list(),
+        _ => {
+            println!(
+                "sigma-moe — σ-MoE / PKM / Top-K Transformer-XL (EMNLP 2023 reproduction)\n\n\
+                 commands:\n\
+                 \x20 train    train a preset on a synthetic corpus\n\
+                 \x20 eval     evaluate a checkpoint (ppl / bpc)\n\
+                 \x20 serve    batched-inference demo with latency stats\n\
+                 \x20 flops    analytic resource tables (Tab. 3 %FLOPs, Tab. 7)\n\
+                 \x20 analyze  expert utilization / active channels (Figs. 1,3,6,7)\n\
+                 \x20 paper    regenerate a paper table (scaled)\n\
+                 \x20 list     list built artifact presets\n\n\
+                 run '<command> --help' for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn load_bundle(client: &Client, preset: &str) -> Result<ModelBundle> {
+    let dir = sigma_moe::artifacts_root().join(preset);
+    ModelBundle::load(client, dir)
+}
+
+fn corpus_default(unit: &str) -> &'static str {
+    if unit == "char" {
+        "enwik8"
+    } else {
+        "wikitext"
+    }
+}
+
+fn resolve_corpus(arg: &str, unit: &str) -> Result<String> {
+    match arg {
+        "auto" => Ok(corpus_default(unit).to_string()),
+        "wikitext" | "c4" | "pes2o" | "enwik8" => Ok(arg.to_string()),
+        other => Err(Error::Config(format!("bad corpus {other}"))),
+    }
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let p = Args::new("train a preset on a synthetic corpus")
+        .opt("preset", "tiny-moe", "artifact preset name")
+        .opt("steps", "200", "number of optimization steps")
+        .opt("seed", "42", "init + data seed")
+        .opt("corpus", "auto", "wikitext | c4 | pes2o | enwik8 | auto")
+        .opt("eval-every", "0", "run eval every N steps (0 = only at end)")
+        .opt("eval-segments", "16", "eval segments per evaluation")
+        .opt("log-every", "20", "print a progress line every N steps")
+        .optional("checkpoint", "write final checkpoint here")
+        .optional("resume", "resume from this checkpoint")
+        .optional("csv", "write per-step metrics CSV here")
+        .parse_from(argv)?;
+
+    let preset = p.str("preset")?;
+    let client = Client::cpu()?;
+    eprintln!("[train] loading artifacts for {preset} ...");
+    let bundle = load_bundle(&client, preset)?;
+    let m = &bundle.manifest;
+    let corpus = resolve_corpus(p.str("corpus")?, &m.model.unit)?;
+    let seed = p.u64("seed")?;
+    let steps = p.usize("steps")?;
+    eprintln!(
+        "[train] {} | {} layers x d_model {} | ff {} | batch {} x context {} | corpus {}",
+        m.preset, m.model.n_layers, m.model.d_model, m.model.ff_variant,
+        m.batch_size, m.model.context, corpus
+    );
+
+    let mut trainer = Trainer::new(&bundle, seed as u32)?;
+    if let Some(ck_path) = p.get("resume") {
+        let ck = Checkpoint::load(ck_path)?;
+        trainer.restore(&ck.params, &ck.opt, ck.step)?;
+        eprintln!("[train] resumed from {ck_path} at step {}", ck.step);
+    }
+    let mut batcher = data::batcher_for(
+        &corpus, m.model.vocab_size, m.batch_size, m.model.context, seed)?;
+    let mut eval_batcher = data::batcher_for(
+        &corpus, m.model.vocab_size, m.batch_size, m.model.context,
+        seed ^ 0xEBA1)?;
+
+    let mut metrics = Metrics::new(m.batch_size * m.model.context);
+    if let Some(csv) = p.get("csv") {
+        metrics = metrics.with_csv(csv)?;
+    }
+    let log_every = p.usize("log-every")?.max(1);
+    let eval_every = p.usize("eval-every")?;
+    let eval_segments = p.usize("eval-segments")?;
+
+    for step in 0..steps {
+        let w = batcher.next_window()?;
+        let so = trainer.step_on(w)?;
+        metrics.observe(&so)?;
+        if (step + 1) % log_every == 0 || step + 1 == steps {
+            eprintln!("{}", metrics.report(&so));
+        }
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            let ev = trainer.evaluate(&mut eval_batcher, eval_segments)?;
+            eprintln!(
+                "[eval] step {} nll {:.4} ppl {:.2} bpc {:.4}",
+                step + 1, ev.nll, ev.perplexity(), ev.bpc()
+            );
+        }
+    }
+    let ev = trainer.evaluate(&mut eval_batcher, eval_segments)?;
+    let metric = if m.model.unit == "char" {
+        format!("bpc {:.4}", ev.bpc())
+    } else {
+        format!("ppl {:.3}", ev.perplexity())
+    };
+    println!(
+        "final: preset={} steps={} train_loss={:.4} eval_nll={:.4} {}",
+        preset, steps,
+        metrics.loss_ema.unwrap_or(f64::NAN),
+        ev.nll, metric
+    );
+    metrics.flush()?;
+
+    if let Some(ck_path) = p.get("checkpoint") {
+        let ck = Checkpoint {
+            step: trainer.step,
+            preset: preset.to_string(),
+            params: trainer.params(),
+            opt: trainer.opt_state(),
+        };
+        ck.save(ck_path)?;
+        eprintln!("[train] checkpoint written to {ck_path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let p = Args::new("evaluate a checkpoint")
+        .opt("preset", "tiny-moe", "artifact preset name")
+        .optional("checkpoint", "checkpoint to evaluate (default: fresh init)")
+        .opt("segments", "32", "number of eval segments")
+        .opt("seed", "7", "data seed")
+        .opt("corpus", "auto", "wikitext | c4 | pes2o | enwik8 | auto")
+        .parse_from(argv)?;
+    let preset = p.str("preset")?;
+    let client = Client::cpu()?;
+    let bundle = load_bundle(&client, preset)?;
+    let m = &bundle.manifest;
+    let corpus = resolve_corpus(p.str("corpus")?, &m.model.unit)?;
+    let mut trainer = Trainer::new(&bundle, 1)?;
+    if let Some(ck_path) = p.get("checkpoint") {
+        let ck = Checkpoint::load(ck_path)?;
+        trainer.restore(&ck.params, &ck.opt, ck.step)?;
+    }
+    let mut batcher = data::batcher_for(
+        &corpus, m.model.vocab_size, m.batch_size, m.model.context,
+        p.u64("seed")?)?;
+    let ev = trainer.evaluate(&mut batcher, p.usize("segments")?)?;
+    println!(
+        "eval: preset={preset} nll={:.4} ppl={:.3} bpc={:.4} tokens={}",
+        ev.nll, ev.perplexity(), ev.bpc(), ev.token_count
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let p = Args::new("batched-inference demo")
+        .opt("preset", "tiny-moe", "artifact preset name")
+        .optional("checkpoint", "serve this checkpoint (default fresh init)")
+        .opt("requests", "16", "number of synthetic requests")
+        .opt("prompt-len", "12", "prompt length per request")
+        .opt("max-new", "24", "tokens to generate per request")
+        .opt("temperature", "0.8", "sampling temperature")
+        .opt("seed", "5", "rng seed")
+        .parse_from(argv)?;
+    let preset = p.str("preset")?;
+    let client = Client::cpu()?;
+    let bundle = load_bundle(&client, preset)?;
+    let m = &bundle.manifest;
+    let params = match p.get("checkpoint") {
+        Some(path) => Checkpoint::load(path)?.params,
+        None => {
+            let init = bundle.program("init")?;
+            let out = init.run(&[sigma_moe::tensor::HostTensor::scalar_u32(
+                p.u64("seed")? as u32,
+            )])?;
+            init.spec
+                .outputs
+                .iter()
+                .map(|b| b.name.clone())
+                .zip(out)
+                .collect()
+        }
+    };
+    let mut engine = Engine::new(&bundle, &params, p.u64("seed")?)?;
+    let mut corpus = data::by_name(
+        corpus_default(&m.model.unit), m.model.vocab_size, p.u64("seed")?)?;
+    let n_req = p.usize("requests")?;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..n_req {
+        let prompt = corpus.take_vec(p.usize("prompt-len")?);
+        rxs.push(engine.submit(GenRequest {
+            prompt,
+            max_new_tokens: p.usize("max-new")?,
+            sampler: Sampler {
+                temperature: p.f64("temperature")? as f32,
+                top_k: 50,
+                greedy: false,
+            },
+        }));
+    }
+    let results = engine.run_to_completion(rxs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let total_new: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let mean_queue: f64 = results
+        .iter()
+        .map(|r| r.queue_time.as_secs_f64())
+        .sum::<f64>()
+        / results.len() as f64;
+    let mean_run: f64 = results
+        .iter()
+        .map(|r| r.run_time.as_secs_f64())
+        .sum::<f64>()
+        / results.len() as f64;
+    println!(
+        "serve: {} requests x {} new tokens | lanes {} | wall {:.2}s | \
+         {:.1} tok/s | mean queue {:.3}s | mean run {:.3}s | occupancy {:.2}",
+        results.len(),
+        p.usize("max-new")?,
+        engine.n_lanes(),
+        wall,
+        total_new as f64 / wall,
+        mean_queue,
+        mean_run,
+        engine.stats()["mean_batch_occupancy"]
+    );
+    Ok(())
+}
+
+fn cmd_flops(argv: &[String]) -> Result<()> {
+    let p = Args::new("analytic resource tables")
+        .opt("table", "7", "3 (%FLOPs column) or 7 (fraction table)")
+        .parse_from(argv)?;
+    match p.str("table")? {
+        "3" => {
+            println!("Tab. 3 '% FLOPs' column (MLP blocks, parameter-matched):");
+            for (label, d_model, ne, g, k, dff) in [
+                ("WT-S  (47M)", 412usize, 16usize, 128usize, 4usize, 2053usize),
+                ("WT-B  (262M)", 1024, 32, 128, 4, 4110),
+                ("E8    (41M)", 512, 16, 128, 4, 2053),
+                ("WT-S* (238M)", 412, 128, 128, 4, 16480),
+            ] {
+                let f = flops::moe_fraction(d_model, ne, g, k, dff);
+                println!("  {label}: {:.1}%", 100.0 * f);
+            }
+        }
+        "7" => {
+            println!(
+                "Tab. 7: relative FLOPs/memory of the MoE FF block vs dense \
+                 (WT-S family, d_model=412, dense d_ff=2048):"
+            );
+            let rows = flops::table7_rows(
+                412,
+                2048,
+                &[
+                    ("sigma-MoE (G=128,K=4)", 128, 4),
+                    ("K=8, G=64", 64, 8),
+                    ("K=2, G=256", 256, 2),
+                    ("K=1, G=512", 512, 1),
+                    ("K=1, G=128", 128, 1),
+                    ("K=2, G=128", 128, 2),
+                    ("K=8, G=128", 128, 8),
+                ],
+            );
+            for r in rows {
+                println!(
+                    "  {:<24} G={:<4} K={:<2} flops {:>6.1}%  mem {:>6.1}%",
+                    r.label, r.g, r.k,
+                    100.0 * r.flops_fraction,
+                    100.0 * r.memory_fraction
+                );
+            }
+        }
+        other => return Err(Error::Config(format!("unknown table {other}"))),
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> Result<()> {
+    let p = Args::new("expert utilization / active-channel analysis")
+        .opt("preset", "tiny-moe", "artifact preset name")
+        .optional("checkpoint", "analyze this checkpoint")
+        .opt("fig", "3",
+             "1 (active channels) | 3 (utilization) | 6 (co-occurrence)")
+        .opt("segments", "16", "eval segments to accumulate")
+        .opt("seed", "11", "data seed")
+        .parse_from(argv)?;
+    let preset = p.str("preset")?;
+    let client = Client::cpu()?;
+    let bundle = load_bundle(&client, preset)?;
+    let m = &bundle.manifest;
+    let mut trainer = Trainer::new(&bundle, 1)?;
+    if let Some(ck_path) = p.get("checkpoint") {
+        let ck = Checkpoint::load(ck_path)?;
+        trainer.restore(&ck.params, &ck.opt, ck.step)?;
+    }
+    let mut batcher = data::batcher_for(
+        corpus_default(&m.model.unit), m.model.vocab_size, m.batch_size,
+        m.model.context, p.u64("seed")?)?;
+
+    let mut stats = ExpertStats::new(m.model.n_layers, m.model.n_experts);
+    let mut active: Vec<f64> = vec![0.0; m.model.n_layers];
+    let segments = p.usize("segments")?;
+    for _ in 0..segments {
+        let ev = trainer.evaluate(&mut batcher, 1)?;
+        stats.accumulate(&ev.stats).ok();
+        if let Some(t) = ev.stats.get("3.active_channels") {
+            for (l, v) in t.as_f32()?.iter().enumerate() {
+                active[l] += *v as f64 / segments as f64;
+            }
+        }
+    }
+    match p.str("fig")? {
+        "1" => {
+            println!(
+                "Fig. 1 — mean active channels per layer (of {} available):",
+                if m.model.ff_variant == "moe" {
+                    m.model.group_size * m.model.expert_k
+                } else {
+                    m.model.d_ff
+                }
+            );
+            for (l, a) in active.iter().enumerate() {
+                println!("  layer {l:>2}: {a:8.1}");
+            }
+        }
+        "3" => {
+            let rep = stats.report();
+            println!("Fig. 3/7 — expert selection-weight proportions (sorted):");
+            for l in 0..m.model.n_layers {
+                print!("{}", rep.format_layer(l));
+            }
+            let collapsed = rep.collapsed_layers();
+            if collapsed.is_empty() {
+                println!("no expert collapse detected");
+            } else {
+                println!("COLLAPSED layers: {collapsed:?}");
+            }
+        }
+        "6" => {
+            let Some(cooc) = &stats.cooccurrence else {
+                return Err(Error::other(
+                    "no co-occurrence stats (dense model?)",
+                ));
+            };
+            let e = m.model.n_experts;
+            let l = m.model.n_layers / 2;
+            println!(
+                "Fig. 6 — expert co-occurrence, layer {l} (row-normalized %):"
+            );
+            for i in 0..e {
+                let row: Vec<f64> =
+                    (0..e).map(|j| cooc[l][i * e + j]).collect();
+                let sum: f64 = row.iter().sum::<f64>().max(1e-9);
+                let cells: Vec<String> = row
+                    .iter()
+                    .map(|v| format!("{:4.0}", 100.0 * v / sum))
+                    .collect();
+                println!("  e{i:<2} {}", cells.join(" "));
+            }
+        }
+        other => return Err(Error::Config(format!("unknown fig {other}"))),
+    }
+    Ok(())
+}
+
+fn cmd_paper(argv: &[String]) -> Result<()> {
+    let p = Args::new("regenerate a paper table at reproduction scale")
+        .opt("table", "3", "1 | 2 | 3 | 4")
+        .opt("steps", "200", "training steps per model")
+        .opt("seed", "42", "seed")
+        .opt("eval-segments", "24", "eval segments")
+        .parse_from(argv)?;
+    let steps = p.usize("steps")?;
+    let seed = p.u64("seed")?;
+    let segs = p.usize("eval-segments")?;
+    let rows: Vec<(&str, &str)> = match p.str("table")? {
+        "1" => vec![
+            ("dense baseline", "tiny-dense"),
+            ("top-k", "tiny-topk"),
+        ],
+        "2" => vec![
+            ("dense baseline", "tiny-dense"),
+            ("pkm (relu)", "tiny-pkm"),
+        ],
+        "3" => vec![
+            ("dense baseline", "tiny-dense"),
+            ("sigma-moe", "tiny-moe"),
+        ],
+        "4" => vec![
+            ("sigma-moe (ours)", "tiny-moe"),
+            ("softmax (renorm.)", "tiny-moe-softmax_renorm"),
+            ("switch transformer", "tiny-moe-switch"),
+        ],
+        other => return Err(Error::Config(format!("unknown table {other}"))),
+    };
+    let client = Client::cpu()?;
+    println!(
+        "table {} @ {} steps (scaled reproduction — see EXPERIMENTS.md):",
+        p.str("table")?, steps
+    );
+    println!("{:<22} {:>10} {:>10} {:>9}", "model", "train-loss",
+             "eval-nll", "ppl");
+    for (label, preset) in rows {
+        let bundle = match load_bundle(&client, preset) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("{label:<22} [artifacts missing: {e}]");
+                continue;
+            }
+        };
+        let m = &bundle.manifest;
+        let mut trainer = Trainer::new(&bundle, seed as u32)?;
+        let mut batcher = data::batcher_for(
+            corpus_default(&m.model.unit), m.model.vocab_size,
+            m.batch_size, m.model.context, seed)?;
+        let mut eval_batcher = data::batcher_for(
+            corpus_default(&m.model.unit), m.model.vocab_size,
+            m.batch_size, m.model.context, seed ^ 0xEBA1)?;
+        let mut last_loss = f32::NAN;
+        trainer.train(&mut batcher, steps, |so| last_loss = so.loss)?;
+        let ev = trainer.evaluate(&mut eval_batcher, segs)?;
+        println!(
+            "{label:<22} {last_loss:>10.4} {:>10.4} {:>9.3}",
+            ev.nll,
+            ev.perplexity()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let root = sigma_moe::artifacts_root();
+    println!("artifacts root: {}", root.display());
+    let mut found = false;
+    if let Ok(entries) = std::fs::read_dir(&root) {
+        for e in entries.flatten() {
+            if e.path().join("manifest.json").exists() {
+                println!("  {}", e.file_name().to_string_lossy());
+                found = true;
+            }
+        }
+    }
+    if !found {
+        println!("  (none — run `make artifacts`)");
+    }
+    Ok(())
+}

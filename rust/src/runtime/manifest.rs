@@ -1,0 +1,193 @@
+//! Artifact manifest: the contract between the Python AOT compiler and
+//! the Rust runtime.
+//!
+//! `python -m compile.aot` writes, next to each preset's HLO files, a
+//! `manifest.json` describing every function's flattened input/output
+//! buffers (name, shape, dtype) in the exact order jax.jit flattened
+//! them, plus the model configuration and analytic FLOPs summary.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::Json;
+use crate::tensor::DType;
+
+/// One flattened buffer of a function signature.
+#[derive(Debug, Clone)]
+pub struct BufferSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl BufferSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j.get("name")?.as_str()?.to_string();
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let dtype = DType::parse(j.get("dtype")?.as_str()?)?;
+        Ok(BufferSpec { name, shape, dtype })
+    }
+}
+
+/// Signature of one AOT'd function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub file: String,
+    pub inputs: Vec<BufferSpec>,
+    pub outputs: Vec<BufferSpec>,
+}
+
+impl FunctionSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let parse_list = |key: &str| -> Result<Vec<BufferSpec>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(BufferSpec::from_json)
+                .collect()
+        };
+        Ok(FunctionSpec {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+        })
+    }
+
+    /// Index of the output whose name starts with `prefix`.
+    pub fn output_index(&self, prefix: &str) -> Option<usize> {
+        self.outputs.iter().position(|b| b.name.starts_with(prefix))
+    }
+
+    /// All output indices whose name starts with `prefix`, in order.
+    pub fn output_indices(&self, prefix: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// All input indices whose name starts with `prefix`, in order.
+    pub fn input_indices(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Model-configuration subset the runtime needs (full config stays in the
+/// manifest JSON for inspection).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub context: usize,
+    pub mem_len: usize,
+    pub ff_variant: String,
+    pub unit: String,
+    pub n_experts: usize,
+    pub expert_k: usize,
+    pub group_size: usize,
+}
+
+/// Parsed manifest for one preset directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub model: ModelInfo,
+    pub batch_size: usize,
+    pub total_steps: usize,
+    pub eval_mem_len: usize,
+    pub serve_batch: usize,
+    pub functions: BTreeMap<String, FunctionSpec>,
+    pub flops: BTreeMap<String, f64>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let raw = Json::parse(&text)?;
+
+        let cfg = raw.get("config")?;
+        let moe = cfg.get("moe")?;
+        let model = ModelInfo {
+            name: cfg.get("name")?.as_str()?.to_string(),
+            vocab_size: cfg.get("vocab_size")?.as_usize()?,
+            d_model: cfg.get("d_model")?.as_usize()?,
+            d_ff: cfg.get("d_ff")?.as_usize()?,
+            n_layers: cfg.get("n_layers")?.as_usize()?,
+            context: cfg.get("context")?.as_usize()?,
+            mem_len: cfg.get("mem_len")?.as_usize()?,
+            ff_variant: cfg.get("ff_variant")?.as_str()?.to_string(),
+            unit: cfg.get("unit")?.as_str()?.to_string(),
+            n_experts: moe.get("n_experts")?.as_usize()?,
+            expert_k: moe.get("k")?.as_usize()?,
+            group_size: moe.get("group_size")?.as_usize()?,
+        };
+
+        let mut functions = BTreeMap::new();
+        for (name, j) in raw.get("functions")?.as_obj()? {
+            functions.insert(name.clone(), FunctionSpec::from_json(j)?);
+        }
+        let mut flops = BTreeMap::new();
+        if let Some(f) = raw.opt("flops") {
+            for (k, v) in f.as_obj()? {
+                flops.insert(k.clone(), v.as_f64()?);
+            }
+        }
+
+        Ok(Manifest {
+            preset: raw.get("preset")?.as_str()?.to_string(),
+            batch_size: raw.get("train_config")?.get("batch_size")?.as_usize()?,
+            total_steps: raw.get("train_config")?.get("total_steps")?.as_usize()?,
+            eval_mem_len: raw.get("eval_mem_len")?.as_usize()?,
+            serve_batch: raw.get("serve_batch")?.as_usize()?,
+            model,
+            functions,
+            flops,
+            raw,
+            dir,
+        })
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionSpec> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no function {name:?} in manifest")))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.function(name)?.file))
+    }
+}

@@ -1,0 +1,63 @@
+//! Runtime: PJRT client, artifact manifests, compiled programs.
+//!
+//! Layer boundary: everything below here executes AOT-compiled HLO that
+//! `python -m compile.aot` produced at build time — Python is never on
+//! the request path.
+
+pub mod manifest;
+pub mod program;
+
+pub use manifest::{BufferSpec, FunctionSpec, Manifest, ModelInfo};
+pub use program::{Client, Program};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A fully-loaded model artifact: manifest + all compiled programs.
+pub struct ModelBundle {
+    pub manifest: Manifest,
+    pub programs: BTreeMap<String, Program>,
+}
+
+impl ModelBundle {
+    /// Load and compile every function of a preset directory.
+    pub fn load(client: &Client, dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut programs = BTreeMap::new();
+        for (name, spec) in &manifest.functions {
+            let path = manifest.hlo_path(name)?;
+            programs.insert(
+                name.clone(),
+                Program::load(client, name, &path, spec.clone())?,
+            );
+        }
+        Ok(ModelBundle { manifest, programs })
+    }
+
+    /// Load only the listed functions (e.g. just `step_fwd` for serving).
+    pub fn load_subset(
+        client: &Client,
+        dir: impl AsRef<Path>,
+        names: &[&str],
+    ) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut programs = BTreeMap::new();
+        for name in names {
+            let spec = manifest.function(name)?.clone();
+            let path = manifest.hlo_path(name)?;
+            programs.insert(
+                name.to_string(),
+                Program::load(client, name, &path, spec)?,
+            );
+        }
+        Ok(ModelBundle { manifest, programs })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&Program> {
+        self.programs.get(name).ok_or_else(|| {
+            crate::error::Error::Manifest(format!("program {name:?} not loaded"))
+        })
+    }
+}

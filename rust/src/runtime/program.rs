@@ -1,0 +1,122 @@
+//! A compiled AOT program: HLO text -> PJRT executable + typed execute.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+
+use super::manifest::FunctionSpec;
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    /// Create the CPU PJRT client (the only backend in this testbed; the
+    /// same artifacts compile for TPU with a TPU PJRT plugin).
+    pub fn cpu() -> Result<Self> {
+        Ok(Client { inner: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+}
+
+/// One compiled function plus its manifest signature.
+pub struct Program {
+    pub name: String,
+    pub spec: FunctionSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative on-device execution time (for the perf report).
+    pub exec_time: std::cell::Cell<std::time::Duration>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Program {
+    /// Load HLO text from `path`, compile it on `client`.
+    pub fn load(
+        client: &Client,
+        name: &str,
+        path: &std::path::Path,
+        spec: FunctionSpec,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::other("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.raw().compile(&comp)?;
+        Ok(Program {
+            name: name.to_string(),
+            spec,
+            exe,
+            exec_time: std::cell::Cell::new(std::time::Duration::ZERO),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest, unwraps the 1-tuple result and returns one host tensor
+    /// per manifest output, in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.validate_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let buffer = result
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| Error::other("execute returned no buffers"))?;
+        let tuple = buffer.to_literal_sync()?;
+        self.exec_time
+            .set(self.exec_time.get() + t0.elapsed());
+        self.exec_count.set(self.exec_count.get() + 1);
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: {} outputs returned, manifest says {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn validate_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: {} inputs given, manifest says {}",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype != s.dtype {
+                return Err(Error::Shape(format!(
+                    "{}: input #{i} ({}) expects {:?} {:?}, got {:?} {:?}",
+                    self.name, s.name, s.dtype, s.shape, t.dtype, t.shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean wall-clock execution time over all `run` calls so far.
+    pub fn mean_exec_time(&self) -> Option<std::time::Duration> {
+        let n = self.exec_count.get();
+        (n > 0).then(|| self.exec_time.get() / n as u32)
+    }
+}

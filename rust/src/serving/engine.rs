@@ -1,0 +1,271 @@
+//! The inference engine: continuous batching over `step_fwd`.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::runtime::ModelBundle;
+use crate::serving::sampler::Sampler;
+use crate::tensor::{DType, HostTensor};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub prompt: Vec<i32>,
+    pub tokens: Vec<i32>,
+    pub queue_time: Duration,
+    /// time from admission to completion
+    pub run_time: Duration,
+    pub prompt_len: usize,
+}
+
+#[derive(Debug)]
+struct Lane {
+    /// tokens not yet fed to the model (prompt remainder first)
+    pending: VecDeque<i32>,
+    generated: Vec<i32>,
+    budget: usize,
+    sampler: Sampler,
+    request: GenRequest,
+    queued_at: Instant,
+    admitted_at: Instant,
+    done_tx: Option<mpsc::Sender<GenResult>>,
+}
+
+/// Continuous-batching engine: `serve_batch` lanes step together in one
+/// `step_fwd` call per token.
+pub struct Engine<'a> {
+    bundle: &'a ModelBundle,
+    /// indices of the per-layer memory inputs within the input vector
+    mem_slots: Vec<usize>,
+    tok_idx: usize,
+    inputs: Vec<HostTensor>,
+    mem_feedback: Vec<(usize, usize)>,
+    lanes: Vec<Option<Lane>>,
+    queue: VecDeque<Lane>,
+    rng: Rng,
+    pub steps_executed: u64,
+    pub tokens_generated: u64,
+}
+
+impl<'a> Engine<'a> {
+    /// Create an engine using the given parameters (name, tensor) pairs —
+    /// typically `Trainer::params()` or a loaded checkpoint.
+    pub fn new(
+        bundle: &'a ModelBundle,
+        params: &[(String, HostTensor)],
+        seed: u64,
+    ) -> Result<Self> {
+        let fwd = bundle.program("step_fwd")?;
+        let spec = &fwd.spec;
+        let by_name: HashMap<&str, usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.as_str(), i))
+            .collect();
+        let mut inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
+            .collect();
+        for (name, t) in params {
+            if let Some(&i) = by_name.get(format!("0.{name}").as_str()) {
+                inputs[i] = t.clone();
+            }
+        }
+        let mem_slots: Vec<usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.name.starts_with("1."))
+            .map(|(i, _)| i)
+            .collect();
+        let tok_idx = *by_name
+            .get("2")
+            .ok_or_else(|| Error::Manifest("step_fwd: no token input".into()))?;
+        if spec.inputs[tok_idx].dtype != DType::I32 {
+            return Err(Error::Manifest("token input must be i32".into()));
+        }
+        // outputs: "0" logits, "1.<mems>" -> feed back into "1.<mems>"
+        let mem_feedback: Vec<(usize, usize)> = spec
+            .outputs
+            .iter()
+            .enumerate()
+            .filter_map(|(oi, ob)| {
+                ob.name
+                    .strip_prefix("1.")
+                    .and_then(|rest| by_name.get(format!("1.{rest}").as_str()))
+                    .map(|&ii| (oi, ii))
+            })
+            .collect();
+        let n_lanes = spec.inputs[tok_idx].shape[0];
+        Ok(Engine {
+            bundle,
+            mem_slots,
+            tok_idx,
+            inputs,
+            mem_feedback,
+            lanes: (0..n_lanes).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            rng: Rng::new(seed),
+            steps_executed: 0,
+            tokens_generated: 0,
+        })
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue a request; the result is delivered on the returned channel
+    /// when `pump` drives it to completion.
+    pub fn submit(&mut self, req: GenRequest) -> mpsc::Receiver<GenResult> {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        self.queue.push_back(Lane {
+            pending: req.prompt.iter().copied().collect(),
+            generated: Vec::new(),
+            budget: req.max_new_tokens,
+            sampler: req.sampler.clone(),
+            request: req,
+            queued_at: now,
+            admitted_at: now,
+            done_tx: Some(tx),
+        });
+        rx
+    }
+
+    /// Zero lane `b`'s XL memory (fresh sequence).
+    fn reset_lane_memory(&mut self, lane: usize) {
+        for &slot in &self.mem_slots {
+            let t = &mut self.inputs[slot];
+            // shape [B, M, D]; zero row `lane`
+            let row = t.data.len() / t.shape[0];
+            let start = lane * row;
+            t.data[start..start + row].fill(0);
+        }
+    }
+
+    fn admit(&mut self) {
+        for lane_idx in 0..self.lanes.len() {
+            if self.lanes[lane_idx].is_none() {
+                if let Some(mut lane) = self.queue.pop_front() {
+                    lane.admitted_at = Instant::now();
+                    self.reset_lane_memory(lane_idx);
+                    self.lanes[lane_idx] = Some(lane);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Run one engine iteration (admit + one step_fwd over all lanes).
+    /// Returns the number of still-active lanes.
+    pub fn pump(&mut self) -> Result<usize> {
+        self.admit();
+        if self.active() == 0 {
+            return Ok(0);
+        }
+        let fwd = self.bundle.program("step_fwd")?;
+        let b = self.lanes.len();
+        // token for each lane: next pending (prompt) token, or last
+        // generated token; idle lanes feed 0.
+        let mut toks = vec![0i32; b];
+        let mut prompt_phase = vec![false; b];
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
+            if let Some(lane) = slot {
+                if let Some(t) = lane.pending.pop_front() {
+                    toks[i] = t;
+                    // still in prompt phase if more prompt tokens remain
+                    prompt_phase[i] = !lane.pending.is_empty();
+                } else if let Some(&t) = lane.generated.last() {
+                    toks[i] = t;
+                }
+            }
+        }
+        self.inputs[self.tok_idx] =
+            HostTensor::from_i32(&[b, 1], &toks)?;
+        let out = fwd.run(&self.inputs)?;
+        self.steps_executed += 1;
+        let logits = out[0].as_f32()?;
+        let vocab = fwd.spec.outputs[0].shape[1];
+        for (oi, ii) in &self.mem_feedback {
+            self.inputs[*ii] = out[*oi].clone();
+        }
+        for i in 0..b {
+            let mut finished = false;
+            if let Some(lane) = &mut self.lanes[i] {
+                if !prompt_phase[i] {
+                    let row = &logits[i * vocab..(i + 1) * vocab];
+                    let tok = lane.sampler.sample(row, &mut self.rng) as i32;
+                    lane.generated.push(tok);
+                    self.tokens_generated += 1;
+                    if lane.generated.len() >= lane.budget {
+                        finished = true;
+                    }
+                }
+            }
+            if finished {
+                let lane = self.lanes[i].take().unwrap();
+                let res = GenResult {
+                    prompt: lane.request.prompt.clone(),
+                    tokens: lane.generated,
+                    queue_time: lane.admitted_at - lane.queued_at,
+                    run_time: lane.admitted_at.elapsed(),
+                    prompt_len: lane.request.prompt.len(),
+                };
+                if let Some(tx) = lane.done_tx {
+                    let _ = tx.send(res);
+                }
+            }
+        }
+        Ok(self.active() + self.queue.len())
+    }
+
+    /// Drive all submitted requests to completion, collecting results.
+    pub fn run_to_completion(
+        &mut self,
+        receivers: Vec<mpsc::Receiver<GenResult>>,
+    ) -> Result<Vec<GenResult>> {
+        while self.pump()? > 0 {}
+        let mut out = Vec::new();
+        for rx in receivers {
+            out.push(rx.recv().map_err(|_| {
+                Error::Serving("request dropped without result".into())
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Throughput summary over the engine's lifetime.
+    pub fn stats(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("steps_executed".into(), self.steps_executed as f64);
+        m.insert("tokens_generated".into(), self.tokens_generated as f64);
+        m.insert(
+            "mean_batch_occupancy".into(),
+            if self.steps_executed > 0 {
+                self.tokens_generated as f64 / self.steps_executed as f64
+            } else {
+                0.0
+            },
+        );
+        m
+    }
+}

@@ -1,0 +1,16 @@
+//! Serving: a threaded, dynamically-batched inference engine over the
+//! AOT-compiled `step_fwd` executable (vLLM-router-flavored, scaled to
+//! this model family).
+//!
+//! `step_fwd` advances `serve_batch` independent sequences by one token,
+//! carrying each sequence's Transformer-XL memory.  The engine keeps one
+//! *slot* per batch lane; requests queue until a lane frees up, lanes
+//! step together in one executable call (continuous batching at token
+//! granularity — a finished lane is refilled on the next step without
+//! draining the others).
+
+pub mod engine;
+pub mod sampler;
+
+pub use engine::{Engine, GenRequest, GenResult};
+pub use sampler::Sampler;

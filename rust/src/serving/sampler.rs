@@ -1,0 +1,101 @@
+//! Token sampling strategies over next-token logits.
+
+use crate::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub temperature: f32,
+    /// 0 disables top-k filtering.
+    pub top_k: usize,
+    pub greedy: bool,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Sampler { temperature: 1.0, top_k: 0, greedy: false }
+    }
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler { greedy: true, ..Default::default() }
+    }
+
+    /// Sample a token id from raw logits.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        if self.greedy {
+            return argmax(logits);
+        }
+        let t = self.temperature.max(1e-4);
+        // softmax with temperature over the (optionally top-k-filtered) set
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if self.top_k > 0 && self.top_k < logits.len() {
+            idx.sort_unstable_by(|&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap()
+            });
+            idx.truncate(self.top_k);
+        }
+        let maxl = idx
+            .iter()
+            .map(|&i| logits[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - maxl) / t) as f64).exp())
+            .collect();
+        idx[rng.categorical(&weights)]
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let s = Sampler::greedy();
+        let mut rng = Rng::new(0);
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0], &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let s = Sampler { temperature: 0.01, top_k: 0, greedy: false };
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&[0.0, 5.0, 1.0], &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_filters_tail() {
+        let s = Sampler { temperature: 1.0, top_k: 2, greedy: false };
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let t = s.sample(&[5.0, 4.0, -100.0, -100.0], &mut rng);
+            assert!(t < 2);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let s = Sampler { temperature: 100.0, top_k: 0, greedy: false };
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(s.sample(&[1.0, 0.9, 0.8, 0.7], &mut rng));
+        }
+        assert!(seen.len() >= 3);
+    }
+}

@@ -1,0 +1,221 @@
+//! Host-side tensors: the interchange type between the data pipeline,
+//! checkpoints and the PJRT runtime.
+//!
+//! Deliberately minimal: dense row-major arrays of f32 / i32 / u32 —
+//! exactly the dtypes the AOT'd graphs use.
+
+use crate::error::{Error, Result};
+
+/// Element type of a [`HostTensor`]; mirrors the XLA primitive types the
+/// artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    /// Parse a numpy-style dtype string from the manifest.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            "uint32" | "u32" => Ok(DType::U32),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        }
+    }
+
+    pub fn to_xla(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes, `element_count * 4` long.
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor { dtype, shape: shape.to_vec(), data: vec![0u8; n * 4] }
+    }
+
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> Result<Self> {
+        Self::from_bytes(DType::F32, shape, bytes_of_f32(vals))
+    }
+
+    pub fn from_i32(shape: &[usize], vals: &[i32]) -> Result<Self> {
+        Self::from_bytes(DType::I32, shape, bytes_of_i32(vals))
+    }
+
+    pub fn from_u32(shape: &[usize], vals: &[u32]) -> Result<Self> {
+        Self::from_bytes(
+            DType::U32,
+            shape,
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        )
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], &[v]).expect("scalar")
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::from_i32(&[], &[v]).expect("scalar")
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Self::from_u32(&[], &[v]).expect("scalar")
+    }
+
+    fn from_bytes(dtype: DType, shape: &[usize], data: Vec<u8>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n * dtype.size_bytes() {
+            return Err(Error::Shape(format!(
+                "data length {} does not match shape {:?}",
+                data.len(),
+                shape
+            )));
+        }
+        Ok(HostTensor { dtype, shape: shape.to_vec(), data })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Shape(format!("tensor is {:?}, not F32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Shape(format!("tensor is {:?}, not I32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// First element as f32 (for scalar outputs such as the loss).
+    pub fn scalar_as_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| Error::Shape("empty tensor".into()))
+    }
+
+    /// Convert to an XLA literal for PJRT execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.to_xla(),
+            &self.shape,
+            &self.data,
+        )?)
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::U32 => DType::U32,
+            other => {
+                return Err(Error::Shape(format!(
+                    "unsupported literal element type {other:?}"
+                )))
+            }
+        };
+        let mut data = vec![0u8; lit.size_bytes()];
+        match dtype {
+            DType::F32 => {
+                let mut tmp = vec![0f32; lit.element_count()];
+                lit.copy_raw_to(&mut tmp)?;
+                data = bytes_of_f32(&tmp);
+            }
+            DType::I32 => {
+                let mut tmp = vec![0i32; lit.element_count()];
+                lit.copy_raw_to(&mut tmp)?;
+                data = bytes_of_i32(&tmp);
+            }
+            DType::U32 => {
+                let mut tmp = vec![0u32; lit.element_count()];
+                lit.copy_raw_to(&mut tmp)?;
+                data = tmp.iter().flat_map(|v| v.to_le_bytes()).collect();
+            }
+        }
+        Ok(HostTensor { dtype, shape: dims, data })
+    }
+}
+
+fn bytes_of_f32(vals: &[f32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn bytes_of_i32(vals: &[i32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::from_f32(&[2, 2], &[1., 2., 3.]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let z = HostTensor::zeros(DType::I32, &[4]);
+        assert_eq!(z.as_i32().unwrap(), vec![0; 4]);
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar_as_f32().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

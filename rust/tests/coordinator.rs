@@ -1,0 +1,168 @@
+//! Integration tests over the full L3 coordinator (requires artifacts).
+
+use sigma_moe::coordinator::{Checkpoint, Trainer};
+use sigma_moe::data;
+use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::serving::{Engine, GenRequest, Sampler};
+
+fn bundle_for(preset: &str) -> Option<(Client, ModelBundle)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join(preset);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts for {preset} not built");
+        return None;
+    }
+    let client = Client::cpu().expect("pjrt client");
+    let bundle = ModelBundle::load(&client, &dir).expect("bundle");
+    Some((client, bundle))
+}
+
+#[test]
+fn trainer_reduces_loss_on_synthetic_corpus() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let m = &bundle.manifest;
+    let mut trainer = Trainer::new(&bundle, 42).expect("trainer");
+    let mut batcher = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 42)
+        .unwrap();
+    let outs = trainer.train(&mut batcher, 30, |_| {}).expect("train");
+    let first: f32 = outs[..5].iter().map(|o| o.loss).sum::<f32>() / 5.0;
+    let last: f32 = outs[outs.len() - 5..].iter().map(|o| o.loss).sum::<f32>()
+        / 5.0;
+    assert!(
+        last < first - 0.2,
+        "loss did not improve: {first} -> {last}"
+    );
+    // stats present for a MoE model
+    assert!(outs[0].stats.keys().any(|k| k.ends_with("usage")));
+}
+
+#[test]
+fn evaluate_carries_memory_and_counts_tokens() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let m = &bundle.manifest;
+    let mut trainer = Trainer::new(&bundle, 1).expect("trainer");
+    let mut batcher = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 9)
+        .unwrap();
+    let ev = trainer.evaluate(&mut batcher, 3).expect("eval");
+    let expected = (3 * m.batch_size * m.model.context) as f64;
+    assert_eq!(ev.token_count, expected);
+    assert!(ev.nll > 0.0 && ev.nll.is_finite());
+    assert!(ev.perplexity() > 1.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let m = &bundle.manifest;
+    let mut trainer = Trainer::new(&bundle, 5).expect("trainer");
+    let mut batcher = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 5)
+        .unwrap();
+    trainer.train(&mut batcher, 5, |_| {}).unwrap();
+
+    let dir = std::env::temp_dir().join("sigma_moe_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("it.ckpt");
+    Checkpoint {
+        step: trainer.step,
+        preset: "tiny-moe".into(),
+        params: trainer.params(),
+        opt: trainer.opt_state(),
+    }
+    .save(&path)
+    .unwrap();
+
+    // evaluate original
+    let mut eb = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 77)
+        .unwrap();
+    let ev1 = trainer.evaluate(&mut eb, 2).unwrap();
+
+    // fresh trainer restored from checkpoint must match exactly
+    let mut t2 = Trainer::new(&bundle, 999).expect("trainer2");
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, trainer.step);
+    t2.restore(&ck.params, &ck.opt, ck.step).unwrap();
+    let mut eb2 = data::batcher_for(
+        "wikitext", m.model.vocab_size, m.batch_size, m.model.context, 77)
+        .unwrap();
+    let ev2 = t2.evaluate(&mut eb2, 2).unwrap();
+    assert!(
+        (ev1.nll - ev2.nll).abs() < 1e-5,
+        "restored eval differs: {} vs {}",
+        ev1.nll,
+        ev2.nll
+    );
+}
+
+#[test]
+fn engine_generates_and_batches() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let m = &bundle.manifest;
+    // fresh init params straight from the init program
+    let init = bundle.program("init").unwrap();
+    let out = init
+        .run(&[sigma_moe::tensor::HostTensor::scalar_u32(1)])
+        .unwrap();
+    let params: Vec<(String, sigma_moe::tensor::HostTensor)> = init
+        .spec
+        .outputs
+        .iter()
+        .map(|b| b.name.clone())
+        .zip(out)
+        .collect();
+    let mut engine = Engine::new(&bundle, &params, 3).expect("engine");
+    assert_eq!(engine.n_lanes(), m.serve_batch);
+
+    // oversubscribe the lanes to exercise queueing + continuous batching
+    let n_req = engine.n_lanes() * 2 + 1;
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        rxs.push(engine.submit(GenRequest {
+            prompt: vec![1 + i as i32, 2, 3],
+            max_new_tokens: 4 + (i % 3),
+            sampler: Sampler::greedy(),
+        }));
+    }
+    let results = engine.run_to_completion(rxs).expect("generate");
+    assert_eq!(results.len(), n_req);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.tokens.len(), 4 + (i % 3));
+        for &t in &r.tokens {
+            assert!((0..m.model.vocab_size as i32).contains(&t));
+        }
+    }
+    // greedy sampling + same prompt => identical generations
+    let rx_a = engine.submit(GenRequest {
+        prompt: vec![5, 6, 7],
+        max_new_tokens: 6,
+        sampler: Sampler::greedy(),
+    });
+    let rx_b = engine.submit(GenRequest {
+        prompt: vec![5, 6, 7],
+        max_new_tokens: 6,
+        sampler: Sampler::greedy(),
+    });
+    let pair = engine.run_to_completion(vec![rx_a, rx_b]).unwrap();
+    assert_eq!(pair[0].tokens, pair[1].tokens,
+               "greedy generation not deterministic across lanes");
+}
+
+#[test]
+fn manifest_flops_match_rust_model() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let m = &bundle.manifest;
+    let rust = sigma_moe::flops::moe_ff(
+        m.model.d_model, m.model.n_experts, m.model.group_size,
+        m.model.expert_k);
+    let py = m.flops.get("ff_flops_per_token").copied().unwrap();
+    assert!(
+        (rust.flops - py).abs() / py < 1e-9,
+        "rust {} vs python {}",
+        rust.flops,
+        py
+    );
+}

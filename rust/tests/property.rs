@@ -1,0 +1,220 @@
+//! Property-based tests (seeded random sweeps — the offline vendor set
+//! has no proptest crate, so we drive generation with the library's own
+//! PRNG): serialization round-trips, batcher/tokenizer invariants,
+//! sampler and analytic-model properties.
+
+use sigma_moe::coordinator::Checkpoint;
+use sigma_moe::data::{self, Corpus, WordTokenizer};
+use sigma_moe::json::{self, Json};
+use sigma_moe::rng::Rng;
+use sigma_moe::serving::Sampler;
+use sigma_moe::tensor::{DType, HostTensor};
+use sigma_moe::{flops, Error};
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.coin(0.5)),
+        2 => Json::Num((rng.next_f64() * 2e6).round() - 1e6),
+        3 => {
+            let n = rng.below(12);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = rng.below(128) as u8;
+                    if c.is_ascii_graphic() || c == b' ' {
+                        c as char
+                    } else {
+                        'ü'
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(5))
+            .map(|_| random_json(rng, depth - 1))
+            .collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrips() {
+    let mut rng = Rng::new(1);
+    for _ in 0..300 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string_compact();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse failed on {text}: {e}"));
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    }
+}
+
+#[test]
+fn prop_json_rejects_truncations() {
+    // any strict prefix of a valid non-trivial document must not parse
+    let v = json::obj(vec![
+        ("a", json::arr(vec![json::num(1.0), json::s("x")])),
+        ("b", Json::Bool(true)),
+    ]);
+    let text = v.to_string_compact();
+    for cut in 1..text.len() {
+        assert!(
+            Json::parse(&text[..cut]).is_err(),
+            "prefix unexpectedly parsed: {}",
+            &text[..cut]
+        );
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_random_tensors() {
+    let mut rng = Rng::new(2);
+    let dir = std::env::temp_dir().join("sigma_moe_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..20 {
+        let n_params = 1 + rng.below(6);
+        let params: Vec<(String, HostTensor)> = (0..n_params)
+            .map(|i| {
+                let dims: Vec<usize> =
+                    (0..1 + rng.below(3)).map(|_| 1 + rng.below(7)).collect();
+                let n: usize = dims.iter().product();
+                let vals: Vec<f32> =
+                    (0..n).map(|_| rng.normal() as f32).collect();
+                (format!("p{i}"), HostTensor::from_f32(&dims, &vals).unwrap())
+            })
+            .collect();
+        let ck = Checkpoint {
+            step: rng.below(100000) as i64,
+            preset: format!("case-{case}"),
+            params: params.clone(),
+            opt: vec![],
+        };
+        let path = dir.join(format!("{case}.ckpt"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.params.len(), params.len());
+        for ((n1, t1), (n2, t2)) in params.iter().zip(&back.params) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_streams_are_contiguous_for_any_shape() {
+    let mut rng = Rng::new(3);
+    for _ in 0..15 {
+        let batch = 1 + rng.below(6);
+        let seg = 2 + rng.below(40);
+        let mut b =
+            data::batcher_for("wikitext", 256, batch, seg, rng.next_u64())
+                .unwrap();
+        let mut prev: Option<Vec<i32>> = None;
+        for _ in 0..4 {
+            let w = b.next_window().unwrap();
+            assert_eq!(w.shape, vec![batch, seg + 1]);
+            let vals = w.as_i32().unwrap();
+            assert!(vals.iter().all(|&t| (0..256).contains(&t)));
+            if let Some(p) = prev {
+                for row in 0..batch {
+                    assert_eq!(
+                        p[row * (seg + 1) + seg],
+                        vals[row * (seg + 1)],
+                        "row {row} not contiguous"
+                    );
+                }
+            }
+            prev = Some(vals);
+        }
+    }
+}
+
+#[test]
+fn prop_word_tokenizer_known_words_roundtrip() {
+    let mut rng = Rng::new(4);
+    for _ in 0..20 {
+        // build a corpus of random words, tokenize a sentence of them
+        let n_words = 3 + rng.below(30);
+        let words: Vec<String> = (0..n_words)
+            .map(|i| format!("w{}x{i}", rng.below(1000)))
+            .collect();
+        let text = words.join(" ");
+        let tok = WordTokenizer::build(&text, n_words + 1).unwrap();
+        let enc = tok.encode(&text);
+        assert_eq!(enc.len(), words.len());
+        assert!(enc.iter().all(|&t| t != 0), "unk leaked for known words");
+        assert_eq!(tok.decode(&enc), text);
+    }
+}
+
+#[test]
+fn prop_sampler_greedy_always_argmax() {
+    let mut rng = Rng::new(5);
+    let s = Sampler::greedy();
+    for _ in 0..50 {
+        let n = 2 + rng.below(40);
+        let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let best = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let mut r2 = rng.fork(7);
+        assert_eq!(s.sample(&logits, &mut r2), best);
+    }
+}
+
+#[test]
+fn prop_moe_fraction_equals_k_over_ne_when_dff_matches() {
+    let mut rng = Rng::new(6);
+    for _ in 0..40 {
+        let g = 8 << rng.below(5);
+        let ne = 1 + rng.below(64);
+        let k = 1 + rng.below(ne);
+        let d_model = 64 + rng.below(512);
+        let f = flops::moe_fraction(d_model, ne, g, k, ne * g);
+        let want = k as f64 / ne as f64;
+        assert!((f - want).abs() < 1e-12, "{f} vs {want}");
+    }
+}
+
+#[test]
+fn prop_corpus_flavors_and_seeds_are_distinct() {
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let seed = rng.next_u64();
+        let mut a = data::by_name("wikitext", 512, seed).unwrap();
+        let mut b = data::by_name("c4", 512, seed).unwrap();
+        let mut a2 = data::by_name("wikitext", 512, seed ^ 1).unwrap();
+        let va = a.take_vec(256);
+        assert_ne!(va, b.take_vec(256), "flavors identical");
+        assert_ne!(va, a2.take_vec(256), "seeds identical");
+    }
+}
+
+#[test]
+fn prop_tensor_literal_roundtrip() {
+    let mut rng = Rng::new(8);
+    for _ in 0..20 {
+        let dims: Vec<usize> =
+            (0..1 + rng.below(3)).map(|_| 1 + rng.below(9)).collect();
+        let n: usize = dims.iter().product();
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let t = HostTensor::from_f32(&dims, &vals).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}
+
+#[test]
+fn dtype_errors_are_reported_not_panicked() {
+    let t = HostTensor::zeros(DType::I32, &[3]);
+    assert!(matches!(t.as_f32(), Err(Error::Shape(_))));
+}

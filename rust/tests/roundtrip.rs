@@ -1,0 +1,126 @@
+//! Integration test: the full AOT round trip (init -> train_step loop).
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent
+//! so `cargo test` works in a fresh checkout).
+
+use std::collections::HashMap;
+
+use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::tensor::{DType, HostTensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("tiny-moe");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn init_then_train_step_decreases_loss() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let client = Client::cpu().expect("pjrt cpu client");
+    let bundle = ModelBundle::load(&client, &dir).expect("load bundle");
+
+    // --- init: outputs are params named "embed", "layers.0...", ... ---
+    let init = bundle.program("init").unwrap();
+    let params = init.run(&[HostTensor::scalar_u32(42)]).expect("init run");
+    let some_param = params
+        .iter()
+        .find(|t| t.dtype == DType::F32 && t.element_count() > 100)
+        .unwrap();
+    assert!(
+        some_param.as_f32().unwrap().iter().any(|v| v.abs() > 1e-6),
+        "init produced zeros"
+    );
+
+    // --- train_step: inputs named "0.<param>", "1.<m>", "2.<v>",
+    //     "3.<mems>", "4" (tokens), "5" (step), "6" (seed, may be pruned);
+    //     outputs "0"=loss, "1"=gnorm, "2"=lr, "3.<param>", ... ---
+    let ts = bundle.program("train_step").unwrap();
+    let spec = ts.spec.clone();
+    let by_name: HashMap<&str, usize> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, b)| (b.name.as_str(), i))
+        .collect();
+
+    let mut state: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|b| HostTensor::zeros(b.dtype, &b.shape))
+        .collect();
+    // init params map to inputs "0.<name>" in order
+    let param_inputs: Vec<usize> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.name.starts_with("0."))
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(param_inputs.len(), params.len());
+    for (slot, p) in param_inputs.iter().zip(params.into_iter()) {
+        state[*slot] = p;
+    }
+
+    let tok_idx = *by_name.get("4").expect("tokens input");
+    let step_idx = *by_name.get("5").expect("step input");
+    let tok_spec = spec.inputs[tok_idx].clone();
+    assert_eq!(tok_spec.dtype, DType::I32);
+    let vocab = bundle.manifest.model.vocab_size as i32;
+
+    // Map outputs back to inputs by renaming "3."->"0." etc.
+    let feedback: Vec<(usize, usize)> = spec
+        .outputs
+        .iter()
+        .enumerate()
+        .filter_map(|(oi, ob)| {
+            let renamed = rename_output(&ob.name)?;
+            by_name.get(renamed.as_str()).map(|ii| (oi, *ii))
+        })
+        .collect();
+    assert!(feedback.len() >= spec.inputs.len() - 3);
+
+    let mut losses = Vec::new();
+    for step in 0..10 {
+        let n = tok_spec.element_count();
+        // learnable periodic token pattern
+        let toks: Vec<i32> = (0..n).map(|i| ((i % 16) as i32 * 7) % vocab).collect();
+        state[tok_idx] = HostTensor::from_i32(&tok_spec.shape, &toks).unwrap();
+        state[step_idx] = HostTensor::scalar_i32(step);
+        if let Some(&seed_idx) = by_name.get("6") {
+            state[seed_idx] = HostTensor::scalar_u32(7);
+        }
+        let out = ts.run(&state).expect("train_step run");
+        let loss = out[0].scalar_as_f32().unwrap();
+        let gnorm = out[1].scalar_as_f32().unwrap();
+        assert!(loss.is_finite(), "loss not finite at step {step}");
+        assert!(gnorm.is_finite() && gnorm >= 0.0);
+        losses.push(loss);
+        for (oi, ii) in &feedback {
+            state[*ii] = out[*oi].clone();
+        }
+    }
+    eprintln!("losses: {losses:?}");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease on a learnable pattern: {losses:?}"
+    );
+}
+
+/// "3.x" -> "0.x" (params), "4.x" -> "1.x" (m), "5.x" -> "2.x" (v),
+/// "6.x" -> "3.x" (mems).
+fn rename_output(name: &str) -> Option<String> {
+    let (head, rest) = name.split_once('.')?;
+    let new_head = match head {
+        "3" => "0",
+        "4" => "1",
+        "5" => "2",
+        "6" => "3",
+        _ => return None,
+    };
+    Some(format!("{new_head}.{rest}"))
+}

@@ -41,8 +41,8 @@ fn main() -> Result<()> {
     let ev = trainer.evaluate(&mut eval_batcher, 8)?;
     println!("eval: nll {:.4}  ppl {:.2}", ev.nll, ev.perplexity());
 
-    // --- generate ---
-    let mut engine = Engine::new(&bundle, &trainer.params(), 5)?;
+    // --- generate (params() is the explicit device->host sync point) ---
+    let mut engine = Engine::new(&bundle, &trainer.params()?, 5)?;
     let mut corpus = data::by_name("wikitext", m.model.vocab_size, 9)?;
     let rx = engine.submit(GenRequest {
         prompt: corpus.take_vec(8),

@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         }
     })?;
 
-    let mut engine = Engine::new(&bundle, &trainer.params(), 17)?;
+    let mut engine = Engine::new(&bundle, &trainer.params()?, 17)?;
     eprintln!(
         "engine ready: {} lanes (serve_batch from the manifest)",
         engine.n_lanes()
@@ -68,9 +68,14 @@ fn main() -> Result<()> {
         queue.last().unwrap()
     );
     println!(
-        "batch occupancy   : {:.2} of {} lanes",
+        "batch occupancy   : {:.2} of {} lanes ({:.2} gen-only)",
         engine.stats()["mean_batch_occupancy"],
-        engine.n_lanes()
+        engine.n_lanes(),
+        engine.stats()["mean_gen_occupancy"]
+    );
+    println!(
+        "device traffic    : {}",
+        engine.transfer_stats().report_per_step(engine.steps_executed)
     );
     // show one generation
     let r0 = &results[0];

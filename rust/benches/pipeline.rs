@@ -1,9 +1,62 @@
-//! L3 data-pipeline benchmark: synthetic-corpus generation, batcher
-//! window assembly, tokenizer throughput — establishes that the data
-//! path is far from being the training bottleneck (EXPERIMENTS.md §Perf).
+//! L3 pipeline benchmark: synthetic-corpus generation, batcher window
+//! assembly, tokenizer throughput — establishes that the data path is
+//! far from being the training bottleneck — plus the continuous-batching
+//! decode loop over the device-resident engine (EXPERIMENTS.md §Perf).
 
 use sigma_moe::bench_util::bench;
 use sigma_moe::data::{self, CharTokenizer, WordTokenizer};
+use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::tensor::HostTensor;
+
+/// Decode-loop throughput: tokens/sec and host↔device bytes per pump
+/// over the device-resident `step_fwd` engine.  Skipped when artifacts
+/// are not built.
+fn bench_decode_loop() {
+    let dir = sigma_moe::artifacts_root().join("tiny-moe");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("decode loop: tiny-moe artifacts not built; skipping");
+        return;
+    }
+    let client = Client::cpu().expect("pjrt client");
+    let bundle = ModelBundle::load_subset(&client, &dir, &["init", "step_fwd"])
+        .expect("bundle");
+    let init = bundle.program("init").unwrap();
+    let out = init.run(&[HostTensor::scalar_u32(1)]).unwrap();
+    let params: Vec<(String, HostTensor)> = init
+        .spec
+        .outputs
+        .iter()
+        .map(|b| b.name.clone())
+        .zip(out)
+        .collect();
+    let mut engine = Engine::new(&bundle, &params, 7).expect("engine");
+    let mut corpus = data::by_name(
+        "wikitext", bundle.manifest.model.vocab_size, 7).unwrap();
+    let n_req = engine.n_lanes() * 2;
+    let mut rxs = Vec::new();
+    for _ in 0..n_req {
+        rxs.push(engine.submit(GenRequest {
+            prompt: corpus.take_vec(8),
+            max_new_tokens: 24,
+            sampler: Sampler::greedy(),
+        }));
+    }
+    let xfer0 = engine.transfer_stats();
+    let t0 = std::time::Instant::now();
+    let results = engine.run_to_completion(rxs).expect("decode");
+    let wall = t0.elapsed().as_secs_f64();
+    let xfer = engine.transfer_stats().since(&xfer0);
+    let total_new: usize = results.iter().map(|r| r.tokens.len()).sum();
+    println!(
+        "decode loop: {} reqs | {:.1} tok/s | {:.2} steps/s | {} | occupancy {:.2}",
+        results.len(),
+        total_new as f64 / wall,
+        engine.steps_executed as f64 / wall,
+        xfer.report_per_step(engine.steps_executed),
+        engine.stats()["mean_batch_occupancy"],
+    );
+}
 
 fn main() {
     println!("== data pipeline throughput ==");
@@ -57,4 +110,7 @@ fn main() {
         s.report(),
         text.len() as f64 / s.mean.as_secs_f64() / 1e6
     );
+
+    println!("== continuous-batching decode loop ==");
+    bench_decode_loop();
 }

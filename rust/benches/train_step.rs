@@ -1,18 +1,47 @@
 //! End-to-end train-step benchmark: wall time of the full optimization
-//! step for each artifact preset, split into on-device execute vs host
-//! (literal upload + readback), with derived tokens/sec — the L3
-//! hot-path profile recorded in EXPERIMENTS.md §Perf.
+//! step for each artifact preset, A/B'd between the seed host-round-trip
+//! path (`Program::run`: upload params+opt+mems, download everything)
+//! and the device-resident path (`Trainer::step_on` over
+//! `Program::run_buffers`), split into on-device execute vs host
+//! transfer, with derived tokens/sec and bytes-moved/step — the L3
+//! hot-path profile recorded in EXPERIMENTS.md §Perf and emitted as
+//! machine-readable BENCH_train.json for cross-PR tracking.
 
-use sigma_moe::bench_util::bench_budget;
+use sigma_moe::bench_util::{bench_budget, write_bench_json, Summary};
 use sigma_moe::coordinator::Trainer;
 use sigma_moe::data;
+use sigma_moe::json::{self, Json};
 use sigma_moe::runtime::{Client, ModelBundle};
+use sigma_moe::tensor::HostTensor;
 use std::time::Duration;
+
+fn result_json(
+    preset: &str,
+    mode: &str,
+    s: &Summary,
+    tokens_per_step: usize,
+    exec: Duration,
+    h2d_per_step: f64,
+    d2h_per_step: f64,
+) -> Json {
+    let step_s = s.mean.as_secs_f64().max(1e-12);
+    json::obj(vec![
+        ("preset", json::s(preset)),
+        ("mode", json::s(mode)),
+        ("timing", s.to_json()),
+        ("steps_per_sec", json::num(1.0 / step_s)),
+        ("tokens_per_sec", json::num(tokens_per_step as f64 / step_s)),
+        ("exec_s_per_step", json::num(exec.as_secs_f64())),
+        ("h2d_bytes_per_step", json::num(h2d_per_step)),
+        ("d2h_bytes_per_step", json::num(d2h_per_step)),
+    ])
+}
 
 fn main() {
     let client = Client::cpu().expect("pjrt client");
     let presets = ["tiny-dense", "tiny-moe", "tiny-topk", "tiny-pkm"];
-    println!("== train_step wall time per preset ==");
+    let mut results: Vec<Json> = Vec::new();
+    println!("== train_step wall time per preset (seed path vs device-resident) ==");
     for preset in presets {
         let dir = sigma_moe::artifacts_root().join(preset);
         let bundle = match ModelBundle::load(&client, &dir) {
@@ -23,7 +52,11 @@ fn main() {
             }
         };
         let m = &bundle.manifest;
-        let mut trainer = Trainer::new(&bundle, 1).expect("trainer");
+        let tokens = m.batch_size * m.model.context;
+        let ts = bundle.program("train_step").unwrap();
+
+        // pre-generated window pool so neither mode times the batcher;
+        // both modes pay one token-tensor clone per step
         let mut batcher = data::batcher_for(
             "wikitext",
             m.model.vocab_size,
@@ -32,24 +65,101 @@ fn main() {
             1,
         )
         .expect("batcher");
-        let tokens = m.batch_size * m.model.context;
+        let windows: Vec<HostTensor> = (0..32)
+            .map(|_| batcher.next_window().unwrap())
+            .collect();
 
-        let s = bench_budget(preset, 1, 30, Duration::from_secs(8), || {
-            let w = batcher.next_window().unwrap();
-            trainer.step_on(w).unwrap();
-        });
-        let exec = bundle
-            .program("train_step")
-            .unwrap()
-            .mean_exec_time()
-            .unwrap_or(Duration::ZERO);
-        let host = s.mean.saturating_sub(exec);
-        println!(
-            "{}   {:>8.0} tok/s   exec {:.3?} / host {:.3?}",
-            s.report(),
-            tokens as f64 / s.mean.as_secs_f64(),
-            exec,
-            host
+        // -- A: seed path — full host round trip through Program::run.
+        // Feedback wiring doesn't change the transfer profile, so a
+        // fixed input state (zero params, real tokens) measures the same
+        // per-step cost the seed Trainer paid.
+        let mut host_inputs: Vec<HostTensor> = ts
+            .spec
+            .inputs
+            .iter()
+            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
+            .collect();
+        let tok_idx = ts
+            .spec
+            .inputs
+            .iter()
+            .position(|b| b.name == "4")
+            .expect("tokens input '4'");
+        let exec0 = ts.exec_time.get();
+        let n0 = ts.exec_count.get();
+        let mut wi = 0usize;
+        let s_host = bench_budget(
+            &format!("{preset} host-roundtrip"),
+            1,
+            30,
+            Duration::from_secs(8),
+            || {
+                host_inputs[tok_idx] = windows[wi % windows.len()].clone();
+                wi += 1;
+                ts.run(&host_inputs).unwrap();
+            },
         );
+        let exec_host = (ts.exec_time.get() - exec0) / (ts.exec_count.get() - n0).max(1) as u32;
+        let h2d_host = ts.spec.total_input_bytes() as f64;
+        let d2h_host = ts.spec.total_output_bytes() as f64;
+        println!(
+            "{}   {:>8.0} tok/s   exec {:.3?} / host {:.3?}   moves {:.2} MB/step",
+            s_host.report(),
+            tokens as f64 / s_host.mean.as_secs_f64(),
+            exec_host,
+            s_host.mean.saturating_sub(exec_host),
+            (h2d_host + d2h_host) / 1e6,
+        );
+        results.push(result_json(
+            preset, "host_roundtrip", &s_host, tokens, exec_host, h2d_host,
+            d2h_host,
+        ));
+
+        // -- B: device-resident path through Trainer::step_on, fed from
+        // the same window pool.
+        let mut trainer = Trainer::new(&bundle, 1).expect("trainer");
+        let exec0 = ts.exec_time.get();
+        let n0 = ts.exec_count.get();
+        let xfer0 = trainer.transfer_stats();
+        let mut wi = 0usize;
+        let s_dev = bench_budget(
+            &format!("{preset} device-resident"),
+            1,
+            30,
+            Duration::from_secs(8),
+            || {
+                let w = windows[wi % windows.len()].clone();
+                wi += 1;
+                trainer.step_on(w).unwrap();
+            },
+        );
+        let steps = (ts.exec_count.get() - n0).max(1);
+        let exec_dev = (ts.exec_time.get() - exec0) / steps as u32;
+        let xfer = trainer.transfer_stats().since(&xfer0);
+        let h2d_dev = xfer.h2d_bytes as f64 / steps as f64;
+        let d2h_dev = xfer.d2h_bytes as f64 / steps as f64;
+        println!(
+            "{}   {:>8.0} tok/s   exec {:.3?} / host {:.3?}   moves {:.2} MB/step   speedup x{:.2}",
+            s_dev.report(),
+            tokens as f64 / s_dev.mean.as_secs_f64(),
+            exec_dev,
+            s_dev.mean.saturating_sub(exec_dev),
+            (h2d_dev + d2h_dev) / 1e6,
+            s_host.mean.as_secs_f64() / s_dev.mean.as_secs_f64().max(1e-12),
+        );
+        results.push(result_json(
+            preset, "device_resident", &s_dev, tokens, exec_dev, h2d_dev,
+            d2h_dev,
+        ));
     }
+    if results.is_empty() {
+        eprintln!("no presets benchmarked (artifacts missing) — BENCH_train.json not written");
+        return;
+    }
+    // cargo bench runs with cwd = rust/; the tracked file lives at the
+    // repo root
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+    write_bench_json(out, "sigma-moe/train-step/v1", results)
+        .expect("write BENCH_train.json");
+    println!("wrote {out}");
 }

@@ -1,8 +1,12 @@
 //! Minimal benchmarking harness (criterion is not in the offline vendor
-//! set): warmup + timed iterations with mean / median / p10 / p90, and
-//! criterion-like one-line reports.
+//! set): warmup + timed iterations with mean / median / p10 / p90,
+//! criterion-like one-line reports, and a machine-readable JSON sink so
+//! the perf trajectory is tracked across PRs (BENCH_train.json).
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::json::{self, Json};
 
 /// Timing summary over N iterations.
 #[derive(Debug, Clone)]
@@ -22,6 +26,33 @@ impl Summary {
             self.name, self.median, self.mean, self.p10, self.p90, self.iters
         )
     }
+
+    /// Timing fields as a JSON object (seconds), for [`write_bench_json`].
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_s", json::num(self.mean.as_secs_f64())),
+            ("median_s", json::num(self.median.as_secs_f64())),
+            ("p10_s", json::num(self.p10.as_secs_f64())),
+            ("p90_s", json::num(self.p90.as_secs_f64())),
+        ])
+    }
+}
+
+/// Write bench results as a machine-readable JSON document:
+/// `{"schema": "...", "results": [...]}`.  Benches call this with one
+/// object per (preset, mode) so CI / later PRs can diff the numbers.
+pub fn write_bench_json(
+    path: impl AsRef<Path>,
+    schema: &str,
+    results: Vec<Json>,
+) -> std::io::Result<()> {
+    let doc = json::obj(vec![
+        ("schema", json::s(schema)),
+        ("results", json::arr(results)),
+    ]);
+    std::fs::write(path, doc.to_string_compact())
 }
 
 /// Run `f` for `warmup` unmeasured and `iters` measured iterations.

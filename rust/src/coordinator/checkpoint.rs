@@ -27,6 +27,21 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Snapshot a trainer's current state — the explicit host-sync
+    /// boundary: device-resident params / optimizer tensors are
+    /// downloaded here (and only here) before serialization.
+    pub fn from_trainer(
+        trainer: &mut super::trainer::Trainer,
+        preset: impl Into<String>,
+    ) -> Result<Self> {
+        Ok(Checkpoint {
+            step: trainer.step,
+            preset: preset.into(),
+            params: trainer.params()?,
+            opt: trainer.opt_state()?,
+        })
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut entries = Vec::new();
         let mut blobs: Vec<&[u8]> = Vec::new();

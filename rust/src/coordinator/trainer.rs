@@ -3,6 +3,13 @@
 //! buffers **by manifest name** (positions shift when jax prunes unused
 //! inputs, names never do).
 //!
+//! Since the device-resident rework (EXPERIMENTS.md §Perf) the state
+//! lives in a [`DeviceState`]: parameters, Adam moments, and XL memories
+//! stay on device across steps; per step only the token window and two
+//! scalars go host→device and only the loss/grad-norm/lr scalars plus
+//! the small `7.*` stats come back.  `params()` / `opt_state()` are the
+//! explicit host-sync boundaries for checkpointing and analysis.
+//!
 //! Signature conventions (see python/compile/api.py):
 //!   train_step inputs : "0.<param>" "1.<m>" "2.<v>" "3.<mems>" "4"=tokens
 //!                       "5"=step "6"=seed(optional)
@@ -15,7 +22,8 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::data::XlBatcher;
 use crate::error::{Error, Result};
-use crate::runtime::{ModelBundle, Program};
+use crate::runtime::device::{download, upload};
+use crate::runtime::{DeviceState, ModelBundle, Program, TransferSnapshot};
 use crate::tensor::HostTensor;
 
 /// Result of one optimization step.
@@ -78,11 +86,23 @@ fn feedback_map(
     out
 }
 
-/// The trainer: owns the flattened train_step input state.
+/// Where each `eval_step` input comes from when evaluating with shared,
+/// device-resident training parameters.
+enum EvalSrc {
+    /// borrow the train-state param buffer at this slot index
+    Param(usize),
+    /// the j-th persistent eval memory buffer
+    Mem(usize),
+    /// the per-segment token window
+    Tokens,
+    /// a constant zero buffer (inputs outside the known convention)
+    Zero(usize),
+}
+
+/// The trainer: owns the device-resident train_step input state.
 pub struct Trainer<'a> {
     pub bundle: &'a ModelBundle,
-    state: Vec<HostTensor>,
-    input_index: HashMap<String, usize>,
+    state: DeviceState,
     feedback: Vec<(usize, usize)>,
     /// indices of param inputs ("0.*") in `state`, and the matching names
     param_slots: Vec<(String, usize)>,
@@ -92,41 +112,35 @@ pub struct Trainer<'a> {
     seed_idx: Option<usize>,
     pub step: i64,
     pub seed: u32,
-    /// eval-side XL memory (shape differs from train mems)
-    eval_mems: Option<Vec<HostTensor>>,
+    /// eval-side XL memory, device-resident across evaluate() calls
+    /// (shape differs from train mems)
+    eval_mems: Option<Vec<xla::PjRtBuffer>>,
 }
 
 impl<'a> Trainer<'a> {
     /// Initialize model parameters via the `init` program and set up all
-    /// buffer wiring.
+    /// buffer wiring.  Init outputs are adopted as device buffers
+    /// directly — only the 4-byte seed scalar crosses the host boundary.
     pub fn new(bundle: &'a ModelBundle, seed: u32) -> Result<Self> {
         let ts = bundle.program("train_step")?;
         let spec = &ts.spec;
-        let input_index: HashMap<String, usize> = spec
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, b)| (b.name.clone(), i))
-            .collect();
-        let mut state: Vec<HostTensor> = spec
-            .inputs
-            .iter()
-            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
-            .collect();
+        let mut state =
+            DeviceState::for_inputs(&bundle.client, "train_step", &spec.inputs);
 
-        // run init and scatter params into "0.<name>" slots
+        // run init on device and adopt params into "0.<name>" slots
         let init = bundle.program("init")?;
-        let params = init.run(&[HostTensor::scalar_u32(seed)])?;
+        let seed_buf = upload(&bundle.client, &HostTensor::scalar_u32(seed))?;
+        let params = init.run_buffers(&[&seed_buf])?;
         if params.len() != init.spec.outputs.len() {
             return Err(Error::Shape("init output arity mismatch".into()));
         }
         let mut param_slots = Vec::new();
-        for (out, ob) in params.into_iter().zip(&init.spec.outputs) {
+        for (buf, ob) in params.into_iter().zip(&init.spec.outputs) {
             let name = format!("0.{}", ob.name);
-            let idx = *input_index.get(&name).ok_or_else(|| {
+            let idx = state.position(&name).ok_or_else(|| {
                 Error::Manifest(format!("train_step has no input {name}"))
             })?;
-            state[idx] = out;
+            state.set_device(idx, buf);
             param_slots.push((ob.name.clone(), idx));
         }
         let opt_slots = spec
@@ -137,13 +151,13 @@ impl<'a> Trainer<'a> {
             .map(|(i, b)| (b.name.clone(), i))
             .collect();
 
-        let tok_idx = *input_index
-            .get("4")
+        let tok_idx = state
+            .position("4")
             .ok_or_else(|| Error::Manifest("no tokens input '4'".into()))?;
-        let step_idx = *input_index
-            .get("5")
+        let step_idx = state
+            .position("5")
             .ok_or_else(|| Error::Manifest("no step input '5'".into()))?;
-        let seed_idx = input_index.get("6").copied();
+        let seed_idx = state.position("6");
         let feedback = feedback_map(
             ts,
             &[("3.", "0."), ("4.", "1."), ("5.", "2."), ("6.", "3.")],
@@ -152,7 +166,6 @@ impl<'a> Trainer<'a> {
         Ok(Trainer {
             bundle,
             state,
-            input_index,
             feedback,
             param_slots,
             opt_slots,
@@ -167,21 +180,28 @@ impl<'a> Trainer<'a> {
 
     /// Expected `[B, T+1]` token-window shape.
     pub fn token_shape(&self) -> &[usize] {
-        &self.bundle.program("train_step").unwrap().spec.inputs[self.tok_idx].shape
+        &self.state.slot_spec(self.tok_idx).shape
     }
 
-    /// Run one optimization step on a token window.
+    /// Run one optimization step on a token window.  Per step only the
+    /// tokens + step/seed scalars are uploaded; params, Adam moments, and
+    /// XL memories are fed back output-buffer → input-buffer on device.
     pub fn step_on(&mut self, tokens: HostTensor) -> Result<StepOutput> {
         let ts = self.bundle.program("train_step")?;
-        self.state[self.tok_idx] = tokens;
-        self.state[self.step_idx] = HostTensor::scalar_i32(self.step as i32);
+        self.state.set_host(self.tok_idx, tokens)?;
+        self.state
+            .set_host(self.step_idx, HostTensor::scalar_i32(self.step as i32))?;
         if let Some(si) = self.seed_idx {
-            self.state[si] = HostTensor::scalar_u32(self.seed);
+            self.state.set_host(si, HostTensor::scalar_u32(self.seed))?;
         }
-        let out = ts.run(&self.state)?;
-        let loss = out[0].scalar_as_f32()?;
-        let grad_norm = out[1].scalar_as_f32()?;
-        let lr = out[2].scalar_as_f32()?;
+        let out = {
+            let bufs = self.state.buffers()?;
+            ts.run_buffers(&bufs)?
+        };
+        // download only the scalars and the small "7.*" stats
+        let loss = download(&self.bundle.client, &out[0])?.scalar_as_f32()?;
+        let grad_norm = download(&self.bundle.client, &out[1])?.scalar_as_f32()?;
+        let lr = download(&self.bundle.client, &out[2])?.scalar_as_f32()?;
         if !loss.is_finite() {
             return Err(Error::other(format!(
                 "non-finite loss {loss} at step {}",
@@ -191,17 +211,18 @@ impl<'a> Trainer<'a> {
         let mut stats = BTreeMap::new();
         for (oi, ob) in ts.spec.outputs.iter().enumerate() {
             if ob.name.starts_with("7.") {
-                stats.insert(ob.name.clone(), out[oi].clone());
+                stats.insert(ob.name.clone(), download(&self.bundle.client, &out[oi])?);
             }
         }
-        // Feed new state back by *moving* the output tensors into the
-        // input slots (a clone here would memcpy every parameter +
-        // optimizer tensor each step — see EXPERIMENTS.md §Perf).
-        let mut out = out;
+        // Feed new state back by *moving* the output buffers into the
+        // input slots — zero host traffic (see EXPERIMENTS.md §Perf).
+        let mut out: Vec<Option<xla::PjRtBuffer>> =
+            out.into_iter().map(Some).collect();
         for (oi, ii) in &self.feedback {
-            self.state[*ii] =
-                std::mem::replace(&mut out[*oi], HostTensor::zeros(
-                    crate::tensor::DType::F32, &[]));
+            let buf = out[*oi]
+                .take()
+                .ok_or_else(|| Error::other("feedback output consumed twice"))?;
+            self.state.set_device(*ii, buf);
         }
         let so = StepOutput { step: self.step, loss, grad_norm, lr, stats };
         self.step += 1;
@@ -226,27 +247,36 @@ impl<'a> Trainer<'a> {
         Ok(outs)
     }
 
-    /// Current parameters as (name, tensor) pairs.
-    pub fn params(&self) -> Vec<(String, HostTensor)> {
-        self.param_slots
-            .iter()
-            .map(|(name, idx)| (name.clone(), self.state[*idx].clone()))
-            .collect()
+    /// Current parameters as (name, tensor) pairs — an explicit host-sync
+    /// boundary (downloads any slot without a valid host mirror).
+    pub fn params(&mut self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::with_capacity(self.param_slots.len());
+        for (name, idx) in &self.param_slots {
+            out.push((name.clone(), self.state.host(*idx)?.clone()));
+        }
+        Ok(out)
     }
 
-    /// Current optimizer state (m then v) as (name, tensor) pairs.
-    pub fn opt_state(&self) -> Vec<(String, HostTensor)> {
-        self.opt_slots
-            .iter()
-            .map(|(name, idx): &(String, usize)| {
-                (name.clone(), self.state[*idx].clone())
-            })
-            .collect()
+    /// Current optimizer state (m then v) as (name, tensor) pairs — an
+    /// explicit host-sync boundary like [`Trainer::params`].
+    pub fn opt_state(&mut self) -> Result<Vec<(String, HostTensor)>> {
+        let mut out = Vec::with_capacity(self.opt_slots.len());
+        for (name, idx) in &self.opt_slots {
+            out.push((name.clone(), self.state.host(*idx)?.clone()));
+        }
+        Ok(out)
+    }
+
+    /// Host↔device traffic of the underlying client so far (shared with
+    /// every program/state on this client; snapshot deltas per phase).
+    pub fn transfer_stats(&self) -> TransferSnapshot {
+        self.state.transfers()
     }
 
     /// Restore parameters / optimizer state / step counter (from a
-    /// checkpoint).  Missing names are an error; shapes are validated by
-    /// the program on the next run.
+    /// checkpoint).  Missing names are an error; shapes and dtypes are
+    /// validated eagerly against the manifest.  The restored tensors are
+    /// uploaded lazily on the next step.
     pub fn restore(
         &mut self,
         params: &[(String, HostTensor)],
@@ -255,16 +285,16 @@ impl<'a> Trainer<'a> {
     ) -> Result<()> {
         for (name, t) in params {
             let key = format!("0.{name}");
-            let idx = *self.input_index.get(&key).ok_or_else(|| {
+            let idx = self.state.position(&key).ok_or_else(|| {
                 Error::Checkpoint(format!("unknown param {name}"))
             })?;
-            self.state[idx] = t.clone();
+            self.state.set_host(idx, t.clone())?;
         }
         for (name, t) in opt {
-            let idx = *self.input_index.get(name).ok_or_else(|| {
+            let idx = self.state.position(name).ok_or_else(|| {
                 Error::Checkpoint(format!("unknown opt slot {name}"))
             })?;
-            self.state[idx] = t.clone();
+            self.state.set_host(idx, t.clone())?;
         }
         self.step = step;
         Ok(())
@@ -272,6 +302,12 @@ impl<'a> Trainer<'a> {
 
     /// Evaluate on `segments` consecutive windows from `batcher` with the
     /// long XL memory, using the *current* parameters.
+    ///
+    /// The resident training param buffers are shared with `eval_step`
+    /// directly — evaluation no longer clones the full parameter set into
+    /// fresh host inputs.  Per segment only the `[B, T+1]` token window
+    /// is uploaded; eval memories persist on device across segments and
+    /// across calls (until [`Trainer::reset_eval_memory`]).
     pub fn evaluate(
         &mut self,
         batcher: &mut XlBatcher,
@@ -279,69 +315,96 @@ impl<'a> Trainer<'a> {
     ) -> Result<EvalOutput> {
         let ev = self.bundle.program("eval_step")?;
         let spec = &ev.spec;
-        let mut inputs: Vec<HostTensor> = spec
-            .inputs
-            .iter()
-            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
-            .collect();
-        let by_name: HashMap<&str, usize> = spec
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, b)| (b.name.as_str(), i))
-            .collect();
-        // params
-        for (name, idx) in &self.param_slots {
-            let key = format!("0.{name}");
-            if let Some(&ii) = by_name.get(key.as_str()) {
-                inputs[ii] = self.state[*idx].clone();
+        let client = &self.bundle.client;
+
+        // classify inputs: shared params / persistent mems / tokens
+        let mut srcs: Vec<EvalSrc> = Vec::with_capacity(spec.inputs.len());
+        let mut mem_in: Vec<usize> = Vec::new();
+        let mut zeros: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut found_tokens = false;
+        for b in &spec.inputs {
+            if b.name.starts_with("0.") {
+                let ti = self.state.position(&b.name).ok_or_else(|| {
+                    Error::Manifest(format!(
+                        "eval_step param {} not in train_step state",
+                        b.name
+                    ))
+                })?;
+                srcs.push(EvalSrc::Param(ti));
+            } else if b.name.starts_with("1.") {
+                srcs.push(EvalSrc::Mem(mem_in.len()));
+                mem_in.push(srcs.len() - 1);
+            } else if b.name == "2" {
+                srcs.push(EvalSrc::Tokens);
+                found_tokens = true;
+            } else {
+                srcs.push(EvalSrc::Zero(zeros.len()));
+                zeros.push(upload(
+                    client,
+                    &HostTensor::zeros(b.dtype, &b.shape),
+                )?);
             }
         }
-        // persistent eval mems across segments within this call
-        let mem_slots: Vec<usize> = spec
-            .inputs
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| b.name.starts_with("1."))
-            .map(|(i, _)| i)
-            .collect();
-        if let Some(prev) = &self.eval_mems {
-            if prev.len() == mem_slots.len()
-                && prev
-                    .iter()
-                    .zip(&mem_slots)
-                    .all(|(t, &i)| t.shape == spec.inputs[i].shape)
-            {
-                for (t, &i) in prev.iter().zip(&mem_slots) {
-                    inputs[i] = t.clone();
-                }
-            }
+        if !found_tokens {
+            return Err(Error::Manifest("no eval token input".into()));
         }
-        let tok_idx = *by_name
-            .get("2")
-            .ok_or_else(|| Error::Manifest("no eval token input".into()))?;
-        let mem_feedback = feedback_map(ev, &[("2.", "1.")]);
+
+        // persistent eval mems: reuse the resident buffers, else zeros
+        let mut mems: Vec<xla::PjRtBuffer> = match self.eval_mems.take() {
+            Some(prev) if prev.len() == mem_in.len() => prev,
+            _ => mem_in
+                .iter()
+                .map(|&i| {
+                    let b = &spec.inputs[i];
+                    upload(client, &HostTensor::zeros(b.dtype, &b.shape))
+                })
+                .collect::<Result<_>>()?,
+        };
+        // "2.<mems>" outputs feed the j-th persistent mem buffer
+        let mem_feedback: Vec<(usize, usize)> = feedback_map(ev, &[("2.", "1.")])
+            .into_iter()
+            .filter_map(|(oi, ii)| {
+                mem_in.iter().position(|&m| m == ii).map(|j| (oi, j))
+            })
+            .collect();
+
+        // make sure the shared params are resident before borrowing them
+        self.state.upload_dirty()?;
 
         let mut nll_sum = 0f64;
         let mut count = 0f64;
         let mut stats: BTreeMap<String, HostTensor> = BTreeMap::new();
         for _ in 0..segments {
-            inputs[tok_idx] = batcher.next_window()?;
-            let out = ev.run(&inputs)?;
-            nll_sum += out[0].scalar_as_f32()? as f64;
-            count += out[1].scalar_as_f32()? as f64;
+            let tok = upload(client, &batcher.next_window()?)?;
+            let out = {
+                let refs: Vec<&xla::PjRtBuffer> = srcs
+                    .iter()
+                    .map(|s| match s {
+                        EvalSrc::Param(ti) => self.state.buffer(*ti),
+                        EvalSrc::Mem(j) => Ok(&mems[*j]),
+                        EvalSrc::Tokens => Ok(&tok),
+                        EvalSrc::Zero(z) => Ok(&zeros[*z]),
+                    })
+                    .collect::<Result<_>>()?;
+                ev.run_buffers(&refs)?
+            };
+            nll_sum += download(client, &out[0])?.scalar_as_f32()? as f64;
+            count += download(client, &out[1])?.scalar_as_f32()? as f64;
             for (oi, ob) in ev.spec.outputs.iter().enumerate() {
                 if ob.name.starts_with("3.") {
-                    stats.insert(ob.name.clone(), out[oi].clone());
+                    stats.insert(ob.name.clone(), download(client, &out[oi])?);
                 }
             }
-            for (oi, ii) in &mem_feedback {
-                inputs[*ii] = out[*oi].clone();
+            let mut out: Vec<Option<xla::PjRtBuffer>> =
+                out.into_iter().map(Some).collect();
+            for (oi, j) in &mem_feedback {
+                let buf = out[*oi].take().ok_or_else(|| {
+                    Error::other("eval feedback output consumed twice")
+                })?;
+                mems[*j] = buf;
             }
         }
-        self.eval_mems = Some(
-            mem_slots.iter().map(|&i| inputs[i].clone()).collect(),
-        );
+        self.eval_mems = Some(mems);
         if count == 0.0 {
             return Err(Error::other("evaluate: zero tokens"));
         }

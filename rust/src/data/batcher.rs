@@ -87,6 +87,28 @@ mod tests {
     }
 
     #[test]
+    fn window_continuity_holds_over_many_windows() {
+        // last token of window n == first token of window n+1, per row,
+        // sustained over a long horizon (the XL memory contract)
+        let mut b = mk(4, 6);
+        let t1 = 7;
+        let mut prev: Option<Vec<i32>> = None;
+        for _ in 0..12 {
+            let w = b.next_window().unwrap().as_i32().unwrap();
+            if let Some(p) = &prev {
+                for row in 0..4 {
+                    assert_eq!(
+                        p[row * t1 + t1 - 1],
+                        w[row * t1],
+                        "row {row} breaks continuity"
+                    );
+                }
+            }
+            prev = Some(w);
+        }
+    }
+
+    #[test]
     fn rows_are_independent_streams() {
         let mut b = mk(2, 32);
         let w = b.next_window().unwrap().as_i32().unwrap();

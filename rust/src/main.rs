@@ -162,13 +162,30 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     );
     metrics.flush()?;
 
+    // perf report: on-device execute vs host transfer, bytes-moved/step
+    // (the seed path moved every param/opt/mem tensor both ways per step)
+    let ts_prog = bundle.program("train_step")?;
+    let xfer = trainer.transfer_stats();
+    let n_steps = steps.max(1) as u64;
+    eprintln!(
+        "[perf] train_step exec {:.3?}/step over {} execs | client transfers \
+         (train + eval): {} | h2d {:.3?} d2h {:.3?} total",
+        ts_prog.mean_exec_time().unwrap_or_default(),
+        ts_prog.exec_count.get(),
+        xfer.report_per_step(n_steps),
+        xfer.h2d_time,
+        xfer.d2h_time,
+    );
+    eprintln!(
+        "[perf] seed host-roundtrip path would move {:.3} MB/step; untuple fallbacks: {}",
+        (ts_prog.spec.total_input_bytes() + ts_prog.spec.total_output_bytes())
+            as f64
+            / 1e6,
+        ts_prog.untuple_fallbacks.get(),
+    );
+
     if let Some(ck_path) = p.get("checkpoint") {
-        let ck = Checkpoint {
-            step: trainer.step,
-            preset: preset.to_string(),
-            params: trainer.params(),
-            opt: trainer.opt_state(),
-        };
+        let ck = Checkpoint::from_trainer(&mut trainer, preset)?;
         ck.save(ck_path)?;
         eprintln!("[train] checkpoint written to {ck_path}");
     }
@@ -264,9 +281,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .map(|r| r.run_time.as_secs_f64())
         .sum::<f64>()
         / results.len() as f64;
+    let stats = engine.stats();
     println!(
         "serve: {} requests x {} new tokens | lanes {} | wall {:.2}s | \
-         {:.1} tok/s | mean queue {:.3}s | mean run {:.3}s | occupancy {:.2}",
+         {:.1} tok/s | mean queue {:.3}s | mean run {:.3}s | \
+         occupancy {:.2} (gen-only {:.2})",
         results.len(),
         p.usize("max-new")?,
         engine.n_lanes(),
@@ -274,7 +293,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         total_new as f64 / wall,
         mean_queue,
         mean_run,
-        engine.stats()["mean_batch_occupancy"]
+        stats["mean_batch_occupancy"],
+        stats["mean_gen_occupancy"],
+    );
+    eprintln!(
+        "[perf] decode: {} over {} steps",
+        engine.transfer_stats().report_per_step(engine.steps_executed),
+        engine.steps_executed,
     );
     Ok(())
 }

@@ -1,0 +1,326 @@
+//! Device-resident state: named `PjRtBuffer` slots bound to a program's
+//! manifest input signature.
+//!
+//! The seed runtime round-tripped *every* input — parameters, Adam
+//! moments, XL memories — through host `Vec<u8>` → `xla::Literal` →
+//! device buffer and back on each `train_step` / `eval_step` /
+//! `step_fwd` call.  `DeviceState` keeps persistent state on device
+//! across steps: a host tensor is uploaded only when its slot is
+//! dirtied, program outputs are fed back buffer-to-buffer via
+//! [`DeviceState::set_device`], and a download happens only on an
+//! explicit host sync ([`DeviceState::host`] / [`DeviceState::sync_to_host`]
+//! — the checkpoint / analysis boundary).  See EXPERIMENTS.md §Perf.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+
+use super::manifest::BufferSpec;
+use super::program::Client;
+
+/// Cumulative host↔device transfer counters (interior-mutable so the
+/// shared [`Client`] can own them; snapshot with [`TransferStats::snapshot`]).
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub h2d_bytes: Cell<u64>,
+    pub d2h_bytes: Cell<u64>,
+    pub h2d_count: Cell<u64>,
+    pub d2h_count: Cell<u64>,
+    pub h2d_time: Cell<Duration>,
+    pub d2h_time: Cell<Duration>,
+}
+
+impl TransferStats {
+    pub fn note_h2d(&self, bytes: usize, elapsed: Duration) {
+        self.h2d_bytes.set(self.h2d_bytes.get() + bytes as u64);
+        self.h2d_count.set(self.h2d_count.get() + 1);
+        self.h2d_time.set(self.h2d_time.get() + elapsed);
+    }
+
+    pub fn note_d2h(&self, bytes: usize, elapsed: Duration) {
+        self.d2h_bytes.set(self.d2h_bytes.get() + bytes as u64);
+        self.d2h_count.set(self.d2h_count.get() + 1);
+        self.d2h_time.set(self.d2h_time.get() + elapsed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes.get(),
+            d2h_bytes: self.d2h_bytes.get(),
+            h2d_count: self.h2d_count.get(),
+            d2h_count: self.d2h_count.get(),
+            h2d_time: self.h2d_time.get(),
+            d2h_time: self.d2h_time.get(),
+        }
+    }
+}
+
+/// A point-in-time copy of [`TransferStats`], subtractable for
+/// per-phase deltas (benches, the `[perf]` report).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_count: u64,
+    pub d2h_count: u64,
+    pub h2d_time: Duration,
+    pub d2h_time: Duration,
+}
+
+impl TransferSnapshot {
+    /// Traffic since `earlier` (saturating; both must come from the same
+    /// counters).
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            h2d_bytes: self.h2d_bytes.saturating_sub(earlier.h2d_bytes),
+            d2h_bytes: self.d2h_bytes.saturating_sub(earlier.d2h_bytes),
+            h2d_count: self.h2d_count.saturating_sub(earlier.h2d_count),
+            d2h_count: self.d2h_count.saturating_sub(earlier.d2h_count),
+            h2d_time: self.h2d_time.saturating_sub(earlier.h2d_time),
+            d2h_time: self.d2h_time.saturating_sub(earlier.d2h_time),
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+
+    /// One-line `h2d x MB / d2h y MB` summary normalized per `steps`.
+    pub fn report_per_step(&self, steps: u64) -> String {
+        let n = steps.max(1) as f64;
+        format!(
+            "h2d {:.3} MB/step ({} xfers) | d2h {:.3} MB/step ({} xfers)",
+            self.h2d_bytes as f64 / n / 1e6,
+            self.h2d_count,
+            self.d2h_bytes as f64 / n / 1e6,
+            self.d2h_count,
+        )
+    }
+}
+
+/// Upload one host tensor to the device, counting the traffic.
+pub fn upload(client: &Client, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    let lit = t.to_literal()?;
+    let t0 = Instant::now();
+    let buf = client.raw().buffer_from_host_literal(None, &lit)?;
+    client.transfers().note_h2d(t.data.len(), t0.elapsed());
+    Ok(buf)
+}
+
+/// Download one device buffer to a host tensor, counting the traffic.
+pub fn download(client: &Client, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+    let t0 = Instant::now();
+    let lit = buf.to_literal_sync()?;
+    let t = HostTensor::from_literal(&lit)?;
+    client.transfers().note_d2h(t.data.len(), t0.elapsed());
+    Ok(t)
+}
+
+/// One named slot: the authoritative copy lives on device unless `dirty`.
+///
+/// Invariants:
+///   * `dirty` ⇒ `host` is `Some` and newer than `device`;
+///   * `!dirty` and `host` is `Some` ⇒ host mirror equals device content
+///     (programs never mutate their input buffers);
+///   * [`Slot::device`] is `None` only before the first upload.
+struct Slot {
+    spec: BufferSpec,
+    host: Option<HostTensor>,
+    device: Option<xla::PjRtBuffer>,
+    dirty: bool,
+}
+
+/// Named device-buffer slots matching a manifest input signature, in
+/// manifest order.
+pub struct DeviceState {
+    client: Client,
+    name: String,
+    slots: Vec<Slot>,
+    index: HashMap<String, usize>,
+}
+
+impl DeviceState {
+    /// One zero-initialized slot per manifest input.  Nothing is uploaded
+    /// until the first [`DeviceState::buffers`] call.
+    pub fn for_inputs(client: &Client, name: &str, inputs: &[BufferSpec]) -> Self {
+        let slots = inputs
+            .iter()
+            .map(|b| Slot {
+                spec: b.clone(),
+                host: Some(HostTensor::zeros(b.dtype, &b.shape)),
+                device: None,
+                dirty: true,
+            })
+            .collect();
+        let index = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (b.name.clone(), i))
+            .collect();
+        DeviceState { client: client.clone(), name: name.to_string(), slots, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Slot index of the input named `name`.
+    pub fn position(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn slot_spec(&self, idx: usize) -> &BufferSpec {
+        &self.slots[idx].spec
+    }
+
+    /// Replace a slot's contents from the host; uploaded lazily on the
+    /// next [`DeviceState::buffers`] call.
+    pub fn set_host(&mut self, idx: usize, t: HostTensor) -> Result<()> {
+        let slot = &mut self.slots[idx];
+        if t.shape != slot.spec.shape || t.dtype != slot.spec.dtype {
+            return Err(Error::Shape(format!(
+                "{}: slot {} ({}) expects {:?} {:?}, got {:?} {:?}",
+                self.name, idx, slot.spec.name, slot.spec.dtype,
+                slot.spec.shape, t.dtype, t.shape
+            )));
+        }
+        slot.host = Some(t);
+        slot.dirty = true;
+        Ok(())
+    }
+
+    /// Adopt a device buffer (typically a program output fed straight
+    /// back) — zero host traffic.  Any host mirror becomes stale and is
+    /// dropped; the next [`DeviceState::host`] re-downloads.
+    pub fn set_device(&mut self, idx: usize, buf: xla::PjRtBuffer) {
+        let slot = &mut self.slots[idx];
+        slot.device = Some(buf);
+        slot.host = None;
+        slot.dirty = false;
+    }
+
+    /// Upload every dirtied slot.
+    pub fn upload_dirty(&mut self) -> Result<()> {
+        for slot in self.slots.iter_mut() {
+            if slot.dirty {
+                let t = slot
+                    .host
+                    .as_ref()
+                    .ok_or_else(|| Error::other("dirty slot without host copy"))?;
+                slot.device = Some(upload(&self.client, t)?);
+                slot.dirty = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Device buffer of one slot; the slot must be clean (uploaded).
+    pub fn buffer(&self, idx: usize) -> Result<&xla::PjRtBuffer> {
+        let slot = &self.slots[idx];
+        if slot.dirty {
+            return Err(Error::other(format!(
+                "{}: slot {} ({}) is dirty — call upload_dirty first",
+                self.name, idx, slot.spec.name
+            )));
+        }
+        slot.device.as_ref().ok_or_else(|| {
+            Error::other(format!(
+                "{}: slot {} ({}) has no device buffer",
+                self.name, idx, slot.spec.name
+            ))
+        })
+    }
+
+    /// All slots as device buffers in manifest order, uploading dirty
+    /// ones first — the argument vector for `Program::run_buffers`.
+    pub fn buffers(&mut self) -> Result<Vec<&xla::PjRtBuffer>> {
+        self.upload_dirty()?;
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            out.push(slot.device.as_ref().ok_or_else(|| {
+                Error::other(format!(
+                    "{}: slot {} has no device buffer after upload",
+                    self.name, slot.spec.name
+                ))
+            })?);
+        }
+        Ok(out)
+    }
+
+    /// Host view of one slot, downloading from device only when no valid
+    /// mirror exists (the explicit host-sync boundary).
+    pub fn host(&mut self, idx: usize) -> Result<&HostTensor> {
+        if self.slots[idx].host.is_none() {
+            let buf = self.slots[idx]
+                .device
+                .as_ref()
+                .ok_or_else(|| Error::other("slot has neither host nor device copy"))?;
+            let t = download(&self.client, buf)?;
+            self.slots[idx].host = Some(t);
+        }
+        Ok(self.slots[idx].host.as_ref().unwrap())
+    }
+
+    /// Mutable host view; marks the slot dirty so the mutation is
+    /// uploaded before the next execution.
+    pub fn host_mut(&mut self, idx: usize) -> Result<&mut HostTensor> {
+        self.host(idx)?;
+        let slot = &mut self.slots[idx];
+        slot.dirty = true;
+        Ok(slot.host.as_mut().unwrap())
+    }
+
+    /// Materialize host mirrors for every slot (checkpoint boundary).
+    pub fn sync_to_host(&mut self) -> Result<()> {
+        for i in 0..self.slots.len() {
+            self.host(i)?;
+        }
+        Ok(())
+    }
+
+    /// Transfer counters of the underlying client (shared across all
+    /// states and programs on that client).
+    pub fn transfers(&self) -> TransferSnapshot {
+        self.client.transfers().snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_stats_accumulate_and_delta() {
+        let s = TransferStats::default();
+        s.note_h2d(100, Duration::from_millis(2));
+        s.note_h2d(50, Duration::from_millis(1));
+        s.note_d2h(8, Duration::from_millis(3));
+        let a = s.snapshot();
+        assert_eq!(a.h2d_bytes, 150);
+        assert_eq!(a.h2d_count, 2);
+        assert_eq!(a.d2h_bytes, 8);
+        assert_eq!(a.total_bytes(), 158);
+        s.note_h2d(25, Duration::ZERO);
+        let b = s.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.h2d_bytes, 25);
+        assert_eq!(d.h2d_count, 1);
+        assert_eq!(d.d2h_bytes, 0);
+    }
+
+    #[test]
+    fn snapshot_report_is_per_step() {
+        let s = TransferStats::default();
+        s.note_h2d(2_000_000, Duration::ZERO);
+        let snap = s.snapshot();
+        let line = snap.report_per_step(2);
+        assert!(line.contains("1.000 MB/step"), "{line}");
+    }
+}

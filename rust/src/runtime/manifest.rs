@@ -91,6 +91,16 @@ impl FunctionSpec {
             .map(|(i, _)| i)
             .collect()
     }
+
+    /// Total bytes of all inputs — what one seed-path `run` uploads.
+    pub fn total_input_bytes(&self) -> usize {
+        self.inputs.iter().map(|b| b.size_bytes()).sum()
+    }
+
+    /// Total bytes of all outputs — what one seed-path `run` downloads.
+    pub fn total_output_bytes(&self) -> usize {
+        self.outputs.iter().map(|b| b.size_bytes()).sum()
+    }
 }
 
 /// Model-configuration subset the runtime needs (full config stays in the

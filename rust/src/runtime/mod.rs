@@ -4,9 +4,11 @@
 //! `python -m compile.aot` produced at build time — Python is never on
 //! the request path.
 
+pub mod device;
 pub mod manifest;
 pub mod program;
 
+pub use device::{DeviceState, TransferSnapshot, TransferStats};
 pub use manifest::{BufferSpec, FunctionSpec, Manifest, ModelInfo};
 pub use program::{Client, Program};
 
@@ -19,6 +21,9 @@ use crate::error::Result;
 pub struct ModelBundle {
     pub manifest: Manifest,
     pub programs: BTreeMap<String, Program>,
+    /// The client everything was compiled on — device-resident state
+    /// (trainer / engine) allocates its buffers here.
+    pub client: Client,
 }
 
 impl ModelBundle {
@@ -33,7 +38,7 @@ impl ModelBundle {
                 Program::load(client, name, &path, spec.clone())?,
             );
         }
-        Ok(ModelBundle { manifest, programs })
+        Ok(ModelBundle { manifest, programs, client: client.clone() })
     }
 
     /// Load only the listed functions (e.g. just `step_fwd` for serving).
@@ -52,7 +57,7 @@ impl ModelBundle {
                 Program::load(client, name, &path, spec)?,
             );
         }
-        Ok(ModelBundle { manifest, programs })
+        Ok(ModelBundle { manifest, programs, client: client.clone() })
     }
 
     pub fn program(&self, name: &str) -> Result<&Program> {

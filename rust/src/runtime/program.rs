@@ -6,19 +6,24 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
 
+use super::device::TransferStats;
 use super::manifest::FunctionSpec;
 
-/// Shared PJRT client handle.
+/// Shared PJRT client handle plus host↔device transfer counters.
 #[derive(Clone)]
 pub struct Client {
     inner: Arc<xla::PjRtClient>,
+    transfers: Arc<TransferStats>,
 }
 
 impl Client {
     /// Create the CPU PJRT client (the only backend in this testbed; the
     /// same artifacts compile for TPU with a TPU PJRT plugin).
     pub fn cpu() -> Result<Self> {
-        Ok(Client { inner: Arc::new(xla::PjRtClient::cpu()?) })
+        Ok(Client {
+            inner: Arc::new(xla::PjRtClient::cpu()?),
+            transfers: Arc::new(TransferStats::default()),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -28,6 +33,12 @@ impl Client {
     pub fn raw(&self) -> &xla::PjRtClient {
         &self.inner
     }
+
+    /// Cumulative transfer counters for every upload/download performed
+    /// through this client (all clones share the same counters).
+    pub fn transfers(&self) -> &TransferStats {
+        &self.transfers
+    }
 }
 
 /// One compiled function plus its manifest signature.
@@ -35,9 +46,14 @@ pub struct Program {
     pub name: String,
     pub spec: FunctionSpec,
     exe: xla::PjRtLoadedExecutable,
-    /// Cumulative on-device execution time (for the perf report).
+    client: Client,
+    /// Cumulative on-device execution time (for the perf report) —
+    /// excludes host transfers since the device-resident rework.
     pub exec_time: std::cell::Cell<std::time::Duration>,
     pub exec_count: std::cell::Cell<u64>,
+    /// Times `run_buffers` had to fall back to a host round-trip to
+    /// untuple the result (0 on backends that return flat outputs).
+    pub untuple_fallbacks: std::cell::Cell<u64>,
 }
 
 impl Program {
@@ -58,40 +74,104 @@ impl Program {
             name: name.to_string(),
             spec,
             exe,
+            client: client.clone(),
             exec_time: std::cell::Cell::new(std::time::Duration::ZERO),
             exec_count: std::cell::Cell::new(0),
+            untuple_fallbacks: std::cell::Cell::new(0),
         })
     }
 
     /// Execute with host tensors; validates shapes/dtypes against the
-    /// manifest, unwraps the 1-tuple result and returns one host tensor
-    /// per manifest output, in manifest order.
+    /// manifest and returns one host tensor per manifest output, in
+    /// manifest order.
+    ///
+    /// This is the full round-trip path — every input uploaded, every
+    /// output downloaded, per call — built on [`Program::run_buffers`]
+    /// so the transfer counters attribute upload/download cost to the
+    /// transfers (not to exec time) on both paths.  Hot loops use
+    /// `run_buffers` directly and keep state device-resident.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.validate_inputs(inputs)?;
-        let literals: Vec<xla::Literal> = inputs
+        let bufs: Vec<xla::PjRtBuffer> = inputs
             .iter()
-            .map(|t| t.to_literal())
+            .map(|t| super::device::upload(&self.client, t))
             .collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let buffer = result
-            .first()
-            .and_then(|replica| replica.first())
-            .ok_or_else(|| Error::other("execute returned no buffers"))?;
-        let tuple = buffer.to_literal_sync()?;
-        self.exec_time
-            .set(self.exec_time.get() + t0.elapsed());
-        self.exec_count.set(self.exec_count.get() + 1);
-        let parts = tuple.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = self.run_buffers(&refs)?;
+        out.iter()
+            .map(|b| super::device::download(&self.client, b))
+            .collect()
+    }
+
+    /// Execute directly on device buffers and return one device buffer
+    /// per manifest output — no host transfer on this path.
+    ///
+    /// If the backend hands the result back as a single tuple buffer
+    /// instead of flat leaves, we untuple via one host round-trip and
+    /// count it in `untuple_fallbacks` so the perf report can flag the
+    /// degradation (the CPU PJRT used here returns flat leaves).
+    pub fn run_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        if inputs.len() != self.spec.inputs.len() {
             return Err(Error::Shape(format!(
-                "{}: {} outputs returned, manifest says {}",
+                "{}: {} buffers given, manifest says {}",
                 self.name,
-                parts.len(),
-                self.spec.outputs.len()
+                inputs.len(),
+                self.spec.inputs.len()
             )));
         }
-        parts.iter().map(HostTensor::from_literal).collect()
+        let t0 = Instant::now();
+        let mut result = self.exe.execute_b(inputs)?;
+        self.exec_time.set(self.exec_time.get() + t0.elapsed());
+        self.exec_count.set(self.exec_count.get() + 1);
+        if result.is_empty() {
+            return Err(Error::other("execute_b returned no replicas"));
+        }
+        let replica = result.swap_remove(0);
+        if replica.len() == self.spec.outputs.len()
+            && !(self.spec.outputs.len() == 1 && is_tuple(&replica[0]))
+        {
+            return Ok(replica);
+        }
+        if replica.len() == 1 {
+            // tuple result: download once, re-upload the leaves
+            self.untuple_fallbacks
+                .set(self.untuple_fallbacks.get() + 1);
+            let t_down = Instant::now();
+            let tuple = replica[0].to_literal_sync()?;
+            let tuple_bytes = tuple.size_bytes();
+            let parts = tuple.to_tuple()?;
+            self.client
+                .transfers()
+                .note_d2h(tuple_bytes, t_down.elapsed());
+            if parts.len() != self.spec.outputs.len() {
+                return Err(Error::Shape(format!(
+                    "{}: tuple has {} leaves, manifest says {}",
+                    self.name,
+                    parts.len(),
+                    self.spec.outputs.len()
+                )));
+            }
+            let t_up = Instant::now();
+            let bufs: Vec<xla::PjRtBuffer> = parts
+                .iter()
+                .map(|p| {
+                    Ok(self.client.raw().buffer_from_host_literal(None, p)?)
+                })
+                .collect::<Result<_>>()?;
+            self.client
+                .transfers()
+                .note_h2d(tuple_bytes, t_up.elapsed());
+            return Ok(bufs);
+        }
+        Err(Error::Shape(format!(
+            "{}: {} output buffers returned, manifest says {}",
+            self.name,
+            replica.len(),
+            self.spec.outputs.len()
+        )))
     }
 
     fn validate_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
@@ -114,9 +194,16 @@ impl Program {
         Ok(())
     }
 
-    /// Mean wall-clock execution time over all `run` calls so far.
+    /// Mean wall-clock execution time over all runs so far.
     pub fn mean_exec_time(&self) -> Option<std::time::Duration> {
         let n = self.exec_count.get();
         (n > 0).then(|| self.exec_time.get() / n as u32)
     }
+}
+
+/// Whether a result buffer is a tuple wrapper rather than a flat leaf —
+/// disambiguates a single-output program from a 1-tuple result, where
+/// the buffer count alone can't.
+fn is_tuple(buf: &xla::PjRtBuffer) -> bool {
+    matches!(buf.on_device_shape(), Ok(xla::Shape::Tuple(_)))
 }

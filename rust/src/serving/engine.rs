@@ -1,12 +1,20 @@
 //! The inference engine: continuous batching over `step_fwd`.
+//!
+//! Parameters and per-lane XL memories are device-resident
+//! ([`DeviceState`]): per `pump` only the `[B, 1]` token tensor goes
+//! host→device and only the logits come back; memory outputs are fed
+//! buffer-to-buffer into the next step.  The host touches a lane's
+//! memory only on admission, when the lane's rows are zeroed for the
+//! fresh sequence (amortized over the whole generation).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::rng::Rng;
-use crate::runtime::ModelBundle;
+use crate::runtime::device::download;
+use crate::runtime::{DeviceState, ModelBundle, TransferSnapshot};
 use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
 
@@ -42,25 +50,61 @@ struct Lane {
     done_tx: Option<mpsc::Sender<GenResult>>,
 }
 
+/// Admit queued requests into free lanes, oldest request first into the
+/// lowest-index free lane.  Returns the indices of the lanes filled this
+/// round (their XL memory must be reset by the caller).
+fn admit_fifo(
+    lanes: &mut [Option<Lane>],
+    queue: &mut VecDeque<Lane>,
+) -> Vec<usize> {
+    let mut admitted = Vec::new();
+    for (i, slot) in lanes.iter_mut().enumerate() {
+        if slot.is_none() {
+            if let Some(mut lane) = queue.pop_front() {
+                lane.admitted_at = Instant::now();
+                *slot = Some(lane);
+                admitted.push(i);
+            } else {
+                break;
+            }
+        }
+    }
+    admitted
+}
+
+/// Zero row `lane` of a `[B, ...]` tensor (one lane's slice of a
+/// batched XL-memory buffer).
+fn zero_lane_row(t: &mut HostTensor, lane: usize) {
+    let row = t.data.len() / t.shape[0];
+    let start = lane * row;
+    t.data[start..start + row].fill(0);
+}
+
 /// Continuous-batching engine: `serve_batch` lanes step together in one
 /// `step_fwd` call per token.
 pub struct Engine<'a> {
     bundle: &'a ModelBundle,
+    /// device-resident step_fwd inputs: "0.*" params, "1.*" mems, "2" toks
+    state: DeviceState,
     /// indices of the per-layer memory inputs within the input vector
     mem_slots: Vec<usize>,
     tok_idx: usize,
-    inputs: Vec<HostTensor>,
     mem_feedback: Vec<(usize, usize)>,
     lanes: Vec<Option<Lane>>,
     queue: VecDeque<Lane>,
     rng: Rng,
     pub steps_executed: u64,
+    /// sampled continuation tokens only
     pub tokens_generated: u64,
+    /// every token consumed by an active lane, prompt phase included
+    pub tokens_processed: u64,
 }
 
 impl<'a> Engine<'a> {
     /// Create an engine using the given parameters (name, tensor) pairs —
-    /// typically `Trainer::params()` or a loaded checkpoint.
+    /// typically `Trainer::params()` or a loaded checkpoint.  Parameters
+    /// are uploaded once here and stay device-resident for the engine's
+    /// lifetime.
     pub fn new(
         bundle: &'a ModelBundle,
         params: &[(String, HostTensor)],
@@ -68,20 +112,11 @@ impl<'a> Engine<'a> {
     ) -> Result<Self> {
         let fwd = bundle.program("step_fwd")?;
         let spec = &fwd.spec;
-        let by_name: HashMap<&str, usize> = spec
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, b)| (b.name.as_str(), i))
-            .collect();
-        let mut inputs: Vec<HostTensor> = spec
-            .inputs
-            .iter()
-            .map(|b| HostTensor::zeros(b.dtype, &b.shape))
-            .collect();
+        let mut state =
+            DeviceState::for_inputs(&bundle.client, "step_fwd", &spec.inputs);
         for (name, t) in params {
-            if let Some(&i) = by_name.get(format!("0.{name}").as_str()) {
-                inputs[i] = t.clone();
+            if let Some(i) = state.position(&format!("0.{name}")) {
+                state.set_host(i, t.clone())?;
             }
         }
         let mem_slots: Vec<usize> = spec
@@ -91,10 +126,10 @@ impl<'a> Engine<'a> {
             .filter(|(_, b)| b.name.starts_with("1."))
             .map(|(i, _)| i)
             .collect();
-        let tok_idx = *by_name
-            .get("2")
+        let tok_idx = state
+            .position("2")
             .ok_or_else(|| Error::Manifest("step_fwd: no token input".into()))?;
-        if spec.inputs[tok_idx].dtype != DType::I32 {
+        if state.slot_spec(tok_idx).dtype != DType::I32 {
             return Err(Error::Manifest("token input must be i32".into()));
         }
         // outputs: "0" logits, "1.<mems>" -> feed back into "1.<mems>"
@@ -105,22 +140,23 @@ impl<'a> Engine<'a> {
             .filter_map(|(oi, ob)| {
                 ob.name
                     .strip_prefix("1.")
-                    .and_then(|rest| by_name.get(format!("1.{rest}").as_str()))
-                    .map(|&ii| (oi, ii))
+                    .and_then(|rest| state.position(&format!("1.{rest}")))
+                    .map(|ii| (oi, ii))
             })
             .collect();
-        let n_lanes = spec.inputs[tok_idx].shape[0];
+        let n_lanes = state.slot_spec(tok_idx).shape[0];
         Ok(Engine {
             bundle,
+            state,
             mem_slots,
             tok_idx,
-            inputs,
             mem_feedback,
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
             rng: Rng::new(seed),
             steps_executed: 0,
             tokens_generated: 0,
+            tokens_processed: 0,
         })
     }
 
@@ -146,29 +182,24 @@ impl<'a> Engine<'a> {
         rx
     }
 
-    /// Zero lane `b`'s XL memory (fresh sequence).
-    fn reset_lane_memory(&mut self, lane: usize) {
+    /// Zero lane `lane`'s XL memory (fresh sequence).  This dirties the
+    /// memory slots' host mirrors; the re-upload (and, after a first
+    /// generation, one download to materialize the mirror) happens once
+    /// per admission, not per token.
+    fn reset_lane_memory(&mut self, lane: usize) -> Result<()> {
         for &slot in &self.mem_slots {
-            let t = &mut self.inputs[slot];
-            // shape [B, M, D]; zero row `lane`
-            let row = t.data.len() / t.shape[0];
-            let start = lane * row;
-            t.data[start..start + row].fill(0);
+            let t = self.state.host_mut(slot)?;
+            zero_lane_row(t, lane);
         }
+        Ok(())
     }
 
-    fn admit(&mut self) {
-        for lane_idx in 0..self.lanes.len() {
-            if self.lanes[lane_idx].is_none() {
-                if let Some(mut lane) = self.queue.pop_front() {
-                    lane.admitted_at = Instant::now();
-                    self.reset_lane_memory(lane_idx);
-                    self.lanes[lane_idx] = Some(lane);
-                } else {
-                    break;
-                }
-            }
+    fn admit(&mut self) -> Result<()> {
+        let admitted = admit_fifo(&mut self.lanes, &mut self.queue);
+        for lane_idx in admitted {
+            self.reset_lane_memory(lane_idx)?;
         }
+        Ok(())
     }
 
     fn active(&self) -> usize {
@@ -178,8 +209,9 @@ impl<'a> Engine<'a> {
     /// Run one engine iteration (admit + one step_fwd over all lanes).
     /// Returns the number of still-active lanes.
     pub fn pump(&mut self) -> Result<usize> {
-        self.admit();
-        if self.active() == 0 {
+        self.admit()?;
+        let n_active = self.active();
+        if n_active == 0 {
             return Ok(0);
         }
         let fwd = self.bundle.program("step_fwd")?;
@@ -199,14 +231,24 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        self.inputs[self.tok_idx] =
-            HostTensor::from_i32(&[b, 1], &toks)?;
-        let out = fwd.run(&self.inputs)?;
+        self.state
+            .set_host(self.tok_idx, HostTensor::from_i32(&[b, 1], &toks)?)?;
+        let out = {
+            let bufs = self.state.buffers()?;
+            fwd.run_buffers(&bufs)?
+        };
         self.steps_executed += 1;
-        let logits = out[0].as_f32()?;
+        self.tokens_processed += n_active as u64;
+        // only the logits cross back to the host
+        let logits = download(&self.bundle.client, &out[0])?.as_f32()?;
         let vocab = fwd.spec.outputs[0].shape[1];
+        let mut out: Vec<Option<xla::PjRtBuffer>> =
+            out.into_iter().map(Some).collect();
         for (oi, ii) in &self.mem_feedback {
-            self.inputs[*ii] = out[*oi].clone();
+            let buf = out[*oi]
+                .take()
+                .ok_or_else(|| Error::other("mem output consumed twice"))?;
+            self.state.set_device(*ii, buf);
         }
         for i in 0..b {
             let mut finished = false;
@@ -253,19 +295,107 @@ impl<'a> Engine<'a> {
         Ok(out)
     }
 
+    /// Host↔device traffic of the underlying client so far.
+    pub fn transfer_stats(&self) -> TransferSnapshot {
+        self.state.transfers()
+    }
+
     /// Throughput summary over the engine's lifetime.
+    ///
+    /// `mean_batch_occupancy` counts every token an active lane consumed
+    /// per step — prompt phase included (the seed divided *generated*
+    /// tokens by steps, understating occupancy during prefill; that
+    /// metric survives as `mean_gen_occupancy`).
     pub fn stats(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
-        m.insert("steps_executed".into(), self.steps_executed as f64);
+        let steps = self.steps_executed as f64;
+        m.insert("steps_executed".into(), steps);
         m.insert("tokens_generated".into(), self.tokens_generated as f64);
+        m.insert("tokens_processed".into(), self.tokens_processed as f64);
         m.insert(
             "mean_batch_occupancy".into(),
             if self.steps_executed > 0 {
-                self.tokens_generated as f64 / self.steps_executed as f64
+                self.tokens_processed as f64 / steps
+            } else {
+                0.0
+            },
+        );
+        m.insert(
+            "mean_gen_occupancy".into(),
+            if self.steps_executed > 0 {
+                self.tokens_generated as f64 / steps
             } else {
                 0.0
             },
         );
         m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_lane(tag: i32) -> Lane {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        Lane {
+            pending: VecDeque::from(vec![tag]),
+            generated: Vec::new(),
+            budget: 1,
+            sampler: Sampler::greedy(),
+            request: GenRequest {
+                prompt: vec![tag],
+                max_new_tokens: 1,
+                sampler: Sampler::greedy(),
+            },
+            queued_at: now,
+            admitted_at: now,
+            done_tx: Some(tx),
+        }
+    }
+
+    fn tag_of(lane: &Option<Lane>) -> i32 {
+        lane.as_ref().unwrap().request.prompt[0]
+    }
+
+    #[test]
+    fn admit_is_fifo_into_lowest_free_lanes() {
+        let mut lanes: Vec<Option<Lane>> = (0..3).map(|_| None).collect();
+        let mut queue: VecDeque<Lane> =
+            (0..5).map(|i| mk_lane(i as i32)).collect();
+        let admitted = admit_fifo(&mut lanes, &mut queue);
+        assert_eq!(admitted, vec![0, 1, 2]);
+        assert_eq!(queue.len(), 2);
+        // oldest request landed in the lowest lane
+        for (i, lane) in lanes.iter().enumerate() {
+            assert_eq!(tag_of(lane), i as i32);
+        }
+        // free lane 1; the next queued request (tag 3) must take it
+        lanes[1] = None;
+        let admitted = admit_fifo(&mut lanes, &mut queue);
+        assert_eq!(admitted, vec![1]);
+        assert_eq!(tag_of(&lanes[1]), 3);
+        assert_eq!(queue.front().unwrap().request.prompt[0], 4);
+    }
+
+    #[test]
+    fn admit_with_empty_queue_is_noop() {
+        let mut lanes: Vec<Option<Lane>> = (0..2).map(|_| None).collect();
+        let mut queue: VecDeque<Lane> = VecDeque::new();
+        assert!(admit_fifo(&mut lanes, &mut queue).is_empty());
+        assert!(lanes.iter().all(|l| l.is_none()));
+    }
+
+    #[test]
+    fn zero_lane_row_zeroes_only_that_row() {
+        // [3, 2, 2] memory filled with ones; zero lane 1
+        let mut t =
+            HostTensor::from_f32(&[3, 2, 2], &[1.0f32; 12]).unwrap();
+        zero_lane_row(&mut t, 1);
+        let vals = t.as_f32().unwrap();
+        assert_eq!(&vals[0..4], &[1.0; 4]);
+        assert_eq!(&vals[4..8], &[0.0; 4]);
+        assert_eq!(&vals[8..12], &[1.0; 4]);
     }
 }

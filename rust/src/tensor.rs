@@ -71,11 +71,7 @@ impl HostTensor {
     }
 
     pub fn from_u32(shape: &[usize], vals: &[u32]) -> Result<Self> {
-        Self::from_bytes(
-            DType::U32,
-            shape,
-            vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
-        )
+        Self::from_bytes(DType::U32, shape, bytes_of_u32(vals))
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -159,24 +155,26 @@ impl HostTensor {
                 )))
             }
         };
-        let mut data = vec![0u8; lit.size_bytes()];
-        match dtype {
+        // one typed staging buffer + one LE conversion pass (no zeroed
+        // byte vector that the conversion would immediately overwrite)
+        let n = lit.element_count();
+        let data = match dtype {
             DType::F32 => {
-                let mut tmp = vec![0f32; lit.element_count()];
+                let mut tmp = vec![0f32; n];
                 lit.copy_raw_to(&mut tmp)?;
-                data = bytes_of_f32(&tmp);
+                bytes_of_f32(&tmp)
             }
             DType::I32 => {
-                let mut tmp = vec![0i32; lit.element_count()];
+                let mut tmp = vec![0i32; n];
                 lit.copy_raw_to(&mut tmp)?;
-                data = bytes_of_i32(&tmp);
+                bytes_of_i32(&tmp)
             }
             DType::U32 => {
-                let mut tmp = vec![0u32; lit.element_count()];
+                let mut tmp = vec![0u32; n];
                 lit.copy_raw_to(&mut tmp)?;
-                data = tmp.iter().flat_map(|v| v.to_le_bytes()).collect();
+                bytes_of_u32(&tmp)
             }
-        }
+        };
         Ok(HostTensor { dtype, shape: dims, data })
     }
 }
@@ -186,6 +184,10 @@ fn bytes_of_f32(vals: &[f32]) -> Vec<u8> {
 }
 
 fn bytes_of_i32(vals: &[i32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+fn bytes_of_u32(vals: &[u32]) -> Vec<u8> {
     vals.iter().flat_map(|v| v.to_le_bytes()).collect()
 }
 

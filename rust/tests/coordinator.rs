@@ -66,14 +66,10 @@ fn checkpoint_roundtrip_preserves_eval() {
     let dir = std::env::temp_dir().join("sigma_moe_it");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("it.ckpt");
-    Checkpoint {
-        step: trainer.step,
-        preset: "tiny-moe".into(),
-        params: trainer.params(),
-        opt: trainer.opt_state(),
-    }
-    .save(&path)
-    .unwrap();
+    Checkpoint::from_trainer(&mut trainer, "tiny-moe")
+        .unwrap()
+        .save(&path)
+        .unwrap();
 
     // evaluate original
     let mut eb = data::batcher_for(
@@ -149,6 +145,86 @@ fn engine_generates_and_batches() {
     let pair = engine.run_to_completion(vec![rx_a, rx_b]).unwrap();
     assert_eq!(pair[0].tokens, pair[1].tokens,
                "greedy generation not deterministic across lanes");
+}
+
+#[test]
+fn engine_admission_is_fifo_and_resets_lane_memory() {
+    let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
+    let init = bundle.program("init").unwrap();
+    let out = init
+        .run(&[sigma_moe::tensor::HostTensor::scalar_u32(2)])
+        .unwrap();
+    let params: Vec<(String, sigma_moe::tensor::HostTensor)> = init
+        .spec
+        .outputs
+        .iter()
+        .map(|b| b.name.clone())
+        .zip(out)
+        .collect();
+    let mut engine = Engine::new(&bundle, &params, 11).expect("engine");
+    let n_lanes = engine.n_lanes();
+
+    // 1) FIFO admission: oversubscribe with identical prompt/budget
+    // shapes. The first `n_lanes` submissions are admitted on the first
+    // pump; every later submission must wait at least one full
+    // generation, so its queue time strictly dominates the first wave's.
+    let n_req = n_lanes * 2;
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        rxs.push(engine.submit(GenRequest {
+            prompt: vec![1 + i as i32, 2, 3],
+            max_new_tokens: 4,
+            sampler: Sampler::greedy(),
+        }));
+    }
+    let waves = engine.run_to_completion(rxs).unwrap();
+    let max_first_wave = waves[..n_lanes]
+        .iter()
+        .map(|r| r.queue_time)
+        .max()
+        .unwrap();
+    for (i, r) in waves[n_lanes..].iter().enumerate() {
+        assert!(
+            r.queue_time >= max_first_wave,
+            "request {} (second wave) queued {:?} < first wave max {:?} — \
+             admission not FIFO",
+            n_lanes + i,
+            r.queue_time,
+            max_first_wave
+        );
+    }
+
+    // reference generation on a quiet engine for the memory-reset check
+    let reference = engine.submit(GenRequest {
+        prompt: vec![5, 6, 7],
+        max_new_tokens: 6,
+        sampler: Sampler::greedy(),
+    });
+    let first_wave = engine.run_to_completion(vec![reference]).unwrap();
+
+    // 2) Lane-memory reset on admit: the same greedy request run again —
+    // after other traffic polluted every lane's XL memory — must generate
+    // the identical continuation, which only holds if its lane's memory
+    // was zeroed on admission.
+    let mut noise = Vec::new();
+    for i in 0..n_lanes * 2 {
+        noise.push(engine.submit(GenRequest {
+            prompt: vec![9 + i as i32, 1, 4],
+            max_new_tokens: 5,
+            sampler: Sampler::greedy(),
+        }));
+    }
+    engine.run_to_completion(noise).unwrap();
+    let again = engine.submit(GenRequest {
+        prompt: vec![5, 6, 7],
+        max_new_tokens: 6,
+        sampler: Sampler::greedy(),
+    });
+    let second = engine.run_to_completion(vec![again]).unwrap();
+    assert_eq!(
+        first_wave[0].tokens, second[0].tokens,
+        "greedy generation changed after lane reuse — lane memory not reset"
+    );
 }
 
 #[test]

@@ -1,14 +1,22 @@
-//! Serving example: briefly train the tiny σ-MoE, then serve a wave of
-//! generation requests through the continuous-batching engine and report
-//! per-request latency and aggregate throughput (a serving-paper-style
-//! readout over the AOT `step_fwd` executable).
+//! Serving example: briefly train the tiny σ-MoE, serve a wave of
+//! generation requests through the continuous-batching engine in
+//! process, then stand the HTTP frontend up on an ephemeral port and
+//! drive it with streaming and non-streaming `/v1/completions` calls
+//! (a serving-paper-style readout over the AOT `step_fwd` executable).
 //!
 //!     make artifacts && cargo run --release --example serve_lm
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
 use sigma_moe::coordinator::Trainer;
 use sigma_moe::data;
-use sigma_moe::runtime::{Client, ModelBundle};
-use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::json::{self, Json};
+use sigma_moe::runtime::{Client, Manifest, ModelBundle};
+use sigma_moe::serving::{
+    loadgen, server, Engine, GenRequest, Sampler, ServerConfig,
+};
 use sigma_moe::Result;
 
 fn main() -> Result<()> {
@@ -83,5 +91,70 @@ fn main() -> Result<()> {
         "\nsample generation: prompt {:?} -> {:?}",
         &r0.prompt, &r0.tokens
     );
+
+    // === the HTTP frontend over the same trained parameters ===
+    // The PJRT client/bundle/engine are not Send, so the driver thread
+    // rebuilds them from the (Send) parameter tensors; the accept loop
+    // and this demo client run on other threads.
+    let vocab = m.model.vocab_size;
+    let params = trainer.params()?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    println!("\n== HTTP frontend demo (http://{addr}) ==");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server_shutdown = shutdown.clone();
+    let server_dir = dir.clone();
+    let server_thread = std::thread::spawn(move || {
+        let cfg = ServerConfig { vocab: Some(vocab), ..Default::default() };
+        server::serve(listener, cfg, server_shutdown, move |driver| {
+            let client = Client::cpu()?;
+            let manifest = Manifest::load(&server_dir)?;
+            let mut names = vec!["step_fwd"];
+            if manifest.functions.contains_key("reset_lanes") {
+                names.push("reset_lanes");
+            }
+            let bundle =
+                ModelBundle::load_subset(&client, &server_dir, &names)?;
+            let mut engine = Engine::new(&bundle, &params, 99)?;
+            driver.drive(&mut engine)
+        })
+    });
+
+    let mut corpus = data::by_name("wikitext", vocab, 31)?;
+    for stream in [false, true] {
+        let prompt: Vec<Json> = corpus
+            .take_vec(6)
+            .iter()
+            .map(|&t| json::num(t as f64))
+            .collect();
+        let body = json::obj(vec![
+            ("prompt", json::arr(prompt)),
+            ("max_tokens", json::num(10.0)),
+            ("temperature", json::num(0.9)),
+            ("top_k", json::num(40.0)),
+            ("stream", Json::Bool(stream)),
+        ]);
+        let out =
+            loadgen::send_completion(&addr, &body, Duration::from_secs(120))?;
+        println!(
+            "POST /v1/completions stream={stream}: status {} | {} tokens | \
+             latency {:.1} ms | ttft {}",
+            out.status,
+            out.tokens,
+            out.latency.as_secs_f64() * 1e3,
+            out.ttft
+                .map(|t| format!("{:.1} ms", t.as_secs_f64() * 1e3))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    let metrics = loadgen::fetch_metrics(&addr)?;
+    println!(
+        "GET /metrics: scheduler {}",
+        metrics.get("scheduler")?.to_string_compact()
+    );
+    shutdown.store(true, Ordering::SeqCst);
+    server_thread
+        .join()
+        .map_err(|_| sigma_moe::Error::Serving("server panicked".into()))??;
     Ok(())
 }

@@ -13,6 +13,7 @@ Per preset this writes::
     artifacts/<preset>/train_step.hlo.txt
     artifacts/<preset>/eval_step.hlo.txt
     artifacts/<preset>/step_fwd.hlo.txt
+    artifacts/<preset>/reset_lanes.hlo.txt
     artifacts/<preset>/manifest.json
 
 manifest.json describes every function's flattened input/output buffers
@@ -135,6 +136,8 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
         "train_step": api.make_train_step(cfg, tcfg),
         "eval_step": api.make_eval_step(cfg, eval_mem_len),
         "step_fwd": api.make_step_fwd(cfg, cfg.mem_len),
+        # on-device per-lane memory zeroing for serving admission
+        "reset_lanes": api.make_reset_lanes(cfg),
     }
     manifest: Dict[str, Any] = {
         "preset": name,

@@ -1,12 +1,13 @@
 """Top-level pure functions that get AOT-lowered to HLO artifacts.
 
-Four entry points per model configuration:
+Five entry points per model configuration:
 
-* ``init``       (seed)                          -> params
-* ``train_step`` (params, m, v, mems, tokens, step, seed)
-                 -> (loss, gnorm, lr, params', m', v', mems', stats)
-* ``eval_step``  (params, mems, tokens)          -> (loss_sum, n, mems', stats)
-* ``step_fwd``   (params, mems, tokens)          -> (logits_last, mems')
+* ``init``        (seed)                          -> params
+* ``train_step``  (params, m, v, mems, tokens, step, seed)
+                  -> (loss, gnorm, lr, params', m', v', mems', stats)
+* ``eval_step``   (params, mems, tokens)          -> (loss_sum, n, mems', stats)
+* ``step_fwd``    (params, mems, tokens)          -> (logits_last, mems')
+* ``reset_lanes`` (mems, keep)                    -> mems'  (lane-masked)
 
 All inputs/outputs are pytrees; jax.jit flattens them in deterministic
 pytree order, which aot.py records (names, shapes, dtypes) in
@@ -108,6 +109,27 @@ def make_step_fwd(cfg: ModelConfig, mem_len: int):
     return step_fwd
 
 
+def make_reset_lanes(cfg: ModelConfig):
+    """Per-lane XL-memory reset for continuous-batching admission.
+
+    ``keep`` is a ``[B]`` float mask: 1.0 preserves a lane's memory rows,
+    0.0 zeroes them (fresh sequence).  Runs entirely on device so the
+    serving engine never round-trips the ``[B, M, D]`` memory slots
+    through the host when a lane is recycled (EMNLP repro
+    EXPERIMENTS.md §Perf, formerly a known limitation).
+
+    ``where`` rather than multiplication: a lane whose memory picked up
+    NaN/Inf must come back as literal zeros (NaN * 0 is NaN), matching
+    the host fallback's zero-fill exactly.
+    """
+
+    def reset_lanes(mems, keep):
+        mask = keep[:, None, None] > 0
+        return [jnp.where(mask, m, 0.0) for m in mems]
+
+    return reset_lanes
+
+
 def example_args(cfg: ModelConfig, tcfg: TrainConfig,
                  eval_mem_len: int, serve_batch: int = 1):
     """Concrete example arguments (real arrays — also used to seed the
@@ -122,9 +144,11 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
     emems = _zero_mems(cfg, b, eval_mem_len)
     smems = _zero_mems(cfg, serve_batch, mem_len=cfg.mem_len)
     stok = jnp.zeros((serve_batch, 1), jnp.int32)
+    keep = jnp.ones((serve_batch,), jnp.float32)
     return {
         "init": (seed,),
         "train_step": (params, m, v, mems, tokens, step, seed),
         "eval_step": (params, emems, tokens),
         "step_fwd": (params, smems, stok),
+        "reset_lanes": (smems, keep),
     }

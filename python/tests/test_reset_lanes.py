@@ -1,0 +1,68 @@
+"""The AOT'd per-lane memory reset: masking semantics + the flattened
+buffer-name contract the Rust serving engine addresses slots by."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, api
+from compile.configs import MoEConfig, ModelConfig
+
+
+def tiny_cfg():
+    return ModelConfig(
+        name="t-moe", vocab_size=64, d_model=16, d_ff=32, n_layers=3,
+        n_heads=2, head_dim=8, context=8, mem_len=8, ff_variant="moe",
+        moe=MoEConfig(n_experts=4, group_size=8, k=2))
+
+
+def test_reset_lanes_zeroes_only_masked_lanes():
+    cfg = tiny_cfg()
+    b, m = 4, cfg.mem_len
+    rng = jax.random.PRNGKey(0)
+    mems = [jax.random.normal(jax.random.fold_in(rng, i),
+                              (b, m, cfg.d_model))
+            for i in range(cfg.n_layers)]
+    keep = jnp.asarray([1.0, 0.0, 1.0, 0.0], jnp.float32)
+    out = api.make_reset_lanes(cfg)(mems, keep)
+    assert len(out) == cfg.n_layers
+    for before, after in zip(mems, out):
+        np.testing.assert_allclose(after[0], before[0])
+        np.testing.assert_allclose(after[2], before[2])
+        assert np.all(np.asarray(after[1]) == 0.0)
+        assert np.all(np.asarray(after[3]) == 0.0)
+
+
+def test_reset_lanes_clears_nan_poisoned_lane():
+    """A diverged lane (NaN/Inf memory) must come back as literal
+    zeros, exactly like the Rust host fallback's zero-fill — a
+    multiplicative mask would propagate NaN * 0 = NaN."""
+    cfg = tiny_cfg()
+    mems = [jnp.full((2, cfg.mem_len, cfg.d_model), jnp.nan)
+            for _ in range(cfg.n_layers)]
+    keep = jnp.asarray([0.0, 1.0], jnp.float32)
+    out = api.make_reset_lanes(cfg)(mems, keep)
+    for after in out:
+        assert np.all(np.asarray(after[0]) == 0.0)
+        assert np.all(np.isnan(np.asarray(after[1])))
+
+
+def test_reset_lanes_manifest_names_match_engine_contract():
+    """The Rust engine maps reset input ``0.<layer>`` onto step_fwd's
+    memory input ``1.<layer>`` and feeds output ``<layer>`` back; the
+    flattened names/shapes must follow that convention exactly."""
+    cfg = tiny_cfg()
+    serve_batch = 2
+    smems = [jnp.zeros((serve_batch, cfg.mem_len, cfg.d_model), jnp.float32)
+             for _ in range(cfg.n_layers)]
+    keep = jnp.ones((serve_batch,), jnp.float32)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_reset_lanes(cfg), (smems, keep))
+    in_names = [b["name"] for b in in_spec]
+    assert in_names == [f"0.{i}" for i in range(cfg.n_layers)] + ["1"]
+    assert in_spec[-1]["shape"] == [serve_batch]
+    assert in_spec[-1]["dtype"] == "float32"
+    out_names = [b["name"] for b in out_spec]
+    assert out_names == [str(i) for i in range(cfg.n_layers)]
+    for b in out_spec:
+        assert b["shape"] == [serve_batch, cfg.mem_len, cfg.d_model]

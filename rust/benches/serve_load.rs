@@ -1,0 +1,122 @@
+//! Serving-stack overhead benchmark — artifact-free by design.
+//!
+//! Measures the non-device layers the HTTP frontend adds in front of
+//! `step_fwd`: scheduler enqueue/take throughput per policy, HTTP
+//! request parsing, chunk framing, and an end-to-end open-loop run of
+//! the full client/server/scheduler stack over the mock engine.  The
+//! end-to-end row lands in BENCH_serve_frontend.json (schema
+//! sigma-moe/serve/v1, mode "mock-bench") — a *separate* file from
+//! BENCH_serve.json so this bench can never clobber the real-engine
+//! rows `sigma-moe loadgen` writes there against `serve --http`.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use sigma_moe::bench_util::{bench, write_bench_json};
+use sigma_moe::serving::loadgen::{self, LoadgenCfg};
+use sigma_moe::serving::server::{parse_completion, read_request, ServerConfig};
+use sigma_moe::serving::{GenRequest, Policy, Sampler, Scheduler};
+
+fn bench_scheduler() {
+    for policy in [Policy::Fifo, Policy::ShortestPrompt, Policy::Deadline] {
+        let sched = Scheduler::new(1 << 14, policy);
+        let req = GenRequest {
+            prompt: vec![1; 16],
+            max_new_tokens: 32,
+            sampler: Sampler::greedy(),
+        };
+        let n = 1024;
+        let s = bench(
+            &format!("scheduler::enqueue+take x{n} ({})", policy.as_str()),
+            2,
+            20,
+            || {
+                let (tx, _rx) = mpsc::channel();
+                for _ in 0..n {
+                    sched
+                        .enqueue(
+                            req.clone(),
+                            Some(Duration::from_secs(60)),
+                            tx.clone(),
+                        )
+                        .unwrap();
+                }
+                let now = Instant::now();
+                while sched.take_next(now).is_some() {}
+            },
+        );
+        println!(
+            "{}   {:>8.2} Kreq/s",
+            s.report(),
+            n as f64 / s.mean.as_secs_f64() / 1e3
+        );
+    }
+}
+
+fn bench_http_parse() {
+    let body = r#"{"prompt": [1,2,3,4,5,6,7,8], "max_tokens": 32,
+                   "temperature": 0.8, "top_k": 50, "stream": true}"#;
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: bench\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let cfg = ServerConfig::default();
+    let n = 1024;
+    let s = bench(&format!("http::read+parse x{n}"), 2, 30, || {
+        for _ in 0..n {
+            let req = read_request(&mut std::io::Cursor::new(raw.as_bytes()))
+                .unwrap()
+                .unwrap();
+            let parsed = parse_completion(&req.body, &cfg).unwrap();
+            assert_eq!(parsed.gen.prompt.len(), 8);
+        }
+    });
+    println!(
+        "{}   {:>8.2} Kreq/s",
+        s.report(),
+        n as f64 / s.mean.as_secs_f64() / 1e3
+    );
+}
+
+fn bench_end_to_end() -> sigma_moe::json::Json {
+    let cfg = LoadgenCfg {
+        requests: 128,
+        rps: 400.0,
+        prompt_len: (4, 12),
+        max_new: (4, 16),
+        vocab: 256,
+        stream_fraction: 0.5,
+        seed: 7,
+        timeout: Duration::from_secs(60),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut row = loadgen::dry_run(&cfg, 8).expect("dry run");
+    if let sigma_moe::json::Json::Obj(m) = &mut row {
+        m.insert(
+            "mode".into(),
+            sigma_moe::json::s("mock-bench"),
+        );
+    }
+    println!(
+        "end-to-end mock serve: 128 reqs in {:.2}s -> {}",
+        t0.elapsed().as_secs_f64(),
+        row.get("tokens_per_sec")
+            .map(|v| format!("{v} tok/s"))
+            .unwrap_or_default(),
+    );
+    row
+}
+
+fn main() {
+    println!("== serving frontend overhead (no device) ==");
+    bench_scheduler();
+    bench_http_parse();
+    let row = bench_end_to_end();
+    let out =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_frontend.json");
+    write_bench_json(out, "sigma-moe/serve/v1", vec![row])
+        .expect("write BENCH_serve_frontend.json");
+    println!("wrote {out}");
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Pin the `xla` git dependency to the current upstream rev and generate
+# Cargo.lock, making the build reproducible (ROADMAP open item).  Needs
+# network access — the offline build containers cannot resolve a rev,
+# which is why the pin is scripted instead of hard-coded.
+#
+#   cd rust && scripts/pin-xla.sh
+#   git add Cargo.toml Cargo.lock && git commit -m "Pin xla rev"
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+REPO_URL="https://github.com/LaurentMazare/xla-rs"
+
+REV=$(git ls-remote "$REPO_URL" HEAD | cut -f1)
+if [ -z "$REV" ]; then
+    echo "error: could not resolve $REPO_URL HEAD (no network?)" >&2
+    exit 1
+fi
+echo "resolved $REPO_URL @ $REV"
+
+if grep -q 'branch = "main"' Cargo.toml; then
+    sed -i.bak \
+        "s|xla-rs\", branch = \"main\"|xla-rs\", rev = \"$REV\"|" \
+        Cargo.toml
+    rm -f Cargo.toml.bak
+    echo "Cargo.toml: pinned xla to rev $REV"
+else
+    echo "Cargo.toml: already pinned (no branch = \"main\" line); leaving as is"
+fi
+
+cargo generate-lockfile
+echo "Cargo.lock generated — commit Cargo.toml and Cargo.lock"

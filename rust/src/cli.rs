@@ -179,6 +179,38 @@ impl Parsed {
     pub fn flag(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Typed accessor for an option that may legitimately be unset
+    /// (declared with [`Args::optional`]): `Ok(None)` when absent,
+    /// `Err` when present but unparsable.
+    fn opt_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        what: &str,
+    ) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .map(|s| {
+                s.parse().map_err(|e| {
+                    Error::Config(format!("--{name}: not {what}: {e}"))
+                })
+            })
+            .transpose()
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.opt_parsed(name, "an integer")
+    }
+
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.opt_parsed(name, "an integer")
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.opt_parsed(name, "a float")
+    }
 }
 
 #[cfg(test)]
@@ -238,5 +270,23 @@ mod tests {
     fn missing_value_is_error() {
         let r = Args::new("t").opt("a", "1", "a").parse_from(&argv(&["--a"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn optional_typed_accessors() {
+        let p = Args::new("t")
+            .optional("n", "n")
+            .optional("x", "x")
+            .optional("m", "m")
+            .parse_from(&argv(&["--n", "5", "--x", "2.5"]))
+            .unwrap();
+        assert_eq!(p.opt_usize("n").unwrap(), Some(5));
+        assert_eq!(p.opt_f64("x").unwrap(), Some(2.5));
+        assert_eq!(p.opt_u64("m").unwrap(), None);
+        let bad = Args::new("t")
+            .optional("n", "n")
+            .parse_from(&argv(&["--n", "five"]))
+            .unwrap();
+        assert!(bad.opt_usize("n").is_err());
     }
 }

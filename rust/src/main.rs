@@ -1,20 +1,32 @@
-//! sigma-moe launcher: train / eval / serve / analyze / paper-table
-//! drivers over AOT-compiled artifacts.
+//! sigma-moe launcher: train / eval / serve / loadgen / analyze /
+//! paper-table drivers over AOT-compiled artifacts.
 //!
 //! Examples:
 //!   sigma-moe train --preset tiny-moe --steps 300 --corpus wikitext
 //!   sigma-moe eval  --preset tiny-moe --checkpoint ck.smoe --segments 20
 //!   sigma-moe serve --preset tiny-moe --requests 16 --max-new 32
+//!   sigma-moe serve --preset tiny-moe --http 127.0.0.1:8077 --policy spf
+//!   sigma-moe loadgen --addr 127.0.0.1:8077 --requests 64 --rps 16
+//!   sigma-moe loadgen --dry-run --requests 32
 //!   sigma-moe flops --table 7
 //!   sigma-moe paper --table 3 --steps 300
 //!   sigma-moe analyze --preset tiny-moe --fig 3
 
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
 use sigma_moe::analysis::ExpertStats;
-use sigma_moe::cli::Args;
+use sigma_moe::bench_util;
+use sigma_moe::cli::{Args, Parsed};
 use sigma_moe::coordinator::{Checkpoint, Metrics, Trainer};
 use sigma_moe::data;
-use sigma_moe::runtime::{Client, ModelBundle};
-use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::json::Json;
+use sigma_moe::runtime::{Client, Manifest, ModelBundle};
+use sigma_moe::serving::{
+    loadgen, server, Engine, GenRequest, Policy, Sampler, ServerConfig,
+};
+use sigma_moe::tensor::HostTensor;
 use sigma_moe::{flops, Error, Result};
 
 fn main() {
@@ -42,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "flops" => cmd_flops(rest),
         "analyze" => cmd_analyze(rest),
         "paper" => cmd_paper(rest),
@@ -52,7 +65,10 @@ fn run(argv: &[String]) -> Result<()> {
                  commands:\n\
                  \x20 train    train a preset on a synthetic corpus\n\
                  \x20 eval     evaluate a checkpoint (ppl / bpc)\n\
-                 \x20 serve    batched-inference demo with latency stats\n\
+                 \x20 serve    batched inference: in-process demo, or --http for the\n\
+                 \x20          continuous-batching HTTP frontend (streaming, /metrics)\n\
+                 \x20 loadgen  open-loop Poisson load generator against `serve --http`\n\
+                 \x20          (writes BENCH_serve.json; --dry-run needs no device)\n\
                  \x20 flops    analytic resource tables (Tab. 3 %FLOPs, Tab. 7)\n\
                  \x20 analyze  expert utilization / active channels (Figs. 1,3,6,7)\n\
                  \x20 paper    regenerate a paper table (scaled)\n\
@@ -222,15 +238,29 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let p = Args::new("batched-inference demo")
-        .opt("preset", "tiny-moe", "artifact preset name")
-        .optional("checkpoint", "serve this checkpoint (default fresh init)")
-        .opt("requests", "16", "number of synthetic requests")
-        .opt("prompt-len", "12", "prompt length per request")
-        .opt("max-new", "24", "tokens to generate per request")
-        .opt("temperature", "0.8", "sampling temperature")
-        .opt("seed", "5", "rng seed")
-        .parse_from(argv)?;
+    let p = Args::new(
+        "batched inference: in-process demo, or an HTTP frontend with \
+         --http (POST /v1/completions with optional chunked streaming, \
+         GET /healthz, GET /metrics; Ctrl-C stops it)",
+    )
+    .opt("preset", "tiny-moe", "artifact preset name")
+    .optional("checkpoint", "serve this checkpoint (default fresh init)")
+    .opt("requests", "16", "number of synthetic requests (demo mode)")
+    .opt("prompt-len", "12", "prompt length per request (demo mode)")
+    .opt("max-new", "24", "tokens to generate per request \
+                           (HTTP: default max_tokens)")
+    .opt("temperature", "0.8", "sampling temperature (demo mode)")
+    .opt("seed", "5", "rng seed")
+    .optional("http", "serve over HTTP at this address \
+                       (e.g. 127.0.0.1:8077)")
+    .opt("policy", "fifo", "HTTP admission policy: fifo | spf | deadline")
+    .opt("queue-cap", "64", "HTTP bounded request queue \
+                             (overflow answers 429)")
+    .parse_from(argv)?;
+    if let Some(addr) = p.get("http") {
+        let addr = addr.to_string();
+        return cmd_serve_http(&p, &addr);
+    }
     let preset = p.str("preset")?;
     let client = Client::cpu()?;
     let bundle = load_bundle(&client, preset)?;
@@ -301,6 +331,158 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         engine.transfer_stats().report_per_step(engine.steps_executed),
         engine.steps_executed,
     );
+    Ok(())
+}
+
+/// `serve --http`: the continuous-batching HTTP frontend.  The PJRT
+/// client, bundle, and engine are not `Send`, so everything
+/// device-facing is constructed *inside* the dedicated driver thread;
+/// the main thread runs the accept loop.
+fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
+    let preset = p.str("preset")?.to_string();
+    let dir = sigma_moe::artifacts_root().join(&preset);
+    // cheap JSON-only manifest read for vocab / lane-count reporting
+    let manifest = Manifest::load(&dir)?;
+    let cfg = ServerConfig {
+        queue_cap: p.usize("queue-cap")?,
+        policy: Policy::parse(p.str("policy")?)?,
+        default_max_new: p.usize("max-new")?,
+        vocab: Some(manifest.model.vocab_size),
+        ..Default::default()
+    };
+    let checkpoint: Option<Vec<(String, HostTensor)>> =
+        match p.get("checkpoint") {
+            Some(path) => Some(Checkpoint::load(path)?.params),
+            None => None,
+        };
+    let seed = p.u64("seed")?;
+    let listener = std::net::TcpListener::bind(addr)?;
+    eprintln!(
+        "[serve] http://{} | preset {} | {} lanes | policy {} | \
+         queue cap {} (Ctrl-C stops)",
+        listener.local_addr()?,
+        preset,
+        manifest.serve_batch,
+        cfg.policy.as_str(),
+        cfg.queue_cap,
+    );
+    let shutdown = Arc::new(AtomicBool::new(false));
+    server::serve(listener, cfg, shutdown, move |driver| {
+        let client = Client::cpu()?;
+        let manifest = Manifest::load(&dir)?;
+        let mut names = vec!["step_fwd"];
+        if checkpoint.is_none() {
+            names.push("init");
+        }
+        let device_reset = manifest.functions.contains_key("reset_lanes");
+        if device_reset {
+            names.push("reset_lanes");
+        }
+        let bundle = ModelBundle::load_subset(&client, &dir, &names)?;
+        let params = match checkpoint {
+            Some(params) => params,
+            None => {
+                let init = bundle.program("init")?;
+                let out = init.run(&[HostTensor::scalar_u32(seed as u32)])?;
+                init.spec
+                    .outputs
+                    .iter()
+                    .map(|b| b.name.clone())
+                    .zip(out)
+                    .collect()
+            }
+        };
+        let mut engine = Engine::new(&bundle, &params, seed)?;
+        eprintln!(
+            "[serve] engine ready: {} lanes | lane reset: {}",
+            engine.n_lanes(),
+            if device_reset { "on-device" } else { "host fallback" },
+        );
+        driver.drive(&mut engine)
+    })
+}
+
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "open-loop Poisson load generator for `serve --http`; writes a \
+         machine-readable latency/throughput report",
+    )
+    .opt("addr", "127.0.0.1:8077", "server address to load")
+    .opt("requests", "64", "number of requests")
+    .opt("rps", "8", "target offered load, requests/sec (Poisson)")
+    .opt("prompt-min", "4", "min prompt length")
+    .opt("prompt-max", "16", "max prompt length")
+    .opt("max-new-min", "8", "min tokens to generate")
+    .opt("max-new-max", "32", "max tokens to generate")
+    .opt("vocab", "2048", "prompt token ids drawn from [0, vocab)")
+    .opt("stream-fraction", "0.5", "fraction using chunked streaming")
+    .opt("temperature", "0.8", "sampling temperature sent with requests")
+    .opt("top-k", "50", "top_k sent with requests")
+    .opt("seed", "1", "schedule + prompt rng seed")
+    .optional("deadline-ms", "per-request deadline \
+                              (pair with serve --policy deadline)")
+    .opt("out", "BENCH_serve.json", "report path")
+    .opt("timeout-s", "120", "per-request client timeout, seconds")
+    .flag("dry-run", "run against an in-process mock engine \
+                      (no device, ignores --addr)")
+    .opt("mock-lanes", "4", "mock engine lanes for --dry-run")
+    .parse_from(argv)?;
+
+    let cfg = loadgen::LoadgenCfg {
+        requests: p.usize("requests")?,
+        rps: p.f64("rps")?,
+        prompt_len: (p.usize("prompt-min")?, p.usize("prompt-max")?),
+        max_new: (p.usize("max-new-min")?, p.usize("max-new-max")?),
+        vocab: p.usize("vocab")?,
+        stream_fraction: p.f64("stream-fraction")?,
+        temperature: p.f64("temperature")?,
+        top_k: p.usize("top-k")?,
+        greedy: false,
+        deadline_ms: p.opt_u64("deadline-ms")?,
+        seed: p.u64("seed")?,
+        timeout: Duration::from_secs(p.u64("timeout-s")?),
+    };
+    let row = if p.flag("dry-run") {
+        eprintln!("[loadgen] dry run against an in-process mock engine");
+        loadgen::dry_run(&cfg, p.usize("mock-lanes")?)?
+    } else {
+        let addr: std::net::SocketAddr =
+            p.str("addr")?.parse().map_err(|e| {
+                Error::Config(format!("--addr: {e}"))
+            })?;
+        eprintln!("[loadgen] loading http://{addr} ...");
+        loadgen::run(addr, &cfg, "live")?
+    };
+    let num = |doc: &Json, k: &str| {
+        doc.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+    };
+    let lat = |k: &str| {
+        row.get("latency")
+            .ok()
+            .and_then(|l| l.get(k).ok())
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    println!(
+        "loadgen: {} requests @ {:.1} rps target ({:.1} achieved) | \
+         ok {} | 429 {} | dropped {} | errors {} | {:.1} tok/s | \
+         latency ms p50 {:.1} p95 {:.1} p99 {:.1} max {:.1}",
+        num(&row, "requests"),
+        num(&row, "target_rps"),
+        num(&row, "achieved_rps"),
+        num(&row, "ok"),
+        num(&row, "rejected_429"),
+        num(&row, "dropped"),
+        num(&row, "errors"),
+        num(&row, "tokens_per_sec"),
+        lat("p50_ms"),
+        lat("p95_ms"),
+        lat("p99_ms"),
+        lat("max_ms"),
+    );
+    let out = p.str("out")?;
+    bench_util::write_bench_json(out, "sigma-moe/serve/v1", vec![row])?;
+    eprintln!("[loadgen] report written to {out}");
     Ok(())
 }
 

@@ -268,6 +268,16 @@ impl DeviceState {
         Ok(self.slots[idx].host.as_ref().unwrap())
     }
 
+    /// Whether a slot's authoritative copy is on device right now (clean
+    /// and uploaded) — i.e. it can be passed to `run_buffers` without
+    /// triggering any host traffic.  The engine's on-device lane reset
+    /// uses this to decide between the zero-copy `reset_lanes` program
+    /// and the host zero-row fallback.
+    pub fn device_ready(&self, idx: usize) -> bool {
+        let slot = &self.slots[idx];
+        !slot.dirty && slot.device.is_some()
+    }
+
     /// Mutable host view; marks the slot dirty so the mutation is
     /// uploaded before the next execution.
     pub fn host_mut(&mut self, idx: usize) -> Result<&mut HostTensor> {

@@ -3,9 +3,18 @@
 //! Parameters and per-lane XL memories are device-resident
 //! ([`DeviceState`]): per `pump` only the `[B, 1]` token tensor goes
 //! host→device and only the logits come back; memory outputs are fed
-//! buffer-to-buffer into the next step.  The host touches a lane's
-//! memory only on admission, when the lane's rows are zeroed for the
-//! fresh sequence (amortized over the whole generation).
+//! buffer-to-buffer into the next step.  Lane admission zeroes the
+//! lane's memory rows *on device* through the AOT'd `reset_lanes`
+//! mask program when the artifact provides it (a `[B]` keep-mask is
+//! the only upload); older artifacts fall back to the host zero-row
+//! path, counted separately in [`Engine::stats`].
+//!
+//! Two submission surfaces: [`Engine::submit`] returns a one-shot
+//! completion channel (the in-process demo path), and
+//! [`Engine::submit_streaming`] delivers per-token [`StreamEvent`]s —
+//! what the HTTP frontend's chunked responses are fed from.  The
+//! [`EngineBackend`] trait abstracts the engine for the serving driver
+//! thread so scheduler/server tests can run against a mock.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -13,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::rng::Rng;
-use crate::runtime::device::download;
+use crate::runtime::device::{download, upload};
 use crate::runtime::{DeviceState, ModelBundle, TransferSnapshot};
 use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
@@ -37,6 +46,61 @@ pub struct GenResult {
     pub prompt_len: usize,
 }
 
+/// Per-request progress events delivered on the channel passed to
+/// [`Engine::submit_streaming`] — the feed behind the HTTP frontend's
+/// chunked token streaming.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// The request left the queue and occupies a lane.
+    Admitted,
+    /// One sampled continuation token.
+    Token(i32),
+    /// Generation finished (terminal).
+    Done(GenResult),
+    /// The request was abandoned before completion (terminal).
+    Dropped(DropReason),
+}
+
+/// Why a request was dropped without completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Its deadline expired while still queued (deadline-aware policy).
+    Deadline,
+    /// The server shut down before the request ran to completion.
+    Shutdown,
+}
+
+impl DropReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DropReason::Deadline => "deadline",
+            DropReason::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// The surface the serving driver thread needs from a generation
+/// backend — implemented by [`Engine`] over the real AOT executables
+/// and by [`crate::serving::MockBackend`] for artifact-free scheduler /
+/// HTTP tests and `loadgen --dry-run`.
+pub trait EngineBackend {
+    fn n_lanes(&self) -> usize;
+    /// Requests that could be admitted on the next pump: free lanes
+    /// minus requests already waiting in the internal queue.
+    fn free_lanes(&self) -> usize;
+    /// Enqueue a request whose progress is reported via `events`.
+    fn submit_streaming(
+        &mut self,
+        req: GenRequest,
+        events: mpsc::Sender<StreamEvent>,
+    );
+    /// One engine iteration (admit + one step over all lanes); returns
+    /// the number of active plus internally-queued requests.
+    fn pump(&mut self) -> Result<usize>;
+    /// Cumulative throughput/perf counters for `/metrics`.
+    fn stats(&self) -> BTreeMap<String, f64>;
+}
+
 #[derive(Debug)]
 struct Lane {
     /// tokens not yet fed to the model (prompt remainder first)
@@ -48,6 +112,28 @@ struct Lane {
     queued_at: Instant,
     admitted_at: Instant,
     done_tx: Option<mpsc::Sender<GenResult>>,
+    events: Option<mpsc::Sender<StreamEvent>>,
+}
+
+impl Lane {
+    fn new(
+        req: GenRequest,
+        done_tx: Option<mpsc::Sender<GenResult>>,
+        events: Option<mpsc::Sender<StreamEvent>>,
+    ) -> Self {
+        let now = Instant::now();
+        Lane {
+            pending: req.prompt.iter().copied().collect(),
+            generated: Vec::new(),
+            budget: req.max_new_tokens,
+            sampler: req.sampler.clone(),
+            request: req,
+            queued_at: now,
+            admitted_at: now,
+            done_tx,
+            events,
+        }
+    }
 }
 
 /// Admit queued requests into free lanes, oldest request first into the
@@ -80,6 +166,15 @@ fn zero_lane_row(t: &mut HostTensor, lane: usize) {
     t.data[start..start + row].fill(0);
 }
 
+/// One input of the AOT'd `reset_lanes` program, mapped onto the
+/// engine's `step_fwd` device state: either a memory slot index or the
+/// `[B]` keep-mask.
+#[derive(Debug, Clone, Copy)]
+enum ResetInput {
+    Mem(usize),
+    Mask,
+}
+
 /// Continuous-batching engine: `serve_batch` lanes step together in one
 /// `step_fwd` call per token.
 pub struct Engine<'a> {
@@ -90,6 +185,12 @@ pub struct Engine<'a> {
     mem_slots: Vec<usize>,
     tok_idx: usize,
     mem_feedback: Vec<(usize, usize)>,
+    /// `reset_lanes` program inputs in program order, mapped onto
+    /// `state` slots (`None` when the artifact lacks the program or its
+    /// signature doesn't line up — host fallback then).
+    reset_inputs: Option<Vec<ResetInput>>,
+    /// `reset_lanes` program outputs in program order -> `state` slots
+    reset_outputs: Vec<usize>,
     lanes: Vec<Option<Lane>>,
     queue: VecDeque<Lane>,
     rng: Rng,
@@ -98,6 +199,10 @@ pub struct Engine<'a> {
     pub tokens_generated: u64,
     /// every token consumed by an active lane, prompt phase included
     pub tokens_processed: u64,
+    /// admissions whose memory reset ran on device via `reset_lanes`
+    pub lane_resets_device: u64,
+    /// admissions that fell back to the host zero-row path
+    pub lane_resets_host: u64,
 }
 
 impl<'a> Engine<'a> {
@@ -145,47 +250,130 @@ impl<'a> Engine<'a> {
             })
             .collect();
         let n_lanes = state.slot_spec(tok_idx).shape[0];
+        let (reset_inputs, reset_outputs) =
+            Self::map_reset_program(bundle, &state, n_lanes, &mem_slots);
         Ok(Engine {
             bundle,
             state,
             mem_slots,
             tok_idx,
             mem_feedback,
+            reset_inputs,
+            reset_outputs,
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
             rng: Rng::new(seed),
             steps_executed: 0,
             tokens_generated: 0,
             tokens_processed: 0,
+            lane_resets_device: 0,
+            lane_resets_host: 0,
         })
+    }
+
+    /// Map the optional AOT'd `reset_lanes` program onto the step_fwd
+    /// device state.  Its manifest contract (checked per buffer, with a
+    /// silent host fallback on any mismatch so old artifacts keep
+    /// working): inputs `0.<layer>` are the per-layer memories matching
+    /// step_fwd input `1.<layer>`, input `1` is the `[B]` f32 keep-mask;
+    /// outputs `<layer>` are the masked memories in layer order — and
+    /// the program must cover *every* memory slot, since a
+    /// subset-coverage program would leave the uncovered layers holding
+    /// a previous request's memory (cross-request leakage) while
+    /// counting the reset as successful.
+    fn map_reset_program(
+        bundle: &ModelBundle,
+        state: &DeviceState,
+        n_lanes: usize,
+        mem_slots: &[usize],
+    ) -> (Option<Vec<ResetInput>>, Vec<usize>) {
+        let Ok(prog) = bundle.program("reset_lanes") else {
+            return (None, Vec::new());
+        };
+        let mut inputs = Vec::with_capacity(prog.spec.inputs.len());
+        for b in &prog.spec.inputs {
+            if b.name == "1" {
+                if b.dtype != DType::F32 || b.shape != [n_lanes] {
+                    return (None, Vec::new());
+                }
+                inputs.push(ResetInput::Mask);
+            } else if let Some(layer) = b.name.strip_prefix("0.") {
+                match state.position(&format!("1.{layer}")) {
+                    Some(i) if state.slot_spec(i).shape == b.shape => {
+                        inputs.push(ResetInput::Mem(i))
+                    }
+                    _ => return (None, Vec::new()),
+                }
+            } else {
+                return (None, Vec::new());
+            }
+        }
+        let mut outputs = Vec::with_capacity(prog.spec.outputs.len());
+        for b in &prog.spec.outputs {
+            match state.position(&format!("1.{}", b.name)) {
+                Some(i) => outputs.push(i),
+                None => return (None, Vec::new()),
+            }
+        }
+        let need: std::collections::BTreeSet<usize> =
+            mem_slots.iter().copied().collect();
+        let covered: std::collections::BTreeSet<usize> = inputs
+            .iter()
+            .filter_map(|ri| match ri {
+                ResetInput::Mem(i) => Some(*i),
+                ResetInput::Mask => None,
+            })
+            .collect();
+        let written: std::collections::BTreeSet<usize> =
+            outputs.iter().copied().collect();
+        if covered != need || written != need || need.is_empty() {
+            return (None, Vec::new());
+        }
+        (Some(inputs), outputs)
     }
 
     pub fn n_lanes(&self) -> usize {
         self.lanes.len()
     }
 
+    /// Requests admissible on the next pump: free lanes minus requests
+    /// already waiting in the internal FIFO.  The serving scheduler
+    /// holds its policy queue in front of the engine and only submits
+    /// while this is positive, so ordering stays under policy control.
+    pub fn free_lanes(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| l.is_none())
+            .count()
+            .saturating_sub(self.queue.len())
+    }
+
     /// Enqueue a request; the result is delivered on the returned channel
     /// when `pump` drives it to completion.
     pub fn submit(&mut self, req: GenRequest) -> mpsc::Receiver<GenResult> {
         let (tx, rx) = mpsc::channel();
-        let now = Instant::now();
-        self.queue.push_back(Lane {
-            pending: req.prompt.iter().copied().collect(),
-            generated: Vec::new(),
-            budget: req.max_new_tokens,
-            sampler: req.sampler.clone(),
-            request: req,
-            queued_at: now,
-            admitted_at: now,
-            done_tx: Some(tx),
-        });
+        self.queue.push_back(Lane::new(req, Some(tx), None));
         rx
     }
 
-    /// Zero lane `lane`'s XL memory (fresh sequence).  This dirties the
-    /// memory slots' host mirrors; the re-upload (and, after a first
-    /// generation, one download to materialize the mirror) happens once
-    /// per admission, not per token.
+    /// Enqueue a request whose progress (admission, every sampled token,
+    /// completion) is delivered as [`StreamEvent`]s on `events` — the
+    /// feed for the HTTP frontend's chunked streaming responses.  Send
+    /// failures are ignored: a hung-up receiver just discards events
+    /// while the lane runs its budget out.
+    pub fn submit_streaming(
+        &mut self,
+        req: GenRequest,
+        events: mpsc::Sender<StreamEvent>,
+    ) {
+        self.queue.push_back(Lane::new(req, None, Some(events)));
+    }
+
+    /// Zero lane `lane`'s XL memory on the host (fresh sequence).  This
+    /// dirties the memory slots' host mirrors; the re-upload (and, after
+    /// a first generation, one download to materialize the mirror)
+    /// happens once per admission, not per token.  Fallback path for
+    /// artifacts without the `reset_lanes` program.
     fn reset_lane_memory(&mut self, lane: usize) -> Result<()> {
         for &slot in &self.mem_slots {
             let t = self.state.host_mut(slot)?;
@@ -194,10 +382,62 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
+    /// Zero the admitted lanes' XL memories on device via the AOT'd
+    /// `reset_lanes` mask program: the only host traffic is the `[B]`
+    /// keep-mask upload; memory buffers are fed back buffer-to-buffer.
+    /// Returns false (caller must use the host path) when the program is
+    /// absent or some memory slot is not yet device-resident.
+    fn reset_lanes_on_device(&mut self, admitted: &[usize]) -> Result<bool> {
+        let Some(reset_inputs) = &self.reset_inputs else {
+            return Ok(false);
+        };
+        if self.mem_slots.iter().any(|&s| !self.state.device_ready(s)) {
+            return Ok(false);
+        }
+        let prog = self.bundle.program("reset_lanes")?;
+        let mut keep = vec![1.0f32; self.lanes.len()];
+        for &i in admitted {
+            keep[i] = 0.0;
+        }
+        let mask = upload(
+            &self.bundle.client,
+            &HostTensor::from_f32(&[self.lanes.len()], &keep)?,
+        )?;
+        let out = {
+            let bufs: Vec<&xla::PjRtBuffer> = reset_inputs
+                .iter()
+                .map(|ri| match ri {
+                    ResetInput::Mask => Ok(&mask),
+                    ResetInput::Mem(slot) => self.state.buffer(*slot),
+                })
+                .collect::<Result<_>>()?;
+            prog.run_buffers(&bufs)?
+        };
+        for (buf, &slot) in out.into_iter().zip(self.reset_outputs.iter()) {
+            self.state.set_device(slot, buf);
+        }
+        Ok(true)
+    }
+
     fn admit(&mut self) -> Result<()> {
         let admitted = admit_fifo(&mut self.lanes, &mut self.queue);
-        for lane_idx in admitted {
-            self.reset_lane_memory(lane_idx)?;
+        if admitted.is_empty() {
+            return Ok(());
+        }
+        for &i in &admitted {
+            if let Some(lane) = &self.lanes[i] {
+                if let Some(tx) = &lane.events {
+                    let _ = tx.send(StreamEvent::Admitted);
+                }
+            }
+        }
+        if self.reset_lanes_on_device(&admitted)? {
+            self.lane_resets_device += admitted.len() as u64;
+        } else {
+            for &i in &admitted {
+                self.reset_lane_memory(i)?;
+            }
+            self.lane_resets_host += admitted.len() as u64;
         }
         Ok(())
     }
@@ -207,7 +447,9 @@ impl<'a> Engine<'a> {
     }
 
     /// Run one engine iteration (admit + one step_fwd over all lanes).
-    /// Returns the number of still-active lanes.
+    /// Returns active lanes plus internally-queued requests — 0 means
+    /// fully drained (the [`EngineBackend`] contract the serving driver
+    /// idles on), not "no lane is occupied".
     pub fn pump(&mut self) -> Result<usize> {
         self.admit()?;
         let n_active = self.active();
@@ -258,6 +500,9 @@ impl<'a> Engine<'a> {
                     let tok = lane.sampler.sample(row, &mut self.rng) as i32;
                     lane.generated.push(tok);
                     self.tokens_generated += 1;
+                    if let Some(tx) = &lane.events {
+                        let _ = tx.send(StreamEvent::Token(tok));
+                    }
                     if lane.generated.len() >= lane.budget {
                         finished = true;
                     }
@@ -273,7 +518,10 @@ impl<'a> Engine<'a> {
                     prompt_len: lane.request.prompt.len(),
                 };
                 if let Some(tx) = lane.done_tx {
-                    let _ = tx.send(res);
+                    let _ = tx.send(res.clone());
+                }
+                if let Some(tx) = lane.events {
+                    let _ = tx.send(StreamEvent::Done(res));
                 }
             }
         }
@@ -328,7 +576,42 @@ impl<'a> Engine<'a> {
                 0.0
             },
         );
+        m.insert("n_lanes".into(), self.lanes.len() as f64);
+        m.insert(
+            "lane_resets_device".into(),
+            self.lane_resets_device as f64,
+        );
+        m.insert("lane_resets_host".into(), self.lane_resets_host as f64);
+        let xfer = self.state.transfers();
+        m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
+        m.insert("d2h_bytes".into(), xfer.d2h_bytes as f64);
         m
+    }
+}
+
+impl EngineBackend for Engine<'_> {
+    fn n_lanes(&self) -> usize {
+        Engine::n_lanes(self)
+    }
+
+    fn free_lanes(&self) -> usize {
+        Engine::free_lanes(self)
+    }
+
+    fn submit_streaming(
+        &mut self,
+        req: GenRequest,
+        events: mpsc::Sender<StreamEvent>,
+    ) {
+        Engine::submit_streaming(self, req, events)
+    }
+
+    fn pump(&mut self) -> Result<usize> {
+        Engine::pump(self)
+    }
+
+    fn stats(&self) -> BTreeMap<String, f64> {
+        Engine::stats(self)
     }
 }
 
@@ -338,21 +621,15 @@ mod tests {
 
     fn mk_lane(tag: i32) -> Lane {
         let (tx, _rx) = mpsc::channel();
-        let now = Instant::now();
-        Lane {
-            pending: VecDeque::from(vec![tag]),
-            generated: Vec::new(),
-            budget: 1,
-            sampler: Sampler::greedy(),
-            request: GenRequest {
+        Lane::new(
+            GenRequest {
                 prompt: vec![tag],
                 max_new_tokens: 1,
                 sampler: Sampler::greedy(),
             },
-            queued_at: now,
-            admitted_at: now,
-            done_tx: Some(tx),
-        }
+            Some(tx),
+            None,
+        )
     }
 
     fn tag_of(lane: &Option<Lane>) -> i32 {
@@ -385,6 +662,29 @@ mod tests {
         let mut queue: VecDeque<Lane> = VecDeque::new();
         assert!(admit_fifo(&mut lanes, &mut queue).is_empty());
         assert!(lanes.iter().all(|l| l.is_none()));
+    }
+
+    #[test]
+    fn lane_new_queues_whole_prompt_and_keeps_sinks() {
+        let (tx, rx) = mpsc::channel();
+        let lane = Lane::new(
+            GenRequest {
+                prompt: vec![3, 1, 4],
+                max_new_tokens: 5,
+                sampler: Sampler::greedy(),
+            },
+            None,
+            Some(tx),
+        );
+        assert_eq!(lane.pending, VecDeque::from(vec![3, 1, 4]));
+        assert_eq!(lane.budget, 5);
+        assert!(lane.done_tx.is_none());
+        lane.events
+            .as_ref()
+            .unwrap()
+            .send(StreamEvent::Token(42))
+            .unwrap();
+        assert!(matches!(rx.try_recv(), Ok(StreamEvent::Token(42))));
     }
 
     #[test]

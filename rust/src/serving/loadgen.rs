@@ -1,0 +1,571 @@
+//! Open-loop load generator for the HTTP serving frontend.
+//!
+//! Replays synthetic traffic with Poisson arrivals (exponential
+//! inter-arrival at a target request rate — open loop: arrival times
+//! are fixed up front and do *not* wait for responses, so queueing
+//! shows up as latency, the honest way to measure a serving system)
+//! and a configurable prompt-length / generation-length / streaming
+//! mix.  Each request runs on its own thread with a hand-rolled HTTP
+//! client (chunked-transfer decoding included); results aggregate into
+//! latency + time-to-first-token histograms and a machine-readable
+//! `BENCH_serve.json` row via [`crate::bench_util::write_bench_json`].
+//!
+//! `dry_run` spins the whole stack — scheduler, HTTP server, chunked
+//! streaming, report — over the in-process [`MockBackend`] so CI can
+//! smoke-test request generation and report writing with no device.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::rng::Rng;
+use crate::serving::mock::MockBackend;
+use crate::serving::scheduler::Histogram;
+use crate::serving::server::{self, ServerConfig};
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenCfg {
+    pub requests: usize,
+    /// Target offered load, requests/second (Poisson arrivals).
+    pub rps: f64,
+    /// Uniform prompt-length range (inclusive).
+    pub prompt_len: (usize, usize),
+    /// Uniform `max_tokens` range (inclusive).
+    pub max_new: (usize, usize),
+    /// Prompt token ids are drawn uniformly from `[0, vocab)`.
+    pub vocab: usize,
+    /// Fraction of requests that use chunked streaming.
+    pub stream_fraction: f64,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub greedy: bool,
+    pub deadline_ms: Option<u64>,
+    pub seed: u64,
+    /// Per-request client timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenCfg {
+    fn default() -> Self {
+        LoadgenCfg {
+            requests: 32,
+            rps: 8.0,
+            prompt_len: (4, 16),
+            max_new: (8, 32),
+            vocab: 2048,
+            stream_fraction: 0.5,
+            temperature: 0.8,
+            top_k: 50,
+            greedy: false,
+            deadline_ms: None,
+            seed: 1,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// One scheduled request of the open-loop plan.
+#[derive(Debug, Clone)]
+pub struct Planned {
+    /// Arrival offset from the start of the run.
+    pub at: Duration,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub stream: bool,
+}
+
+fn uniform_incl(rng: &mut Rng, range: (usize, usize)) -> usize {
+    let lo = range.0.max(1);
+    let hi = range.1.max(lo);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Deterministic open-loop schedule: Poisson arrivals at `cfg.rps`,
+/// uniform prompt/generation lengths, Bernoulli streaming mix.
+pub fn plan(cfg: &LoadgenCfg) -> Vec<Planned> {
+    let mut rng = Rng::new(cfg.seed);
+    let rate = cfg.rps.max(1e-9);
+    let mut t = 0.0f64;
+    (0..cfg.requests)
+        .map(|_| {
+            // exponential inter-arrival: -ln(1 - U) / rate
+            t += -(1.0 - rng.next_f64()).ln() / rate;
+            let plen = uniform_incl(&mut rng, cfg.prompt_len);
+            Planned {
+                at: Duration::from_secs_f64(t),
+                prompt: (0..plen)
+                    .map(|_| rng.below(cfg.vocab.max(2)) as i32)
+                    .collect(),
+                max_new: uniform_incl(&mut rng, cfg.max_new),
+                stream: rng.coin(cfg.stream_fraction),
+            }
+        })
+        .collect()
+}
+
+/// The `/v1/completions` body for one planned request.
+pub fn completion_body(p: &Planned, cfg: &LoadgenCfg) -> Json {
+    let mut fields = vec![
+        (
+            "prompt",
+            json::arr(p.prompt.iter().map(|&t| json::num(t as f64)).collect()),
+        ),
+        ("max_tokens", json::num(p.max_new as f64)),
+        ("temperature", json::num(cfg.temperature)),
+        ("top_k", json::num(cfg.top_k as f64)),
+        ("stream", Json::Bool(p.stream)),
+    ];
+    if cfg.greedy {
+        fields.push(("greedy", Json::Bool(true)));
+    }
+    if let Some(ms) = cfg.deadline_ms {
+        fields.push(("deadline_ms", json::num(ms as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Client-side view of one finished request.
+#[derive(Debug, Clone)]
+pub struct ReqOutcome {
+    pub status: u16,
+    /// 200 and no mid-stream error line.
+    pub ok: bool,
+    /// 429 backpressure.
+    pub rejected: bool,
+    /// deadline/shutdown drop (503 or an `{"error": ...}` stream line).
+    pub dropped: bool,
+    pub latency: Duration,
+    /// Time to first streamed token (streaming requests only).
+    pub ttft: Option<Duration>,
+    pub tokens: usize,
+}
+
+fn read_line(r: &mut impl BufRead) -> Result<String> {
+    let mut buf = Vec::new();
+    let n = r.by_ref().take(64 * 1024).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Err(Error::Serving("unexpected eof from server".into()));
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map_err(|_| Error::Serving("non-utf8 response line".into()))
+}
+
+/// Parse an HTTP response head; returns (status, headers with
+/// lowercased names).  Public so tests (and other clients of the
+/// serving frontend) don't re-implement status/header parsing.
+pub fn read_head(
+    r: &mut impl BufRead,
+) -> Result<(u16, Vec<(String, String)>)> {
+    let status_line = read_line(r)?;
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            Error::Serving(format!("bad status line {status_line:?}"))
+        })?;
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            return Ok((status, headers));
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers
+                .push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+}
+
+fn header<'h>(headers: &'h [(String, String)], name: &str) -> Option<&'h str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Decode a chunked-transfer body, invoking `on_chunk` with each data
+/// chunk as it arrives (for time-to-first-token measurement); returns
+/// the reassembled body.
+pub fn read_chunked(
+    r: &mut impl BufRead,
+    mut on_chunk: impl FnMut(&[u8]),
+) -> Result<Vec<u8>> {
+    let mut body = Vec::new();
+    loop {
+        let size_line = read_line(r)?;
+        let size_hex = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_hex, 16).map_err(|_| {
+            Error::Serving(format!("bad chunk size {size_line:?}"))
+        })?;
+        if size == 0 {
+            // trailer section: lines until the final empty line
+            loop {
+                if read_line(r)?.is_empty() {
+                    return Ok(body);
+                }
+            }
+        }
+        if size > 16 * 1024 * 1024 {
+            return Err(Error::Serving("chunk too large".into()));
+        }
+        let mut chunk = vec![0u8; size];
+        r.read_exact(&mut chunk)?;
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf)?;
+        if &crlf != b"\r\n" {
+            return Err(Error::Serving("chunk missing CRLF".into()));
+        }
+        on_chunk(&chunk);
+        body.extend_from_slice(&chunk);
+    }
+}
+
+/// POST one completion request and consume the whole response
+/// (streaming or unary), measuring client-side latency and TTFT.
+pub fn send_completion(
+    addr: &SocketAddr,
+    body: &Json,
+    timeout: Duration,
+) -> Result<ReqOutcome> {
+    let t0 = Instant::now();
+    let stream = TcpStream::connect_timeout(addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let _ = stream.set_nodelay(true);
+    let payload = body.to_string_compact();
+    let mut writer = stream.try_clone()?;
+    writer.write_all(
+        format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\n\
+             Content-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+            payload.len()
+        )
+        .as_bytes(),
+    )?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    let chunked = header(&headers, "transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    let mut tokens = 0usize;
+    let mut ttft = None;
+    let mut dropped = false;
+    if chunked {
+        let mut line_buf: Vec<u8> = Vec::new();
+        read_chunked(&mut r, |chunk| {
+            line_buf.extend_from_slice(chunk);
+            while let Some(pos) = line_buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = line_buf.drain(..=pos).collect();
+                let Ok(text) = std::str::from_utf8(&line) else { continue };
+                let Ok(doc) = Json::parse(text.trim()) else { continue };
+                if doc.opt("token").is_some() {
+                    tokens += 1;
+                    ttft.get_or_insert_with(|| t0.elapsed());
+                } else if doc.opt("error").is_some() {
+                    dropped = true;
+                }
+            }
+        })?;
+    } else {
+        let len: usize = header(&headers, "content-length")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| {
+                Error::Serving("response missing content-length".into())
+            })?;
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf)?;
+        if status == 200 {
+            let doc = Json::parse(
+                std::str::from_utf8(&buf)
+                    .map_err(|_| Error::Serving("non-utf8 body".into()))?,
+            )
+            .map_err(|e| Error::Serving(format!("bad response json: {e}")))?;
+            tokens = doc
+                .opt("tokens")
+                .and_then(|t| t.as_arr().ok())
+                .map_or(0, |a| a.len());
+        }
+    }
+    Ok(ReqOutcome {
+        status,
+        ok: status == 200 && !dropped,
+        rejected: status == 429,
+        dropped: dropped || status == 503,
+        latency: t0.elapsed(),
+        ttft,
+        tokens,
+    })
+}
+
+/// Fetch and parse `GET /metrics`.
+pub fn fetch_metrics(addr: &SocketAddr) -> Result<Json> {
+    let stream =
+        TcpStream::connect_timeout(addr, Duration::from_secs(5))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(
+        format!(
+            "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    )?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    if status != 200 {
+        return Err(Error::Serving(format!("/metrics answered {status}")));
+    }
+    let len: usize = header(&headers, "content-length")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| Error::Serving("missing content-length".into()))?;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Json::parse(
+        std::str::from_utf8(&buf)
+            .map_err(|_| Error::Serving("non-utf8 metrics".into()))?,
+    )
+    .map_err(Error::from)
+}
+
+/// Execute the open-loop plan against a live server; returns one
+/// `BENCH_serve.json` result row.
+pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
+    let planned = plan(cfg);
+    let n = planned.len();
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    // pacing loop: the plan is sorted by arrival time, so spawning each
+    // request's thread at its arrival instant keeps live threads
+    // bounded by in-flight requests — a 10k-request run must not stand
+    // up a 10k-thread fleet at t=0 and perturb the latencies it measures
+    for p in planned {
+        let elapsed = t0.elapsed();
+        if p.at > elapsed {
+            std::thread::sleep(p.at - elapsed);
+        }
+        let tx = tx.clone();
+        let body = completion_body(&p, cfg);
+        let timeout = cfg.timeout;
+        handles.push(std::thread::spawn(move || {
+            let _ = tx.send(send_completion(&addr, &body, timeout));
+        }));
+    }
+    drop(tx);
+    let mut latency = Histogram::new();
+    let mut ttft = Histogram::new();
+    let (mut ok, mut rejected, mut dropped, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    let mut tokens = 0usize;
+    for outcome in rx {
+        match outcome {
+            Ok(o) => {
+                tokens += o.tokens;
+                if o.rejected {
+                    rejected += 1;
+                } else if o.dropped {
+                    dropped += 1;
+                } else if o.ok {
+                    ok += 1;
+                    // latency percentiles cover *completions* only —
+                    // folding in sub-ms 429s/drops would dilute p50/p99
+                    // exactly under the oversubscription this measures
+                    // (rejections are already counted in rejected_429)
+                    latency.observe(o.latency);
+                    if let Some(t) = o.ttft {
+                        ttft.observe(t);
+                    }
+                } else {
+                    errors += 1;
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let server_metrics = fetch_metrics(&addr).unwrap_or(Json::Null);
+    Ok(json::obj(vec![
+        ("mode", json::s(mode)),
+        ("requests", json::num(n as f64)),
+        ("target_rps", json::num(cfg.rps)),
+        ("achieved_rps", json::num(n as f64 / wall)),
+        ("stream_fraction", json::num(cfg.stream_fraction)),
+        ("ok", json::num(ok as f64)),
+        ("rejected_429", json::num(rejected as f64)),
+        ("dropped", json::num(dropped as f64)),
+        ("errors", json::num(errors as f64)),
+        ("tokens_total", json::num(tokens as f64)),
+        ("tokens_per_sec", json::num(tokens as f64 / wall)),
+        ("wall_s", json::num(wall)),
+        ("latency", latency.to_json()),
+        ("ttft", ttft.to_json()),
+        ("server_metrics", server_metrics),
+    ]))
+}
+
+/// Run `f` against an in-process HTTP server over the device-free
+/// [`MockBackend`] (bound to an ephemeral localhost port), shutting the
+/// server down afterwards.  Used by `loadgen --dry-run`, the serving
+/// tests, and the `serve_load` bench.
+pub fn with_mock_server<T>(
+    lanes: usize,
+    vocab: usize,
+    step_delay: Duration,
+    cfg: ServerConfig,
+    f: impl FnOnce(SocketAddr) -> Result<T>,
+) -> Result<T> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server_shutdown = shutdown.clone();
+    let handle = std::thread::spawn(move || {
+        server::serve(listener, cfg, server_shutdown, move |driver| {
+            let mut backend =
+                MockBackend::new(lanes, vocab).with_step_delay(step_delay);
+            driver.drive(&mut backend)
+        })
+    });
+    let result = f(addr);
+    shutdown.store(true, Ordering::SeqCst);
+    match handle.join() {
+        Ok(Ok(())) => result,
+        Ok(Err(e)) => result.and(Err(e)),
+        Err(_) => result.and(Err(Error::Serving(
+            "mock server thread panicked".into(),
+        ))),
+    }
+}
+
+/// The `loadgen --dry-run` path: full client/server/scheduler stack
+/// over the mock backend; returns the report row.
+pub fn dry_run(cfg: &LoadgenCfg, lanes: usize) -> Result<Json> {
+    let server_cfg = ServerConfig {
+        vocab: Some(cfg.vocab),
+        ..Default::default()
+    };
+    with_mock_server(
+        lanes,
+        cfg.vocab,
+        Duration::from_micros(200),
+        server_cfg,
+        |addr| run(addr, cfg, "mock-dry-run"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn cfg() -> LoadgenCfg {
+        LoadgenCfg { requests: 16, seed: 9, ..Default::default() }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_monotonic() {
+        let a = plan(&cfg());
+        let b = plan(&cfg());
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert_eq!(x.stream, y.stream);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let c = plan(&LoadgenCfg { seed: 10, ..cfg() });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn plan_respects_ranges() {
+        let cfg = LoadgenCfg {
+            requests: 64,
+            prompt_len: (3, 5),
+            max_new: (7, 7),
+            vocab: 11,
+            ..Default::default()
+        };
+        for p in plan(&cfg) {
+            assert!((3..=5).contains(&p.prompt.len()));
+            assert_eq!(p.max_new, 7);
+            assert!(p.prompt.iter().all(|&t| (0..11).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn poisson_mean_interarrival_tracks_rate() {
+        let cfg = LoadgenCfg {
+            requests: 2000,
+            rps: 50.0,
+            ..Default::default()
+        };
+        let p = plan(&cfg);
+        let total = p.last().unwrap().at.as_secs_f64();
+        let mean_dt = total / p.len() as f64;
+        assert!((mean_dt - 0.02).abs() < 0.004, "mean dt {mean_dt}");
+    }
+
+    #[test]
+    fn chunked_decoding_reassembles_and_reports_chunks() {
+        let raw = b"5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
+        let mut seen = Vec::new();
+        let body = read_chunked(&mut Cursor::new(&raw[..]), |c| {
+            seen.push(c.len());
+        })
+        .unwrap();
+        assert_eq!(body, b"hello world");
+        assert_eq!(seen, vec![5, 6]);
+    }
+
+    #[test]
+    fn chunked_decoding_rejects_garbage() {
+        assert!(read_chunked(
+            &mut Cursor::new(b"zz\r\nhello\r\n" as &[u8]),
+            |_| {}
+        )
+        .is_err());
+        // missing CRLF after chunk data
+        assert!(read_chunked(
+            &mut Cursor::new(b"5\r\nhelloXX0\r\n\r\n" as &[u8]),
+            |_| {}
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn completion_body_carries_the_mix() {
+        let c = LoadgenCfg {
+            greedy: true,
+            deadline_ms: Some(500),
+            ..Default::default()
+        };
+        let p = Planned {
+            at: Duration::ZERO,
+            prompt: vec![1, 2],
+            max_new: 9,
+            stream: true,
+        };
+        let b = completion_body(&p, &c);
+        assert_eq!(b.get("max_tokens").unwrap().as_usize().unwrap(), 9);
+        assert!(b.get("stream").unwrap().as_bool().unwrap());
+        assert!(b.get("greedy").unwrap().as_bool().unwrap());
+        assert_eq!(
+            b.get("deadline_ms").unwrap().as_usize().unwrap(),
+            500
+        );
+        assert_eq!(b.get("prompt").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,16 +1,38 @@
-//! Serving: a threaded, dynamically-batched inference engine over the
-//! AOT-compiled `step_fwd` executable (vLLM-router-flavored, scaled to
-//! this model family).
+//! Serving: a network-facing, continuously-batched inference stack
+//! over the AOT-compiled `step_fwd` executable.
 //!
-//! `step_fwd` advances `serve_batch` independent sequences by one token,
-//! carrying each sequence's Transformer-XL memory.  The engine keeps one
-//! *slot* per batch lane; requests queue until a lane frees up, lanes
-//! step together in one executable call (continuous batching at token
-//! granularity — a finished lane is refilled on the next step without
-//! draining the others).
+//! Layers, front to back:
+//!
+//! * [`server`] — std-only HTTP/1.1 frontend (`POST /v1/completions`
+//!   with chunked token streaming, `/healthz`, `/metrics`).  Connection
+//!   threads never touch the device; a dedicated driver thread owns the
+//!   non-`Send` PJRT state.
+//! * [`scheduler`] — bounded admission queue between the frontend and
+//!   the engine lanes: FIFO / shortest-prompt-first / deadline-aware
+//!   policies, 429 backpressure on overflow, queue + latency
+//!   histograms.
+//! * [`engine`] — the continuous-batching [`Engine`]: `serve_batch`
+//!   device-resident lanes stepping together one token per `step_fwd`
+//!   call, finished lanes refilled without draining the others, lane
+//!   memory reset on device via the AOT'd `reset_lanes` mask program.
+//! * [`loadgen`] — open-loop Poisson load generator + hand-rolled HTTP
+//!   client; writes `BENCH_serve.json` (latency percentiles,
+//!   tokens/sec).
+//! * [`mock`] — a deterministic device-free [`EngineBackend`] so the
+//!   scheduler/HTTP layers test (and `loadgen --dry-run` runs) without
+//!   artifacts.
 
 pub mod engine;
+pub mod loadgen;
+pub mod mock;
 pub mod sampler;
+pub mod scheduler;
+pub mod server;
 
-pub use engine::{Engine, GenRequest, GenResult};
+pub use engine::{
+    DropReason, Engine, EngineBackend, GenRequest, GenResult, StreamEvent,
+};
+pub use mock::MockBackend;
 pub use sampler::Sampler;
+pub use scheduler::{Histogram, Policy, Rejection, Scheduler};
+pub use server::{Driver, ServerConfig};

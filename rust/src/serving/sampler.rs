@@ -28,12 +28,22 @@ impl Sampler {
             return argmax(logits);
         }
         let t = self.temperature.max(1e-4);
-        // softmax with temperature over the (optionally top-k-filtered) set
-        let mut idx: Vec<usize> = (0..logits.len()).collect();
-        if self.top_k > 0 && self.top_k < logits.len() {
-            idx.sort_unstable_by(|&a, &b| {
-                logits[b].partial_cmp(&logits[a]).unwrap()
-            });
+        // softmax with temperature over the (optionally top-k-filtered)
+        // set.  Sampler settings come from the network
+        // (/v1/completions) and logits from possibly-poisoned lanes, so
+        // non-finite logits are excluded up front on every stochastic
+        // path: in the weights they would turn the categorical total
+        // NaN (deterministically emitting the last candidate), and in a
+        // top-k sort NaN ranks above +inf and crowds out real tokens
+        // (total_cmp, not partial_cmp().unwrap() — no panics on the
+        // single engine-driver thread behind the whole server).
+        let mut idx: Vec<usize> =
+            (0..logits.len()).filter(|&i| logits[i].is_finite()).collect();
+        if idx.is_empty() {
+            return argmax(logits);
+        }
+        if self.top_k > 0 && self.top_k < idx.len() {
+            idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
             idx.truncate(self.top_k);
         }
         let maxl = idx
@@ -86,6 +96,28 @@ mod tests {
             let t = s.sample(&[5.0, 4.0, -100.0, -100.0], &mut rng);
             assert!(t < 2);
         }
+    }
+
+    #[test]
+    fn nan_logits_neither_panic_nor_crowd_out_finite_tokens() {
+        let s = Sampler { temperature: 1.0, top_k: 2, greedy: false };
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            // NaNs sort above every finite logit in the total order, so
+            // without filtering they would fill the whole top-2 set
+            let t = s.sample(&[f32::NAN, 1.0, f32::NAN, 0.5], &mut rng);
+            assert!(t == 1 || t == 3, "sampled NaN-logit token {t}");
+        }
+        // top_k disabled (the server default) takes a different path
+        // and must also exclude the NaN entry from the weights
+        let s0 = Sampler { temperature: 1.0, top_k: 0, greedy: false };
+        for _ in 0..50 {
+            let t = s0.sample(&[1.0, f32::NAN, 0.5], &mut rng);
+            assert!(t != 1, "sampled NaN-logit token");
+        }
+        // fully-poisoned row: still no panic
+        let t = s.sample(&[f32::NAN, f32::NAN], &mut rng);
+        assert!(t < 2);
     }
 
     #[test]

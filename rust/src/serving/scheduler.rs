@@ -1,0 +1,677 @@
+//! Continuous-batching admission layer between the HTTP frontend and
+//! the engine lanes.
+//!
+//! Connection threads [`Scheduler::enqueue`] requests into a bounded
+//! queue (overflow is rejected synchronously — the frontend answers
+//! 429); the single engine-driver thread [`Scheduler::take_next`]s one
+//! request per free lane according to the configured admission
+//! [`Policy`] and feeds it to the engine, so ordering is decided here,
+//! never by the engine's internal FIFO.  All counters and latency
+//! [`Histogram`]s for `/metrics` live behind the same lock.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::serving::engine::{DropReason, GenRequest, StreamEvent};
+
+/// Admission ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Oldest request first.
+    Fifo,
+    /// Shortest prompt first (FIFO tiebreak) — minimizes mean wait under
+    /// mixed prompt lengths at the cost of long-prompt fairness.
+    ShortestPrompt,
+    /// Earliest deadline first; requests whose deadline already expired
+    /// are dropped at take time (their stream gets
+    /// [`StreamEvent::Dropped`]).  Requests without a deadline rank
+    /// last, FIFO among themselves.
+    Deadline,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "fifo" => Ok(Policy::Fifo),
+            "spf" | "shortest-prompt" => Ok(Policy::ShortestPrompt),
+            "deadline" => Ok(Policy::Deadline),
+            other => Err(Error::Config(format!(
+                "unknown scheduler policy {other:?} \
+                 (expected fifo | spf | deadline)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::ShortestPrompt => "spf",
+            Policy::Deadline => "deadline",
+        }
+    }
+}
+
+/// Why an enqueue was refused (the HTTP layer maps this to a status).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// The bounded queue is at capacity — backpressure, answer 429.
+    QueueFull,
+    /// The server is shutting down (the driver already drained the
+    /// queue; accepting more would strand the request forever) — 503.
+    ShuttingDown,
+}
+
+/// One queued request: the generation spec plus its event stream and
+/// admission bookkeeping.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub req: GenRequest,
+    pub events: mpsc::Sender<StreamEvent>,
+    pub enqueued_at: Instant,
+    pub deadline: Option<Instant>,
+}
+
+/// Log-bucketed latency histogram: bucket `i` covers
+/// `[2^i, 2^(i+1))` microseconds, which spans 1 µs .. ~18 min in 40
+/// buckets.  Percentiles interpolate linearly within a bucket —
+/// plenty for p50/p95/p99 serving reports.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+const HIST_BUCKETS: usize = 40;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            max_s: 0.0,
+        }
+    }
+
+    pub fn observe(&mut self, d: Duration) {
+        self.observe_secs(d.as_secs_f64());
+    }
+
+    pub fn observe_secs(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(0.0);
+        let bucket = if us < 1.0 {
+            0
+        } else {
+            (us.log2() as usize).min(HIST_BUCKETS - 1)
+        };
+        self.counts[bucket] += 1;
+        self.count += 1;
+        self.sum_s += secs.max(0.0);
+        self.max_s = self.max_s.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Percentile (`p` in [0, 1]) in seconds, linearly interpolated
+    /// within the containing bucket; 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0);
+        let mut seen = 0.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = seen + c as f64;
+            if rank <= next {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (rank - seen) / c as f64;
+                let us = lo + (hi - lo) * frac;
+                // interpolation can overshoot the observed maximum
+                // (the containing bucket's upper edge); cap there
+                return (us / 1e6).min(self.max_s);
+            }
+            seen = next;
+        }
+        self.max_s
+    }
+
+    /// Summary as a JSON object (milliseconds, serving-report style).
+    pub fn to_json(&self) -> Json {
+        let ms = 1e3;
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean_ms", json::num(self.mean_secs() * ms)),
+            ("p50_ms", json::num(self.percentile(0.50) * ms)),
+            ("p95_ms", json::num(self.percentile(0.95) * ms)),
+            ("p99_ms", json::num(self.percentile(0.99) * ms)),
+            ("max_ms", json::num(self.max_s * ms)),
+        ])
+    }
+}
+
+/// Counters + histograms the scheduler maintains for `/metrics` and the
+/// loadgen report.
+#[derive(Debug, Default)]
+pub struct SchedMetrics {
+    pub enqueued: u64,
+    pub rejected: u64,
+    pub dropped_deadline: u64,
+    pub dropped_shutdown: u64,
+    /// requests whose client hung up (timeout/disconnect) before a lane
+    /// took them — detected at take time, never reach the engine
+    pub dropped_dead: u64,
+    pub started: u64,
+    pub completed: u64,
+    pub tokens_streamed: u64,
+    pub max_depth: usize,
+    /// enqueue -> take (scheduler wait only)
+    pub queue_wait: Histogram,
+    /// enqueue -> final event observed by the frontend
+    pub e2e_latency: Histogram,
+}
+
+#[derive(Debug)]
+struct Inner {
+    queue: VecDeque<QueuedRequest>,
+    next_id: u64,
+    metrics: SchedMetrics,
+    /// set by [`Scheduler::drain_shutdown`]; enqueues after it would
+    /// never be consumed, so they are rejected under the same lock
+    draining: bool,
+}
+
+/// Bounded, policy-ordered request queue shared between connection
+/// threads (producers) and the engine-driver thread (consumer).
+pub struct Scheduler {
+    capacity: usize,
+    policy: Policy,
+    inner: Mutex<Inner>,
+    nonempty: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(capacity: usize, policy: Policy) -> Self {
+        Scheduler {
+            capacity: capacity.max(1),
+            policy,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                next_id: 0,
+                metrics: SchedMetrics::default(),
+                draining: false,
+            }),
+            nonempty: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue a request, or reject it synchronously when the queue is
+    /// at capacity (the caller answers 429 — requests already running on
+    /// lanes don't count against the queue bound).
+    pub fn enqueue(
+        &self,
+        req: GenRequest,
+        deadline: Option<Duration>,
+        events: mpsc::Sender<StreamEvent>,
+    ) -> std::result::Result<u64, Rejection> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.draining {
+            return Err(Rejection::ShuttingDown);
+        }
+        if inner.queue.len() >= self.capacity {
+            inner.metrics.rejected += 1;
+            return Err(Rejection::QueueFull);
+        }
+        let now = Instant::now();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.queue.push_back(QueuedRequest {
+            id,
+            req,
+            events,
+            enqueued_at: now,
+            deadline: deadline.map(|d| now + d),
+        });
+        inner.metrics.enqueued += 1;
+        let depth = inner.queue.len();
+        inner.metrics.max_depth = inner.metrics.max_depth.max(depth);
+        drop(inner);
+        self.nonempty.notify_all();
+        Ok(id)
+    }
+
+    fn drop_expired(inner: &mut Inner, now: Instant) {
+        let expired: Vec<usize> = inner
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.deadline.is_some_and(|d| d <= now))
+            .map(|(i, _)| i)
+            .collect();
+        for i in expired.into_iter().rev() {
+            let q = inner.queue.remove(i).unwrap();
+            let _ = q.events.send(StreamEvent::Dropped(DropReason::Deadline));
+            inner.metrics.dropped_deadline += 1;
+        }
+    }
+
+    /// Drop expired-deadline requests now (deadline policy only).  The
+    /// driver calls this every iteration — not just when a lane is
+    /// free — so under full-lane saturation dead requests neither hold
+    /// bounded-queue slots (causing spurious 429s) nor keep their
+    /// clients waiting for a lane to free before learning they were
+    /// dropped.
+    pub fn expire(&self, now: Instant) {
+        if self.policy != Policy::Deadline {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        Self::drop_expired(&mut inner, now);
+    }
+
+    /// Pop the next request per policy, dropping expired-deadline
+    /// requests first (deadline policy only; their event stream gets a
+    /// terminal [`StreamEvent::Dropped`]).  Returns `None` when nothing
+    /// is admissible.
+    ///
+    /// The [`StreamEvent::Admitted`] sent here doubles as a liveness
+    /// probe: a request whose client already hung up (timeout or
+    /// disconnect dropped the receiver) fails the send, is discarded
+    /// without ever reaching the engine — no lane spends decode steps
+    /// streaming into a closed channel — and the next candidate is
+    /// taken instead.  The engine re-announces `Admitted` when the lane
+    /// actually starts; receivers treat the duplicate as a refresh.
+    pub fn take_next(&self, now: Instant) -> Option<QueuedRequest> {
+        let mut inner = self.inner.lock().unwrap();
+        if self.policy == Policy::Deadline {
+            Self::drop_expired(&mut inner, now);
+        }
+        loop {
+            let idx = match self.policy {
+                Policy::Fifo => {
+                    if inner.queue.is_empty() {
+                        return None;
+                    }
+                    0
+                }
+                Policy::ShortestPrompt => {
+                    let mut best: Option<(usize, usize)> = None;
+                    for (i, q) in inner.queue.iter().enumerate() {
+                        let len = q.req.prompt.len();
+                        if best.is_none_or(|(_, b)| len < b) {
+                            best = Some((i, len));
+                        }
+                    }
+                    best?.0
+                }
+                Policy::Deadline => {
+                    let mut best: Option<(usize, Option<Instant>)> = None;
+                    for (i, q) in inner.queue.iter().enumerate() {
+                        let better = match (&best, q.deadline) {
+                            (None, _) => true,
+                            (Some((_, None)), Some(_)) => true,
+                            (Some((_, Some(b))), Some(d)) => d < *b,
+                            _ => false,
+                        };
+                        if better {
+                            best = Some((i, q.deadline));
+                        }
+                    }
+                    best?.0
+                }
+            };
+            let q = inner.queue.remove(idx).unwrap();
+            if q.events.send(StreamEvent::Admitted).is_err() {
+                inner.metrics.dropped_dead += 1;
+                continue;
+            }
+            let wait = now.saturating_duration_since(q.enqueued_at);
+            inner.metrics.queue_wait.observe(wait);
+            inner.metrics.started += 1;
+            return Some(q);
+        }
+    }
+
+    /// Block until the queue is non-empty or `timeout` elapses; returns
+    /// whether work is available.  Driver idle-wait.
+    pub fn wait_for_work(&self, timeout: Duration) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if !inner.queue.is_empty() {
+            return true;
+        }
+        let (inner, _) = self
+            .nonempty
+            .wait_timeout_while(inner, timeout, |i| i.queue.is_empty())
+            .unwrap();
+        !inner.queue.is_empty()
+    }
+
+    /// Drop every queued request with a terminal `Dropped(Shutdown)`
+    /// event and refuse all further enqueues (server teardown) — an
+    /// enqueue racing past the frontend's liveness check after this
+    /// would otherwise sit unconsumed until its client times out.
+    pub fn drain_shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.draining = true;
+        while let Some(q) = inner.queue.pop_front() {
+            let _ = q.events.send(StreamEvent::Dropped(DropReason::Shutdown));
+            inner.metrics.dropped_shutdown += 1;
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Frontend callback when a request reached its terminal event:
+    /// feeds the end-to-end latency histogram and token counters.
+    pub fn observe_completion(&self, e2e: Duration, tokens: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.metrics.e2e_latency.observe(e2e);
+        inner.metrics.completed += 1;
+        inner.metrics.tokens_streamed += tokens as u64;
+    }
+
+    /// Scheduler section of the `/metrics` document.
+    pub fn metrics_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let m = &inner.metrics;
+        json::obj(vec![
+            ("policy", json::s(self.policy.as_str())),
+            ("capacity", json::num(self.capacity as f64)),
+            ("depth", json::num(inner.queue.len() as f64)),
+            ("max_depth", json::num(m.max_depth as f64)),
+            ("enqueued", json::num(m.enqueued as f64)),
+            ("rejected", json::num(m.rejected as f64)),
+            ("dropped_deadline", json::num(m.dropped_deadline as f64)),
+            ("dropped_shutdown", json::num(m.dropped_shutdown as f64)),
+            ("dropped_dead", json::num(m.dropped_dead as f64)),
+            ("started", json::num(m.started as f64)),
+            ("completed", json::num(m.completed as f64)),
+            ("tokens_streamed", json::num(m.tokens_streamed as f64)),
+            ("queue_wait", m.queue_wait.to_json()),
+            ("e2e_latency", m.e2e_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::sampler::Sampler;
+
+    fn req(prompt_len: usize) -> GenRequest {
+        GenRequest {
+            prompt: vec![1; prompt_len.max(1)],
+            max_new_tokens: 4,
+            sampler: Sampler::greedy(),
+        }
+    }
+
+    fn chan() -> (mpsc::Sender<StreamEvent>, mpsc::Receiver<StreamEvent>) {
+        mpsc::channel()
+    }
+
+    /// Enqueue keeping the receiver alive (take_next's liveness probe
+    /// discards requests whose receiver was dropped).
+    fn enq(
+        s: &Scheduler,
+        prompt_len: usize,
+        deadline: Option<Duration>,
+        held: &mut Vec<mpsc::Receiver<StreamEvent>>,
+    ) -> u64 {
+        let (tx, rx) = chan();
+        held.push(rx);
+        s.enqueue(req(prompt_len), deadline, tx).unwrap()
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order() {
+        let s = Scheduler::new(8, Policy::Fifo);
+        let mut held = Vec::new();
+        for n in [3, 1, 2] {
+            enq(&s, n, None, &mut held);
+        }
+        let now = Instant::now();
+        let lens: Vec<usize> = (0..3)
+            .map(|_| s.take_next(now).unwrap().req.prompt.len())
+            .collect();
+        assert_eq!(lens, vec![3, 1, 2]);
+        assert!(s.take_next(now).is_none());
+    }
+
+    #[test]
+    fn shortest_prompt_first_with_fifo_tiebreak() {
+        let s = Scheduler::new(8, Policy::ShortestPrompt);
+        let mut held = Vec::new();
+        let ids: Vec<u64> = [5, 2, 7, 2]
+            .iter()
+            .map(|&n| enq(&s, n, None, &mut held))
+            .collect();
+        let now = Instant::now();
+        let order: Vec<u64> =
+            (0..4).map(|_| s.take_next(now).unwrap().id).collect();
+        // both len-2 prompts first, in arrival order; then 5; then 7
+        assert_eq!(order, vec![ids[1], ids[3], ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let s = Scheduler::new(2, Policy::Fifo);
+        let mut held = Vec::new();
+        enq(&s, 1, None, &mut held);
+        enq(&s, 1, None, &mut held);
+        assert_eq!(
+            s.enqueue(req(1), None, chan().0),
+            Err(Rejection::QueueFull)
+        );
+        // freeing a slot re-opens admission
+        assert!(s.take_next(Instant::now()).is_some());
+        enq(&s, 1, None, &mut held);
+        let m = s.metrics_json();
+        assert_eq!(m.get("rejected").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn deadline_policy_drops_expired_and_orders_by_deadline() {
+        let s = Scheduler::new(8, Policy::Deadline);
+        let mut held = Vec::new();
+        let (tx_expired, rx_expired) = chan();
+        s.enqueue(req(1), Some(Duration::ZERO), tx_expired).unwrap();
+        let far = enq(&s, 2, Some(Duration::from_secs(60)), &mut held);
+        let near = enq(&s, 3, Some(Duration::from_secs(5)), &mut held);
+        let none = enq(&s, 4, None, &mut held);
+        // take after the first deadline passed
+        let now = Instant::now() + Duration::from_millis(1);
+        let order: Vec<u64> =
+            (0..3).map(|_| s.take_next(now).unwrap().id).collect();
+        assert_eq!(order, vec![near, far, none]);
+        assert!(matches!(
+            rx_expired.try_recv(),
+            Ok(StreamEvent::Dropped(DropReason::Deadline))
+        ));
+        let m = s.metrics_json();
+        assert_eq!(
+            m.get("dropped_deadline").unwrap().as_f64().unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn take_skips_requests_whose_client_hung_up() {
+        let s = Scheduler::new(8, Policy::Fifo);
+        // first request's client is gone (receiver dropped)...
+        s.enqueue(req(1), None, chan().0).unwrap();
+        // ...second is live
+        let (tx, rx) = chan();
+        let live = s.enqueue(req(2), None, tx).unwrap();
+        let taken = s.take_next(Instant::now()).unwrap();
+        assert_eq!(taken.id, live);
+        assert!(matches!(rx.try_recv(), Ok(StreamEvent::Admitted)));
+        assert_eq!(s.depth(), 0);
+        let m = s.metrics_json();
+        assert_eq!(m.get("dropped_dead").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(m.get("started").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn expire_frees_queue_slots_without_a_take() {
+        // lane-saturation shape: the driver never calls take_next, yet
+        // expired requests must be dropped and their slots reopened
+        let s = Scheduler::new(2, Policy::Deadline);
+        let (tx, rx) = chan();
+        s.enqueue(req(1), Some(Duration::ZERO), tx).unwrap();
+        s.enqueue(req(2), Some(Duration::ZERO), chan().0).unwrap();
+        assert_eq!(
+            s.enqueue(req(3), None, chan().0),
+            Err(Rejection::QueueFull)
+        );
+        s.expire(Instant::now() + Duration::from_millis(1));
+        assert_eq!(s.depth(), 0);
+        assert!(matches!(
+            rx.try_recv(),
+            Ok(StreamEvent::Dropped(DropReason::Deadline))
+        ));
+        assert!(s.enqueue(req(3), None, chan().0).is_ok());
+        // expire is a no-op for other policies
+        let f = Scheduler::new(2, Policy::Fifo);
+        f.enqueue(req(1), Some(Duration::ZERO), chan().0).unwrap();
+        f.expire(Instant::now() + Duration::from_millis(1));
+        assert_eq!(f.depth(), 1);
+    }
+
+    #[test]
+    fn non_deadline_policies_ignore_deadlines() {
+        let s = Scheduler::new(8, Policy::Fifo);
+        let (tx, rx) = chan();
+        let id = s.enqueue(req(1), Some(Duration::ZERO), tx).unwrap();
+        let now = Instant::now() + Duration::from_millis(1);
+        assert_eq!(s.take_next(now).unwrap().id, id);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn drain_shutdown_notifies_all_queued() {
+        let s = Scheduler::new(8, Policy::Fifo);
+        let rxs: Vec<_> = (0..3)
+            .map(|_| {
+                let (tx, rx) = chan();
+                s.enqueue(req(1), None, tx).unwrap();
+                rx
+            })
+            .collect();
+        s.drain_shutdown();
+        assert_eq!(s.depth(), 0);
+        for rx in rxs {
+            assert!(matches!(
+                rx.try_recv(),
+                Ok(StreamEvent::Dropped(DropReason::Shutdown))
+            ));
+        }
+        // a racing enqueue after the drain must be refused, not stranded
+        assert_eq!(
+            s.enqueue(req(1), None, chan().0),
+            Err(Rejection::ShuttingDown)
+        );
+    }
+
+    #[test]
+    fn wait_for_work_wakes_on_enqueue() {
+        use std::sync::Arc;
+        let s = Arc::new(Scheduler::new(8, Policy::Fifo));
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.wait_for_work(Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (tx, _rx) = chan();
+        s.enqueue(req(1), None, tx).unwrap();
+        assert!(t.join().unwrap());
+        // empty queue + short timeout -> false
+        s.take_next(Instant::now()).unwrap();
+        assert!(!s.wait_for_work(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn histogram_percentiles_are_ordered_and_bracketed() {
+        let mut h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.observe(Duration::from_millis(ms));
+        }
+        let (p50, p95, p99) =
+            (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
+        assert!(p99 <= h.max_secs() + 1e-9);
+        // p50 of 1..=100ms must land within the right order of magnitude
+        assert!((0.02..0.13).contains(&p50), "p50 {p50}");
+        assert_eq!(h.count(), 100);
+        let j = h.to_json();
+        assert!(j.get("p95_ms").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [Policy::Fifo, Policy::ShortestPrompt, Policy::Deadline] {
+            assert_eq!(Policy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Policy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn queue_wait_observed_on_take() {
+        let s = Scheduler::new(4, Policy::Fifo);
+        let (tx, _rx) = chan();
+        s.enqueue(req(1), None, tx).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        s.take_next(Instant::now()).unwrap();
+        let m = s.metrics_json();
+        let wait = m.get("queue_wait").unwrap();
+        assert_eq!(wait.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(wait.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

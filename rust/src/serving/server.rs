@@ -1,0 +1,882 @@
+//! Std-only HTTP/1.1 serving frontend over the continuous-batching
+//! engine.
+//!
+//! Threading model: one *dedicated engine-driver thread* owns the PJRT
+//! client, the compiled bundle, and the device-resident [`Engine`] —
+//! none of which are `Send` — and pumps it in a loop; connection
+//! threads only touch the shared [`Scheduler`] and per-request
+//! channels.  The driver admits queued requests per the configured
+//! [`Policy`] whenever lanes free up, so the device never idles while
+//! requests wait and HTTP I/O never blocks a decode step.
+//!
+//! Endpoints (all JSON, hand-rolled on the repo's `json.rs`):
+//!
+//! * `POST /v1/completions` — body `{"prompt": [ints], "max_tokens",
+//!   "temperature", "top_k", "greedy", "stream", "deadline_ms"}`.
+//!   Non-streaming answers one JSON document; `"stream": true` answers
+//!   `Transfer-Encoding: chunked` with one NDJSON line per sampled
+//!   token as it leaves the device.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — engine counters ([`EngineBackend::stats`] +
+//!   transfer bytes), scheduler queue/latency histograms, uptime.
+//!
+//! Backpressure: the scheduler queue is bounded; overflow is answered
+//! `429 Too Many Requests` with `Retry-After` before any engine work
+//! happens.
+//!
+//! [`Engine`]: crate::serving::Engine
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::serving::engine::{EngineBackend, GenRequest, StreamEvent};
+use crate::serving::sampler::Sampler;
+use crate::serving::scheduler::{Policy, Rejection, Scheduler};
+
+const MAX_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+const MAX_BODY: usize = 1024 * 1024;
+/// How often the driver republishes engine stats for `/metrics`.
+const PUBLISH_EVERY: Duration = Duration::from_millis(50);
+/// Driver idle wait and connection event-poll granularity.
+const TICK: Duration = Duration::from_millis(25);
+
+/// Serving frontend configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bounded scheduler queue; overflow answers 429.
+    pub queue_cap: usize,
+    pub policy: Policy,
+    /// `max_tokens` default when the request omits it.
+    pub default_max_new: usize,
+    /// Hard cap on `max_tokens` (requests are clamped, not rejected).
+    pub max_new_cap: usize,
+    /// Requests with longer prompts are rejected with 400.
+    pub max_prompt_len: usize,
+    /// When known (from the manifest), prompt token ids are range-checked.
+    pub vocab: Option<usize>,
+    /// Give up on a request (504 / error chunk) after this long.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_cap: 64,
+            policy: Policy::Fifo,
+            default_max_new: 32,
+            max_new_cap: 512,
+            max_prompt_len: 4096,
+            vocab: None,
+            request_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// A parsed HTTP request (header names lowercased).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one CRLF-terminated line, capped at [`MAX_LINE`]; `None` on
+/// clean EOF before any byte.
+fn read_line(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(MAX_LINE as u64)
+        .read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') && n >= MAX_LINE {
+        return Err(Error::Serving("header line too long".into()));
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| Error::Serving("non-utf8 header line".into()))
+}
+
+/// Parse one HTTP/1.1 request (request line, headers, content-length
+/// body).  `Ok(None)` when the peer closed before sending anything.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let Some(line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), t.to_string())
+        }
+        _ => {
+            return Err(Error::Serving(format!("bad request line {line:?}")))
+        }
+    };
+    let path = target.split('?').next().unwrap_or("").to_string();
+    let mut headers = Vec::new();
+    loop {
+        let Some(line) = read_line(r)? else {
+            return Err(Error::Serving("eof in headers".into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(Error::Serving("too many headers".into()));
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(Error::Serving(format!("bad header {line:?}")));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(Error::Serving(
+            "chunked request bodies not supported".into(),
+        ));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| Error::Serving("bad content-length".into()))?,
+    };
+    if len > MAX_BODY {
+        return Err(Error::Serving("request body too large".into()));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize a complete (non-chunked) response.
+pub fn http_response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra_headers: &[(&str, &str)],
+) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        body.len()
+    )
+    .into_bytes();
+    for (k, v) in extra_headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+/// Response head that opens a chunked stream.
+pub fn chunked_response_head(content_type: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )
+    .into_bytes()
+}
+
+/// One chunk of a chunked transfer: `<hex len>\r\n<data>\r\n`.
+pub fn encode_chunk(data: &[u8]) -> Vec<u8> {
+    let mut out = format!("{:x}\r\n", data.len()).into_bytes();
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The terminal chunk of a chunked transfer.
+pub const LAST_CHUNK: &[u8] = b"0\r\n\r\n";
+
+fn write_json(
+    w: &mut impl Write,
+    status: u16,
+    body: &Json,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    let bytes = http_response(
+        status,
+        "application/json",
+        body.to_string_compact().as_bytes(),
+        extra_headers,
+    );
+    w.write_all(&bytes)
+}
+
+fn err_json(msg: &str) -> Json {
+    json::obj(vec![("error", json::s(msg))])
+}
+
+/// A parsed `/v1/completions` body.
+#[derive(Debug, Clone)]
+pub struct CompletionRequest {
+    pub gen: GenRequest,
+    pub stream: bool,
+    pub deadline: Option<Duration>,
+}
+
+/// Parse and validate a completion request body against the server
+/// limits; `Err` carries the client-facing message (answered as 400).
+pub fn parse_completion(
+    body: &[u8],
+    cfg: &ServerConfig,
+) -> std::result::Result<CompletionRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8")?;
+    let doc = Json::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    let prompt_json = doc
+        .opt("prompt")
+        .ok_or("missing field \"prompt\" (array of token ids)")?;
+    let arr = prompt_json
+        .as_arr()
+        .map_err(|_| "\"prompt\" must be an array of token ids")?;
+    if arr.is_empty() {
+        return Err("\"prompt\" must not be empty".into());
+    }
+    if arr.len() > cfg.max_prompt_len {
+        return Err(format!(
+            "prompt too long ({} > max {})",
+            arr.len(),
+            cfg.max_prompt_len
+        ));
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let t = v
+            .as_i64()
+            .map_err(|_| "prompt entries must be integers".to_string())?;
+        if t < 0 || t > i32::MAX as i64 {
+            return Err(format!("prompt token {t} out of range"));
+        }
+        if let Some(vocab) = cfg.vocab {
+            if t as usize >= vocab {
+                return Err(format!(
+                    "prompt token {t} >= vocab_size {vocab}"
+                ));
+            }
+        }
+        prompt.push(t as i32);
+    }
+    let max_tokens = match doc.opt("max_tokens") {
+        None => cfg.default_max_new,
+        Some(v) => v
+            .as_usize()
+            .map_err(|_| "\"max_tokens\" must be a non-negative integer")?,
+    }
+    .clamp(1, cfg.max_new_cap.max(1));
+    let temperature = match doc.opt("temperature") {
+        None => 1.0f32,
+        Some(v) => {
+            let t = v.as_f64().map_err(|_| "\"temperature\" must be a number")?;
+            if !(t > 0.0 && t.is_finite()) {
+                return Err("\"temperature\" must be positive".into());
+            }
+            t as f32
+        }
+    };
+    let top_k = match doc.opt("top_k") {
+        None => 0,
+        Some(v) => v
+            .as_usize()
+            .map_err(|_| "\"top_k\" must be a non-negative integer")?,
+    };
+    let greedy = match doc.opt("greedy") {
+        None => false,
+        Some(v) => v.as_bool().map_err(|_| "\"greedy\" must be a bool")?,
+    };
+    let stream = match doc.opt("stream") {
+        None => false,
+        Some(v) => v.as_bool().map_err(|_| "\"stream\" must be a bool")?,
+    };
+    let deadline = match doc.opt("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v
+                .as_usize()
+                .map_err(|_| "\"deadline_ms\" must be a non-negative integer")?;
+            Some(Duration::from_millis(ms.min(86_400_000) as u64))
+        }
+    };
+    Ok(CompletionRequest {
+        gen: GenRequest {
+            prompt,
+            max_new_tokens: max_tokens,
+            sampler: Sampler { temperature, top_k, greedy },
+        },
+        stream,
+        deadline,
+    })
+}
+
+/// State shared between the accept loop, connection threads, and the
+/// engine-driver thread.
+struct Shared {
+    cfg: ServerConfig,
+    sched: Scheduler,
+    engine_stats: Mutex<BTreeMap<String, f64>>,
+    shutdown: Arc<AtomicBool>,
+    driver_dead: AtomicBool,
+    started: Instant,
+}
+
+/// Handle passed to the engine-init closure on the driver thread; call
+/// [`Driver::drive`] with the backend once it is constructed.  The
+/// backend is built *inside* the driver thread because the PJRT client,
+/// bundle, and engine are not `Send`.
+pub struct Driver {
+    shared: Arc<Shared>,
+}
+
+impl Driver {
+    fn publish(&self, backend: &dyn EngineBackend) {
+        let mut stats = backend.stats();
+        stats.insert(
+            "free_lanes".into(),
+            backend.free_lanes() as f64,
+        );
+        *self.shared.engine_stats.lock().unwrap() = stats;
+    }
+
+    /// The engine-driver loop: admit per policy while lanes are free,
+    /// pump, republish stats, idle on the scheduler condvar when
+    /// drained.  Returns when the server shuts down.
+    pub fn drive(self, backend: &mut dyn EngineBackend) -> Result<()> {
+        let sh = &self.shared;
+        self.publish(backend);
+        let mut last_publish = Instant::now();
+        while !sh.shutdown.load(Ordering::Relaxed) {
+            let now = Instant::now();
+            // expire first, even with zero free lanes: dead requests
+            // must not hold queue slots or keep their clients waiting
+            sh.sched.expire(now);
+            while backend.free_lanes() > 0 {
+                match sh.sched.take_next(now) {
+                    Some(q) => backend.submit_streaming(q.req, q.events),
+                    None => break,
+                }
+            }
+            let remaining = backend.pump()?;
+            if last_publish.elapsed() >= PUBLISH_EVERY {
+                self.publish(backend);
+                last_publish = Instant::now();
+            }
+            if remaining == 0 {
+                sh.sched.wait_for_work(TICK);
+            }
+        }
+        sh.sched.drain_shutdown();
+        self.publish(backend);
+        Ok(())
+    }
+}
+
+/// Run the serving frontend until `shutdown` is set.
+///
+/// `driver_fn` runs on the dedicated engine-driver thread; it must
+/// construct the backend (PJRT client + bundle + [`Engine`], or a
+/// [`MockBackend`]) and hand it to [`Driver::drive`].  If it returns an
+/// error — e.g. artifacts failed to load — the server shuts down and
+/// that error is returned.
+///
+/// [`Engine`]: crate::serving::Engine
+/// [`MockBackend`]: crate::serving::MockBackend
+pub fn serve<F>(
+    listener: TcpListener,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    driver_fn: F,
+) -> Result<()>
+where
+    F: FnOnce(Driver) -> Result<()> + Send,
+{
+    let shared = Arc::new(Shared {
+        sched: Scheduler::new(cfg.queue_cap, cfg.policy),
+        cfg,
+        engine_stats: Mutex::new(BTreeMap::new()),
+        shutdown,
+        driver_dead: AtomicBool::new(false),
+        started: Instant::now(),
+    });
+    listener.set_nonblocking(true)?;
+    std::thread::scope(|scope| -> Result<()> {
+        let driver_shared = shared.clone();
+        let driver = scope.spawn(move || {
+            let r = driver_fn(Driver { shared: driver_shared.clone() });
+            driver_shared.driver_dead.store(true, Ordering::SeqCst);
+            driver_shared.shutdown.store(true, Ordering::SeqCst);
+            // drive() drains on a clean exit, but an early driver_fn
+            // failure (e.g. artifacts missing) must also terminate any
+            // requests enqueued while the engine was still loading —
+            // otherwise their connection threads block serve()'s scope
+            // until request_timeout
+            driver_shared.sched.drain_shutdown();
+            r
+        });
+        while !shared.shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let conn_shared = shared.clone();
+                    scope.spawn(move || handle_connection(stream, conn_shared));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    let _ = driver.join();
+                    return Err(e.into());
+                }
+            }
+        }
+        match driver.join() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Serving("engine driver panicked".into())),
+        }
+    })
+}
+
+fn handle_connection(stream: TcpStream, sh: Arc<Shared>) {
+    // BSD-derived platforms make accepted sockets inherit the
+    // listener's O_NONBLOCK (set for the shutdown-aware accept loop);
+    // reads here must block
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let req = match read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            let _ = write_json(
+                &mut writer,
+                400,
+                &err_json(&e.to_string()),
+                &[],
+            );
+            return;
+        }
+    };
+    let _ = route(&mut writer, &req, &sh);
+}
+
+fn route(
+    w: &mut TcpStream,
+    req: &HttpRequest,
+    sh: &Arc<Shared>,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => write_json(
+            w,
+            200,
+            &json::obj(vec![("status", json::s("ok"))]),
+            &[],
+        ),
+        ("GET", "/metrics") => {
+            write_json(w, 200, &metrics_document(sh), &[])
+        }
+        ("POST", "/v1/completions") => handle_completion(w, &req.body, sh),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => {
+            write_json(w, 405, &err_json("method not allowed"), &[])
+        }
+        _ => write_json(w, 404, &err_json("not found"), &[]),
+    }
+}
+
+fn metrics_document(sh: &Shared) -> Json {
+    let engine = Json::Obj(
+        sh.engine_stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), json::num(*v)))
+            .collect(),
+    );
+    json::obj(vec![
+        ("engine", engine),
+        ("scheduler", sh.sched.metrics_json()),
+        (
+            "server",
+            json::obj(vec![
+                (
+                    "uptime_s",
+                    json::num(sh.started.elapsed().as_secs_f64()),
+                ),
+                (
+                    "driver_alive",
+                    Json::Bool(!sh.driver_dead.load(Ordering::Relaxed)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn handle_completion(
+    w: &mut TcpStream,
+    body: &[u8],
+    sh: &Arc<Shared>,
+) -> std::io::Result<()> {
+    let creq = match parse_completion(body, &sh.cfg) {
+        Ok(c) => c,
+        Err(msg) => return write_json(w, 400, &err_json(&msg), &[]),
+    };
+    if sh.driver_dead.load(Ordering::Relaxed) {
+        return write_json(
+            w,
+            503,
+            &err_json("engine driver not running"),
+            &[],
+        );
+    }
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let stream_mode = creq.stream;
+    let id = match sh.sched.enqueue(creq.gen, creq.deadline, tx) {
+        Ok(id) => id,
+        Err(Rejection::QueueFull) => {
+            return write_json(
+                w,
+                429,
+                &err_json("queue full"),
+                &[("Retry-After", "1")],
+            )
+        }
+        Err(Rejection::ShuttingDown) => {
+            return write_json(w, 503, &err_json("shutting down"), &[])
+        }
+    };
+    if stream_mode {
+        stream_completion(w, &rx, id, t0, sh)
+    } else {
+        unary_completion(w, &rx, id, t0, sh)
+    }
+}
+
+/// Wait out a request's event stream and answer one JSON document.
+fn unary_completion(
+    w: &mut TcpStream,
+    rx: &mpsc::Receiver<StreamEvent>,
+    id: u64,
+    t0: Instant,
+    sh: &Arc<Shared>,
+) -> std::io::Result<()> {
+    // queue_ms is measured here, enqueue -> Admitted: the engine's own
+    // queue_time misses the scheduler-queue wait (the engine only sees
+    // a request once a lane is about to take it)
+    let mut queue_ms: Option<f64> = None;
+    loop {
+        match rx.recv_timeout(TICK) {
+            Ok(StreamEvent::Admitted) => {
+                queue_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Done(res)) => {
+                sh.sched.observe_completion(t0.elapsed(), res.tokens.len());
+                let tokens =
+                    res.tokens.iter().map(|&t| json::num(t as f64)).collect();
+                let body = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("tokens", json::arr(tokens)),
+                    ("prompt_len", json::num(res.prompt_len as f64)),
+                    (
+                        "queue_ms",
+                        json::num(queue_ms.unwrap_or_else(|| {
+                            res.queue_time.as_secs_f64() * 1e3
+                        })),
+                    ),
+                    ("run_ms", json::num(res.run_time.as_secs_f64() * 1e3)),
+                ]);
+                return write_json(w, 200, &body, &[]);
+            }
+            Ok(StreamEvent::Dropped(reason)) => {
+                return write_json(w, 503, &err_json(reason.as_str()), &[]);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if t0.elapsed() > sh.cfg.request_timeout {
+                    return write_json(
+                        w,
+                        504,
+                        &err_json("request timed out"),
+                        &[],
+                    );
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return write_json(
+                    w,
+                    500,
+                    &err_json("engine driver gone"),
+                    &[],
+                );
+            }
+        }
+    }
+}
+
+/// Stream a request's tokens as NDJSON lines over chunked transfer
+/// encoding, one chunk per sampled token.
+fn stream_completion(
+    w: &mut TcpStream,
+    rx: &mpsc::Receiver<StreamEvent>,
+    id: u64,
+    t0: Instant,
+    sh: &Arc<Shared>,
+) -> std::io::Result<()> {
+    w.write_all(&chunked_response_head("application/x-ndjson"))?;
+    let send_line = |w: &mut TcpStream, doc: &Json| -> std::io::Result<()> {
+        let mut line = doc.to_string_compact().into_bytes();
+        line.push(b'\n');
+        w.write_all(&encode_chunk(&line))
+    };
+    // enqueue -> Admitted, covering the scheduler-queue wait the
+    // engine's own queue_time can't see
+    let mut queue_ms: Option<f64> = None;
+    loop {
+        match rx.recv_timeout(TICK) {
+            Ok(StreamEvent::Admitted) => {
+                queue_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                send_line(
+                    w,
+                    &json::obj(vec![
+                        ("event", json::s("admitted")),
+                        ("id", json::num(id as f64)),
+                    ]),
+                )?;
+            }
+            Ok(StreamEvent::Token(t)) => {
+                send_line(
+                    w,
+                    &json::obj(vec![("token", json::num(t as f64))]),
+                )?;
+            }
+            Ok(StreamEvent::Done(res)) => {
+                sh.sched.observe_completion(t0.elapsed(), res.tokens.len());
+                send_line(
+                    w,
+                    &json::obj(vec![
+                        ("done", Json::Bool(true)),
+                        ("tokens", json::num(res.tokens.len() as f64)),
+                        (
+                            "queue_ms",
+                            json::num(queue_ms.unwrap_or_else(|| {
+                                res.queue_time.as_secs_f64() * 1e3
+                            })),
+                        ),
+                        (
+                            "run_ms",
+                            json::num(res.run_time.as_secs_f64() * 1e3),
+                        ),
+                    ]),
+                )?;
+                return w.write_all(LAST_CHUNK);
+            }
+            Ok(StreamEvent::Dropped(reason)) => {
+                send_line(
+                    w,
+                    &json::obj(vec![("error", json::s(reason.as_str()))]),
+                )?;
+                return w.write_all(LAST_CHUNK);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if t0.elapsed() > sh.cfg.request_timeout {
+                    send_line(
+                        w,
+                        &json::obj(vec![(
+                            "error",
+                            json::s("request timed out"),
+                        )]),
+                    )?;
+                    return w.write_all(LAST_CHUNK);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                send_line(
+                    w,
+                    &json::obj(vec![(
+                        "error",
+                        json::s("engine driver gone"),
+                    )]),
+                )?;
+                return w.write_all(LAST_CHUNK);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let req = read_request(&mut Cursor::new(&raw[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn strips_query_and_handles_no_body() {
+        let raw = b"GET /metrics?pretty=1 HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn eof_and_garbage_are_distinguished() {
+        assert!(read_request(&mut Cursor::new(b"" as &[u8]))
+            .unwrap()
+            .is_none());
+        assert!(read_request(&mut Cursor::new(b"nonsense\r\n\r\n" as &[u8]))
+            .is_err());
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn chunk_framing_roundtrip() {
+        let c = encode_chunk(b"hello");
+        assert_eq!(c, b"5\r\nhello\r\n");
+        assert_eq!(encode_chunk(b""), b"0\r\n\r\n");
+        assert_eq!(LAST_CHUNK, b"0\r\n\r\n");
+        // 16+ byte payload exercises multi-digit hex length
+        let c = encode_chunk(&[b'x'; 26]);
+        assert!(c.starts_with(b"1a\r\n"));
+    }
+
+    #[test]
+    fn completion_parsing_applies_defaults_and_overrides() {
+        let cfg = ServerConfig::default();
+        let c = parse_completion(
+            br#"{"prompt": [1, 2, 3]}"#,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(c.gen.prompt, vec![1, 2, 3]);
+        assert_eq!(c.gen.max_new_tokens, cfg.default_max_new);
+        assert!(!c.gen.sampler.greedy);
+        assert_eq!(c.gen.sampler.top_k, 0);
+        assert!(!c.stream);
+        assert!(c.deadline.is_none());
+
+        let c = parse_completion(
+            br#"{"prompt": [5], "max_tokens": 7, "temperature": 0.5,
+                 "top_k": 40, "greedy": true, "stream": true,
+                 "deadline_ms": 250}"#,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(c.gen.max_new_tokens, 7);
+        assert!((c.gen.sampler.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(c.gen.sampler.top_k, 40);
+        assert!(c.gen.sampler.greedy);
+        assert!(c.stream);
+        assert_eq!(c.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn completion_parsing_rejects_bad_input() {
+        let cfg = ServerConfig { vocab: Some(100), ..Default::default() };
+        for body in [
+            &br#"{}"#[..],
+            br#"{"prompt": []}"#,
+            br#"{"prompt": "text"}"#,
+            br#"{"prompt": [1.5]}"#,
+            br#"{"prompt": [-1]}"#,
+            br#"{"prompt": [100]}"#,
+            br#"{"prompt": [1], "temperature": 0}"#,
+            br#"{"prompt": [1], "max_tokens": "many"}"#,
+            br#"not json"#,
+        ] {
+            assert!(
+                parse_completion(body, &cfg).is_err(),
+                "{}",
+                String::from_utf8_lossy(body)
+            );
+        }
+    }
+
+    #[test]
+    fn completion_parsing_clamps_max_tokens() {
+        let cfg = ServerConfig { max_new_cap: 10, ..Default::default() };
+        let c = parse_completion(
+            br#"{"prompt": [1], "max_tokens": 99999}"#,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(c.gen.max_new_tokens, 10);
+    }
+
+    #[test]
+    fn response_bytes_have_expected_shape() {
+        let r = http_response(429, "application/json", b"{}", &[(
+            "Retry-After",
+            "1",
+        )]);
+        let text = String::from_utf8(r).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+        let head = String::from_utf8(chunked_response_head("text/plain"))
+            .unwrap();
+        assert!(head.contains("Transfer-Encoding: chunked\r\n"));
+    }
+}

@@ -1,0 +1,350 @@
+//! Integration tests for the serving frontend: scheduler policies,
+//! backpressure, HTTP framing, streaming, and the loadgen dry-run —
+//! all over the device-free `MockBackend`, so they run with no
+//! artifacts built (unlike `coordinator.rs`).
+
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use sigma_moe::json::Json;
+use sigma_moe::serving::loadgen::{self, LoadgenCfg};
+use sigma_moe::serving::server::ServerConfig;
+use sigma_moe::serving::{MockBackend, Policy};
+
+/// Raw-socket POST helper returning (status, headers, body-bytes) with
+/// chunked bodies reassembled.
+fn post(
+    addr: &SocketAddr,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\n\
+             Content-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    read_response(stream)
+}
+
+fn get(addr: &SocketAddr, path: &str) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .as_bytes(),
+    )
+    .unwrap();
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut r = BufReader::new(stream);
+    let (status, headers) = loadgen::read_head(&mut r).expect("response head");
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v == "chunked");
+    let body = if chunked {
+        loadgen::read_chunked(&mut r, |_| {}).expect("chunked body")
+    } else {
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap_or(0);
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf).unwrap();
+        buf
+    };
+    (status, headers, body)
+}
+
+fn json_of(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).expect("utf8 body")).expect("json")
+}
+
+#[test]
+fn healthz_metrics_and_routing() {
+    loadgen::with_mock_server(
+        2,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let (status, _, body) = get(&addr, "/healthz");
+            assert_eq!(status, 200);
+            assert_eq!(
+                json_of(&body).get("status").unwrap().as_str().unwrap(),
+                "ok"
+            );
+
+            let (status, _, body) = get(&addr, "/metrics");
+            assert_eq!(status, 200);
+            let doc = json_of(&body);
+            assert!(doc.get("scheduler").is_ok());
+            assert!(doc.get("engine").is_ok());
+            assert!(doc
+                .get("server")
+                .unwrap()
+                .get("driver_alive")
+                .unwrap()
+                .as_bool()
+                .unwrap());
+
+            let (status, _, _) = get(&addr, "/nope");
+            assert_eq!(status, 404);
+            let (status, _, _) = get(&addr, "/v1/completions");
+            assert_eq!(status, 405);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn unary_completion_returns_deterministic_tokens() {
+    loadgen::with_mock_server(
+        2,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let (status, _, body) = post(
+                &addr,
+                "/v1/completions",
+                r#"{"prompt": [3, 4], "max_tokens": 5}"#,
+            );
+            assert_eq!(status, 200);
+            let doc = json_of(&body);
+            let tokens: Vec<i32> = doc
+                .get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_i64().unwrap() as i32)
+                .collect();
+            let expect: Vec<i32> = (0..5)
+                .map(|i| MockBackend::expected_token(&[3, 4], i, 64))
+                .collect();
+            assert_eq!(tokens, expect);
+            assert_eq!(
+                doc.get("prompt_len").unwrap().as_usize().unwrap(),
+                2
+            );
+            assert!(doc.get("run_ms").unwrap().as_f64().unwrap() >= 0.0);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn streaming_completion_frames_tokens_as_ndjson_chunks() {
+    loadgen::with_mock_server(
+        1,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let (status, headers, body) = post(
+                &addr,
+                "/v1/completions",
+                r#"{"prompt": [9], "max_tokens": 4, "stream": true}"#,
+            );
+            assert_eq!(status, 200);
+            assert!(headers
+                .iter()
+                .any(|(k, v)| k == "transfer-encoding" && v == "chunked"));
+            let text = String::from_utf8(body).unwrap();
+            let lines: Vec<Json> = text
+                .lines()
+                .filter(|l| !l.is_empty())
+                .map(|l| Json::parse(l).expect("ndjson line"))
+                .collect();
+            // admitted marker, 4 token lines, done line
+            assert_eq!(
+                lines[0].get("event").unwrap().as_str().unwrap(),
+                "admitted"
+            );
+            let toks: Vec<i32> = lines
+                .iter()
+                .filter_map(|l| l.opt("token"))
+                .map(|t| t.as_i64().unwrap() as i32)
+                .collect();
+            let expect: Vec<i32> = (0..4)
+                .map(|i| MockBackend::expected_token(&[9], i, 64))
+                .collect();
+            assert_eq!(toks, expect);
+            let done = lines.last().unwrap();
+            assert!(done.get("done").unwrap().as_bool().unwrap());
+            assert_eq!(done.get("tokens").unwrap().as_usize().unwrap(), 4);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn queue_overflow_answers_429_with_retry_after() {
+    // 1 slow lane + queue capacity 1: r1 occupies the lane, r2 fills
+    // the queue, r3 must bounce with 429.
+    let cfg = ServerConfig {
+        queue_cap: 1,
+        ..Default::default()
+    };
+    loadgen::with_mock_server(
+        1,
+        64,
+        Duration::from_millis(20),
+        cfg,
+        |addr| {
+            let slow = r#"{"prompt": [1], "max_tokens": 100}"#;
+            let hold1 = spawn_post(addr, slow);
+            // let r1 reach the lane so r2 sits alone in the queue
+            std::thread::sleep(Duration::from_millis(200));
+            let hold2 = spawn_post(addr, slow);
+            std::thread::sleep(Duration::from_millis(100));
+            let (status, headers, _) =
+                post(&addr, "/v1/completions", slow);
+            assert_eq!(status, 429);
+            assert!(headers
+                .iter()
+                .any(|(k, v)| k == "retry-after" && v == "1"));
+            let (s1, _, _) = hold1.join().unwrap();
+            let (s2, _, _) = hold2.join().unwrap();
+            assert_eq!((s1, s2), (200, 200));
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+fn spawn_post(
+    addr: SocketAddr,
+    body: &'static str,
+) -> std::thread::JoinHandle<(u16, Vec<(String, String)>, Vec<u8>)> {
+    std::thread::spawn(move || post(&addr, "/v1/completions", body))
+}
+
+#[test]
+fn deadline_policy_drops_expired_requests_with_503() {
+    let cfg = ServerConfig {
+        policy: Policy::Deadline,
+        ..Default::default()
+    };
+    loadgen::with_mock_server(
+        1,
+        64,
+        Duration::from_millis(10),
+        cfg,
+        |addr| {
+            // occupy the single lane for a while
+            let hold = spawn_post(
+                addr,
+                r#"{"prompt": [1], "max_tokens": 100}"#,
+            );
+            std::thread::sleep(Duration::from_millis(200));
+            // this deadline expires long before the lane frees up
+            let (status, _, body) = post(
+                &addr,
+                "/v1/completions",
+                r#"{"prompt": [2], "max_tokens": 4, "deadline_ms": 50}"#,
+            );
+            assert_eq!(status, 503);
+            assert_eq!(
+                json_of(&body).get("error").unwrap().as_str().unwrap(),
+                "deadline"
+            );
+            let (s, _, _) = hold.join().unwrap();
+            assert_eq!(s, 200);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn bad_requests_answer_400() {
+    loadgen::with_mock_server(
+        1,
+        64,
+        Duration::ZERO,
+        ServerConfig { vocab: Some(64), ..Default::default() },
+        |addr| {
+            for body in [
+                "not json",
+                r#"{"prompt": []}"#,
+                r#"{"prompt": [9999]}"#,
+                r#"{"prompt": [1], "temperature": -1}"#,
+            ] {
+                let (status, _, resp) = post(&addr, "/v1/completions", body);
+                assert_eq!(status, 400, "{body}");
+                assert!(json_of(&resp).get("error").is_ok());
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn loadgen_dry_run_writes_a_parsable_report() {
+    let out = std::env::temp_dir().join(format!(
+        "bench_serve_test_{}.json",
+        std::process::id()
+    ));
+    let cfg = LoadgenCfg {
+        requests: 12,
+        rps: 200.0,
+        prompt_len: (2, 6),
+        max_new: (2, 6),
+        vocab: 64,
+        stream_fraction: 0.5,
+        seed: 3,
+        timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let row = loadgen::dry_run(&cfg, 4).expect("dry run");
+    sigma_moe::bench_util::write_bench_json(
+        &out,
+        "sigma-moe/serve/v1",
+        vec![row],
+    )
+    .expect("write report");
+    let text = std::fs::read_to_string(&out).unwrap();
+    let doc = Json::parse(&text).expect("report json");
+    assert_eq!(
+        doc.get("schema").unwrap().as_str().unwrap(),
+        "sigma-moe/serve/v1"
+    );
+    let rows = doc.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    let row = &rows[0];
+    assert_eq!(row.get("mode").unwrap().as_str().unwrap(), "mock-dry-run");
+    assert_eq!(row.get("requests").unwrap().as_usize().unwrap(), 12);
+    assert_eq!(row.get("ok").unwrap().as_usize().unwrap(), 12);
+    assert_eq!(row.get("errors").unwrap().as_usize().unwrap(), 0);
+    assert!(row.get("tokens_total").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        row.get("latency").unwrap().get("p50_ms").unwrap().as_f64().unwrap()
+            > 0.0
+    );
+    // the embedded server metrics made it into the report
+    let sched = row.get("server_metrics").unwrap().get("scheduler").unwrap();
+    assert_eq!(sched.get("completed").unwrap().as_usize().unwrap(), 12);
+    let _ = std::fs::remove_file(&out);
+}

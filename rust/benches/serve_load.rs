@@ -92,7 +92,7 @@ fn bench_end_to_end() -> sigma_moe::json::Json {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let mut row = loadgen::dry_run(&cfg, 8).expect("dry run");
+    let mut row = loadgen::dry_run(&cfg, 8, 1).expect("dry run");
     if let sigma_moe::json::Json::Obj(m) = &mut row {
         m.insert(
             "mode".into(),

@@ -24,7 +24,8 @@ use sigma_moe::data;
 use sigma_moe::json::Json;
 use sigma_moe::runtime::{Client, Manifest, ModelBundle};
 use sigma_moe::serving::{
-    loadgen, server, Engine, GenRequest, Policy, Sampler, ServerConfig,
+    loadgen, router, server, Engine, GenRequest, Placement, Policy,
+    RouterCfg, Sampler, ServerConfig,
 };
 use sigma_moe::tensor::HostTensor;
 use sigma_moe::{flops, Error, Result};
@@ -256,6 +257,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("policy", "fifo", "HTTP admission policy: fifo | spf | deadline")
     .opt("queue-cap", "64", "HTTP bounded request queue \
                              (overflow answers 429)")
+    .opt("engines", "1", "HTTP: engine-driver threads behind the router \
+                          (each loads its own bundle copy)")
+    .opt("placement", "least-loaded", "router placement: least-loaded | \
+                                       round-robin | affinity")
+    .opt("heartbeat-ms", "5000", "router: mark an engine wedged after \
+                                  this long without a driver heartbeat")
+    .opt("error-threshold", "3", "router: consecutive pump errors before \
+                                  an engine is unhealthy")
+    .opt("max-retries", "1", "router: failovers per request before 503")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -334,6 +344,44 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Load one serving engine's bundle + params on its driver thread
+/// (PJRT state is not `Send`, so this runs inside the thread): its own
+/// client, the `step_fwd`(+`init`+`reset_lanes`) subset, and either the
+/// checkpoint's params or a fresh `init` run.  Returns the bundle, the
+/// params, and whether on-device lane reset is available.  Shared by
+/// the single-engine and fleet `serve --http` paths.
+fn load_serving_engine(
+    dir: &std::path::Path,
+    checkpoint: &Option<Vec<(String, HostTensor)>>,
+    seed: u64,
+) -> Result<(ModelBundle, Vec<(String, HostTensor)>, bool)> {
+    let client = Client::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let mut names = vec!["step_fwd"];
+    if checkpoint.is_none() {
+        names.push("init");
+    }
+    let device_reset = manifest.functions.contains_key("reset_lanes");
+    if device_reset {
+        names.push("reset_lanes");
+    }
+    let bundle = ModelBundle::load_subset(&client, dir, &names)?;
+    let params = match checkpoint {
+        Some(params) => params.clone(),
+        None => {
+            let init = bundle.program("init")?;
+            let out = init.run(&[HostTensor::scalar_u32(seed as u32)])?;
+            init.spec
+                .outputs
+                .iter()
+                .map(|b| b.name.clone())
+                .zip(out)
+                .collect()
+        }
+    };
+    Ok((bundle, params, device_reset))
+}
+
 /// `serve --http`: the continuous-batching HTTP frontend.  The PJRT
 /// client, bundle, and engine are not `Send`, so everything
 /// device-facing is constructed *inside* the dedicated driver thread;
@@ -356,42 +404,69 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             None => None,
         };
     let seed = p.u64("seed")?;
+    let engines = p.usize("engines")?;
     let listener = std::net::TcpListener::bind(addr)?;
     eprintln!(
-        "[serve] http://{} | preset {} | {} lanes | policy {} | \
-         queue cap {} (Ctrl-C stops)",
+        "[serve] http://{} | preset {} | {} engine(s) x {} lanes | \
+         policy {} | queue cap {} (Ctrl-C stops)",
         listener.local_addr()?,
         preset,
+        engines.max(1),
         manifest.serve_batch,
         cfg.policy.as_str(),
         cfg.queue_cap,
     );
     let shutdown = Arc::new(AtomicBool::new(false));
-    server::serve(listener, cfg, shutdown, move |driver| {
-        let client = Client::cpu()?;
-        let manifest = Manifest::load(&dir)?;
-        let mut names = vec!["step_fwd"];
-        if checkpoint.is_none() {
-            names.push("init");
-        }
-        let device_reset = manifest.functions.contains_key("reset_lanes");
-        if device_reset {
-            names.push("reset_lanes");
-        }
-        let bundle = ModelBundle::load_subset(&client, &dir, &names)?;
-        let params = match checkpoint {
-            Some(params) => params,
-            None => {
-                let init = bundle.program("init")?;
-                let out = init.run(&[HostTensor::scalar_u32(seed as u32)])?;
-                init.spec
-                    .outputs
-                    .iter()
-                    .map(|b| b.name.clone())
-                    .zip(out)
-                    .collect()
-            }
+    if engines > 1 {
+        let rcfg = RouterCfg {
+            engines,
+            placement: Placement::parse(p.str("placement")?)?,
+            heartbeat_timeout: Duration::from_millis(
+                p.u64("heartbeat-ms")?,
+            ),
+            error_threshold: p.u64("error-threshold")?,
+            max_retries: p.usize("max-retries")?,
         };
+        eprintln!(
+            "[serve] router: {} placement | heartbeat {:?} | \
+             {} retries",
+            rcfg.placement.as_str(),
+            rcfg.heartbeat_timeout,
+            rcfg.max_retries,
+        );
+        // each driver thread loads its own client + bundle copy (the
+        // PJRT state is not Send); params come from the same
+        // checkpoint / init seed so all engines serve the same model
+        return router::serve_fleet(
+            listener,
+            cfg,
+            rcfg,
+            shutdown,
+            move |id, fleet| {
+                let (bundle, params, device_reset) =
+                    load_serving_engine(&dir, &checkpoint, seed)?;
+                // distinct sampling streams per engine, same params
+                let mut engine = Engine::new(
+                    &bundle,
+                    &params,
+                    seed ^ ((id as u64) << 32),
+                )?;
+                eprintln!(
+                    "[serve] engine {id} ready: {} lanes | lane reset: {}",
+                    engine.n_lanes(),
+                    if device_reset {
+                        "on-device"
+                    } else {
+                        "host fallback"
+                    },
+                );
+                fleet.run_engine(id, &mut engine)
+            },
+        );
+    }
+    server::serve(listener, cfg, shutdown, move |driver| {
+        let (bundle, params, device_reset) =
+            load_serving_engine(&dir, &checkpoint, seed)?;
         let mut engine = Engine::new(&bundle, &params, seed)?;
         eprintln!(
             "[serve] engine ready: {} lanes | lane reset: {}",
@@ -423,9 +498,14 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                               (pair with serve --policy deadline)")
     .opt("out", "BENCH_serve.json", "report path")
     .opt("timeout-s", "120", "per-request client timeout, seconds")
-    .flag("dry-run", "run against an in-process mock engine \
+    .flag("dry-run", "run against in-process mock engine(s) \
                       (no device, ignores --addr)")
     .opt("mock-lanes", "4", "mock engine lanes for --dry-run")
+    .opt("engines", "1", "--dry-run: comma-separated mock fleet sizes \
+                          (e.g. 1,2,4) — one report row per size, same \
+                          Poisson plan, for scaling comparisons")
+    .flag("keep-alive", "reuse connections (HTTP keep-alive pool) \
+                         instead of one connection per request")
     .parse_from(argv)?;
 
     let cfg = loadgen::LoadgenCfg {
@@ -441,47 +521,88 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         deadline_ms: p.opt_u64("deadline-ms")?,
         seed: p.u64("seed")?,
         timeout: Duration::from_secs(p.u64("timeout-s")?),
+        keep_alive: p.flag("keep-alive"),
     };
-    let row = if p.flag("dry-run") {
-        eprintln!("[loadgen] dry run against an in-process mock engine");
-        loadgen::dry_run(&cfg, p.usize("mock-lanes")?)?
+    let rows: Vec<Json> = if p.flag("dry-run") {
+        let engine_counts: Vec<usize> = p
+            .str("engines")?
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|e| {
+                    Error::Config(format!("--engines: {e}"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let lanes = p.usize("mock-lanes")?;
+        let mut rows = Vec::with_capacity(engine_counts.len());
+        for &engines in &engine_counts {
+            eprintln!(
+                "[loadgen] dry run: {engines} in-process mock engine(s) \
+                 x {lanes} lanes"
+            );
+            rows.push(loadgen::dry_run(&cfg, lanes, engines)?);
+        }
+        rows
     } else {
+        if p.str("engines")? != "1" {
+            return Err(Error::Config(
+                "--engines is a --dry-run option; a live run measures \
+                 whatever fleet the server at --addr is running"
+                    .into(),
+            ));
+        }
         let addr: std::net::SocketAddr =
             p.str("addr")?.parse().map_err(|e| {
                 Error::Config(format!("--addr: {e}"))
             })?;
         eprintln!("[loadgen] loading http://{addr} ...");
-        loadgen::run(addr, &cfg, "live")?
+        vec![loadgen::run(addr, &cfg, "live")?]
     };
     let num = |doc: &Json, k: &str| {
         doc.get(k).ok().and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
     };
-    let lat = |k: &str| {
-        row.get("latency")
-            .ok()
-            .and_then(|l| l.get(k).ok())
-            .and_then(|v| v.as_f64().ok())
-            .unwrap_or(0.0)
-    };
-    println!(
-        "loadgen: {} requests @ {:.1} rps target ({:.1} achieved) | \
-         ok {} | 429 {} | dropped {} | errors {} | {:.1} tok/s | \
-         latency ms p50 {:.1} p95 {:.1} p99 {:.1} max {:.1}",
-        num(&row, "requests"),
-        num(&row, "target_rps"),
-        num(&row, "achieved_rps"),
-        num(&row, "ok"),
-        num(&row, "rejected_429"),
-        num(&row, "dropped"),
-        num(&row, "errors"),
-        num(&row, "tokens_per_sec"),
-        lat("p50_ms"),
-        lat("p95_ms"),
-        lat("p99_ms"),
-        lat("max_ms"),
-    );
+    for row in &rows {
+        let lat = |k: &str| {
+            row.get("latency")
+                .ok()
+                .and_then(|l| l.get(k).ok())
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(0.0)
+        };
+        println!(
+            "loadgen[{} engine(s)]: {} requests @ {:.1} rps target \
+             ({:.1} achieved) | ok {} | 429 {} | dropped {} | errors {} \
+             | {:.1} tok/s | latency ms p50 {:.1} p95 {:.1} p99 {:.1} \
+             max {:.1}",
+            num(row, "engines").max(1.0),
+            num(row, "requests"),
+            num(row, "target_rps"),
+            num(row, "achieved_rps"),
+            num(row, "ok"),
+            num(row, "rejected_429"),
+            num(row, "dropped"),
+            num(row, "errors"),
+            num(row, "tokens_per_sec"),
+            lat("p50_ms"),
+            lat("p95_ms"),
+            lat("p99_ms"),
+            lat("max_ms"),
+        );
+    }
+    if rows.len() > 1 {
+        let base = num(&rows[0], "tokens_per_sec").max(1e-9);
+        for row in &rows[1..] {
+            println!(
+                "scaling: {} engines -> {:.2}x token throughput vs {} \
+                 engine(s)",
+                num(row, "engines"),
+                num(row, "tokens_per_sec") / base,
+                num(&rows[0], "engines").max(1.0),
+            );
+        }
+    }
     let out = p.str("out")?;
-    bench_util::write_bench_json(out, "sigma-moe/serve/v1", vec![row])?;
+    bench_util::write_bench_json(out, "sigma-moe/serve/v1", rows)?;
     eprintln!("[loadgen] report written to {out}");
     Ok(())
 }

@@ -68,6 +68,10 @@ pub enum DropReason {
     Deadline,
     /// The server shut down before the request ran to completion.
     Shutdown,
+    /// Every engine that could run the request failed (wedged,
+    /// erroring, or poisoned) and the router's bounded retries were
+    /// exhausted — the HTTP layer answers 503.
+    EngineFailure,
 }
 
 impl DropReason {
@@ -75,6 +79,7 @@ impl DropReason {
         match self {
             DropReason::Deadline => "deadline",
             DropReason::Shutdown => "shutdown",
+            DropReason::EngineFailure => "engine-failure",
         }
     }
 }
@@ -203,6 +208,9 @@ pub struct Engine<'a> {
     pub lane_resets_device: u64,
     /// admissions that fell back to the host zero-row path
     pub lane_resets_host: u64,
+    /// requests dropped because their lane produced non-finite logits
+    /// (the per-lane poison guard)
+    pub lanes_poisoned: u64,
 }
 
 impl<'a> Engine<'a> {
@@ -268,6 +276,7 @@ impl<'a> Engine<'a> {
             tokens_processed: 0,
             lane_resets_device: 0,
             lane_resets_host: 0,
+            lanes_poisoned: 0,
         })
     }
 
@@ -494,19 +503,44 @@ impl<'a> Engine<'a> {
         }
         for i in 0..b {
             let mut finished = false;
+            let mut poisoned = false;
             if let Some(lane) = &mut self.lanes[i] {
                 if !prompt_phase[i] {
                     let row = &logits[i * vocab..(i + 1) * vocab];
-                    let tok = lane.sampler.sample(row, &mut self.rng) as i32;
-                    lane.generated.push(tok);
-                    self.tokens_generated += 1;
-                    if let Some(tx) = &lane.events {
-                        let _ = tx.send(StreamEvent::Token(tok));
-                    }
-                    if lane.generated.len() >= lane.budget {
-                        finished = true;
+                    // poisoned-lane guard: a NaN/Inf logits row means
+                    // this lane's state is numerically corrupt and
+                    // every later token from it would be garbage.  The
+                    // corruption is per-lane (each lane's memories are
+                    // independent rows), so only this request is
+                    // failed — the lane's memory is zeroed by the
+                    // normal reset path on its next admission (the
+                    // device reset is select-based, NaN-safe) and the
+                    // engine keeps serving its other lanes.
+                    if row.iter().any(|v| !v.is_finite()) {
+                        poisoned = true;
+                    } else {
+                        let tok =
+                            lane.sampler.sample(row, &mut self.rng) as i32;
+                        lane.generated.push(tok);
+                        self.tokens_generated += 1;
+                        if let Some(tx) = &lane.events {
+                            let _ = tx.send(StreamEvent::Token(tok));
+                        }
+                        if lane.generated.len() >= lane.budget {
+                            finished = true;
+                        }
                     }
                 }
+            }
+            if poisoned {
+                let lane = self.lanes[i].take().unwrap();
+                self.lanes_poisoned += 1;
+                if let Some(tx) = lane.events {
+                    let _ = tx
+                        .send(StreamEvent::Dropped(DropReason::EngineFailure));
+                }
+                // the in-process path (done_tx) learns via the channel
+                // disconnecting instead of a result
             }
             if finished {
                 let lane = self.lanes[i].take().unwrap();
@@ -582,6 +616,7 @@ impl<'a> Engine<'a> {
             self.lane_resets_device as f64,
         );
         m.insert("lane_resets_host".into(), self.lane_resets_host as f64);
+        m.insert("lanes_poisoned".into(), self.lanes_poisoned as f64);
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
         m.insert("d2h_bytes".into(), xfer.d2h_bytes as f64);

@@ -17,13 +17,14 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::json::{self, Json};
 use crate::rng::Rng;
-use crate::serving::mock::MockBackend;
+use crate::serving::mock::{MockBackend, MockFault};
+use crate::serving::router::{self, RouterCfg};
 use crate::serving::scheduler::Histogram;
 use crate::serving::server::{self, ServerConfig};
 
@@ -48,6 +49,9 @@ pub struct LoadgenCfg {
     pub seed: u64,
     /// Per-request client timeout.
     pub timeout: Duration,
+    /// Reuse HTTP connections across requests (keep-alive + a shared
+    /// connection pool) instead of one connection per request.
+    pub keep_alive: bool,
 }
 
 impl Default for LoadgenCfg {
@@ -65,6 +69,7 @@ impl Default for LoadgenCfg {
             deadline_ms: None,
             seed: 1,
             timeout: Duration::from_secs(120),
+            keep_alive: false,
         }
     }
 }
@@ -229,26 +234,32 @@ pub fn read_chunked(
     }
 }
 
-/// POST one completion request and consume the whole response
-/// (streaming or unary), measuring client-side latency and TTFT.
-pub fn send_completion(
-    addr: &SocketAddr,
+/// POST one completion request on an already-connected stream and
+/// consume the whole response (streaming or unary).  `t0` is the
+/// latency epoch (set before connecting so connect time counts).
+/// Returns the outcome plus the stream when it can be reused
+/// (keep-alive requested and the server didn't answer
+/// `Connection: close`).
+fn exchange(
+    stream: TcpStream,
     body: &Json,
     timeout: Duration,
-) -> Result<ReqOutcome> {
-    let t0 = Instant::now();
-    let stream = TcpStream::connect_timeout(addr, timeout)?;
+    keep_alive: bool,
+    t0: Instant,
+) -> Result<(ReqOutcome, Option<TcpStream>)> {
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
     let _ = stream.set_nodelay(true);
+    let host = stream.peer_addr()?;
     let payload = body.to_string_compact();
     let mut writer = stream.try_clone()?;
     writer.write_all(
         format!(
-            "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\n\
+            "POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n\
              Content-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
-            payload.len()
+             Content-Length: {}\r\nConnection: {}\r\n\r\n{payload}",
+            payload.len(),
+            if keep_alive { "keep-alive" } else { "close" }
         )
         .as_bytes(),
     )?;
@@ -295,7 +306,9 @@ pub fn send_completion(
                 .map_or(0, |a| a.len());
         }
     }
-    Ok(ReqOutcome {
+    let server_close = header(&headers, "connection")
+        .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+    let outcome = ReqOutcome {
         status,
         ok: status == 200 && !dropped,
         rejected: status == 429,
@@ -303,7 +316,85 @@ pub fn send_completion(
         latency: t0.elapsed(),
         ttft,
         tokens,
-    })
+    };
+    // the framed body is fully consumed, so no read-ahead is lost here
+    let reuse = (keep_alive && !server_close).then(|| r.into_inner());
+    Ok((outcome, reuse))
+}
+
+/// POST one completion request over a fresh `Connection: close`
+/// connection, measuring client-side latency and TTFT.
+pub fn send_completion(
+    addr: &SocketAddr,
+    body: &Json,
+    timeout: Duration,
+) -> Result<ReqOutcome> {
+    let t0 = Instant::now();
+    let stream = TcpStream::connect_timeout(addr, timeout)?;
+    exchange(stream, body, timeout, false, t0).map(|(o, _)| o)
+}
+
+/// A keep-alive connection pool shared by loadgen worker threads:
+/// completed exchanges return their connection for the next request to
+/// reuse, amortizing connect cost the way a production client would.
+pub struct ConnPool {
+    addr: SocketAddr,
+    idle: Mutex<Vec<TcpStream>>,
+}
+
+impl ConnPool {
+    pub fn new(addr: SocketAddr) -> Self {
+        ConnPool { addr, idle: Mutex::new(Vec::new()) }
+    }
+
+    /// Connections currently idle in the pool.
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    /// True when a pooled connection is still usable.  A server that
+    /// idle-closed the connection yields an immediate EOF on a
+    /// non-blocking peek (stray unread bytes also disqualify it);
+    /// probing *before* any request bytes are written means a stale
+    /// connection costs one reconnect and never a re-sent request — a
+    /// request is sent at most once, so a failure mid-exchange can
+    /// never double-execute server-side and skew the measured load.
+    fn connection_alive(stream: &TcpStream) -> bool {
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        let alive = match stream.peek(&mut probe) {
+            // Ok(0) is EOF; Ok(1) is protocol garbage — both unusable
+            Ok(_) => false,
+            Err(e) => e.kind() == std::io::ErrorKind::WouldBlock,
+        };
+        let _ = stream.set_nonblocking(false);
+        alive
+    }
+
+    /// Send one completion request, preferring a pooled connection
+    /// (discarding it up front if the server idle-closed it).  The
+    /// request goes over the wire exactly once; exchange failures are
+    /// returned, never retried.
+    pub fn send(
+        &self,
+        body: &Json,
+        timeout: Duration,
+    ) -> Result<ReqOutcome> {
+        let t0 = Instant::now();
+        let pooled = self.idle.lock().unwrap().pop();
+        let stream = match pooled {
+            Some(s) if Self::connection_alive(&s) => s,
+            // stale (or empty pool): fresh connection
+            _ => TcpStream::connect_timeout(&self.addr, timeout)?,
+        };
+        let (outcome, reuse) = exchange(stream, body, timeout, true, t0)?;
+        if let Some(s) = reuse {
+            self.idle.lock().unwrap().push(s);
+        }
+        Ok(outcome)
+    }
 }
 
 /// Fetch and parse `GET /metrics`.
@@ -341,6 +432,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
     let planned = plan(cfg);
     let n = planned.len();
     let (tx, rx) = mpsc::channel();
+    let pool = cfg.keep_alive.then(|| Arc::new(ConnPool::new(addr)));
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(n);
     // pacing loop: the plan is sorted by arrival time, so spawning each
@@ -355,8 +447,13 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         let tx = tx.clone();
         let body = completion_body(&p, cfg);
         let timeout = cfg.timeout;
+        let pool = pool.clone();
         handles.push(std::thread::spawn(move || {
-            let _ = tx.send(send_completion(&addr, &body, timeout));
+            let res = match &pool {
+                Some(pool) => pool.send(&body, timeout),
+                None => send_completion(&addr, &body, timeout),
+            };
+            let _ = tx.send(res);
         }));
     }
     drop(tx);
@@ -407,6 +504,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         ("tokens_total", json::num(tokens as f64)),
         ("tokens_per_sec", json::num(tokens as f64 / wall)),
         ("wall_s", json::num(wall)),
+        ("keep_alive", Json::Bool(cfg.keep_alive)),
         ("latency", latency.to_json()),
         ("ttft", ttft.to_json()),
         ("server_metrics", server_metrics),
@@ -415,8 +513,9 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
 
 /// Run `f` against an in-process HTTP server over the device-free
 /// [`MockBackend`] (bound to an ephemeral localhost port), shutting the
-/// server down afterwards.  Used by `loadgen --dry-run`, the serving
-/// tests, and the `serve_load` bench.
+/// server down afterwards.  Used by the serving tests and the
+/// `serve_load` bench; `loadgen --dry-run` goes through
+/// [`with_mock_fleet`] instead so its rows always include the router.
 pub fn with_mock_server<T>(
     lanes: usize,
     vocab: usize,
@@ -446,20 +545,96 @@ pub fn with_mock_server<T>(
     }
 }
 
+/// Run `f` against an in-process HTTP *fleet* frontend: `rcfg.engines`
+/// driver threads, each with its own device-free [`MockBackend`]
+/// (`lanes` lanes, `step_delay` per pump), behind the multi-engine
+/// router.  `faults[i]` optionally poisons engine `i`; stalled engines
+/// are released at shutdown so every thread joins.  Used by
+/// `loadgen --dry-run --engines N`, the router tests, and the
+/// mock-fleet scaling rows in BENCH_serve.json.
+pub fn with_mock_fleet<T>(
+    lanes: usize,
+    vocab: usize,
+    step_delay: Duration,
+    cfg: ServerConfig,
+    rcfg: RouterCfg,
+    faults: &[Option<MockFault>],
+    f: impl FnOnce(SocketAddr) -> Result<T>,
+) -> Result<T> {
+    let engines = rcfg.engines.max(1);
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let stall_release = Arc::new(AtomicBool::new(false));
+    let server_shutdown = shutdown.clone();
+    let rcfg = RouterCfg { engines, ..rcfg };
+    let faults: Vec<Option<MockFault>> = (0..engines)
+        .map(|i| faults.get(i).cloned().flatten())
+        .collect();
+    let release = stall_release.clone();
+    let handle = std::thread::spawn(move || {
+        router::serve_fleet(
+            listener,
+            cfg,
+            rcfg,
+            server_shutdown,
+            move |id, fleet| {
+                let mut backend = MockBackend::new(lanes, vocab)
+                    .with_step_delay(step_delay)
+                    .with_stall_release(release.clone());
+                if let Some(fault) = faults[id].clone() {
+                    backend = backend.with_fault(fault);
+                }
+                fleet.run_engine(id, &mut backend)
+            },
+        )
+    });
+    let result = f(addr);
+    shutdown.store(true, Ordering::SeqCst);
+    // unwedge any StallAfter engine so its driver thread can join
+    stall_release.store(true, Ordering::SeqCst);
+    match handle.join() {
+        Ok(Ok(())) => result,
+        Ok(Err(e)) => result.and(Err(e)),
+        Err(_) => result.and(Err(Error::Serving(
+            "mock fleet server thread panicked".into(),
+        ))),
+    }
+}
+
+/// Per-pump latency of the dry-run mock engines: large enough that the
+/// engine, not the HTTP/scheduler layers, is the throughput bound —
+/// which is what makes the 1→2→4-engine scaling rows meaningful.
+pub const DRY_RUN_STEP_DELAY: Duration = Duration::from_micros(200);
+
 /// The `loadgen --dry-run` path: full client/server/scheduler stack
-/// over the mock backend; returns the report row.
-pub fn dry_run(cfg: &LoadgenCfg, lanes: usize) -> Result<Json> {
+/// over `engines` mock engine(s); returns the report row.  Every row —
+/// including `engines == 1` — goes through the multi-engine router, so
+/// a 1→2→4 sweep compares identical stacks and the reported scaling
+/// factor is router scaling, not router-overhead-vs-no-router.
+pub fn dry_run(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<Json> {
     let server_cfg = ServerConfig {
         vocab: Some(cfg.vocab),
         ..Default::default()
     };
-    with_mock_server(
+    let engines = engines.max(1);
+    let mut row = with_mock_fleet(
         lanes,
         cfg.vocab,
-        Duration::from_micros(200),
+        DRY_RUN_STEP_DELAY,
         server_cfg,
+        RouterCfg { engines, ..Default::default() },
+        &[],
         |addr| run(addr, cfg, "mock-dry-run"),
-    )
+    )?;
+    if let Json::Obj(m) = &mut row {
+        m.insert("engines".into(), json::num(engines as f64));
+    }
+    Ok(row)
 }
 
 #[cfg(test)]

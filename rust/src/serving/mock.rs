@@ -6,13 +6,41 @@
 //! exercised end to end — without artifacts or a PJRT device.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::serving::engine::{
     EngineBackend, GenRequest, GenResult, StreamEvent,
 };
+
+/// Deterministic, device-free ways to break a [`MockBackend`] — the
+/// test fleet's stand-ins for a wedged device, a crashing runtime, and
+/// numerically poisoned state.  All trigger off `steps_executed`, so a
+/// faulty engine behaves identically run to run.
+#[derive(Debug, Clone)]
+pub enum MockFault {
+    /// After `n` executed pumps, `pump` blocks (a wedged device: the
+    /// driver thread stops heartbeating and the router must detect it).
+    /// The block is released — returning an error — when the backend's
+    /// [`MockBackend::stall_release`] flag is set, so tests can always
+    /// join their driver threads.
+    StallAfter(u64),
+    /// After `n` executed pumps, every `pump` returns an error (a
+    /// crashed runtime: the driver's consecutive-error counter trips).
+    ErrorAfter(u64),
+    /// Every pump that would sample a token errors with a
+    /// "non-finite logits" failure — emulating *engine-wide* numeric
+    /// corruption (poisoned weights: every lane's logits are NaN, so
+    /// the runtime cannot make progress).  Per-lane poisoning is
+    /// different: the real [`Engine`]'s guard contains that to the one
+    /// request (dropped with `engine-failure`, `lanes_poisoned`
+    /// counter) without erroring the pump.
+    ///
+    /// [`Engine`]: crate::serving::Engine
+    NanLogits,
+}
 
 struct MockLane {
     prompt_left: usize,
@@ -39,6 +67,10 @@ pub struct MockBackend {
     /// artificial per-pump latency, to simulate device step time in
     /// backpressure tests and dry-run load generation
     step_delay: Duration,
+    fault: Option<MockFault>,
+    /// releases a [`MockFault::StallAfter`] block (shared with the
+    /// test / fleet harness so wedged driver threads can be joined)
+    stall_release: Arc<AtomicBool>,
     pub steps_executed: u64,
     pub tokens_generated: u64,
 }
@@ -50,6 +82,8 @@ impl MockBackend {
             queue: VecDeque::new(),
             vocab: vocab.max(2) as i32,
             step_delay: Duration::ZERO,
+            fault: None,
+            stall_release: Arc::new(AtomicBool::new(false)),
             steps_executed: 0,
             tokens_generated: 0,
         }
@@ -58,6 +92,65 @@ impl MockBackend {
     pub fn with_step_delay(mut self, d: Duration) -> Self {
         self.step_delay = d;
         self
+    }
+
+    /// Inject a deterministic fault (see [`MockFault`]).
+    pub fn with_fault(mut self, f: MockFault) -> Self {
+        self.fault = Some(f);
+        self
+    }
+
+    /// Use a caller-owned release flag for [`MockFault::StallAfter`]
+    /// (set it to unblock a wedged `pump`, e.g. at test shutdown).
+    pub fn with_stall_release(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.stall_release = flag;
+        self
+    }
+
+    /// The flag that releases a [`MockFault::StallAfter`] block.
+    pub fn stall_release(&self) -> Arc<AtomicBool> {
+        self.stall_release.clone()
+    }
+
+    /// Apply the injected fault, if it has triggered.  Called after
+    /// admission with at least one active lane.
+    fn check_fault(&mut self) -> Result<()> {
+        match self.fault {
+            None => Ok(()),
+            Some(MockFault::ErrorAfter(n)) if self.steps_executed >= n => {
+                Err(Error::Serving(format!(
+                    "mock engine failed after {n} pumps (ErrorAfter)"
+                )))
+            }
+            Some(MockFault::StallAfter(n)) if self.steps_executed >= n => {
+                // wedge until released — the driver thread stops
+                // heartbeating, which is exactly what the router's
+                // health check must catch
+                while !self.stall_release.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(Error::Serving(
+                    "stalled mock engine released (StallAfter)".into(),
+                ))
+            }
+            Some(MockFault::NanLogits)
+                if self
+                    .lanes
+                    .iter()
+                    .flatten()
+                    .any(|l| l.prompt_left <= 1) =>
+            {
+                // same failure shape as the real engine's poisoned-
+                // state guard: raised the moment a token would be
+                // sampled from the corrupt row
+                Err(Error::Serving(
+                    "non-finite logits on lane 0 — engine state is \
+                     poisoned (mock NanLogits fault)"
+                        .into(),
+                ))
+            }
+            Some(_) => Ok(()),
+        }
     }
 
     /// The token the mock emits at generation index `i` for `prompt`.
@@ -121,6 +214,7 @@ impl EngineBackend for MockBackend {
         if self.active() == 0 {
             return Ok(self.queue.len());
         }
+        self.check_fault()?;
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
         }
@@ -231,6 +325,54 @@ mod tests {
         b.pump().unwrap();
         // two admitted to lanes, one still queued
         assert_eq!(b.free_lanes(), 0);
+    }
+
+    #[test]
+    fn error_after_fault_is_deterministic() {
+        let mut b = MockBackend::new(1, 10)
+            .with_fault(MockFault::ErrorAfter(2));
+        let (tx, _rx) = mpsc::channel();
+        b.submit_streaming(req(vec![1], 8), tx);
+        assert!(b.pump().is_ok());
+        assert!(b.pump().is_ok());
+        assert!(b.pump().is_err());
+        // and it keeps failing (crashed runtime, not a transient)
+        assert!(b.pump().is_err());
+        assert_eq!(b.steps_executed, 2);
+        // an idle faulty engine does not error — the fault needs work
+        let mut idle = MockBackend::new(1, 10)
+            .with_fault(MockFault::ErrorAfter(0));
+        assert!(idle.pump().is_ok());
+    }
+
+    #[test]
+    fn stall_after_fault_blocks_until_released() {
+        let release = Arc::new(AtomicBool::new(false));
+        let mut b = MockBackend::new(1, 10)
+            .with_fault(MockFault::StallAfter(1))
+            .with_stall_release(release.clone());
+        let (tx, _rx) = mpsc::channel();
+        b.submit_streaming(req(vec![1], 8), tx);
+        assert!(b.pump().is_ok());
+        let t = std::thread::spawn(move || b.pump().is_err());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!t.is_finished(), "pump returned while stalled");
+        release.store(true, Ordering::SeqCst);
+        assert!(t.join().unwrap(), "released stall must surface an error");
+    }
+
+    #[test]
+    fn nan_logits_fault_errors_when_sampling_would_start() {
+        let mut b =
+            MockBackend::new(1, 10).with_fault(MockFault::NanLogits);
+        let (tx, _rx) = mpsc::channel();
+        // 2 prompt tokens: the first pump only feeds the prompt...
+        b.submit_streaming(req(vec![1, 2], 4), tx);
+        assert!(b.pump().is_ok());
+        // ...the pump that would sample (last prompt token fed) errors,
+        // matching the real engine's poisoned-state guard
+        let err = b.pump().unwrap_err();
+        assert!(err.to_string().contains("non-finite logits"), "{err}");
     }
 
     #[test]

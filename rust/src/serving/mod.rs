@@ -15,16 +15,21 @@
 //!   device-resident lanes stepping together one token per `step_fwd`
 //!   call, finished lanes refilled without draining the others, lane
 //!   memory reset on device via the AOT'd `reset_lanes` mask program.
+//! * [`router`] — the multi-engine fleet: N driver threads each owning
+//!   an independent backend behind one shared admission scheduler,
+//!   with placement policies, heartbeat/error health tracking, and
+//!   exactly-once failover of in-flight requests.
 //! * [`loadgen`] — open-loop Poisson load generator + hand-rolled HTTP
 //!   client; writes `BENCH_serve.json` (latency percentiles,
 //!   tokens/sec).
-//! * [`mock`] — a deterministic device-free [`EngineBackend`] so the
-//!   scheduler/HTTP layers test (and `loadgen --dry-run` runs) without
-//!   artifacts.
+//! * [`mock`] — a deterministic device-free [`EngineBackend`] (with
+//!   injectable [`MockFault`]s) so the scheduler/HTTP/router layers
+//!   test — and `loadgen --dry-run` runs — without artifacts.
 
 pub mod engine;
 pub mod loadgen;
 pub mod mock;
+pub mod router;
 pub mod sampler;
 pub mod scheduler;
 pub mod server;
@@ -32,7 +37,8 @@ pub mod server;
 pub use engine::{
     DropReason, Engine, EngineBackend, GenRequest, GenResult, StreamEvent,
 };
-pub use mock::MockBackend;
+pub use mock::{MockBackend, MockFault};
+pub use router::{Fleet, Placement, RouterCfg};
 pub use sampler::Sampler;
 pub use scheduler::{Histogram, Policy, Rejection, Scheduler};
 pub use server::{Driver, ServerConfig};

@@ -1,0 +1,1119 @@
+//! Multi-engine router: the serving stack's horizontal axis.
+//!
+//! A [`Fleet`] fronts N engine-driver threads — each owning an
+//! independent, non-`Send` [`EngineBackend`] — with the single shared
+//! admission [`Scheduler`] the HTTP layer already enqueues into.  A
+//! placer thread moves requests from the scheduler onto per-engine
+//! mailboxes according to a [`Placement`] policy, and watches per-engine
+//! heartbeats + consecutive-error counters to take failed engines out of
+//! rotation:
+//!
+//! * **Placement** — `least-loaded` (most free capacity wins),
+//!   `round-robin` (rotate over engines with capacity), or `affinity`
+//!   (a hash of the prompt prefix pins related requests to one engine,
+//!   trading balance for state locality).
+//! * **Health** — every driver iteration stores a heartbeat and
+//!   publishes `free_lanes`; a driver that stops beating (wedged device)
+//!   or crosses `error_threshold` consecutive `pump` failures is marked
+//!   unhealthy and receives no new placements.
+//! * **Failover** — an unhealthy engine's placed + in-flight requests
+//!   are re-queued onto survivors *exactly once per failure* (the
+//!   request registry is the single source of truth: ownership changes
+//!   and terminal-event delivery happen under one lock, so a request
+//!   can never complete twice).  Tokens already streamed to the client
+//!   are suppressed on the replay attempt, keeping the client's stream
+//!   continuous.  After `max_retries` failed placements the request is
+//!   dropped with [`DropReason::EngineFailure`] (HTTP 503).
+//! * **Metrics** — `/metrics` gains one row per engine plus fleet
+//!   totals and a `router` section (failovers, re-queues, exhausted
+//!   retries).
+//!
+//! Replay caveat: a failed-over request is re-generated from scratch on
+//! the survivor.  Deterministic backends (greedy sampling, the mock)
+//! reproduce the original stream exactly; stochastic sampling may
+//! diverge from the already-streamed prefix — the suppressed-prefix
+//! replay keeps the stream *continuous*, not bit-identical.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::serving::engine::{DropReason, EngineBackend, GenRequest, StreamEvent};
+use crate::serving::scheduler::{Policy, QueuedRequest, Scheduler};
+use crate::serving::server::{self, ServeState, ServerConfig};
+
+/// How the placer distributes admitted requests over healthy engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// The engine with the most free capacity (free lanes minus
+    /// already-placed mailbox depth) wins; ties go to the lowest id.
+    LeastLoaded,
+    /// Rotate over engines, skipping those without capacity.
+    RoundRobin,
+    /// Hash of the prompt prefix (first 8 tokens) picks the engine
+    /// among the currently-healthy set: requests sharing a prompt
+    /// prefix land together (state locality), even if that engine is
+    /// momentarily busy.
+    Affinity,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s {
+            "least-loaded" | "ll" => Ok(Placement::LeastLoaded),
+            "round-robin" | "rr" => Ok(Placement::RoundRobin),
+            "affinity" => Ok(Placement::Affinity),
+            other => Err(Error::Config(format!(
+                "unknown placement {other:?} \
+                 (expected least-loaded | round-robin | affinity)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least-loaded",
+            Placement::RoundRobin => "round-robin",
+            Placement::Affinity => "affinity",
+        }
+    }
+}
+
+/// Fleet-level configuration.
+#[derive(Debug, Clone)]
+pub struct RouterCfg {
+    /// Number of engine-driver threads.
+    pub engines: usize,
+    pub placement: Placement,
+    /// A driver that hasn't heartbeat for this long is considered
+    /// wedged and taken out of rotation.  Must comfortably exceed the
+    /// worst-case device step time.
+    pub heartbeat_timeout: Duration,
+    /// Consecutive `pump` errors before a driver declares itself
+    /// unhealthy.
+    pub error_threshold: u64,
+    /// How many times a request may be re-placed after an engine
+    /// failure before it is dropped with 503 `engine-failure`.
+    pub max_retries: usize,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        RouterCfg {
+            engines: 2,
+            placement: Placement::LeastLoaded,
+            heartbeat_timeout: Duration::from_secs(5),
+            error_threshold: 3,
+            max_retries: 1,
+        }
+    }
+}
+
+/// Placer loop granularity when saturated (placement-latency bound).
+const SPIN_TICK: Duration = Duration::from_millis(2);
+/// Placer idle wait / health-check granularity.
+const PLACER_TICK: Duration = Duration::from_millis(10);
+/// Engine-driver idle wait.
+const ENGINE_TICK: Duration = Duration::from_millis(10);
+/// How often drivers republish backend stats for `/metrics`.
+const PUBLISH_EVERY: Duration = Duration::from_millis(50);
+/// `last_beat_ms` sentinel: the driver thread has not beaten yet
+/// (backend still constructing) — staleness doesn't apply.
+const NEVER_BEAT: u64 = u64::MAX;
+
+/// Per-engine shared state (driver thread ⇄ placer ⇄ metrics).
+struct EngineState {
+    /// Request ids placed on this engine but not yet submitted to its
+    /// backend.  Paired with `work` for the driver's idle wait.
+    mailbox: Mutex<VecDeque<u64>>,
+    work: Condvar,
+    /// Published by the driver each iteration (admission capacity).
+    free_lanes: AtomicUsize,
+    healthy: AtomicBool,
+    /// Milliseconds since fleet start of the driver's last loop
+    /// iteration; [`NEVER_BEAT`] until the backend is constructed.
+    last_beat_ms: AtomicU64,
+    consec_errors: AtomicU64,
+    /// Set once the placer has re-queued this engine's work after it
+    /// went unhealthy (the requeue must happen exactly once).
+    drained: AtomicBool,
+    /// The driver thread returned (cleanly or not).
+    thread_done: AtomicBool,
+    placements: AtomicU64,
+    completions: AtomicU64,
+    tokens_done: AtomicU64,
+    /// Latest `backend.stats()` snapshot.
+    stats: Mutex<BTreeMap<String, f64>>,
+}
+
+impl EngineState {
+    fn new() -> Self {
+        EngineState {
+            mailbox: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            free_lanes: AtomicUsize::new(0),
+            healthy: AtomicBool::new(true),
+            last_beat_ms: AtomicU64::new(NEVER_BEAT),
+            consec_errors: AtomicU64::new(0),
+            drained: AtomicBool::new(false),
+            thread_done: AtomicBool::new(false),
+            placements: AtomicU64::new(0),
+            completions: AtomicU64::new(0),
+            tokens_done: AtomicU64::new(0),
+            stats: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+/// One routed request: everything needed to relay its events, detect
+/// its terminal outcome, and replay it on a survivor after a failure.
+/// Ownership (`owner`) and terminal delivery are only ever mutated
+/// under the registry lock — the exactly-once backbone.
+struct Entry {
+    req: GenRequest,
+    frontend: mpsc::Sender<StreamEvent>,
+    /// Engine currently responsible; `None` while waiting in the retry
+    /// queue.
+    owner: Option<usize>,
+    /// The owning driver has submitted it to its backend (a placed but
+    /// unsubmitted request doesn't consume a retry on failover).
+    submitted: bool,
+    /// Failed placements so far.
+    attempts: usize,
+    /// Tokens already forwarded to the client (suppress this many on a
+    /// replay attempt so the client stream stays continuous).
+    sent_tokens: usize,
+    /// Remaining replay tokens to suppress.
+    skip_tokens: usize,
+    deadline: Option<Instant>,
+}
+
+/// The multi-engine router: shared admission scheduler, per-engine
+/// mailboxes, request registry, and health/failover state.  Create it,
+/// spawn one [`Fleet::run_engine`] thread per engine and one
+/// [`Fleet::run_placer`] thread, then enqueue into [`Fleet::sched`] —
+/// or use [`serve_fleet`] for the full HTTP frontend.
+pub struct Fleet {
+    cfg: RouterCfg,
+    sched: Scheduler,
+    engines: Vec<EngineState>,
+    registry: Mutex<BTreeMap<u64, Entry>>,
+    retry_queue: Mutex<VecDeque<u64>>,
+    rr: AtomicUsize,
+    started: Instant,
+    shutdown: Arc<AtomicBool>,
+    /// Engines taken out of rotation (failure events).
+    failovers: AtomicU64,
+    /// Requests re-queued onto survivors.
+    requeues: AtomicU64,
+    /// Requests dropped with `engine-failure` after `max_retries`.
+    retries_exhausted: AtomicU64,
+    /// Deadline drops detected after admission (retry queue).
+    dropped_deadline: AtomicU64,
+}
+
+impl Fleet {
+    pub fn new(
+        cfg: RouterCfg,
+        queue_cap: usize,
+        policy: Policy,
+        shutdown: Arc<AtomicBool>,
+    ) -> Self {
+        let n = cfg.engines.max(1);
+        Fleet {
+            cfg,
+            sched: Scheduler::new(queue_cap, policy),
+            engines: (0..n).map(|_| EngineState::new()).collect(),
+            registry: Mutex::new(BTreeMap::new()),
+            retry_queue: Mutex::new(VecDeque::new()),
+            rr: AtomicUsize::new(0),
+            started: Instant::now(),
+            shutdown,
+            failovers: AtomicU64::new(0),
+            requeues: AtomicU64::new(0),
+            retries_exhausted: AtomicU64::new(0),
+            dropped_deadline: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The shared admission scheduler (the HTTP layer enqueues here).
+    pub fn sched(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.engines
+            .iter()
+            .filter(|e| e.healthy.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// At least one engine can still make progress.
+    pub fn alive(&self) -> bool {
+        self.healthy_count() > 0
+    }
+
+    pub fn requeues(&self) -> u64 {
+        self.requeues.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn retries_exhausted(&self) -> u64 {
+        self.retries_exhausted.load(Ordering::Relaxed)
+    }
+
+    pub fn engine_placements(&self, id: usize) -> u64 {
+        self.engines[id].placements.load(Ordering::Relaxed)
+    }
+
+    pub fn engine_completions(&self, id: usize) -> u64 {
+        self.engines[id].completions.load(Ordering::Relaxed)
+    }
+
+    pub fn engine_healthy(&self, id: usize) -> bool {
+        self.engines[id].healthy.load(Ordering::Relaxed)
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// FNV-1a over the prompt prefix — the session-affinity key.
+    fn affinity_hash(prompt: &[i32]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for &t in prompt.iter().take(8) {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Admission capacity of engine `i`: published free lanes minus
+    /// placed-but-unsubmitted mailbox depth; 0 when unhealthy.
+    fn capacity(&self, i: usize) -> usize {
+        let e = &self.engines[i];
+        if !e.healthy.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let pending = e.mailbox.lock().unwrap().len();
+        e.free_lanes.load(Ordering::Relaxed).saturating_sub(pending)
+    }
+
+    fn total_capacity(&self) -> usize {
+        (0..self.engines.len()).map(|i| self.capacity(i)).sum()
+    }
+
+    /// Affinity's early binding is allowed to queue ahead of the lanes,
+    /// but only this deep per engine — beyond it, matching requests
+    /// stay in the shared admission queue so 429 backpressure and
+    /// deadline expiry keep working under overload.
+    const AFFINITY_BACKLOG: usize = 8;
+
+    /// How many more requests affinity placement may pin onto engine
+    /// `i` right now: free lanes plus the bounded backlog, minus what
+    /// is already placed.  0 when unhealthy.
+    fn affinity_capacity(&self, i: usize) -> usize {
+        let e = &self.engines[i];
+        if !e.healthy.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let pending = e.mailbox.lock().unwrap().len();
+        (e.free_lanes.load(Ordering::Relaxed) + Self::AFFINITY_BACKLOG)
+            .saturating_sub(pending)
+    }
+
+    /// Pick a target engine for `prompt` per the placement policy, or
+    /// `None` when nothing can take it right now.
+    fn choose_engine(&self, prompt: &[i32]) -> Option<usize> {
+        let n = self.engines.len();
+        match self.cfg.placement {
+            Placement::LeastLoaded => (0..n)
+                .map(|i| (self.capacity(i), i))
+                .filter(|&(c, _)| c > 0)
+                // max_by_key returns the *last* max; key on (cap, -i)
+                // via rev() is overkill — scan for the first max
+                .fold(None, |best: Option<(usize, usize)>, (c, i)| {
+                    match best {
+                        Some((bc, _)) if bc >= c => best,
+                        _ => Some((c, i)),
+                    }
+                })
+                .map(|(_, i)| i),
+            Placement::RoundRobin => {
+                let start = self.rr.fetch_add(1, Ordering::Relaxed);
+                (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&i| self.capacity(i) > 0)
+            }
+            Placement::Affinity => {
+                let healthy: Vec<usize> = (0..n)
+                    .filter(|&i| {
+                        self.engines[i].healthy.load(Ordering::Relaxed)
+                    })
+                    .collect();
+                if healthy.is_empty() {
+                    return None;
+                }
+                let h = Self::affinity_hash(prompt) as usize;
+                let target = healthy[h % healthy.len()];
+                // pinned engine's bounded backlog is full: the request
+                // waits (in the shared queue / retry slot) rather than
+                // piling unboundedly onto its mailbox
+                (self.affinity_capacity(target) > 0).then_some(target)
+            }
+        }
+    }
+
+    /// Record a freshly-admitted request in the registry.
+    fn register(&self, q: QueuedRequest, owner: Option<usize>) {
+        let entry = Entry {
+            req: q.req,
+            frontend: q.events,
+            owner,
+            submitted: false,
+            attempts: 0,
+            sent_tokens: 0,
+            skip_tokens: 0,
+            deadline: q.deadline,
+        };
+        self.registry.lock().unwrap().insert(q.id, entry);
+    }
+
+    /// Push an (already-registered, owner-set) request id onto its
+    /// engine's mailbox and wake the driver.
+    fn dispatch(&self, id: u64, target: usize) {
+        let e = &self.engines[target];
+        e.mailbox.lock().unwrap().push_back(id);
+        e.placements.fetch_add(1, Ordering::Relaxed);
+        e.work.notify_all();
+    }
+
+    /// Re-place requests parked in the retry queue (failover survivors
+    /// and affinity requests whose pinned engine was full).  One pass
+    /// over the current contents; an unplaceable request rotates to
+    /// the back instead of blocking the ones behind it, whose targets
+    /// may have capacity.  Returns whether anything was dispatched.
+    fn place_retries(&self, now: Instant) -> bool {
+        let mut placed = false;
+        let parked = self.retry_queue.lock().unwrap().len();
+        for _ in 0..parked {
+            let Some(id) = self.retry_queue.lock().unwrap().pop_front()
+            else {
+                break;
+            };
+            let prompt = {
+                let mut reg = self.registry.lock().unwrap();
+                let Some(e) = reg.get(&id) else { continue };
+                if e.deadline.is_some_and(|d| d <= now) {
+                    let e = reg.remove(&id).unwrap();
+                    let _ = e
+                        .frontend
+                        .send(StreamEvent::Dropped(DropReason::Deadline));
+                    self.dropped_deadline.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                e.req.prompt.clone()
+            };
+            match self.choose_engine(&prompt) {
+                Some(target) => {
+                    let still_there = {
+                        let mut reg = self.registry.lock().unwrap();
+                        match reg.get_mut(&id) {
+                            Some(e) => {
+                                e.owner = Some(target);
+                                true
+                            }
+                            None => false,
+                        }
+                    };
+                    if still_there {
+                        self.dispatch(id, target);
+                        placed = true;
+                    }
+                }
+                None => {
+                    // its target has no room right now; rotate so the
+                    // requests behind it still get their shot
+                    self.retry_queue.lock().unwrap().push_back(id);
+                }
+            }
+        }
+        placed
+    }
+
+    /// Move fresh work from the shared scheduler onto engine mailboxes.
+    fn place_fresh(&self, now: Instant) -> bool {
+        let mut placed = false;
+        loop {
+            let can_place = match self.cfg.placement {
+                // affinity binds early, but only into bounded
+                // per-engine backlogs.  A request whose pinned engine
+                // is full parks in the retry queue (so requests bound
+                // for *other* engines keep flowing), and once the
+                // parked count hits the backlog bound, fresh taking
+                // pauses — overload then backs up into the *shared*
+                // queue where 429 backpressure and deadline expiry
+                // apply
+                Placement::Affinity => {
+                    self.retry_queue.lock().unwrap().len()
+                        < Self::AFFINITY_BACKLOG
+                        && (0..self.engines.len())
+                            .any(|i| self.affinity_capacity(i) > 0)
+                }
+                _ => self.total_capacity() > 0,
+            };
+            if !can_place {
+                break;
+            }
+            let Some(q) = self.sched.take_next(now) else { break };
+            let id = q.id;
+            match self.choose_engine(&q.req.prompt) {
+                Some(target) => {
+                    self.register(q, Some(target));
+                    self.dispatch(id, target);
+                    placed = true;
+                }
+                None => {
+                    // capacity raced away between the gate and the
+                    // choice: hold the request in the retry queue (it
+                    // consumes no attempt) until capacity returns
+                    self.register(q, None);
+                    self.retry_queue.lock().unwrap().push_back(id);
+                    break;
+                }
+            }
+        }
+        placed
+    }
+
+    /// Mark engines that stopped heartbeating (wedged) or whose driver
+    /// exited as unhealthy, and re-queue each unhealthy engine's work
+    /// exactly once.
+    fn health_check(&self, _now: Instant) {
+        let timeout_ms = self.cfg.heartbeat_timeout.as_millis() as u64;
+        let now_ms = self.now_ms();
+        for i in 0..self.engines.len() {
+            let e = &self.engines[i];
+            if e.healthy.load(Ordering::Relaxed) {
+                let beat = e.last_beat_ms.load(Ordering::Relaxed);
+                // an engine that never beat is still constructing its
+                // backend, and bundle loading can dwarf both a step
+                // and the heartbeat timeout — so construction gets its
+                // own generous grace (floored at 2 minutes, since
+                // there is no re-admission once quarantined).  But not
+                // forever: a driver wedged *inside construction* must
+                // also leave rotation, or affinity placement would pin
+                // matching requests onto it until their timeouts.
+                let stale = if beat == NEVER_BEAT {
+                    now_ms > timeout_ms.saturating_mul(4).max(120_000)
+                } else {
+                    now_ms.saturating_sub(beat) > timeout_ms
+                };
+                if stale || e.thread_done.load(Ordering::Relaxed) {
+                    e.healthy.store(false, Ordering::Relaxed);
+                }
+            }
+            if !e.healthy.load(Ordering::Relaxed)
+                && !e.drained.swap(true, Ordering::SeqCst)
+            {
+                self.requeue_engine(i);
+            }
+        }
+    }
+
+    /// Take engine `dead` out of rotation: clear its mailbox and move
+    /// every request it owns back through placement (or drop with 503
+    /// once retries are exhausted).  Runs exactly once per failure
+    /// (guarded by `drained`).
+    fn requeue_engine(&self, dead: usize) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+        self.engines[dead].mailbox.lock().unwrap().clear();
+        let mut retry = Vec::new();
+        let mut exhausted = Vec::new();
+        {
+            let mut reg = self.registry.lock().unwrap();
+            for (id, e) in reg.iter_mut() {
+                if e.owner != Some(dead) {
+                    continue;
+                }
+                if e.submitted {
+                    e.attempts += 1;
+                }
+                e.owner = None;
+                e.submitted = false;
+                e.skip_tokens = e.sent_tokens;
+                if e.attempts > self.cfg.max_retries {
+                    exhausted.push(*id);
+                } else {
+                    retry.push(*id);
+                }
+            }
+            for id in &exhausted {
+                if let Some(e) = reg.remove(id) {
+                    let _ = e.frontend.send(StreamEvent::Dropped(
+                        DropReason::EngineFailure,
+                    ));
+                }
+            }
+        }
+        self.retries_exhausted
+            .fetch_add(exhausted.len() as u64, Ordering::Relaxed);
+        if !retry.is_empty() {
+            self.requeues
+                .fetch_add(retry.len() as u64, Ordering::Relaxed);
+            let mut q = self.retry_queue.lock().unwrap();
+            for id in retry {
+                q.push_back(id);
+            }
+        }
+    }
+
+    /// Drop everything queued or in flight (shutdown, or no healthy
+    /// engine left).
+    fn drain_all(&self, reason: DropReason) {
+        if matches!(reason, DropReason::Shutdown) {
+            self.sched.drain_shutdown();
+        } else {
+            let now = Instant::now();
+            while let Some(q) = self.sched.take_next(now) {
+                let _ = q.events.send(StreamEvent::Dropped(reason));
+            }
+        }
+        let drained = std::mem::take(&mut *self.registry.lock().unwrap());
+        for (_, e) in drained {
+            let _ = e.frontend.send(StreamEvent::Dropped(reason));
+        }
+        self.retry_queue.lock().unwrap().clear();
+        for e in &self.engines {
+            e.work.notify_all();
+        }
+    }
+
+    /// The placer loop: expire deadlines, watch health, place retries
+    /// then fresh work, idle briefly.  Returns at shutdown after
+    /// draining everything still queued.
+    pub fn run_placer(&self) {
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                self.drain_all(DropReason::Shutdown);
+                return;
+            }
+            let now = Instant::now();
+            self.sched.expire(now);
+            self.health_check(now);
+            if self.healthy_count() == 0 {
+                // nothing can ever run; fail pending work fast (new
+                // arrivals are rejected up front via `alive()`)
+                self.drain_all(DropReason::EngineFailure);
+                std::thread::sleep(PLACER_TICK);
+                continue;
+            }
+            let placed =
+                self.place_retries(now) | self.place_fresh(now);
+            if !placed {
+                if self.sched.depth() == 0 {
+                    self.sched.wait_for_work(PLACER_TICK);
+                } else {
+                    // work is queued but no engine has capacity —
+                    // bounded nap instead of a hot spin
+                    std::thread::sleep(SPIN_TICK);
+                }
+            }
+        }
+    }
+
+    fn beat(&self, id: usize, backend: &dyn EngineBackend) {
+        let e = &self.engines[id];
+        e.last_beat_ms.store(self.now_ms(), Ordering::Relaxed);
+        e.free_lanes.store(backend.free_lanes(), Ordering::Relaxed);
+    }
+
+    fn publish(&self, id: usize, backend: &dyn EngineBackend) {
+        let mut stats = backend.stats();
+        stats.insert("free_lanes".into(), backend.free_lanes() as f64);
+        *self.engines[id].stats.lock().unwrap() = stats;
+    }
+
+    /// Relay one in-flight request's events from the backend channel to
+    /// the frontend, exactly once, suppressing replayed tokens.
+    /// Returns whether the driver should keep polling this receiver.
+    fn relay(
+        &self,
+        engine: usize,
+        rid: u64,
+        rx: &mpsc::Receiver<StreamEvent>,
+    ) -> bool {
+        loop {
+            match rx.try_recv() {
+                Ok(ev) => {
+                    let mut reg = self.registry.lock().unwrap();
+                    let Some(e) = reg.get_mut(&rid) else { return false };
+                    if e.owner != Some(engine) {
+                        // failed over to a survivor; this attempt's
+                        // events are dead
+                        return false;
+                    }
+                    match ev {
+                        StreamEvent::Admitted => {
+                            // only the first attempt's admission is the
+                            // client's: a replay's Admitted would emit
+                            // a second "admitted" stream event mid-
+                            // token-stream and overwrite queue_ms with
+                            // failover-inflated time
+                            if e.attempts == 0 {
+                                let _ =
+                                    e.frontend.send(StreamEvent::Admitted);
+                            }
+                        }
+                        StreamEvent::Token(t) => {
+                            if e.skip_tokens > 0 {
+                                e.skip_tokens -= 1;
+                            } else {
+                                e.sent_tokens += 1;
+                                let _ =
+                                    e.frontend.send(StreamEvent::Token(t));
+                            }
+                        }
+                        StreamEvent::Done(res) => {
+                            let e = reg.remove(&rid).unwrap();
+                            let st = &self.engines[engine];
+                            st.completions.fetch_add(1, Ordering::Relaxed);
+                            st.tokens_done.fetch_add(
+                                res.tokens.len() as u64,
+                                Ordering::Relaxed,
+                            );
+                            let _ =
+                                e.frontend.send(StreamEvent::Done(res));
+                            return false;
+                        }
+                        StreamEvent::Dropped(r) => {
+                            let e = reg.remove(&rid).unwrap();
+                            let _ =
+                                e.frontend.send(StreamEvent::Dropped(r));
+                            return false;
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => return true,
+                // backend dropped the sender without a terminal event
+                // (engine dying mid-request): the health path will
+                // re-queue the entry — stop polling
+                Err(mpsc::TryRecvError::Disconnected) => return false,
+            }
+        }
+    }
+
+    /// The engine-driver loop: submit placed work, pump the backend,
+    /// relay events, heartbeat, publish stats.  Call from a dedicated
+    /// thread owning `backend`; returns at shutdown or once this engine
+    /// is unhealthy (its work re-queued by the placer).
+    pub fn run_engine(
+        &self,
+        id: usize,
+        backend: &mut dyn EngineBackend,
+    ) -> Result<()> {
+        let me = &self.engines[id];
+        let mut inflight: Vec<(u64, mpsc::Receiver<StreamEvent>)> =
+            Vec::new();
+        let mut last_publish = Instant::now();
+        self.publish(id, backend);
+        let mut result = Ok(());
+        loop {
+            if self.shutdown.load(Ordering::Relaxed)
+                || !me.healthy.load(Ordering::Relaxed)
+            {
+                break;
+            }
+            self.beat(id, backend);
+            // submit placed work (ownership re-checked under the
+            // registry lock: a request re-placed since its mailbox
+            // entry was written must not run here too)
+            loop {
+                let rid = me.mailbox.lock().unwrap().pop_front();
+                let Some(rid) = rid else { break };
+                let req = {
+                    let mut reg = self.registry.lock().unwrap();
+                    match reg.get_mut(&rid) {
+                        Some(e) if e.owner == Some(id) => {
+                            e.submitted = true;
+                            Some(e.req.clone())
+                        }
+                        _ => None,
+                    }
+                };
+                if let Some(req) = req {
+                    let (tx, rx) = mpsc::channel();
+                    backend.submit_streaming(req, tx);
+                    inflight.push((rid, rx));
+                }
+            }
+            // re-publish capacity now that the mailbox is drained into
+            // the backend: the placer must not read an empty mailbox
+            // against the pre-submit free_lanes and overplace into the
+            // backend's internal FIFO (where policy ordering and
+            // deadline expiry no longer apply)
+            me.free_lanes.store(backend.free_lanes(), Ordering::Relaxed);
+            let remaining = match backend.pump() {
+                Ok(n) => {
+                    me.consec_errors.store(0, Ordering::Relaxed);
+                    n
+                }
+                Err(err) => {
+                    let n =
+                        me.consec_errors.fetch_add(1, Ordering::Relaxed) + 1;
+                    if n >= self.cfg.error_threshold {
+                        me.healthy.store(false, Ordering::Relaxed);
+                        result = Err(err);
+                    } else {
+                        // transient? brief backoff, then retry
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    inflight.len()
+                }
+            };
+            inflight.retain(|(rid, rx)| self.relay(id, *rid, rx));
+            if last_publish.elapsed() >= PUBLISH_EVERY {
+                self.publish(id, backend);
+                last_publish = Instant::now();
+            }
+            if remaining == 0 && inflight.is_empty() {
+                let mb = me.mailbox.lock().unwrap();
+                if mb.is_empty() && !self.shutdown.load(Ordering::Relaxed) {
+                    let _ = me.work.wait_timeout(mb, ENGINE_TICK).unwrap();
+                }
+            }
+        }
+        self.publish(id, backend);
+        me.healthy.store(false, Ordering::Relaxed);
+        me.thread_done.store(true, Ordering::SeqCst);
+        result
+    }
+
+    /// Mark an engine's driver thread as gone (wrapper for threads that
+    /// fail before reaching [`Fleet::run_engine`], e.g. backend
+    /// construction errors).
+    pub fn engine_exited(&self, id: usize) {
+        let e = &self.engines[id];
+        e.healthy.store(false, Ordering::Relaxed);
+        e.thread_done.store(true, Ordering::SeqCst);
+    }
+
+    /// The router + per-engine sections of the `/metrics` document:
+    /// `{"engine": <summed totals>, "engines": [rows...],
+    /// "router": {...}}`.
+    pub fn fleet_json(&self) -> Json {
+        let mut totals: BTreeMap<String, f64> = BTreeMap::new();
+        let mut rows = Vec::with_capacity(self.engines.len());
+        for (i, e) in self.engines.iter().enumerate() {
+            let stats = e.stats.lock().unwrap().clone();
+            for (k, v) in &stats {
+                // fleet totals sum counters and capacity gauges; a
+                // summed mean (occupancy) would read N-x inflated next
+                // to the single-engine metric of the same name — those
+                // stay per-row only
+                if k.starts_with("mean_") {
+                    continue;
+                }
+                *totals.entry(k.clone()).or_insert(0.0) += *v;
+            }
+            let stats_json = Json::Obj(
+                stats
+                    .iter()
+                    .map(|(k, v)| (k.clone(), json::num(*v)))
+                    .collect(),
+            );
+            rows.push(json::obj(vec![
+                ("id", json::num(i as f64)),
+                (
+                    "healthy",
+                    Json::Bool(e.healthy.load(Ordering::Relaxed)),
+                ),
+                (
+                    "placements",
+                    json::num(e.placements.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "completions",
+                    json::num(
+                        e.completions.load(Ordering::Relaxed) as f64
+                    ),
+                ),
+                (
+                    "tokens_done",
+                    json::num(
+                        e.tokens_done.load(Ordering::Relaxed) as f64
+                    ),
+                ),
+                (
+                    "consec_errors",
+                    json::num(
+                        e.consec_errors.load(Ordering::Relaxed) as f64
+                    ),
+                ),
+                (
+                    "free_lanes",
+                    json::num(e.free_lanes.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "mailbox_depth",
+                    json::num(e.mailbox.lock().unwrap().len() as f64),
+                ),
+                ("stats", stats_json),
+            ]));
+        }
+        let engine_totals = Json::Obj(
+            totals
+                .iter()
+                .map(|(k, v)| (k.clone(), json::num(*v)))
+                .collect(),
+        );
+        json::obj(vec![
+            ("engine", engine_totals),
+            ("engines", json::arr(rows)),
+            (
+                "router",
+                json::obj(vec![
+                    (
+                        "placement",
+                        json::s(self.cfg.placement.as_str()),
+                    ),
+                    (
+                        "engines",
+                        json::num(self.engines.len() as f64),
+                    ),
+                    (
+                        "healthy_engines",
+                        json::num(self.healthy_count() as f64),
+                    ),
+                    (
+                        "failovers",
+                        json::num(
+                            self.failovers.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "requeues",
+                        json::num(
+                            self.requeues.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                    (
+                        "retries_exhausted",
+                        json::num(self
+                            .retries_exhausted
+                            .load(Ordering::Relaxed)
+                            as f64),
+                    ),
+                    (
+                        "dropped_deadline_post_admission",
+                        json::num(self
+                            .dropped_deadline
+                            .load(Ordering::Relaxed)
+                            as f64),
+                    ),
+                    (
+                        "inflight",
+                        json::num(
+                            self.registry.lock().unwrap().len() as f64
+                        ),
+                    ),
+                    (
+                        "retry_queue_depth",
+                        json::num(
+                            self.retry_queue.lock().unwrap().len() as f64,
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// HTTP frontend state over a [`Fleet`].
+struct FleetState {
+    cfg: ServerConfig,
+    fleet: Arc<Fleet>,
+    started: Instant,
+}
+
+impl ServeState for FleetState {
+    fn cfg(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    fn sched(&self) -> &Scheduler {
+        self.fleet.sched()
+    }
+
+    fn alive(&self) -> bool {
+        self.fleet.alive()
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.fleet.shutdown.load(Ordering::Relaxed)
+    }
+
+    fn metrics_json(&self) -> Json {
+        let fleet = self.fleet.fleet_json();
+        let mut doc: BTreeMap<String, Json> = match fleet {
+            Json::Obj(m) => m,
+            _ => BTreeMap::new(),
+        };
+        doc.insert("scheduler".into(), self.fleet.sched().metrics_json());
+        doc.insert(
+            "server".into(),
+            json::obj(vec![
+                (
+                    "uptime_s",
+                    json::num(self.started.elapsed().as_secs_f64()),
+                ),
+                ("driver_alive", Json::Bool(self.fleet.alive())),
+            ]),
+        );
+        Json::Obj(doc)
+    }
+}
+
+/// Run the HTTP serving frontend over a multi-engine fleet until
+/// `shutdown` is set.
+///
+/// `engine_fn` runs once on each of the `rcfg.engines` dedicated driver
+/// threads; it must construct that engine's backend (PJRT state is not
+/// `Send`, so construction happens inside the thread) and hand it to
+/// [`Fleet::run_engine`].  Individual engine failures are *handled*
+/// (failover), not returned: they surface in `/metrics` and the logs.
+///
+/// Known limitation: a driver wedged inside a device call can only be
+/// routed around, not reaped — process supervision owns hard kills.
+pub fn serve_fleet<F>(
+    listener: TcpListener,
+    cfg: ServerConfig,
+    rcfg: RouterCfg,
+    shutdown: Arc<AtomicBool>,
+    engine_fn: F,
+) -> Result<()>
+where
+    F: Fn(usize, &Fleet) -> Result<()> + Send + Sync,
+{
+    let fleet = Arc::new(Fleet::new(
+        rcfg,
+        cfg.queue_cap,
+        cfg.policy,
+        shutdown.clone(),
+    ));
+    let state = Arc::new(FleetState {
+        cfg,
+        fleet: fleet.clone(),
+        started: Instant::now(),
+    });
+    listener.set_nonblocking(true)?;
+    std::thread::scope(|scope| -> Result<()> {
+        let engine_fn = &engine_fn;
+        for id in 0..fleet.n_engines() {
+            let fleet = fleet.clone();
+            scope.spawn(move || {
+                let r = engine_fn(id, &fleet);
+                if let Err(e) = &r {
+                    eprintln!("[router] engine {id} exited: {e}");
+                }
+                fleet.engine_exited(id);
+            });
+        }
+        let placer_fleet = fleet.clone();
+        let placer = scope.spawn(move || placer_fleet.run_placer());
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let conn_state = state.clone();
+                    scope.spawn(move || {
+                        server::handle_connection(stream, conn_state)
+                    });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    let _ = placer.join();
+                    return Err(e.into());
+                }
+            }
+        }
+        placer
+            .join()
+            .map_err(|_| Error::Serving("placer panicked".into()))?;
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        for p in [
+            Placement::LeastLoaded,
+            Placement::RoundRobin,
+            Placement::Affinity,
+        ] {
+            assert_eq!(Placement::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Placement::parse("random").is_err());
+        assert_eq!(
+            Placement::parse("rr").unwrap(),
+            Placement::RoundRobin
+        );
+        assert_eq!(
+            Placement::parse("ll").unwrap(),
+            Placement::LeastLoaded
+        );
+    }
+
+    #[test]
+    fn affinity_hash_is_prefix_stable() {
+        let a = Fleet::affinity_hash(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let b = Fleet::affinity_hash(&[1, 2, 3, 4, 5, 6, 7, 8, 100]);
+        assert_eq!(a, b, "suffix beyond the prefix must not matter");
+        let c = Fleet::affinity_hash(&[2, 2, 3, 4, 5, 6, 7, 8]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fleet_json_shape_is_stable_when_idle() {
+        let fleet = Fleet::new(
+            RouterCfg { engines: 3, ..Default::default() },
+            8,
+            Policy::Fifo,
+            Arc::new(AtomicBool::new(false)),
+        );
+        let doc = fleet.fleet_json();
+        assert_eq!(
+            doc.get("engines").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        let router = doc.get("router").unwrap();
+        assert_eq!(
+            router.get("healthy_engines").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        assert_eq!(
+            router.get("placement").unwrap().as_str().unwrap(),
+            "least-loaded"
+        );
+        assert!(fleet.alive());
+    }
+}

@@ -303,8 +303,22 @@ impl Scheduler {
         if self.policy != Policy::Deadline {
             return;
         }
+        let now = Self::freshen(now);
         let mut inner = self.inner.lock().unwrap();
         Self::drop_expired(&mut inner, now);
+    }
+
+    /// Expiry must never be checked against a timestamp older than the
+    /// wall clock: drivers capture `now` once per loop iteration, and a
+    /// request whose deadline passes while the driver is blocked in
+    /// `wait_for_work` (or inside a long device `pump`) would otherwise
+    /// be *admitted* by the next `take_next(stale_now)` — completing a
+    /// request the deadline policy promised to drop, and splitting the
+    /// outcome between `deadline_drops` and completions depending on
+    /// thread timing.  Callers may still pass a *future* instant
+    /// (simulated time in tests); only the past is disallowed.
+    fn freshen(now: Instant) -> Instant {
+        now.max(Instant::now())
     }
 
     /// Pop the next request per policy, dropping expired-deadline
@@ -320,6 +334,7 @@ impl Scheduler {
     /// taken instead.  The engine re-announces `Admitted` when the lane
     /// actually starts; receivers treat the duplicate as a refresh.
     pub fn take_next(&self, now: Instant) -> Option<QueuedRequest> {
+        let now = Self::freshen(now);
         let mut inner = self.inner.lock().unwrap();
         if self.policy == Policy::Deadline {
             Self::drop_expired(&mut inner, now);
@@ -576,6 +591,45 @@ mod tests {
         f.enqueue(req(1), Some(Duration::ZERO), chan().0).unwrap();
         f.expire(Instant::now() + Duration::from_millis(1));
         assert_eq!(f.depth(), 1);
+    }
+
+    #[test]
+    fn stale_now_cannot_admit_an_expired_request() {
+        // regression: the driver captures `now`, blocks in
+        // wait_for_work / a long pump, and only then calls
+        // take_next(now).  A request whose deadline passed inside that
+        // window must be dropped (counted once in dropped_deadline) —
+        // never admitted and later completed as well.
+        let s = Scheduler::new(4, Policy::Deadline);
+        let stale = Instant::now();
+        let (tx, rx) = chan();
+        s.enqueue(req(1), Some(Duration::from_millis(5)), tx).unwrap();
+        assert!(s.wait_for_work(Duration::ZERO));
+        std::thread::sleep(Duration::from_millis(20));
+        // driver wakes up and uses the pre-wait timestamp
+        assert!(s.take_next(stale).is_none());
+        assert!(matches!(
+            rx.try_recv(),
+            Ok(StreamEvent::Dropped(DropReason::Deadline))
+        ));
+        // exactly one terminal outcome was recorded
+        assert!(rx.try_recv().is_err());
+        let m = s.metrics_json();
+        assert_eq!(
+            m.get("dropped_deadline").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert_eq!(m.get("started").unwrap().as_f64().unwrap(), 0.0);
+        // same clamp covers expire()
+        let (tx, rx) = chan();
+        s.enqueue(req(1), Some(Duration::from_millis(5)), tx).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        s.expire(stale);
+        assert!(matches!(
+            rx.try_recv(),
+            Ok(StreamEvent::Dropped(DropReason::Deadline))
+        ));
+        assert_eq!(s.depth(), 0);
     }
 
     #[test]

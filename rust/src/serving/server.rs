@@ -63,6 +63,13 @@ pub struct ServerConfig {
     pub vocab: Option<usize>,
     /// Give up on a request (504 / error chunk) after this long.
     pub request_timeout: Duration,
+    /// Keep-alive: close an idle connection after this long without a
+    /// new request (also the read timeout while parsing one).
+    pub keepalive_idle: Duration,
+    /// Keep-alive: maximum requests served on one connection before the
+    /// server closes it (bounds how long a single client can pin a
+    /// connection thread).
+    pub keepalive_max_requests: usize,
 }
 
 impl Default for ServerConfig {
@@ -75,6 +82,8 @@ impl Default for ServerConfig {
             max_prompt_len: 4096,
             vocab: None,
             request_timeout: Duration::from_secs(300),
+            keepalive_idle: Duration::from_secs(5),
+            keepalive_max_requests: 128,
         }
     }
 }
@@ -186,7 +195,18 @@ fn status_reason(status: u16) -> &'static str {
     }
 }
 
-/// Serialize a complete (non-chunked) response.
+/// The `Connection` response-header value for a close decision.
+pub fn conn_header(close: bool) -> &'static str {
+    if close {
+        "close"
+    } else {
+        "keep-alive"
+    }
+}
+
+/// Serialize a complete (non-chunked) response.  The `Connection`
+/// header is the caller's to add (via `extra_headers`): the server
+/// decides keep-alive per connection, not per serializer call.
 pub fn http_response(
     status: u16,
     content_type: &str,
@@ -195,7 +215,7 @@ pub fn http_response(
 ) -> Vec<u8> {
     let mut out = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n",
+         Content-Length: {}\r\n",
         status_reason(status),
         body.len()
     )
@@ -209,10 +229,11 @@ pub fn http_response(
 }
 
 /// Response head that opens a chunked stream.
-pub fn chunked_response_head(content_type: &str) -> Vec<u8> {
+pub fn chunked_response_head(content_type: &str, close: bool) -> Vec<u8> {
     format!(
         "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\n\
-         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        conn_header(close)
     )
     .into_bytes()
 }
@@ -233,12 +254,16 @@ fn write_json(
     status: u16,
     body: &Json,
     extra_headers: &[(&str, &str)],
+    close: bool,
 ) -> std::io::Result<()> {
+    let mut headers: Vec<(&str, &str)> =
+        vec![("Connection", conn_header(close))];
+    headers.extend_from_slice(extra_headers);
     let bytes = http_response(
         status,
         "application/json",
         body.to_string_compact().as_bytes(),
-        extra_headers,
+        &headers,
     );
     w.write_all(&bytes)
 }
@@ -347,6 +372,25 @@ pub fn parse_completion(
     })
 }
 
+/// What the connection-handling layer needs from the serving topology
+/// behind it.  Implemented by the single-engine [`Shared`] state here
+/// and by the multi-engine fleet in [`crate::serving::router`], so the
+/// HTTP frontend (request parsing, keep-alive, routing, backpressure
+/// mapping) is written once.
+pub(crate) trait ServeState: Send + Sync {
+    fn cfg(&self) -> &ServerConfig;
+    fn sched(&self) -> &Scheduler;
+    /// False once no engine can make progress (driver dead / whole
+    /// fleet unhealthy) — new completions answer 503 immediately.
+    fn alive(&self) -> bool;
+    /// Server teardown began — keep-alive loops must stop accepting
+    /// further requests on their connection so the accept scope can
+    /// join promptly.
+    fn shutting_down(&self) -> bool;
+    /// The full `/metrics` document.
+    fn metrics_json(&self) -> Json;
+}
+
 /// State shared between the accept loop, connection threads, and the
 /// engine-driver thread.
 struct Shared {
@@ -356,6 +400,28 @@ struct Shared {
     shutdown: Arc<AtomicBool>,
     driver_dead: AtomicBool,
     started: Instant,
+}
+
+impl ServeState for Shared {
+    fn cfg(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    fn sched(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    fn alive(&self) -> bool {
+        !self.driver_dead.load(Ordering::Relaxed)
+    }
+
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    fn metrics_json(&self) -> Json {
+        metrics_document(self)
+    }
 }
 
 /// Handle passed to the engine-init closure on the driver thread; call
@@ -474,37 +540,72 @@ where
     })
 }
 
-fn handle_connection(stream: TcpStream, sh: Arc<Shared>) {
+/// Serve one connection: an HTTP/1.1 keep-alive loop.  Up to
+/// `keepalive_max_requests` requests are answered on the same socket;
+/// the connection closes on `Connection: close`, a parse or write
+/// error, or `keepalive_idle` passing without a new request.
+pub(crate) fn handle_connection<S: ServeState>(
+    stream: TcpStream,
+    sh: Arc<S>,
+) {
     // BSD-derived platforms make accepted sockets inherit the
     // listener's O_NONBLOCK (set for the shutdown-aware accept loop);
     // reads here must block
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    // doubles as the keep-alive idle timeout: a connection holding no
+    // in-flight request is closed when the next read times out
+    let _ = stream.set_read_timeout(Some(sh.cfg().keepalive_idle));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    let req = match read_request(&mut reader) {
-        Ok(Some(r)) => r,
-        Ok(None) => return,
-        Err(e) => {
-            let _ = write_json(
-                &mut writer,
-                400,
-                &err_json(&e.to_string()),
-                &[],
-            );
+    let max_requests = sh.cfg().keepalive_max_requests.max(1);
+    for served in 0..max_requests {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            // clean close between requests
+            Ok(None) => return,
+            Err(Error::Io(ref e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // keep-alive idle timeout: close quietly
+                return;
+            }
+            Err(e) => {
+                let _ = write_json(
+                    &mut writer,
+                    400,
+                    &err_json(&e.to_string()),
+                    &[],
+                    true,
+                );
+                return;
+            }
+        };
+        // teardown in progress: answer this request, advertise close,
+        // and release the connection thread so the accept scope joins
+        // without waiting out keepalive_max_requests
+        let close = served + 1 >= max_requests
+            || sh.shutting_down()
+            || req
+                .header("connection")
+                .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+        if route(&mut writer, &req, sh.as_ref(), close).is_err() || close {
             return;
         }
-    };
-    let _ = route(&mut writer, &req, &sh);
+    }
 }
 
-fn route(
+fn route<S: ServeState>(
     w: &mut TcpStream,
     req: &HttpRequest,
-    sh: &Arc<Shared>,
+    sh: &S,
+    close: bool,
 ) -> std::io::Result<()> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => write_json(
@@ -512,15 +613,18 @@ fn route(
             200,
             &json::obj(vec![("status", json::s("ok"))]),
             &[],
+            close,
         ),
         ("GET", "/metrics") => {
-            write_json(w, 200, &metrics_document(sh), &[])
+            write_json(w, 200, &sh.metrics_json(), &[], close)
         }
-        ("POST", "/v1/completions") => handle_completion(w, &req.body, sh),
+        ("POST", "/v1/completions") => {
+            handle_completion(w, &req.body, sh, close)
+        }
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => {
-            write_json(w, 405, &err_json("method not allowed"), &[])
+            write_json(w, 405, &err_json("method not allowed"), &[], close)
         }
-        _ => write_json(w, 404, &err_json("not found"), &[]),
+        _ => write_json(w, 404, &err_json("not found"), &[], close),
     }
 }
 
@@ -552,27 +656,29 @@ fn metrics_document(sh: &Shared) -> Json {
     ])
 }
 
-fn handle_completion(
+fn handle_completion<S: ServeState>(
     w: &mut TcpStream,
     body: &[u8],
-    sh: &Arc<Shared>,
+    sh: &S,
+    close: bool,
 ) -> std::io::Result<()> {
-    let creq = match parse_completion(body, &sh.cfg) {
+    let creq = match parse_completion(body, sh.cfg()) {
         Ok(c) => c,
-        Err(msg) => return write_json(w, 400, &err_json(&msg), &[]),
+        Err(msg) => return write_json(w, 400, &err_json(&msg), &[], close),
     };
-    if sh.driver_dead.load(Ordering::Relaxed) {
+    if !sh.alive() {
         return write_json(
             w,
             503,
-            &err_json("engine driver not running"),
+            &err_json("no engine available"),
             &[],
+            close,
         );
     }
     let (tx, rx) = mpsc::channel();
     let t0 = Instant::now();
     let stream_mode = creq.stream;
-    let id = match sh.sched.enqueue(creq.gen, creq.deadline, tx) {
+    let id = match sh.sched().enqueue(creq.gen, creq.deadline, tx) {
         Ok(id) => id,
         Err(Rejection::QueueFull) => {
             return write_json(
@@ -580,26 +686,28 @@ fn handle_completion(
                 429,
                 &err_json("queue full"),
                 &[("Retry-After", "1")],
+                close,
             )
         }
         Err(Rejection::ShuttingDown) => {
-            return write_json(w, 503, &err_json("shutting down"), &[])
+            return write_json(w, 503, &err_json("shutting down"), &[], close)
         }
     };
     if stream_mode {
-        stream_completion(w, &rx, id, t0, sh)
+        stream_completion(w, &rx, id, t0, sh, close)
     } else {
-        unary_completion(w, &rx, id, t0, sh)
+        unary_completion(w, &rx, id, t0, sh, close)
     }
 }
 
 /// Wait out a request's event stream and answer one JSON document.
-fn unary_completion(
+fn unary_completion<S: ServeState>(
     w: &mut TcpStream,
     rx: &mpsc::Receiver<StreamEvent>,
     id: u64,
     t0: Instant,
-    sh: &Arc<Shared>,
+    sh: &S,
+    close: bool,
 ) -> std::io::Result<()> {
     // queue_ms is measured here, enqueue -> Admitted: the engine's own
     // queue_time misses the scheduler-queue wait (the engine only sees
@@ -612,7 +720,8 @@ fn unary_completion(
             }
             Ok(StreamEvent::Token(_)) => {}
             Ok(StreamEvent::Done(res)) => {
-                sh.sched.observe_completion(t0.elapsed(), res.tokens.len());
+                sh.sched()
+                    .observe_completion(t0.elapsed(), res.tokens.len());
                 let tokens =
                     res.tokens.iter().map(|&t| json::num(t as f64)).collect();
                 let body = json::obj(vec![
@@ -627,18 +736,25 @@ fn unary_completion(
                     ),
                     ("run_ms", json::num(res.run_time.as_secs_f64() * 1e3)),
                 ]);
-                return write_json(w, 200, &body, &[]);
+                return write_json(w, 200, &body, &[], close);
             }
             Ok(StreamEvent::Dropped(reason)) => {
-                return write_json(w, 503, &err_json(reason.as_str()), &[]);
+                return write_json(
+                    w,
+                    503,
+                    &err_json(reason.as_str()),
+                    &[],
+                    close,
+                );
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if t0.elapsed() > sh.cfg.request_timeout {
+                if t0.elapsed() > sh.cfg().request_timeout {
                     return write_json(
                         w,
                         504,
                         &err_json("request timed out"),
                         &[],
+                        close,
                     );
                 }
             }
@@ -648,6 +764,7 @@ fn unary_completion(
                     500,
                     &err_json("engine driver gone"),
                     &[],
+                    close,
                 );
             }
         }
@@ -656,14 +773,15 @@ fn unary_completion(
 
 /// Stream a request's tokens as NDJSON lines over chunked transfer
 /// encoding, one chunk per sampled token.
-fn stream_completion(
+fn stream_completion<S: ServeState>(
     w: &mut TcpStream,
     rx: &mpsc::Receiver<StreamEvent>,
     id: u64,
     t0: Instant,
-    sh: &Arc<Shared>,
+    sh: &S,
+    close: bool,
 ) -> std::io::Result<()> {
-    w.write_all(&chunked_response_head("application/x-ndjson"))?;
+    w.write_all(&chunked_response_head("application/x-ndjson", close))?;
     let send_line = |w: &mut TcpStream, doc: &Json| -> std::io::Result<()> {
         let mut line = doc.to_string_compact().into_bytes();
         line.push(b'\n');
@@ -691,7 +809,8 @@ fn stream_completion(
                 )?;
             }
             Ok(StreamEvent::Done(res)) => {
-                sh.sched.observe_completion(t0.elapsed(), res.tokens.len());
+                sh.sched()
+                    .observe_completion(t0.elapsed(), res.tokens.len());
                 send_line(
                     w,
                     &json::obj(vec![
@@ -719,7 +838,7 @@ fn stream_completion(
                 return w.write_all(LAST_CHUNK);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if t0.elapsed() > sh.cfg.request_timeout {
+                if t0.elapsed() > sh.cfg().request_timeout {
                     send_line(
                         w,
                         &json::obj(vec![(
@@ -875,8 +994,16 @@ mod tests {
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.contains("Content-Length: 2\r\n"));
         assert!(text.ends_with("\r\n\r\n{}"));
-        let head = String::from_utf8(chunked_response_head("text/plain"))
-            .unwrap();
+        let head =
+            String::from_utf8(chunked_response_head("text/plain", true))
+                .unwrap();
         assert!(head.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(head.contains("Connection: close\r\n"));
+        let head =
+            String::from_utf8(chunked_response_head("text/plain", false))
+                .unwrap();
+        assert!(head.contains("Connection: keep-alive\r\n"));
+        assert_eq!(conn_header(true), "close");
+        assert_eq!(conn_header(false), "keep-alive");
     }
 }

@@ -3,11 +3,17 @@
 //! PRNG): serialization round-trips, batcher/tokenizer invariants,
 //! sampler and analytic-model properties.
 
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
 use sigma_moe::coordinator::Checkpoint;
 use sigma_moe::data::{self, Corpus, WordTokenizer};
 use sigma_moe::json::{self, Json};
 use sigma_moe::rng::Rng;
 use sigma_moe::serving::Sampler;
+use sigma_moe::serving::{
+    DropReason, GenRequest, Histogram, Policy, Scheduler, StreamEvent,
+};
 use sigma_moe::tensor::{DType, HostTensor};
 use sigma_moe::{flops, Error};
 
@@ -217,4 +223,276 @@ fn prop_tensor_literal_roundtrip() {
 fn dtype_errors_are_reported_not_panicked() {
     let t = HostTensor::zeros(DType::I32, &[3]);
     assert!(matches!(t.as_f32(), Err(Error::Shape(_))));
+}
+
+fn greq(prompt_len: usize) -> GenRequest {
+    GenRequest {
+        prompt: vec![1; prompt_len.max(1)],
+        max_new_tokens: 2,
+        sampler: Sampler::greedy(),
+    }
+}
+
+#[test]
+fn prop_histogram_percentile_monotone_bounded_count_consistent() {
+    let mut rng = Rng::new(9);
+    for case in 0..25 {
+        let n = 1 + rng.below(300);
+        let mut h = Histogram::new();
+        let mut obs: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // magnitudes spanning 1µs .. 100s (the histogram's
+            // log-buckets start at 1µs)
+            let secs = 10f64.powf(rng.next_f64() * 8.0 - 6.0);
+            obs.push(secs);
+            h.observe_secs(secs);
+        }
+        assert_eq!(h.count(), n as u64, "case {case}");
+        let max = h.max_secs();
+        assert!(h.mean_secs() <= max + 1e-12);
+        let mut prev = 0.0;
+        for i in 0..=100u32 {
+            let p = f64::from(i) / 100.0;
+            let v = h.percentile(p);
+            // monotone in p
+            assert!(
+                v >= prev - 1e-12,
+                "case {case}: percentile not monotone at p={p}: \
+                 {v} < {prev}"
+            );
+            prev = v;
+            // bounded by the observed maximum
+            assert!(
+                v <= max + 1e-12,
+                "case {case}: p={p} exceeds max: {v} > {max}"
+            );
+            // count-consistent up to log-bucket resolution: each
+            // bucket spans 2x, EXCEPT bucket 0, which covers [0, 2µs)
+            // with lower edge 0 — interpolated values there can
+            // undershoot the smallest observation, so the bounds get
+            // one bucket-0 width (2µs) of additive slack.  At least
+            // ceil(p*n) observations lie at or below 2v (+slack), and
+            // fewer than ceil(p*n) lie below v/2 (-slack).
+            let rank = (p * n as f64).ceil().max(1.0) as usize;
+            let leq =
+                obs.iter().filter(|&&o| o <= 2.0 * v + 2e-6).count();
+            assert!(
+                leq >= rank.min(n),
+                "case {case} p={p}: only {leq}/{n} obs <= 2*{v}"
+            );
+            let below =
+                obs.iter().filter(|&&o| o < v / 2.0 - 2e-6).count();
+            assert!(
+                below < rank,
+                "case {case} p={p}: {below} obs below {v}/2 \
+                 (rank {rank})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_spf_take_order_matches_shadow_model() {
+    // the scheduler's shortest-prompt-first policy against a brute-
+    // force shadow model, under randomized enqueue/take interleavings:
+    // every take returns the queued request with minimal prompt length,
+    // FIFO among equals
+    let mut rng = Rng::new(10);
+    for round in 0..20 {
+        let s = Scheduler::new(256, Policy::ShortestPrompt);
+        let mut held = Vec::new();
+        // (id, prompt_len) in arrival order
+        let mut shadow: Vec<(u64, usize)> = Vec::new();
+        let shortest = |shadow: &[(u64, usize)]| {
+            shadow
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &(_, l))| (l, i))
+                .unwrap()
+                .0
+        };
+        for _op in 0..60 {
+            if rng.coin(0.6) || shadow.is_empty() {
+                let len = 1 + rng.below(30);
+                let (tx, rx) = mpsc::channel();
+                let id = s.enqueue(greq(len), None, tx).unwrap();
+                held.push(rx);
+                shadow.push((id, len));
+            } else {
+                let taken = s.take_next(Instant::now()).unwrap();
+                let (id, len) = shadow.remove(shortest(&shadow));
+                assert_eq!(taken.id, id, "round {round}");
+                assert_eq!(taken.req.prompt.len(), len);
+            }
+        }
+        while let Some(q) = s.take_next(Instant::now()) {
+            let (id, _) = shadow.remove(shortest(&shadow));
+            assert_eq!(q.id, id);
+        }
+        assert!(shadow.is_empty());
+    }
+}
+
+#[test]
+fn prop_deadline_never_yields_expired_each_resolved_once() {
+    // randomized enqueue / expire / take interleavings with real time
+    // passing: take_next must never yield a request whose deadline had
+    // already passed when it was called, and every request must resolve
+    // exactly once (admitted-and-taken XOR deadline-dropped)
+    let mut rng = Rng::new(11);
+    for round in 0..15 {
+        let s = Scheduler::new(256, Policy::Deadline);
+        let mut rxs: Vec<(u64, mpsc::Receiver<StreamEvent>)> = Vec::new();
+        let mut taken: Vec<u64> = Vec::new();
+        for _op in 0..40 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let deadline = rng.coin(0.5).then(|| {
+                        Duration::from_micros(rng.below(3000) as u64)
+                    });
+                    let (tx, rx) = mpsc::channel();
+                    let id = s
+                        .enqueue(greq(1 + rng.below(5)), deadline, tx)
+                        .unwrap();
+                    rxs.push((id, rx));
+                }
+                2 => s.expire(Instant::now()),
+                _ => {
+                    let before = Instant::now();
+                    if let Some(q) = s.take_next(before) {
+                        assert!(
+                            q.deadline.is_none_or(|d| d > before),
+                            "round {round}: expired request admitted"
+                        );
+                        taken.push(q.id);
+                    }
+                }
+            }
+            if rng.coin(0.3) {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
+        loop {
+            let before = Instant::now();
+            match s.take_next(before) {
+                Some(q) => {
+                    assert!(q.deadline.is_none_or(|d| d > before));
+                    taken.push(q.id);
+                }
+                None => break,
+            }
+        }
+        for (id, rx) in &rxs {
+            let was_taken = taken.contains(id);
+            let (mut dropped, mut admitted) = (0, 0);
+            while let Ok(ev) = rx.try_recv() {
+                match ev {
+                    StreamEvent::Dropped(DropReason::Deadline) => {
+                        dropped += 1
+                    }
+                    StreamEvent::Admitted => admitted += 1,
+                    other => panic!("unexpected event {other:?}"),
+                }
+            }
+            if was_taken {
+                assert_eq!(
+                    (admitted, dropped),
+                    (1, 0),
+                    "id {id}: taken requests get exactly one Admitted \
+                     and no drop"
+                );
+            } else {
+                assert_eq!(
+                    (admitted, dropped),
+                    (0, 1),
+                    "id {id}: untaken requests get exactly one \
+                     deadline drop"
+                );
+            }
+        }
+        let m = s.metrics_json();
+        let g = |k: &str| m.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(
+            g("enqueued"),
+            g("started") + g("dropped_deadline") + g("dropped_dead"),
+            "every admission resolves in exactly one counter"
+        );
+    }
+}
+
+#[test]
+fn prop_concurrent_expire_and_take_resolve_each_request_once() {
+    // one thread expiring, one taking, main thread enqueueing: the
+    // expire-vs-take race must still resolve every request in exactly
+    // one of {taken, deadline-dropped} and conserve the counters
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    for round in 0..5u64 {
+        let s = Arc::new(Scheduler::new(512, Policy::Deadline));
+        let stop = Arc::new(AtomicBool::new(false));
+        let expirer = {
+            let (s, stop) = (s.clone(), stop.clone());
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    s.expire(Instant::now());
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let taker = {
+            let (s, stop) = (s.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(q) = s.take_next(Instant::now()) {
+                        ids.push(q.id);
+                    }
+                    std::thread::yield_now();
+                }
+                while let Some(q) = s.take_next(Instant::now()) {
+                    ids.push(q.id);
+                }
+                ids
+            })
+        };
+        let mut rng = Rng::new(100 + round);
+        let mut rxs = Vec::new();
+        for i in 0..200usize {
+            let deadline = rng.coin(0.5).then(|| {
+                Duration::from_micros(rng.below(2000) as u64)
+            });
+            let (tx, rx) = mpsc::channel();
+            let id = s.enqueue(greq(1 + (i % 7)), deadline, tx).unwrap();
+            rxs.push((id, rx));
+            if rng.coin(0.2) {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        stop.store(true, Ordering::SeqCst);
+        expirer.join().unwrap();
+        let taken = taker.join().unwrap();
+        for (id, rx) in &rxs {
+            let was_taken = taken.contains(id);
+            let mut dropped = 0usize;
+            while let Ok(ev) = rx.try_recv() {
+                if matches!(ev, StreamEvent::Dropped(_)) {
+                    dropped += 1;
+                }
+            }
+            assert_eq!(
+                usize::from(was_taken) + dropped,
+                1,
+                "round {round} id {id}: taken={was_taken} \
+                 dropped={dropped}"
+            );
+        }
+        let m = s.metrics_json();
+        let g = |k: &str| m.get(k).unwrap().as_f64().unwrap();
+        assert_eq!(g("depth"), 0.0);
+        assert_eq!(
+            g("enqueued"),
+            g("started") + g("dropped_deadline") + g("dropped_dead")
+        );
+    }
 }

@@ -1,0 +1,466 @@
+//! Multi-engine router tests over the fault-injecting mock fleet: all
+//! artifact-free.  Covers exactly-once failover of in-flight work,
+//! unhealthy-engine quarantine, bounded retries → 503, affinity
+//! placement, per-engine `/metrics` consistency, and the mock-fleet
+//! throughput-scaling row (1 vs 2 engines under an identical Poisson
+//! plan).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sigma_moe::serving::loadgen::{self, LoadgenCfg};
+use sigma_moe::serving::router::{Fleet, Placement, RouterCfg};
+use sigma_moe::serving::server::ServerConfig;
+use sigma_moe::serving::{
+    DropReason, GenRequest, MockBackend, MockFault, Policy, Sampler,
+    StreamEvent,
+};
+
+const VOCAB: usize = 50;
+
+struct TestFleet {
+    fleet: Arc<Fleet>,
+    shutdown: Arc<AtomicBool>,
+    release: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Stand up a fleet of mock engines (plus the placer) on raw threads —
+/// no HTTP — with optional per-engine fault injection.
+fn start_fleet(
+    rcfg: RouterCfg,
+    lanes: usize,
+    step_delay: Duration,
+    faults: Vec<Option<MockFault>>,
+) -> TestFleet {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let release = Arc::new(AtomicBool::new(false));
+    let fleet = Arc::new(Fleet::new(
+        rcfg.clone(),
+        64,
+        Policy::Fifo,
+        shutdown.clone(),
+    ));
+    let mut threads = Vec::new();
+    for id in 0..rcfg.engines {
+        let fleet = fleet.clone();
+        let fault = faults.get(id).cloned().flatten();
+        let release = release.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut backend = MockBackend::new(lanes, VOCAB)
+                .with_step_delay(step_delay)
+                .with_stall_release(release);
+            if let Some(f) = fault {
+                backend = backend.with_fault(f);
+            }
+            // injected faults make this Err by design
+            let _ = fleet.run_engine(id, &mut backend);
+        }));
+    }
+    let placer_fleet = fleet.clone();
+    threads.push(std::thread::spawn(move || placer_fleet.run_placer()));
+    TestFleet { fleet, shutdown, release, threads }
+}
+
+impl TestFleet {
+    fn stop(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.release.store(true, Ordering::SeqCst);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Block until every engine driver has published capacity (first
+/// heartbeat) so placement tests aren't skewed by thread start order.
+fn wait_ready(fleet: &Fleet, engines: usize) {
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let doc = fleet.fleet_json();
+        let rows = doc.get("engines").unwrap().as_arr().unwrap();
+        let ready = rows
+            .iter()
+            .take(engines)
+            .filter(|r| {
+                r.get("free_lanes").unwrap().as_f64().unwrap() > 0.0
+            })
+            .count();
+        if ready >= engines || Instant::now() > deadline {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn greq(prompt: Vec<i32>, max_new: usize) -> GenRequest {
+    GenRequest { prompt, max_new_tokens: max_new, sampler: Sampler::greedy() }
+}
+
+/// Drain a request's event stream: wait for the first terminal event
+/// (up to `timeout`), then linger to catch forbidden double-terminals
+/// or duplicate tokens.  Returns (tokens seen, terminal events seen).
+fn collect_terminal(
+    rx: &mpsc::Receiver<StreamEvent>,
+    timeout: Duration,
+) -> (Vec<i32>, Vec<StreamEvent>) {
+    let deadline = Instant::now() + timeout;
+    let mut tokens = Vec::new();
+    let mut terminals = Vec::new();
+    while terminals.is_empty() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return (tokens, terminals);
+        }
+        match rx.recv_timeout(left) {
+            Ok(StreamEvent::Token(t)) => tokens.push(t),
+            Ok(StreamEvent::Admitted) => {}
+            Ok(ev) => terminals.push(ev),
+            Err(_) => return (tokens, terminals),
+        }
+    }
+    std::thread::sleep(Duration::from_millis(120));
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Admitted => {}
+            ev => terminals.push(ev),
+        }
+    }
+    (tokens, terminals)
+}
+
+#[test]
+fn failover_requeues_inflight_exactly_once() {
+    // engine 0 wedges (stops heartbeating) after 3 pumps with several
+    // requests mid-generation; every request must still complete with
+    // exactly one terminal event and a continuous, duplicate-free
+    // token stream (the replay suppresses already-streamed tokens and
+    // the deterministic mock regenerates the identical sequence).
+    let rcfg = RouterCfg {
+        engines: 2,
+        placement: Placement::RoundRobin,
+        heartbeat_timeout: Duration::from_millis(150),
+        error_threshold: 1,
+        max_retries: 2,
+    };
+    let tf = start_fleet(
+        rcfg,
+        2,
+        Duration::from_millis(1),
+        vec![Some(MockFault::StallAfter(3)), None],
+    );
+    wait_ready(&tf.fleet, 2);
+    let mut rxs = Vec::new();
+    for i in 0..8i32 {
+        let (tx, rx) = mpsc::channel();
+        let prompt = vec![i + 1];
+        tf.fleet
+            .sched()
+            .enqueue(greq(prompt.clone(), 6), None, tx)
+            .unwrap();
+        rxs.push((prompt, rx));
+    }
+    for (prompt, rx) in &rxs {
+        let (tokens, terminals) =
+            collect_terminal(rx, Duration::from_secs(15));
+        assert_eq!(
+            terminals.len(),
+            1,
+            "exactly one terminal event for prompt {prompt:?} \
+             (got {terminals:?})"
+        );
+        let expect: Vec<i32> = (0..6)
+            .map(|k| MockBackend::expected_token(prompt, k, VOCAB))
+            .collect();
+        match &terminals[0] {
+            StreamEvent::Done(res) => {
+                assert_eq!(
+                    tokens, expect,
+                    "stream must be continuous and duplicate-free \
+                     across the failover"
+                );
+                assert_eq!(res.tokens, expect);
+            }
+            other => panic!("prompt {prompt:?} dropped: {other:?}"),
+        }
+    }
+    assert!(
+        tf.fleet.requeues() >= 1,
+        "the stalled engine held in-flight work that must be re-queued"
+    );
+    assert_eq!(tf.fleet.retries_exhausted(), 0);
+    assert!(!tf.fleet.engine_healthy(0));
+    assert!(tf.fleet.engine_healthy(1));
+    assert_eq!(
+        tf.fleet.engine_completions(0) + tf.fleet.engine_completions(1),
+        8,
+        "zero double-completions"
+    );
+    tf.stop();
+}
+
+#[test]
+fn unhealthy_engine_receives_no_new_placements() {
+    // engine 0 errors on its first pump; after the router quarantines
+    // it, a whole second batch must complete with zero new placements
+    // on the dead engine.
+    let rcfg = RouterCfg {
+        engines: 2,
+        placement: Placement::RoundRobin,
+        heartbeat_timeout: Duration::from_secs(5),
+        error_threshold: 1,
+        max_retries: 2,
+    };
+    let tf = start_fleet(
+        rcfg,
+        2,
+        Duration::ZERO,
+        vec![Some(MockFault::ErrorAfter(0)), None],
+    );
+    wait_ready(&tf.fleet, 2);
+    let run_batch = |n: i32, base: i32| {
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel();
+            tf.fleet
+                .sched()
+                .enqueue(greq(vec![base + i], 4), None, tx)
+                .unwrap();
+            rxs.push(rx);
+        }
+        for rx in &rxs {
+            let (_, terminals) =
+                collect_terminal(rx, Duration::from_secs(15));
+            assert_eq!(terminals.len(), 1);
+            assert!(
+                matches!(terminals[0], StreamEvent::Done(_)),
+                "request must fail over and complete: {terminals:?}"
+            );
+        }
+    };
+    run_batch(4, 1);
+    assert!(!tf.fleet.engine_healthy(0));
+    let placements_frozen = tf.fleet.engine_placements(0);
+    run_batch(4, 100);
+    assert_eq!(
+        tf.fleet.engine_placements(0),
+        placements_frozen,
+        "unhealthy engine must receive no new placements"
+    );
+    assert_eq!(tf.fleet.engine_completions(0), 0);
+    assert_eq!(tf.fleet.engine_completions(1), 8);
+    tf.stop();
+}
+
+#[test]
+fn exhausted_retries_drop_with_engine_failure() {
+    // a fleet of one poisoned engine with zero retries: the submitted
+    // request gets exactly one Dropped(EngineFailure), and once no
+    // healthy engine remains, later arrivals are failed fast too.
+    let rcfg = RouterCfg {
+        engines: 1,
+        placement: Placement::LeastLoaded,
+        heartbeat_timeout: Duration::from_secs(5),
+        error_threshold: 1,
+        max_retries: 0,
+    };
+    let tf = start_fleet(
+        rcfg,
+        2,
+        Duration::ZERO,
+        vec![Some(MockFault::NanLogits)],
+    );
+    wait_ready(&tf.fleet, 1);
+    let (tx, rx) = mpsc::channel();
+    tf.fleet.sched().enqueue(greq(vec![1], 4), None, tx).unwrap();
+    let (_, terminals) = collect_terminal(&rx, Duration::from_secs(15));
+    assert_eq!(terminals.len(), 1);
+    assert!(matches!(
+        terminals[0],
+        StreamEvent::Dropped(DropReason::EngineFailure)
+    ));
+    assert_eq!(tf.fleet.retries_exhausted(), 1);
+    assert!(!tf.fleet.alive());
+    let (tx2, rx2) = mpsc::channel();
+    tf.fleet.sched().enqueue(greq(vec![2], 4), None, tx2).unwrap();
+    let (_, terminals) = collect_terminal(&rx2, Duration::from_secs(15));
+    assert_eq!(terminals.len(), 1);
+    assert!(matches!(
+        terminals[0],
+        StreamEvent::Dropped(DropReason::EngineFailure)
+    ));
+    tf.stop();
+}
+
+#[test]
+fn affinity_places_same_prefix_on_one_engine() {
+    let rcfg = RouterCfg {
+        engines: 2,
+        placement: Placement::Affinity,
+        heartbeat_timeout: Duration::from_secs(5),
+        error_threshold: 3,
+        max_retries: 1,
+    };
+    let tf = start_fleet(rcfg, 2, Duration::ZERO, vec![None, None]);
+    wait_ready(&tf.fleet, 2);
+    let mut rxs = Vec::new();
+    for i in 0..6i32 {
+        let (tx, rx) = mpsc::channel();
+        // identical 8-token affinity prefix, differing suffix
+        let mut prompt = vec![5, 4, 3, 2, 1, 2, 3, 4];
+        prompt.push(40 + i);
+        tf.fleet.sched().enqueue(greq(prompt, 2), None, tx).unwrap();
+        rxs.push(rx);
+    }
+    for rx in &rxs {
+        let (_, terminals) = collect_terminal(rx, Duration::from_secs(15));
+        assert_eq!(terminals.len(), 1);
+        assert!(matches!(terminals[0], StreamEvent::Done(_)));
+    }
+    let (p0, p1) =
+        (tf.fleet.engine_placements(0), tf.fleet.engine_placements(1));
+    assert_eq!(p0 + p1, 6);
+    assert!(
+        p0 == 6 || p1 == 6,
+        "same-prefix requests must land on one engine (got {p0}/{p1})"
+    );
+    tf.stop();
+}
+
+#[test]
+fn metrics_per_engine_rows_sum_to_fleet_totals() {
+    let cfg = LoadgenCfg {
+        requests: 12,
+        rps: 500.0,
+        prompt_len: (2, 4),
+        max_new: (3, 6),
+        vocab: 64,
+        stream_fraction: 0.5,
+        seed: 5,
+        keep_alive: true,
+        timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    loadgen::with_mock_fleet(
+        2,
+        64,
+        Duration::from_micros(200),
+        ServerConfig::default(),
+        RouterCfg {
+            engines: 2,
+            placement: Placement::RoundRobin,
+            ..Default::default()
+        },
+        &[],
+        |addr| {
+            let row = loadgen::run(addr, &cfg, "router-metrics-test")?;
+            assert_eq!(row.get("ok").unwrap().as_usize().unwrap(), 12);
+            // let both drivers publish their final stats snapshots
+            std::thread::sleep(Duration::from_millis(200));
+            let doc = loadgen::fetch_metrics(&addr)?;
+            let engines = doc.get("engines").unwrap().as_arr().unwrap();
+            assert_eq!(engines.len(), 2);
+            let totals = doc.get("engine").unwrap();
+            for key in ["steps_executed", "tokens_generated"] {
+                let sum: f64 = engines
+                    .iter()
+                    .map(|e| {
+                        e.get("stats")
+                            .unwrap()
+                            .get(key)
+                            .unwrap()
+                            .as_f64()
+                            .unwrap()
+                    })
+                    .sum();
+                let total = totals.get(key).unwrap().as_f64().unwrap();
+                assert!(
+                    (sum - total).abs() < 1e-9,
+                    "{key}: rows sum {sum} != fleet total {total}"
+                );
+                assert!(total > 0.0, "{key} must be nonzero");
+            }
+            let completions: f64 = engines
+                .iter()
+                .map(|e| {
+                    e.get("completions").unwrap().as_f64().unwrap()
+                })
+                .sum();
+            assert_eq!(completions, 12.0);
+            let sched = doc.get("scheduler").unwrap();
+            assert_eq!(
+                sched.get("completed").unwrap().as_f64().unwrap(),
+                12.0,
+                "per-engine completions must equal the scheduler's"
+            );
+            for e in engines {
+                assert!(
+                    e.get("placements").unwrap().as_f64().unwrap() > 0.0,
+                    "round-robin must use every engine"
+                );
+                assert!(e.get("healthy").unwrap().as_bool().unwrap());
+            }
+            let router = doc.get("router").unwrap();
+            assert_eq!(
+                router.get("failovers").unwrap().as_f64().unwrap(),
+                0.0
+            );
+            assert_eq!(
+                router
+                    .get("healthy_engines")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap(),
+                2.0
+            );
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn mock_fleet_scaling_lifts_token_throughput() {
+    // identical Poisson plan against 1 vs 2 engines whose per-pump
+    // delay dominates: token throughput must scale ≥1.7x (the
+    // BENCH_serve.json acceptance row; `loadgen --dry-run
+    // --engines 1,2` reproduces it from the CLI).
+    let cfg = LoadgenCfg {
+        requests: 48,
+        rps: 5000.0,
+        prompt_len: (2, 4),
+        max_new: (12, 12),
+        vocab: 64,
+        stream_fraction: 0.0,
+        seed: 7,
+        keep_alive: true,
+        timeout: Duration::from_secs(60),
+        ..Default::default()
+    };
+    let tput = |engines: usize| -> f64 {
+        loadgen::with_mock_fleet(
+            2,
+            64,
+            Duration::from_millis(2),
+            ServerConfig { queue_cap: 256, ..Default::default() },
+            RouterCfg { engines, ..Default::default() },
+            &[],
+            |addr| loadgen::run(addr, &cfg, "scaling"),
+        )
+        .unwrap()
+        .get("tokens_per_sec")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+    };
+    let one = tput(1);
+    let two = tput(2);
+    assert!(
+        two >= 1.7 * one,
+        "2 engines {two:.0} tok/s vs 1 engine {one:.0} tok/s \
+         ({:.2}x, need >= 1.7x)",
+        two / one
+    );
+}

@@ -7,7 +7,7 @@ use std::io::{BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
-use sigma_moe::json::Json;
+use sigma_moe::json::{self, Json};
 use sigma_moe::serving::loadgen::{self, LoadgenCfg};
 use sigma_moe::serving::server::ServerConfig;
 use sigma_moe::serving::{MockBackend, Policy};
@@ -301,6 +301,146 @@ fn bad_requests_answer_400() {
     .unwrap();
 }
 
+/// One raw keep-alive request: write it, return nothing (responses are
+/// read by the caller so multiple requests can share one socket).
+fn write_request(w: &mut impl Write, body: &str, close: bool) {
+    w.write_all(
+        format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\n\
+             Content-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+            body.len(),
+            if close { "close" } else { "keep-alive" },
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+}
+
+fn header_of<'h>(
+    headers: &'h [(String, String)],
+    name: &str,
+) -> Option<&'h str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn keepalive_serves_sequential_requests_on_one_connection() {
+    loadgen::with_mock_server(
+        2,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let stream = TcpStream::connect(addr).expect("connect");
+            stream
+                .set_read_timeout(Some(Duration::from_secs(30)))
+                .unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            // three unary requests back to back on ONE socket
+            for i in 0..3 {
+                let body = format!(
+                    r#"{{"prompt": [{}], "max_tokens": 2}}"#,
+                    i + 1
+                );
+                write_request(&mut w, &body, false);
+                let (status, headers) =
+                    loadgen::read_head(&mut r).expect("head");
+                assert_eq!(status, 200, "request {i}");
+                assert_eq!(
+                    header_of(&headers, "connection"),
+                    Some("keep-alive")
+                );
+                let len: usize = header_of(&headers, "content-length")
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                let mut buf = vec![0u8; len];
+                r.read_exact(&mut buf).unwrap();
+                let doc = json_of(&buf);
+                assert_eq!(
+                    doc.get("tokens").unwrap().as_arr().unwrap().len(),
+                    2
+                );
+            }
+            // a chunked streaming response also keeps the socket alive
+            write_request(
+                &mut w,
+                r#"{"prompt": [7], "max_tokens": 3, "stream": true}"#,
+                false,
+            );
+            let (status, headers) =
+                loadgen::read_head(&mut r).expect("stream head");
+            assert_eq!(status, 200);
+            assert_eq!(
+                header_of(&headers, "transfer-encoding"),
+                Some("chunked")
+            );
+            let body =
+                loadgen::read_chunked(&mut r, |_| {}).expect("chunks");
+            let tokens = String::from_utf8(body)
+                .unwrap()
+                .lines()
+                .filter(|l| l.contains("\"token\""))
+                .count();
+            assert_eq!(tokens, 3);
+            // Connection: close is honored and ends the session
+            write_request(
+                &mut w,
+                r#"{"prompt": [9], "max_tokens": 1}"#,
+                true,
+            );
+            let (status, headers) =
+                loadgen::read_head(&mut r).expect("final head");
+            assert_eq!(status, 200);
+            assert_eq!(header_of(&headers, "connection"), Some("close"));
+            let len: usize = header_of(&headers, "content-length")
+                .unwrap()
+                .parse()
+                .unwrap();
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf).unwrap();
+            let mut probe = [0u8; 1];
+            let n = r.read(&mut probe).unwrap_or(0);
+            assert_eq!(n, 0, "server must close after Connection: close");
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn loadgen_pool_reuses_connections() {
+    loadgen::with_mock_server(
+        4,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let pool = loadgen::ConnPool::new(addr);
+            let body = json::obj(vec![
+                ("prompt", json::arr(vec![json::num(3.0)])),
+                ("max_tokens", json::num(1.0)),
+            ]);
+            for _ in 0..4 {
+                let o = pool
+                    .send(&body, Duration::from_secs(30))
+                    .expect("pooled send");
+                assert_eq!(o.status, 200);
+                assert_eq!(o.tokens, 1);
+            }
+            // sequential sends ride a single pooled connection
+            assert_eq!(pool.idle_count(), 1);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
 #[test]
 fn loadgen_dry_run_writes_a_parsable_report() {
     let out = std::env::temp_dir().join(format!(
@@ -318,7 +458,7 @@ fn loadgen_dry_run_writes_a_parsable_report() {
         timeout: Duration::from_secs(30),
         ..Default::default()
     };
-    let row = loadgen::dry_run(&cfg, 4).expect("dry run");
+    let row = loadgen::dry_run(&cfg, 4, 1).expect("dry run");
     sigma_moe::bench_util::write_bench_json(
         &out,
         "sigma-moe/serve/v1",

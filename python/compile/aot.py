@@ -13,6 +13,7 @@ Per preset this writes::
     artifacts/<preset>/train_step.hlo.txt
     artifacts/<preset>/eval_step.hlo.txt
     artifacts/<preset>/step_fwd.hlo.txt
+    artifacts/<preset>/prefill.hlo.txt
     artifacts/<preset>/reset_lanes.hlo.txt
     artifacts/<preset>/manifest.json
 
@@ -109,6 +110,7 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
                  total_steps: int = 100_000,
                  eval_mem_factor: int = 4,
                  serve_batch: int = 4,
+                 prefill_chunk: int = 16,
                  force: bool = False) -> str:
     cfg = get_preset(name)
     tcfg = TrainConfig(total_steps=total_steps)
@@ -122,7 +124,8 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
     preset_dir = os.path.join(out_dir, name)
     os.makedirs(preset_dir, exist_ok=True)
     stamp_path = os.path.join(preset_dir, ".stamp")
-    stamp = _input_stamp(cfg, tcfg, eval_mem_len, serve_batch)
+    stamp = _input_stamp(cfg, tcfg, eval_mem_len, serve_batch,
+                         prefill_chunk)
     if not force and os.path.exists(stamp_path):
         with open(stamp_path) as f:
             if f.read().strip() == stamp:
@@ -130,12 +133,15 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
                 return preset_dir
 
     print(f"[aot] building {name} (batch={tcfg.batch_size}) ...")
-    args = api.example_args(cfg, tcfg, eval_mem_len, serve_batch)
+    args = api.example_args(cfg, tcfg, eval_mem_len, serve_batch,
+                            prefill_chunk)
     fns = {
         "init": api.make_init(cfg),
         "train_step": api.make_train_step(cfg, tcfg),
         "eval_step": api.make_eval_step(cfg, eval_mem_len),
         "step_fwd": api.make_step_fwd(cfg, cfg.mem_len),
+        # chunked prompt ingestion for serving (validity-masked)
+        "prefill": api.make_prefill(cfg, cfg.mem_len),
         # on-device per-lane memory zeroing for serving admission
         "reset_lanes": api.make_reset_lanes(cfg),
     }
@@ -145,6 +151,7 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
         "train_config": dataclasses.asdict(tcfg),
         "eval_mem_len": eval_mem_len,
         "serve_batch": serve_batch,
+        "prefill_chunk": prefill_chunk,
         "flops": flops.summarize(cfg),
         "functions": {},
     }
@@ -168,13 +175,13 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
 
 
 def _input_stamp(cfg: ModelConfig, tcfg: TrainConfig, eval_mem_len: int,
-                 serve_batch: int) -> str:
+                 serve_batch: int, prefill_chunk: int) -> str:
     """Hash of everything that affects the artifacts: configs + the
     compile-package sources."""
     h = hashlib.sha256()
     h.update(json.dumps(dataclasses.asdict(cfg), sort_keys=True).encode())
     h.update(json.dumps(dataclasses.asdict(tcfg), sort_keys=True).encode())
-    h.update(f"{eval_mem_len}|{serve_batch}".encode())
+    h.update(f"{eval_mem_len}|{serve_batch}|{prefill_chunk}".encode())
     pkg_dir = os.path.dirname(os.path.abspath(__file__))
     for root, _, files in sorted(os.walk(pkg_dir)):
         for fn in sorted(files):
@@ -193,6 +200,9 @@ def main(argv: Sequence[str] | None = None) -> None:
                          "test/example set")
     ap.add_argument("--batch-size", type=int, default=None)
     ap.add_argument("--total-steps", type=int, default=100_000)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="serving prefill chunk width C (tokens per "
+                         "prefill dispatch per lane)")
     ap.add_argument("--list", action="store_true",
                     help="list available presets and exit")
     ap.add_argument("--force", action="store_true",
@@ -207,7 +217,8 @@ def main(argv: Sequence[str] | None = None) -> None:
     presets = args.preset or DEFAULT_PRESETS
     for name in presets:
         build_preset(name, args.out, batch_size=args.batch_size,
-                     total_steps=args.total_steps, force=args.force)
+                     total_steps=args.total_steps,
+                     prefill_chunk=args.prefill_chunk, force=args.force)
 
 
 if __name__ == "__main__":

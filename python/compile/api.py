@@ -1,12 +1,14 @@
 """Top-level pure functions that get AOT-lowered to HLO artifacts.
 
-Five entry points per model configuration:
+Six entry points per model configuration:
 
 * ``init``        (seed)                          -> params
 * ``train_step``  (params, m, v, mems, tokens, step, seed)
                   -> (loss, gnorm, lr, params', m', v', mems', stats)
 * ``eval_step``   (params, mems, tokens)          -> (loss_sum, n, mems', stats)
 * ``step_fwd``    (params, mems, tokens)          -> (logits_last, mems')
+* ``prefill``     (params, mems, tokens[B,C], active_len[B])
+                  -> (logits_last, mems')  (chunked, validity-masked)
 * ``reset_lanes`` (mems, keep)                    -> mems'  (lane-masked)
 
 All inputs/outputs are pytrees; jax.jit flattens them in deterministic
@@ -109,6 +111,51 @@ def make_step_fwd(cfg: ModelConfig, mem_len: int):
     return step_fwd
 
 
+def make_prefill(cfg: ModelConfig, mem_len: int):
+    """Chunked prompt ingestion for serving: feed up to ``C`` tokens per
+    lane in one dispatch instead of one ``step_fwd`` call per token.
+
+    ``tokens`` is ``[B, C]`` int32 and ``active_len`` ``[B]`` int32 —
+    lane ``i``'s first ``active_len[i]`` positions are real prompt
+    tokens, the rest padding.  The per-position validity mask derived
+    from ``active_len`` gates attention keys, the XL-memory write, and
+    which position's logits are returned:
+
+    * ``active_len == C``      — a full chunk (more prompt pending);
+    * ``0 < active_len < C``   — the prompt's ragged tail, or a decode
+      lane riding along with its last sampled token (``active_len=1``,
+      exactly ``step_fwd`` semantics);
+    * ``active_len == 0``      — idle lane: memory is passed through
+      bit-for-bit and the (meaningless) row of ``logits_last`` is the
+      caller's to ignore.
+
+    Returns ``(logits_last [B, V], new_mems)`` where ``logits_last[i]``
+    is the logits at lane ``i``'s last *valid* position — the
+    next-token distribution after its final fed token.  All masking is
+    ``where``/gather-select, never multiplication, so NaN/Inf in padded
+    positions or in an idle lane's memory stays contained to that lane
+    (see EXPERIMENTS.md §Prefill).
+    """
+
+    def prefill(params, mems, tokens, active_len):
+        b, c = tokens.shape
+        active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, _ = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len, active_len=active_len)
+        # logits[i, active_len[i] - 1, :] via a flat row gather
+        # (take_along_axis lowers to a batched gather the 0.5.1-era
+        # HLO converter rejects; see compat.py)
+        last = jnp.clip(active_len - 1, 0, c - 1)
+        rows = jnp.arange(b, dtype=jnp.int32) * c + last
+        logits_last = jnp.take(
+            logits.reshape(b * c, -1), rows, axis=0)
+        return (logits_last, new_mems)
+
+    return prefill
+
+
 def make_reset_lanes(cfg: ModelConfig):
     """Per-lane XL-memory reset for continuous-batching admission.
 
@@ -131,7 +178,8 @@ def make_reset_lanes(cfg: ModelConfig):
 
 
 def example_args(cfg: ModelConfig, tcfg: TrainConfig,
-                 eval_mem_len: int, serve_batch: int = 1):
+                 eval_mem_len: int, serve_batch: int = 1,
+                 prefill_chunk: int = 16):
     """Concrete example arguments (real arrays — also used to seed the
     numeric cross-check in tests) for each entry point."""
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -145,10 +193,13 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
     smems = _zero_mems(cfg, serve_batch, mem_len=cfg.mem_len)
     stok = jnp.zeros((serve_batch, 1), jnp.int32)
     keep = jnp.ones((serve_batch,), jnp.float32)
+    ptok = jnp.zeros((serve_batch, prefill_chunk), jnp.int32)
+    active = jnp.full((serve_batch,), prefill_chunk, jnp.int32)
     return {
         "init": (seed,),
         "train_step": (params, m, v, mems, tokens, step, seed),
         "eval_step": (params, emems, tokens),
         "step_fwd": (params, smems, stok),
         "reset_lanes": (smems, keep),
+        "prefill": (params, smems, ptok, active),
     }

@@ -57,8 +57,19 @@ def _rel_shift(x: jax.Array) -> jax.Array:
 
 def attention(p: Params, x: jax.Array, mem: jax.Array, rng: jax.Array,
               n_heads: int, head_dim: int, attn_dropout: float,
-              deterministic: bool) -> jax.Array:
-    """x: [B, T, D]; mem: [B, M, D] previous-segment activations."""
+              deterministic: bool,
+              active_len: jax.Array | None = None) -> jax.Array:
+    """x: [B, T, D]; mem: [B, M, D] previous-segment activations.
+
+    ``active_len`` ([B] int32, optional) marks the per-lane number of
+    valid positions in ``x`` for chunked prefill: key positions at or
+    beyond a lane's active length are masked out of every query's
+    attention (``where``-select to -inf, not multiplication, so a NaN
+    score at a padded position cannot leak through softmax).  The causal
+    mask already keeps *valid* queries from seeing *later* padded keys;
+    this extra mask is what makes the padded positions inert for every
+    query row, valid or not.
+    """
     b, t, d = x.shape
     m = mem.shape[1]
     klen = t + m
@@ -85,6 +96,16 @@ def attention(p: Params, x: jax.Array, mem: jax.Array, rng: jax.Array,
     qpos = jnp.arange(t)[:, None] + m
     kpos = jnp.arange(klen)[None, :]
     mask = (kpos <= qpos)[None, None]
+    if active_len is not None:
+        # chunked prefill: keys in the x-portion past a lane's active
+        # length are invalid for every query of that lane
+        key_valid = kpos[None] < (m + active_len[:, None, None])
+        mask = mask & key_valid[:, :, None, :]
+        # step_fwd-equivalence window: fed one token at a time, a query
+        # sees at most the M previous inputs (the XL memory).  Without
+        # this band an in-chunk query at offset j would see M + j keys,
+        # making logits depend on how the prompt was chunked.
+        mask = mask & (kpos >= qpos - m)[None, None]
     score = jnp.where(mask, score, -1e30)
     att = jax.nn.softmax(score, axis=-1)
     att = dropout(rng, att, attn_dropout, deterministic)
@@ -97,3 +118,36 @@ def update_memory(x: jax.Array, mem: jax.Array, mem_len: int) -> jax.Array:
     """New memory = last mem_len positions of [mem | x] (stop-gradient)."""
     cat = jnp.concatenate([mem, x], axis=1)
     return jax.lax.stop_gradient(cat[:, -mem_len:])
+
+
+def update_memory_ragged(x: jax.Array, mem: jax.Array, mem_len: int,
+                         active_len: jax.Array) -> jax.Array:
+    """Per-lane ragged memory update for chunked prefill.
+
+    Lane ``i``'s new memory is the last ``mem_len`` positions of
+    ``[mem_i | x_i[:active_len_i]]`` — a lane with ``active_len == 0``
+    (idle, or mid-decode during someone else's prefill) keeps its
+    memory bit-for-bit.  Static shapes force this to be a per-lane
+    shifted *gather* over ``[mem | x]`` rather than a slice: lane ``i``
+    reads rows ``[M - mem_len + L_i, M + L_i)`` of the concatenation,
+    which never touches ``x`` rows at or past ``L_i``.  The invalid
+    ``x`` rows are additionally ``where``-zeroed (select, not multiply:
+    ``NaN * 0`` is ``NaN``) so numeric garbage in padding can never be
+    written, even if the index arithmetic is ever loosened.
+
+    Implemented as a flat row gather (``jnp.take`` on a 2-D reshape)
+    because ``jnp.take_along_axis`` lowers to a batched gather the
+    0.5.1-era HLO converter on the Rust side rejects (see compat.py).
+    """
+    b, t, d = x.shape
+    m = mem.shape[1]
+    assert m >= mem_len, (m, mem_len)   # start index below must be >= 0
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :, None]
+    x = jnp.where(pos < active_len[:, None, None], x, 0.0)
+    cat = jnp.concatenate([mem, x], axis=1)          # [B, M+T, D]
+    start = (m - mem_len) + active_len.astype(jnp.int32)
+    rows = start[:, None] + jnp.arange(mem_len, dtype=jnp.int32)[None, :]
+    flat_rows = (jnp.arange(b, dtype=jnp.int32) * (m + t))[:, None] + rows
+    out = jnp.take(cat.reshape(b * (m + t), d), flat_rows.reshape(-1),
+                   axis=0)
+    return jax.lax.stop_gradient(out.reshape(b, mem_len, d))

@@ -76,12 +76,23 @@ def _apply_ff(cfg: ModelConfig, p: Params, x2d: jax.Array, rng: jax.Array,
 
 def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
             mems: List[jax.Array], rng: jax.Array,
-            deterministic: bool, mem_len: int):
+            deterministic: bool, mem_len: int,
+            active_len: jax.Array | None = None):
     """Run the LM over one segment.
 
     tokens: [B, T] int32; mems: n_layers arrays [B, M, D].
     Returns (logits [B, T, V], new_mems, aux) where aux aggregates the
     per-layer regularization losses and statistics.
+
+    ``active_len`` ([B] int32, optional — the chunked-prefill path)
+    marks how many leading positions of each lane's ``tokens`` row are
+    real; the rest are padding.  Padded positions still flow through
+    the dense math (static shapes), but they are masked out of
+    attention keys and the per-lane memory update, so a lane's logits
+    at positions ``< active_len`` and its new memory are identical to
+    feeding only its valid tokens.  ``active_len == 0`` leaves a
+    lane's memory untouched (decode lanes riding along in a mixed
+    prefill batch).
     """
     b, t = tokens.shape
     x = params["embed"][tokens]                    # [B, T, D]
@@ -97,12 +108,17 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
     for i, lp in enumerate(params["layers"]):
         r_att, r_ff, r_do = rngs[3 * i], rngs[3 * i + 1], rngs[3 * i + 2]
         mem = mems[i]
-        new_mems.append(att.update_memory(x, mem, mem_len))
+        if active_len is None:
+            new_mems.append(att.update_memory(x, mem, mem_len))
+        else:
+            new_mems.append(att.update_memory_ragged(x, mem, mem_len,
+                                                     active_len))
         # pre-LN attention block
         h = layer_norm(lp["ln1"], x)
         mem_n = layer_norm(lp["ln1"], mem)
         a = att.attention(lp["att"], h, mem_n, r_att, cfg.n_heads,
-                          cfg.head_dim, cfg.attn_dropout, deterministic)
+                          cfg.head_dim, cfg.attn_dropout, deterministic,
+                          active_len=active_len)
         a = dropout(r_do, a, cfg.dropout, deterministic)
         x = x + a
         # pre-LN feedforward block (flattened to [B*T, D])

@@ -1,0 +1,178 @@
+"""Chunked prefill: the validity-masked multi-token prompt path must be
+token-for-token equivalent to feeding the same prompt through the
+single-token ``step_fwd`` semantics — logits at every sampled position
+AND the per-lane XL memory state — for ragged lengths straddling chunk
+boundaries, mixed prefill/decode batches, and NaN-poisoned lanes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, api
+from compile.configs import MoEConfig, ModelConfig
+
+CHUNK = 4
+
+
+def tiny_cfg():
+    return ModelConfig(
+        name="t-moe", vocab_size=64, d_model=16, d_ff=32, n_layers=3,
+        n_heads=2, head_dim=8, context=8, mem_len=8, ff_variant="moe",
+        moe=MoEConfig(n_experts=4, group_size=8, k=2))
+
+
+def setup(cfg, batch):
+    params = api.M.init_params(jax.random.PRNGKey(0), cfg)
+    mems = [jnp.zeros((batch, cfg.mem_len, cfg.d_model), jnp.float32)
+            for _ in range(cfg.n_layers)]
+    step = api.make_step_fwd(cfg, cfg.mem_len)
+    pre = api.make_prefill(cfg, cfg.mem_len)
+    return params, mems, jax.jit(step), jax.jit(pre)
+
+
+def feed_single(step, params, mems, prompts):
+    """Reference: one step_fwd call per token, all lanes in lockstep
+    (prompts must share a length here)."""
+    logits = None
+    for j in range(len(prompts[0])):
+        toks = jnp.asarray([[p[j]] for p in prompts], jnp.int32)
+        logits, mems = step(params, mems, toks)
+    return logits, mems
+
+
+def feed_chunked(pre, params, mems, prompts, chunk):
+    """Drain ragged prompts through [B, chunk] prefill dispatches; a
+    lane whose prompt is exhausted rides with active_len=0.  Returns
+    each lane's logits from the dispatch that consumed its last prompt
+    token (the row the engine samples the first continuation from)."""
+    b = len(prompts)
+    off = [0] * b
+    final_logits = [None] * b
+    while any(off[i] < len(prompts[i]) for i in range(b)):
+        toks = np.zeros((b, chunk), np.int32)
+        active = np.zeros((b,), np.int32)
+        finished = []
+        for i, p in enumerate(prompts):
+            k = min(chunk, len(p) - off[i])
+            toks[i, :k] = p[off[i]:off[i] + k]
+            active[i] = k
+            off[i] += k
+            if k > 0 and off[i] == len(p):
+                finished.append(i)
+        logits, mems = pre(params, mems, jnp.asarray(toks),
+                           jnp.asarray(active))
+        for i in finished:
+            final_logits[i] = logits[i]
+    return final_logits, mems
+
+
+def test_chunked_prefill_matches_single_token_across_boundaries():
+    # ragged lengths straddling the chunk boundary: C-1, C, C+1, 2C+3
+    cfg = tiny_cfg()
+    lengths = [CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK + 3]
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in lengths]
+    params, mems, step, pre = setup(cfg, len(lengths))
+
+    logits_c, mems_c = feed_chunked(pre, params, mems, prompts, CHUNK)
+
+    # per-lane single-token reference (lane i alone in a batch of 1)
+    for i, p in enumerate(prompts):
+        params1, mems1, step1, _ = setup(cfg, 1)
+        ref_logits, ref_mems = feed_single(step1, params, mems1, [p])
+        np.testing.assert_allclose(
+            np.asarray(logits_c[i]), np.asarray(ref_logits[0]),
+            rtol=2e-4, atol=2e-5,
+            err_msg=f"lane {i} (len {len(p)}) logits diverge")
+        for l, (mc, mr) in enumerate(zip(mems_c, ref_mems)):
+            np.testing.assert_allclose(
+                np.asarray(mc[i]), np.asarray(mr[0]),
+                rtol=2e-4, atol=2e-5,
+                err_msg=f"lane {i} layer {l} memory diverges")
+
+
+def test_decode_lane_rides_prefill_with_active_len_one():
+    # a decode-phase lane fed as a 1-active chunk must match step_fwd
+    # exactly (same program shape the engine uses for mixed pumps)
+    cfg = tiny_cfg()
+    b = 2
+    params, mems, step, pre = setup(cfg, b)
+    rng = np.random.default_rng(3)
+    warm = [list(rng.integers(0, cfg.vocab_size, 3)) for _ in range(b)]
+    _, mems = feed_single(step, params, mems, warm)
+
+    tok = jnp.asarray([[5], [9]], jnp.int32)
+    ref_logits, ref_mems = step(params, mems, tok)
+
+    ptoks = np.zeros((b, CHUNK), np.int32)
+    ptoks[0, 0], ptoks[1, 0] = 5, 9
+    pre_logits, pre_mems = pre(params, mems, jnp.asarray(ptoks),
+                               jnp.asarray([1, 1], np.int32))
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(ref_logits), rtol=2e-4,
+                               atol=2e-5)
+    for mc, mr in zip(pre_mems, ref_mems):
+        np.testing.assert_allclose(np.asarray(mc), np.asarray(mr),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_idle_lane_memory_is_bit_for_bit_untouched():
+    # active_len == 0 must pass memory through unchanged — including a
+    # NaN-poisoned lane, whose garbage must not leak into other lanes
+    cfg = tiny_cfg()
+    b = 3
+    params, mems, step, pre = setup(cfg, b)
+    key = jax.random.PRNGKey(1)
+    mems = [jax.random.normal(jax.random.fold_in(key, l),
+                              (b, cfg.mem_len, cfg.d_model))
+            for l in range(cfg.n_layers)]
+    # poison lane 2's memory
+    mems = [m.at[2].set(jnp.nan) for m in mems]
+
+    toks = np.zeros((b, CHUNK), np.int32)
+    toks[0, :2] = [7, 8]
+    logits, out = pre(params, mems, jnp.asarray(toks),
+                      jnp.asarray([2, 0, 0], np.int32))
+    for l, (before, after) in enumerate(zip(mems, out)):
+        # idle healthy lane: identical bits
+        np.testing.assert_array_equal(np.asarray(after[1]),
+                                      np.asarray(before[1]))
+        # poisoned idle lane keeps its NaNs (its own state, contained)
+        assert np.all(np.isnan(np.asarray(after[2])))
+        # active lane's new memory is finite — no cross-lane leakage
+        assert np.all(np.isfinite(np.asarray(after[0]))), f"layer {l}"
+    assert np.all(np.isfinite(np.asarray(logits[0])))
+
+
+def test_prefill_manifest_names_match_engine_contract():
+    """The Rust engine maps prefill inputs ``0.*``/``1.*`` onto the
+    step_fwd device state, uploads ``2`` (tokens [B, C]) and ``3``
+    (active_len [B]), reads output ``0`` (logits_last) and feeds
+    outputs ``1.*`` back buffer-to-buffer."""
+    cfg = tiny_cfg()
+    serve_batch = 2
+    smems = [jnp.zeros((serve_batch, cfg.mem_len, cfg.d_model),
+                       jnp.float32) for _ in range(cfg.n_layers)]
+    ptok = jnp.zeros((serve_batch, CHUNK), jnp.int32)
+    active = jnp.full((serve_batch,), CHUNK, jnp.int32)
+    params = api.M.init_params(jax.random.PRNGKey(0), cfg)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_prefill(cfg, cfg.mem_len),
+        (params, smems, ptok, active))
+    in_names = [b["name"] for b in in_spec]
+    assert in_names[-2:] == ["2", "3"]
+    assert all(n.startswith(("0.", "1.")) for n in in_names[:-2])
+    mem_inputs = [b for b in in_spec if b["name"].startswith("1.")]
+    assert [b["name"] for b in mem_inputs] == [
+        f"1.{i}" for i in range(cfg.n_layers)]
+    tok_spec = in_spec[-2]
+    assert tok_spec["shape"] == [serve_batch, CHUNK]
+    assert tok_spec["dtype"] == "int32"
+    act_spec = in_spec[-1]
+    assert act_spec["shape"] == [serve_batch]
+    assert act_spec["dtype"] == "int32"
+    out_names = [b["name"] for b in out_spec]
+    assert out_names == ["0"] + [f"1.{i}" for i in range(cfg.n_layers)]
+    assert out_spec[0]["shape"] == [serve_batch, cfg.vocab_size]
+    for b_, sm in zip(out_spec[1:], smems):
+        assert b_["shape"] == list(sm.shape)

@@ -1,12 +1,20 @@
 //! L3 pipeline benchmark: synthetic-corpus generation, batcher window
 //! assembly, tokenizer throughput — establishes that the data path is
 //! far from being the training bottleneck — plus the continuous-batching
-//! decode loop over the device-resident engine (EXPERIMENTS.md §Perf).
+//! decode loop over the device-resident engine and the chunked-prefill
+//! A/B (EXPERIMENTS.md §Perf, §Prefill; prefill rows land in
+//! BENCH_serve.json).
 
-use sigma_moe::bench_util::bench;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use sigma_moe::bench_util::{bench, write_bench_json};
 use sigma_moe::data::{self, CharTokenizer, WordTokenizer};
+use sigma_moe::json::{self, Json};
 use sigma_moe::runtime::{Client, ModelBundle};
-use sigma_moe::serving::{Engine, GenRequest, Sampler};
+use sigma_moe::serving::{
+    Engine, EngineBackend, GenRequest, MockBackend, Sampler, StreamEvent,
+};
 use sigma_moe::tensor::HostTensor;
 
 /// Decode-loop throughput: tokens/sec and host↔device bytes per pump
@@ -56,6 +64,184 @@ fn bench_decode_loop() {
         xfer.report_per_step(engine.steps_executed),
         engine.stats()["mean_batch_occupancy"],
     );
+}
+
+/// Chunked vs single-token prompt ingestion over the device-free mock:
+/// identical 256-token-prompt request sets at C=1 vs C=16, reporting
+/// dispatches/prompt, TTFT (pumps to first token x the simulated step
+/// delay), and tok/s.  One BENCH_serve.json row per chunk width.
+fn bench_prefill_mock() -> Vec<Json> {
+    const PROMPT_LEN: usize = 256;
+    const GEN: usize = 16;
+    const LANES: usize = 4;
+    const REQS: usize = 8;
+    const STEP_DELAY: Duration = Duration::from_micros(200);
+    let mut rows = Vec::new();
+    let mut per_prompt = Vec::new();
+    for &chunk in &[1usize, 16] {
+        let mut b = MockBackend::new(LANES, 512)
+            .with_prefill_chunk(chunk)
+            .with_step_delay(STEP_DELAY);
+        // one shared event channel: the first Token event dates TTFT
+        let (tx, rx) = mpsc::channel();
+        for i in 0..REQS {
+            b.submit_streaming(
+                GenRequest {
+                    prompt: vec![(i % 100) as i32; PROMPT_LEN],
+                    max_new_tokens: GEN,
+                    sampler: Sampler::greedy(),
+                },
+                tx.clone(),
+            );
+        }
+        drop(tx);
+        let t0 = Instant::now();
+        let mut ttft = None;
+        let mut pumps_to_first = 0u64;
+        while b.pump().expect("mock pump") > 0 {
+            if ttft.is_none() {
+                pumps_to_first = b.steps_executed;
+                while let Ok(ev) = rx.try_recv() {
+                    if matches!(ev, StreamEvent::Token(_)) {
+                        ttft = Some(t0.elapsed());
+                        break;
+                    }
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        // a wave is one full batch of lanes running a prompt to
+        // completion; dispatches/prompt = pumps per wave
+        let waves = (REQS / LANES).max(1) as f64;
+        let dpp = b.steps_executed as f64 / waves;
+        per_prompt.push(dpp);
+        let ttft_ms = ttft.map_or(0.0, |d| d.as_secs_f64() * 1e3);
+        println!(
+            "prefill mock C={chunk:>2}: {} dispatches total | \
+             {dpp:.0} dispatches/256-tok prompt | ttft {ttft_ms:.1} ms \
+             ({pumps_to_first} pumps) | {:.0} tok/s",
+            b.steps_executed,
+            (REQS * GEN) as f64 / wall,
+        );
+        rows.push(json::obj(vec![
+            ("mode", json::s("mock-prefill-ab")),
+            ("prefill_chunk", json::num(chunk as f64)),
+            ("prompt_len", json::num(PROMPT_LEN as f64)),
+            ("max_new", json::num(GEN as f64)),
+            ("requests", json::num(REQS as f64)),
+            ("lanes", json::num(LANES as f64)),
+            ("dispatches_total", json::num(b.steps_executed as f64)),
+            ("dispatches_per_prompt", json::num(dpp)),
+            ("ttft_ms", json::num(ttft_ms)),
+            ("pumps_to_first_token", json::num(pumps_to_first as f64)),
+            (
+                "tokens_per_sec",
+                json::num((REQS * GEN) as f64 / wall),
+            ),
+            ("wall_s", json::num(wall)),
+        ]));
+    }
+    println!(
+        "prefill mock: C=16 uses {:.1}x fewer dispatches per prompt \
+         than C=1",
+        per_prompt[0] / per_prompt[1].max(1.0),
+    );
+    rows
+}
+
+/// Chunked vs single-token prompt ingestion on the real device-resident
+/// engine: the same bundle/params with and without the `prefill`
+/// program (the subset load without it exercises the fallback path).
+/// Skipped when artifacts are not built.
+fn bench_prefill_device(rows: &mut Vec<Json>) {
+    let dir = sigma_moe::artifacts_root().join("tiny-moe");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("prefill device A/B: tiny-moe artifacts not built; skipping");
+        return;
+    }
+    // both sides or neither: a one-row "A/B" would mislead, and the
+    // fallback side's wall time is wasted without its comparison
+    match sigma_moe::runtime::Manifest::load(&dir) {
+        Ok(m) if m.functions.contains_key("prefill") => {}
+        _ => {
+            eprintln!(
+                "prefill device A/B: artifacts predate the prefill \
+                 program; skipping"
+            );
+            return;
+        }
+    }
+    const PROMPT_LEN: usize = 256;
+    const GEN: usize = 16;
+    for with_prefill in [false, true] {
+        let client = Client::cpu().expect("pjrt client");
+        let mut names = vec!["init", "step_fwd"];
+        if with_prefill {
+            names.push("prefill");
+        }
+        let bundle = ModelBundle::load_subset(&client, &dir, &names)
+            .expect("bundle");
+        let init = bundle.program("init").unwrap();
+        let out = init.run(&[HostTensor::scalar_u32(1)]).unwrap();
+        let params: Vec<(String, HostTensor)> = init
+            .spec
+            .outputs
+            .iter()
+            .map(|b| b.name.clone())
+            .zip(out)
+            .collect();
+        let mut engine = Engine::new(&bundle, &params, 7).expect("engine");
+        let chunk = engine.prefill_chunk();
+        let mut corpus = data::by_name(
+            "wikitext",
+            bundle.manifest.model.vocab_size,
+            7,
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for _ in 0..engine.n_lanes() {
+            rxs.push(engine.submit(GenRequest {
+                prompt: corpus.take_vec(PROMPT_LEN),
+                max_new_tokens: GEN,
+                sampler: Sampler::greedy(),
+            }));
+        }
+        let xfer0 = engine.transfer_stats();
+        let t0 = Instant::now();
+        let results = engine.run_to_completion(rxs).expect("prefill run");
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let xfer = engine.transfer_stats().since(&xfer0);
+        let total_new: usize =
+            results.iter().map(|r| r.tokens.len()).sum();
+        println!(
+            "prefill device C={chunk:>2}: {} dispatches for {} \
+             256-tok prompts | {:.1} tok/s | {} | occupancy {:.2}",
+            engine.steps_executed,
+            results.len(),
+            total_new as f64 / wall,
+            xfer.report_per_step(engine.steps_executed),
+            engine.stats()["mean_batch_occupancy"],
+        );
+        rows.push(json::obj(vec![
+            ("mode", json::s("device-prefill-ab")),
+            ("prefill_chunk", json::num(chunk as f64)),
+            ("prompt_len", json::num(PROMPT_LEN as f64)),
+            ("max_new", json::num(GEN as f64)),
+            ("requests", json::num(results.len() as f64)),
+            (
+                "dispatches_total",
+                json::num(engine.steps_executed as f64),
+            ),
+            (
+                "dispatches_per_prompt",
+                json::num(engine.steps_executed as f64),
+            ),
+            ("tokens_per_sec", json::num(total_new as f64 / wall)),
+            ("h2d_bytes", json::num(xfer.h2d_bytes as f64)),
+            ("d2h_bytes", json::num(xfer.d2h_bytes as f64)),
+            ("wall_s", json::num(wall)),
+        ]));
+    }
 }
 
 fn main() {
@@ -113,4 +299,15 @@ fn main() {
 
     println!("== continuous-batching decode loop ==");
     bench_decode_loop();
+
+    println!("== chunked prefill A/B ==");
+    let mut rows = bench_prefill_mock();
+    bench_prefill_device(&mut rows);
+    if let Err(e) =
+        write_bench_json("BENCH_serve.json", "sigma-moe/serve/v1", rows)
+    {
+        eprintln!("BENCH_serve.json not written: {e}");
+    } else {
+        println!("prefill rows written to BENCH_serve.json");
+    }
 }

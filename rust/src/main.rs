@@ -266,6 +266,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("error-threshold", "3", "router: consecutive pump errors before \
                                   an engine is unhealthy")
     .opt("max-retries", "1", "router: failovers per request before 503")
+    .opt("readmit-after", "20", "router: consecutive clean pumps before \
+                                 a quarantined engine rejoins (0 = \
+                                 quarantine is permanent)")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -346,10 +349,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 /// Load one serving engine's bundle + params on its driver thread
 /// (PJRT state is not `Send`, so this runs inside the thread): its own
-/// client, the `step_fwd`(+`init`+`reset_lanes`) subset, and either the
-/// checkpoint's params or a fresh `init` run.  Returns the bundle, the
-/// params, and whether on-device lane reset is available.  Shared by
-/// the single-engine and fleet `serve --http` paths.
+/// client, the `step_fwd`(+`init`+`prefill`+`reset_lanes`) subset, and
+/// either the checkpoint's params or a fresh `init` run.  Returns the
+/// bundle, the params, and whether on-device lane reset is available.
+/// Shared by the single-engine and fleet `serve --http` paths.
 fn load_serving_engine(
     dir: &std::path::Path,
     checkpoint: &Option<Vec<(String, HostTensor)>>,
@@ -364,6 +367,9 @@ fn load_serving_engine(
     let device_reset = manifest.functions.contains_key("reset_lanes");
     if device_reset {
         names.push("reset_lanes");
+    }
+    if manifest.functions.contains_key("prefill") {
+        names.push("prefill");
     }
     let bundle = ModelBundle::load_subset(&client, dir, &names)?;
     let params = match checkpoint {
@@ -396,6 +402,13 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         policy: Policy::parse(p.str("policy")?)?,
         default_max_new: p.usize("max-new")?,
         vocab: Some(manifest.model.vocab_size),
+        // spf costs prompts in ⌈len/C⌉ prefill dispatches; artifacts
+        // predating the prefill program report C = 1
+        prefill_chunk: if manifest.functions.contains_key("prefill") {
+            manifest.prefill_chunk
+        } else {
+            1
+        },
         ..Default::default()
     };
     let checkpoint: Option<Vec<(String, HostTensor)>> =
@@ -408,11 +421,12 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
     let listener = std::net::TcpListener::bind(addr)?;
     eprintln!(
         "[serve] http://{} | preset {} | {} engine(s) x {} lanes | \
-         policy {} | queue cap {} (Ctrl-C stops)",
+         prefill chunk {} | policy {} | queue cap {} (Ctrl-C stops)",
         listener.local_addr()?,
         preset,
         engines.max(1),
         manifest.serve_batch,
+        cfg.prefill_chunk,
         cfg.policy.as_str(),
         cfg.queue_cap,
     );
@@ -426,6 +440,7 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             ),
             error_threshold: p.u64("error-threshold")?,
             max_retries: p.usize("max-retries")?,
+            readmit_after: p.u64("readmit-after")?,
         };
         eprintln!(
             "[serve] router: {} placement | heartbeat {:?} | \
@@ -452,8 +467,10 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
                     seed ^ ((id as u64) << 32),
                 )?;
                 eprintln!(
-                    "[serve] engine {id} ready: {} lanes | lane reset: {}",
+                    "[serve] engine {id} ready: {} lanes | prefill \
+                     chunk {} | lane reset: {}",
                     engine.n_lanes(),
+                    engine.prefill_chunk(),
                     if device_reset {
                         "on-device"
                     } else {
@@ -469,8 +486,10 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             load_serving_engine(&dir, &checkpoint, seed)?;
         let mut engine = Engine::new(&bundle, &params, seed)?;
         eprintln!(
-            "[serve] engine ready: {} lanes | lane reset: {}",
+            "[serve] engine ready: {} lanes | prefill chunk {} | \
+             lane reset: {}",
             engine.n_lanes(),
+            engine.prefill_chunk(),
             if device_reset { "on-device" } else { "host fallback" },
         );
         driver.drive(&mut engine)
@@ -487,6 +506,9 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .opt("rps", "8", "target offered load, requests/sec (Poisson)")
     .opt("prompt-min", "4", "min prompt length")
     .opt("prompt-max", "16", "max prompt length")
+    .opt("prompt-dist", "uniform", "prompt-length distribution over \
+                                    [prompt-min, prompt-max]: fixed | \
+                                    uniform | lognormal (heavy tail)")
     .opt("max-new-min", "8", "min tokens to generate")
     .opt("max-new-max", "32", "max tokens to generate")
     .opt("vocab", "2048", "prompt token ids drawn from [0, vocab)")
@@ -501,6 +523,8 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .flag("dry-run", "run against in-process mock engine(s) \
                       (no device, ignores --addr)")
     .opt("mock-lanes", "4", "mock engine lanes for --dry-run")
+    .opt("prefill-chunk", "16", "--dry-run: mock chunked-prefill width \
+                                 C (1 = single-token prompt feeding)")
     .opt("engines", "1", "--dry-run: comma-separated mock fleet sizes \
                           (e.g. 1,2,4) — one report row per size, same \
                           Poisson plan, for scaling comparisons")
@@ -512,6 +536,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         requests: p.usize("requests")?,
         rps: p.f64("rps")?,
         prompt_len: (p.usize("prompt-min")?, p.usize("prompt-max")?),
+        prompt_dist: loadgen::PromptDist::parse(p.str("prompt-dist")?)?,
         max_new: (p.usize("max-new-min")?, p.usize("max-new-max")?),
         vocab: p.usize("vocab")?,
         stream_fraction: p.f64("stream-fraction")?,
@@ -522,6 +547,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         seed: p.u64("seed")?,
         timeout: Duration::from_secs(p.u64("timeout-s")?),
         keep_alive: p.flag("keep-alive"),
+        prefill_chunk: p.usize("prefill-chunk")?,
     };
     let rows: Vec<Json> = if p.flag("dry-run") {
         let engine_counts: Vec<usize> = p

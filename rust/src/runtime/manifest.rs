@@ -131,6 +131,9 @@ pub struct Manifest {
     pub total_steps: usize,
     pub eval_mem_len: usize,
     pub serve_batch: usize,
+    /// Serving prefill chunk width C (tokens per `prefill` dispatch per
+    /// lane); 1 for artifacts that predate the `prefill` program.
+    pub prefill_chunk: usize,
     pub functions: BTreeMap<String, FunctionSpec>,
     pub flops: BTreeMap<String, f64>,
     pub raw: Json,
@@ -183,6 +186,11 @@ impl Manifest {
             total_steps: raw.get("train_config")?.get("total_steps")?.as_usize()?,
             eval_mem_len: raw.get("eval_mem_len")?.as_usize()?,
             serve_batch: raw.get("serve_batch")?.as_usize()?,
+            prefill_chunk: raw
+                .opt("prefill_chunk")
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(1)
+                .max(1),
             model,
             functions,
             flops,

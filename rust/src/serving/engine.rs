@@ -1,10 +1,21 @@
-//! The inference engine: continuous batching over `step_fwd`.
+//! The inference engine: continuous batching over `step_fwd` with
+//! chunked prefill.
 //!
 //! Parameters and per-lane XL memories are device-resident
-//! ([`DeviceState`]): per `pump` only the `[B, 1]` token tensor goes
+//! ([`DeviceState`]): per `pump` only the token tensor goes
 //! host→device and only the logits come back; memory outputs are fed
-//! buffer-to-buffer into the next step.  Lane admission zeroes the
-//! lane's memory rows *on device* through the AOT'd `reset_lanes`
+//! buffer-to-buffer into the next step.  Prompt ingestion is *chunked*
+//! when the artifact provides the AOT'd `prefill` program: a pump with
+//! any lane still in prompt phase feeds up to `C` pending tokens per
+//! lane through one `prefill` dispatch (`[B, C]` tokens + `[B]`
+//! active-length vector up, one logits row down) — decode-phase lanes
+//! ride the same dispatch as 1-active chunks, idle lanes as 0-active
+//! (their memory passes through untouched), so an L-token prompt costs
+//! ⌈L/C⌉ dispatches instead of L.  Pure-decode pumps fall through to
+//! the cheaper single-token `step_fwd`.  Artifacts without `prefill`
+//! use the validated single-token fallback for the prompt phase,
+//! counted separately (`prefill_steps_host`).  Lane admission zeroes
+//! the lane's memory rows *on device* through the AOT'd `reset_lanes`
 //! mask program when the artifact provides it (a `[B]` keep-mask is
 //! the only upload); older artifacts fall back to the host zero-row
 //! path, counted separately in [`Engine::stats`].
@@ -93,6 +104,12 @@ pub trait EngineBackend {
     /// Requests that could be admitted on the next pump: free lanes
     /// minus requests already waiting in the internal queue.
     fn free_lanes(&self) -> usize;
+    /// Prompt tokens one pump can ingest per lane — the prefill chunk
+    /// width C.  1 means single-token prompt feeding (no chunked
+    /// prefill); the scheduler costs prompts in ⌈len/C⌉ chunks.
+    fn prefill_chunk(&self) -> usize {
+        1
+    }
     /// Enqueue a request whose progress is reported via `events`.
     fn submit_streaming(
         &mut self,
@@ -180,6 +197,16 @@ enum ResetInput {
     Mask,
 }
 
+/// One input of the AOT'd `prefill` program, mapped onto the engine's
+/// `step_fwd` device state: a shared param/memory slot, the `[B, C]`
+/// token chunk, or the `[B]` active-length vector.
+#[derive(Debug, Clone, Copy)]
+enum PrefillInput {
+    State(usize),
+    Tokens,
+    ActiveLen,
+}
+
 /// Continuous-batching engine: `serve_batch` lanes step together in one
 /// `step_fwd` call per token.
 pub struct Engine<'a> {
@@ -196,6 +223,16 @@ pub struct Engine<'a> {
     reset_inputs: Option<Vec<ResetInput>>,
     /// `reset_lanes` program outputs in program order -> `state` slots
     reset_outputs: Vec<usize>,
+    /// `prefill` program inputs in program order, mapped onto `state`
+    /// slots plus the two per-dispatch uploads (`None` when the
+    /// artifact lacks the program or its signature doesn't line up —
+    /// single-token prompt feeding then).
+    prefill_inputs: Option<Vec<PrefillInput>>,
+    /// `prefill` memory outputs: (output index, `state` slot) pairs
+    prefill_feedback: Vec<(usize, usize)>,
+    /// prefill chunk width C (from the program's `[B, C]` token input);
+    /// 1 when the program is unavailable
+    prefill_chunk: usize,
     lanes: Vec<Option<Lane>>,
     queue: VecDeque<Lane>,
     rng: Rng,
@@ -208,6 +245,14 @@ pub struct Engine<'a> {
     pub lane_resets_device: u64,
     /// admissions that fell back to the host zero-row path
     pub lane_resets_host: u64,
+    /// pumps that ingested prompt tokens through the chunked `prefill`
+    /// dispatch
+    pub prefill_steps_device: u64,
+    /// pumps that ingested prompt tokens one-per-lane through the
+    /// single-token `step_fwd` fallback (artifact predates `prefill`)
+    pub prefill_steps_host: u64,
+    /// prompt tokens consumed through the chunked prefill path
+    pub prefill_tokens: u64,
     /// requests dropped because their lane produced non-finite logits
     /// (the per-lane poison guard)
     pub lanes_poisoned: u64,
@@ -260,6 +305,11 @@ impl<'a> Engine<'a> {
         let n_lanes = state.slot_spec(tok_idx).shape[0];
         let (reset_inputs, reset_outputs) =
             Self::map_reset_program(bundle, &state, n_lanes, &mem_slots);
+        let vocab = spec.outputs[0].shape[1];
+        let (prefill_inputs, prefill_feedback, prefill_chunk) =
+            Self::map_prefill_program(
+                bundle, &state, n_lanes, &mem_slots, vocab,
+            );
         Ok(Engine {
             bundle,
             state,
@@ -268,6 +318,9 @@ impl<'a> Engine<'a> {
             mem_feedback,
             reset_inputs,
             reset_outputs,
+            prefill_inputs,
+            prefill_feedback,
+            prefill_chunk,
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
             rng: Rng::new(seed),
@@ -276,6 +329,9 @@ impl<'a> Engine<'a> {
             tokens_processed: 0,
             lane_resets_device: 0,
             lane_resets_host: 0,
+            prefill_steps_device: 0,
+            prefill_steps_host: 0,
+            prefill_tokens: 0,
             lanes_poisoned: 0,
         })
     }
@@ -339,6 +395,103 @@ impl<'a> Engine<'a> {
             return (None, Vec::new());
         }
         (Some(inputs), outputs)
+    }
+
+    /// Map the optional AOT'd `prefill` program onto the step_fwd
+    /// device state.  Its manifest contract (checked per buffer, with a
+    /// silent single-token fallback on any mismatch so old artifacts
+    /// keep working): inputs `0.*`/`1.*` are the params/memories shared
+    /// with step_fwd, input `2` the `[B, C]` i32 token chunk, input `3`
+    /// the `[B]` i32 active-length vector; output `0` is the
+    /// last-valid-position logits `[B, vocab]` and outputs `1.*` the
+    /// updated memories in layer order.  Like `reset_lanes`, the
+    /// program must read *and* write every memory slot — a
+    /// subset-coverage program would advance some layers' memories and
+    /// leave others stale, silently corrupting every lane.
+    fn map_prefill_program(
+        bundle: &ModelBundle,
+        state: &DeviceState,
+        n_lanes: usize,
+        mem_slots: &[usize],
+        vocab: usize,
+    ) -> (Option<Vec<PrefillInput>>, Vec<(usize, usize)>, usize) {
+        const NONE: (Option<Vec<PrefillInput>>, Vec<(usize, usize)>, usize) =
+            (None, Vec::new(), 1);
+        let Ok(prog) = bundle.program("prefill") else {
+            return NONE;
+        };
+        let mut chunk = 0usize;
+        let mut inputs = Vec::with_capacity(prog.spec.inputs.len());
+        for b in &prog.spec.inputs {
+            if b.name == "2" {
+                if b.dtype != DType::I32
+                    || b.shape.len() != 2
+                    || b.shape[0] != n_lanes
+                    || b.shape[1] == 0
+                {
+                    return NONE;
+                }
+                chunk = b.shape[1];
+                inputs.push(PrefillInput::Tokens);
+            } else if b.name == "3" {
+                if b.dtype != DType::I32 || b.shape != [n_lanes] {
+                    return NONE;
+                }
+                inputs.push(PrefillInput::ActiveLen);
+            } else {
+                match state.position(&b.name) {
+                    Some(i)
+                        if state.slot_spec(i).shape == b.shape
+                            && state.slot_spec(i).dtype == b.dtype =>
+                    {
+                        inputs.push(PrefillInput::State(i))
+                    }
+                    _ => return NONE,
+                }
+            }
+        }
+        if chunk == 0
+            || !inputs
+                .iter()
+                .any(|i| matches!(i, PrefillInput::ActiveLen))
+        {
+            return NONE;
+        }
+        // output 0: logits_last [B, vocab]; outputs 1.*: memories
+        match prog.spec.outputs.first() {
+            Some(b)
+                if b.name == "0"
+                    && b.shape == [n_lanes, vocab]
+                    && b.dtype == DType::F32 => {}
+            _ => return NONE,
+        }
+        let mut feedback = Vec::new();
+        for (oi, b) in prog.spec.outputs.iter().enumerate().skip(1) {
+            match state.position(&b.name) {
+                Some(i)
+                    if state.slot_spec(i).shape == b.shape
+                        && state.slot_spec(i).dtype == b.dtype =>
+                {
+                    feedback.push((oi, i))
+                }
+                _ => return NONE,
+            }
+        }
+        let need: std::collections::BTreeSet<usize> =
+            mem_slots.iter().copied().collect();
+        let covered: std::collections::BTreeSet<usize> = inputs
+            .iter()
+            .filter_map(|pi| match pi {
+                PrefillInput::State(i) if need.contains(i) => Some(*i),
+                _ => None,
+            })
+            .collect();
+        let written: std::collections::BTreeSet<usize> =
+            feedback.iter().map(|&(_, i)| i).collect();
+        if covered != need || written != need || need.is_empty() {
+            return NONE;
+        }
+        (Some(inputs), feedback, chunk)
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -455,30 +608,59 @@ impl<'a> Engine<'a> {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
-    /// Run one engine iteration (admit + one step_fwd over all lanes).
-    /// Returns active lanes plus internally-queued requests — 0 means
-    /// fully drained (the [`EngineBackend`] contract the serving driver
-    /// idles on), not "no lane is occupied".
+    /// Run one engine iteration: admit, then either one chunked
+    /// `prefill` dispatch (some lane still has pending prompt tokens —
+    /// decode lanes ride along as 1-active chunks) or one single-token
+    /// `step_fwd` over all lanes (pure decode, and the fallback when
+    /// the artifact has no `prefill` program).  Returns active lanes
+    /// plus internally-queued requests — 0 means fully drained (the
+    /// [`EngineBackend`] contract the serving driver idles on), not
+    /// "no lane is occupied".
     pub fn pump(&mut self) -> Result<usize> {
         self.admit()?;
-        let n_active = self.active();
-        if n_active == 0 {
+        if self.active() == 0 {
             return Ok(0);
         }
+        let in_prompt = self
+            .lanes
+            .iter()
+            .flatten()
+            .any(|l| !l.pending.is_empty());
+        if in_prompt && self.prefill_inputs.is_some() {
+            self.pump_prefill()?;
+        } else {
+            if in_prompt {
+                // single-token fallback is about to consume prompt
+                // tokens (artifact predates the `prefill` program)
+                self.prefill_steps_host += 1;
+            }
+            self.pump_step_fwd()?;
+        }
+        Ok(self.active() + self.queue.len())
+    }
+
+    /// One single-token `step_fwd` over all lanes (the original decode
+    /// step, and the prompt-phase fallback for old artifacts).
+    fn pump_step_fwd(&mut self) -> Result<()> {
+        let n_active = self.active();
         let fwd = self.bundle.program("step_fwd")?;
         let b = self.lanes.len();
         // token for each lane: next pending (prompt) token, or last
         // generated token; idle lanes feed 0.
         let mut toks = vec![0i32; b];
-        let mut prompt_phase = vec![false; b];
+        let mut sample = vec![false; b];
         for (i, slot) in self.lanes.iter_mut().enumerate() {
             if let Some(lane) = slot {
                 if let Some(t) = lane.pending.pop_front() {
                     toks[i] = t;
-                    // still in prompt phase if more prompt tokens remain
-                    prompt_phase[i] = !lane.pending.is_empty();
-                } else if let Some(&t) = lane.generated.last() {
-                    toks[i] = t;
+                    // the pump feeding the last prompt token already
+                    // samples a continuation from its logits
+                    sample[i] = lane.pending.is_empty();
+                } else {
+                    if let Some(&t) = lane.generated.last() {
+                        toks[i] = t;
+                    }
+                    sample[i] = true;
                 }
             }
         }
@@ -490,32 +672,138 @@ impl<'a> Engine<'a> {
         };
         self.steps_executed += 1;
         self.tokens_processed += n_active as u64;
-        // only the logits cross back to the host
-        let logits = download(&self.bundle.client, &out[0])?.as_f32()?;
         let vocab = fwd.spec.outputs[0].shape[1];
+        let logits = self.absorb_outputs(out, false)?;
+        self.sample_and_finish(&logits, vocab, &sample);
+        Ok(())
+    }
+
+    /// Shared dispatch epilogue: download the logits row (output 0 —
+    /// the only host-bound traffic) and adopt the memory outputs back
+    /// into the device state buffer-to-buffer, per the step_fwd
+    /// (`prefill == false`) or prefill feedback table.
+    fn absorb_outputs(
+        &mut self,
+        out: Vec<xla::PjRtBuffer>,
+        prefill: bool,
+    ) -> Result<Vec<f32>> {
+        let logits = download(&self.bundle.client, &out[0])?.as_f32()?;
         let mut out: Vec<Option<xla::PjRtBuffer>> =
             out.into_iter().map(Some).collect();
-        for (oi, ii) in &self.mem_feedback {
-            let buf = out[*oi]
+        let feedback = if prefill {
+            &self.prefill_feedback
+        } else {
+            &self.mem_feedback
+        };
+        for &(oi, ii) in feedback {
+            let buf = out[oi]
                 .take()
                 .ok_or_else(|| Error::other("mem output consumed twice"))?;
-            self.state.set_device(*ii, buf);
+            self.state.set_device(ii, buf);
         }
-        for i in 0..b {
+        Ok(logits)
+    }
+
+    /// One chunked `prefill` dispatch: up to C pending prompt tokens
+    /// per prompt-phase lane, the last sampled token (1-active) for
+    /// decode-phase lanes, 0-active for idle lanes (memory passes
+    /// through bit-for-bit on device).  Host traffic is the `[B, C]`
+    /// token chunk + `[B]` active vector up and one logits row down —
+    /// memories stay buffer-to-buffer, exactly like `step_fwd`.
+    fn pump_prefill(&mut self) -> Result<()> {
+        let prog = self.bundle.program("prefill")?;
+        let b = self.lanes.len();
+        let c = self.prefill_chunk;
+        let mut toks = vec![0i32; b * c];
+        let mut active = vec![0i32; b];
+        // lanes whose last fed token completes their context get a
+        // continuation sampled from logits_last
+        let mut sample = vec![false; b];
+        let mut prompt_tokens = 0u64;
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
+            let Some(lane) = slot else { continue };
+            if lane.pending.is_empty() {
+                // decode lane: its last token as a 1-active chunk is
+                // exactly step_fwd semantics
+                if let Some(&t) = lane.generated.last() {
+                    toks[i * c] = t;
+                }
+                active[i] = 1;
+                sample[i] = true;
+                continue;
+            }
+            let k = lane.pending.len().min(c);
+            for j in 0..k {
+                toks[i * c + j] = lane.pending.pop_front().unwrap();
+            }
+            active[i] = k as i32;
+            prompt_tokens += k as u64;
+            // drained this pump: logits_last is the distribution after
+            // the final prompt token — sample the first continuation
+            sample[i] = lane.pending.is_empty();
+        }
+        self.state.upload_dirty()?;
+        let tok_buf = upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[b, c], &toks)?,
+        )?;
+        let act_buf = upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[b], &active)?,
+        )?;
+        let out = {
+            let inputs = self
+                .prefill_inputs
+                .as_ref()
+                .ok_or_else(|| Error::other("prefill program unmapped"))?;
+            let bufs: Vec<&xla::PjRtBuffer> = inputs
+                .iter()
+                .map(|pi| match pi {
+                    PrefillInput::State(s) => self.state.buffer(*s),
+                    PrefillInput::Tokens => Ok(&tok_buf),
+                    PrefillInput::ActiveLen => Ok(&act_buf),
+                })
+                .collect::<Result<_>>()?;
+            prog.run_buffers(&bufs)?
+        };
+        self.steps_executed += 1;
+        self.prefill_steps_device += 1;
+        self.prefill_tokens += prompt_tokens;
+        // every consumed token counts: C-chunk prompt lanes, 1-token
+        // decode lanes — idle lanes contribute their 0
+        self.tokens_processed +=
+            active.iter().map(|&a| a as u64).sum::<u64>();
+        let vocab = prog.spec.outputs[0].shape[1];
+        let logits = self.absorb_outputs(out, true)?;
+        self.sample_and_finish(&logits, vocab, &sample);
+        Ok(())
+    }
+
+    /// Post-dispatch bookkeeping shared by both pump paths: for each
+    /// lane flagged in `sample`, guard against non-finite logits
+    /// (per-lane poison containment), sample one continuation token,
+    /// stream it, and retire lanes that hit their budget.
+    fn sample_and_finish(
+        &mut self,
+        logits: &[f32],
+        vocab: usize,
+        sample: &[bool],
+    ) {
+        for i in 0..self.lanes.len() {
             let mut finished = false;
             let mut poisoned = false;
             if let Some(lane) = &mut self.lanes[i] {
-                if !prompt_phase[i] {
+                if sample[i] {
                     let row = &logits[i * vocab..(i + 1) * vocab];
                     // poisoned-lane guard: a NaN/Inf logits row means
                     // this lane's state is numerically corrupt and
                     // every later token from it would be garbage.  The
                     // corruption is per-lane (each lane's memories are
-                    // independent rows), so only this request is
-                    // failed — the lane's memory is zeroed by the
-                    // normal reset path on its next admission (the
-                    // device reset is select-based, NaN-safe) and the
-                    // engine keeps serving its other lanes.
+                    // independent rows, and both the prefill and reset
+                    // masks are select-based, NaN-safe), so only this
+                    // request is failed — the lane's memory is zeroed
+                    // by the normal reset path on its next admission
+                    // and the engine keeps serving its other lanes.
                     if row.iter().any(|v| !v.is_finite()) {
                         poisoned = true;
                     } else {
@@ -559,7 +847,6 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        Ok(self.active() + self.queue.len())
     }
 
     /// Drive all submitted requests to completion, collecting results.
@@ -582,12 +869,26 @@ impl<'a> Engine<'a> {
         self.state.transfers()
     }
 
+    /// Prompt tokens one pump can ingest per lane (the `prefill`
+    /// program's chunk width C); 1 when the artifact predates the
+    /// program and prompts stream one token per pump.
+    pub fn prefill_chunk(&self) -> usize {
+        if self.prefill_inputs.is_some() {
+            self.prefill_chunk
+        } else {
+            1
+        }
+    }
+
     /// Throughput summary over the engine's lifetime.
     ///
     /// `mean_batch_occupancy` counts every token an active lane consumed
     /// per step — prompt phase included (the seed divided *generated*
     /// tokens by steps, understating occupancy during prefill; that
-    /// metric survives as `mean_gen_occupancy`).
+    /// metric survives as `mean_gen_occupancy`).  With chunked prefill
+    /// a pump can consume up to C tokens per lane, so this can exceed
+    /// `n_lanes` — it measures tokens per dispatch, the quantity the
+    /// chunking amortizes dispatch overhead over.
     pub fn stats(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
         let steps = self.steps_executed as f64;
@@ -616,6 +917,16 @@ impl<'a> Engine<'a> {
             self.lane_resets_device as f64,
         );
         m.insert("lane_resets_host".into(), self.lane_resets_host as f64);
+        m.insert(
+            "prefill_steps_device".into(),
+            self.prefill_steps_device as f64,
+        );
+        m.insert(
+            "prefill_steps_host".into(),
+            self.prefill_steps_host as f64,
+        );
+        m.insert("prefill_tokens".into(), self.prefill_tokens as f64);
+        m.insert("prefill_chunk".into(), self.prefill_chunk() as f64);
         m.insert("lanes_poisoned".into(), self.lanes_poisoned as f64);
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
@@ -631,6 +942,10 @@ impl EngineBackend for Engine<'_> {
 
     fn free_lanes(&self) -> usize {
         Engine::free_lanes(self)
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        Engine::prefill_chunk(self)
     }
 
     fn submit_streaming(

@@ -28,14 +28,54 @@ use crate::serving::router::{self, RouterCfg};
 use crate::serving::scheduler::Histogram;
 use crate::serving::server::{self, ServerConfig};
 
+/// Prompt-length distribution of the synthetic plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PromptDist {
+    /// Every prompt is exactly the range maximum (`--prompt-max`).
+    Fixed,
+    /// Uniform over the inclusive `prompt_len` range (the default).
+    Uniform,
+    /// Log-normal shaped into the `prompt_len` range — many short
+    /// prompts with a heavy long tail, the shape that makes chunked
+    /// prefill's per-length TTFT rows informative.  μ/σ are set so the
+    /// geometric mean of the range is the median and ±2σ spans the
+    /// range; samples clamp into it.
+    Lognormal,
+}
+
+impl PromptDist {
+    pub fn parse(s: &str) -> Result<PromptDist> {
+        match s {
+            "fixed" => Ok(PromptDist::Fixed),
+            "uniform" => Ok(PromptDist::Uniform),
+            "lognormal" => Ok(PromptDist::Lognormal),
+            other => Err(Error::Config(format!(
+                "unknown prompt distribution {other:?} \
+                 (expected fixed | uniform | lognormal)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PromptDist::Fixed => "fixed",
+            PromptDist::Uniform => "uniform",
+            PromptDist::Lognormal => "lognormal",
+        }
+    }
+}
+
 /// Load-generation parameters.
 #[derive(Debug, Clone)]
 pub struct LoadgenCfg {
     pub requests: usize,
     /// Target offered load, requests/second (Poisson arrivals).
     pub rps: f64,
-    /// Uniform prompt-length range (inclusive).
+    /// Prompt-length range (inclusive); how lengths are drawn from it
+    /// is `prompt_dist`.
     pub prompt_len: (usize, usize),
+    /// Prompt-length distribution over `prompt_len`.
+    pub prompt_dist: PromptDist,
     /// Uniform `max_tokens` range (inclusive).
     pub max_new: (usize, usize),
     /// Prompt token ids are drawn uniformly from `[0, vocab)`.
@@ -52,6 +92,10 @@ pub struct LoadgenCfg {
     /// Reuse HTTP connections across requests (keep-alive + a shared
     /// connection pool) instead of one connection per request.
     pub keep_alive: bool,
+    /// Dry-run only: the mock engines' chunked-prefill width C (and
+    /// the scheduler's prompt-cost unit).  Live runs measure whatever
+    /// the server at `--addr` is running.
+    pub prefill_chunk: usize,
 }
 
 impl Default for LoadgenCfg {
@@ -60,6 +104,7 @@ impl Default for LoadgenCfg {
             requests: 32,
             rps: 8.0,
             prompt_len: (4, 16),
+            prompt_dist: PromptDist::Uniform,
             max_new: (8, 32),
             vocab: 2048,
             stream_fraction: 0.5,
@@ -70,6 +115,7 @@ impl Default for LoadgenCfg {
             seed: 1,
             timeout: Duration::from_secs(120),
             keep_alive: false,
+            prefill_chunk: 16,
         }
     }
 }
@@ -90,8 +136,30 @@ fn uniform_incl(rng: &mut Rng, range: (usize, usize)) -> usize {
     lo + rng.below(hi - lo + 1)
 }
 
+/// One prompt length drawn per `dist` from the inclusive `range`.
+fn sample_prompt_len(
+    rng: &mut Rng,
+    dist: PromptDist,
+    range: (usize, usize),
+) -> usize {
+    let lo = range.0.max(1);
+    let hi = range.1.max(lo);
+    match dist {
+        PromptDist::Fixed => hi,
+        PromptDist::Uniform => uniform_incl(rng, range),
+        PromptDist::Lognormal => {
+            let (ln_lo, ln_hi) = ((lo as f64).ln(), (hi as f64).ln());
+            let mu = 0.5 * (ln_lo + ln_hi);
+            let sigma = ((ln_hi - ln_lo) / 4.0).max(1e-9);
+            let x = (mu + sigma * rng.normal()).exp();
+            (x.round() as usize).clamp(lo, hi)
+        }
+    }
+}
+
 /// Deterministic open-loop schedule: Poisson arrivals at `cfg.rps`,
-/// uniform prompt/generation lengths, Bernoulli streaming mix.
+/// `prompt_dist`-drawn prompt lengths, uniform generation lengths,
+/// Bernoulli streaming mix.
 pub fn plan(cfg: &LoadgenCfg) -> Vec<Planned> {
     let mut rng = Rng::new(cfg.seed);
     let rate = cfg.rps.max(1e-9);
@@ -100,7 +168,8 @@ pub fn plan(cfg: &LoadgenCfg) -> Vec<Planned> {
         .map(|_| {
             // exponential inter-arrival: -ln(1 - U) / rate
             t += -(1.0 - rng.next_f64()).ln() / rate;
-            let plen = uniform_incl(&mut rng, cfg.prompt_len);
+            let plen =
+                sample_prompt_len(&mut rng, cfg.prompt_dist, cfg.prompt_len);
             Planned {
                 at: Duration::from_secs_f64(t),
                 prompt: (0..plen)
@@ -397,6 +466,27 @@ impl ConnPool {
     }
 }
 
+/// Prompt-length buckets for the per-bucket TTFT report rows:
+/// power-of-two edges (the last bucket is open-ended).
+const PROMPT_BUCKETS: [(&str, usize); 9] = [
+    ("1-8", 8),
+    ("9-16", 16),
+    ("17-32", 32),
+    ("33-64", 64),
+    ("65-128", 128),
+    ("129-256", 256),
+    ("257-512", 512),
+    ("513-1024", 1024),
+    (">1024", usize::MAX),
+];
+
+fn prompt_bucket_idx(len: usize) -> usize {
+    PROMPT_BUCKETS
+        .iter()
+        .position(|&(_, hi)| len <= hi)
+        .unwrap_or(PROMPT_BUCKETS.len() - 1)
+}
+
 /// Fetch and parse `GET /metrics`.
 pub fn fetch_metrics(addr: &SocketAddr) -> Result<Json> {
     let stream =
@@ -446,6 +536,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         }
         let tx = tx.clone();
         let body = completion_body(&p, cfg);
+        let plen = p.prompt.len();
         let timeout = cfg.timeout;
         let pool = pool.clone();
         handles.push(std::thread::spawn(move || {
@@ -453,15 +544,19 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
                 Some(pool) => pool.send(&body, timeout),
                 None => send_completion(&addr, &body, timeout),
             };
-            let _ = tx.send(res);
+            let _ = tx.send((plen, res));
         }));
     }
     drop(tx);
     let mut latency = Histogram::new();
     let mut ttft = Histogram::new();
+    // TTFT per prompt-length bucket: where the chunked-prefill win
+    // shows up (long prompts), instead of hiding in the aggregate p95
+    let mut bucket_ttft: Vec<Histogram> =
+        (0..PROMPT_BUCKETS.len()).map(|_| Histogram::new()).collect();
     let (mut ok, mut rejected, mut dropped, mut errors) = (0u64, 0u64, 0u64, 0u64);
     let mut tokens = 0usize;
-    for outcome in rx {
+    for (plen, outcome) in rx {
         match outcome {
             Ok(o) => {
                 tokens += o.tokens;
@@ -478,6 +573,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
                     latency.observe(o.latency);
                     if let Some(t) = o.ttft {
                         ttft.observe(t);
+                        bucket_ttft[prompt_bucket_idx(plen)].observe(t);
                     }
                 } else {
                     errors += 1;
@@ -491,12 +587,24 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
     }
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     let server_metrics = fetch_metrics(&addr).unwrap_or(Json::Null);
+    let ttft_rows: Vec<Json> = PROMPT_BUCKETS
+        .iter()
+        .zip(&bucket_ttft)
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(&(label, _), h)| {
+            json::obj(vec![
+                ("prompt_len", json::s(label)),
+                ("ttft", h.to_json()),
+            ])
+        })
+        .collect();
     Ok(json::obj(vec![
         ("mode", json::s(mode)),
         ("requests", json::num(n as f64)),
         ("target_rps", json::num(cfg.rps)),
         ("achieved_rps", json::num(n as f64 / wall)),
         ("stream_fraction", json::num(cfg.stream_fraction)),
+        ("prompt_dist", json::s(cfg.prompt_dist.as_str())),
         ("ok", json::num(ok as f64)),
         ("rejected_429", json::num(rejected as f64)),
         ("dropped", json::num(dropped as f64)),
@@ -507,15 +615,18 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         ("keep_alive", Json::Bool(cfg.keep_alive)),
         ("latency", latency.to_json()),
         ("ttft", ttft.to_json()),
+        ("ttft_by_prompt_len", json::arr(ttft_rows)),
         ("server_metrics", server_metrics),
     ]))
 }
 
 /// Run `f` against an in-process HTTP server over the device-free
 /// [`MockBackend`] (bound to an ephemeral localhost port), shutting the
-/// server down afterwards.  Used by the serving tests and the
-/// `serve_load` bench; `loadgen --dry-run` goes through
-/// [`with_mock_fleet`] instead so its rows always include the router.
+/// server down afterwards.  `cfg.prefill_chunk` configures both the
+/// scheduler's prompt costing and the mock backend's chunked prompt
+/// ingestion.  Used by the serving tests and the `serve_load` bench;
+/// `loadgen --dry-run` goes through [`with_mock_fleet`] instead so its
+/// rows always include the router.
 pub fn with_mock_server<T>(
     lanes: usize,
     vocab: usize,
@@ -527,10 +638,12 @@ pub fn with_mock_server<T>(
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
     let server_shutdown = shutdown.clone();
+    let chunk = cfg.prefill_chunk;
     let handle = std::thread::spawn(move || {
         server::serve(listener, cfg, server_shutdown, move |driver| {
-            let mut backend =
-                MockBackend::new(lanes, vocab).with_step_delay(step_delay);
+            let mut backend = MockBackend::new(lanes, vocab)
+                .with_step_delay(step_delay)
+                .with_prefill_chunk(chunk);
             driver.drive(&mut backend)
         })
     });
@@ -572,6 +685,7 @@ pub fn with_mock_fleet<T>(
         .map(|i| faults.get(i).cloned().flatten())
         .collect();
     let release = stall_release.clone();
+    let chunk = cfg.prefill_chunk;
     let handle = std::thread::spawn(move || {
         router::serve_fleet(
             listener,
@@ -581,6 +695,7 @@ pub fn with_mock_fleet<T>(
             move |id, fleet| {
                 let mut backend = MockBackend::new(lanes, vocab)
                     .with_step_delay(step_delay)
+                    .with_prefill_chunk(chunk)
                     .with_stall_release(release.clone());
                 if let Some(fault) = faults[id].clone() {
                     backend = backend.with_fault(fault);
@@ -619,6 +734,7 @@ pub fn dry_run(
 ) -> Result<Json> {
     let server_cfg = ServerConfig {
         vocab: Some(cfg.vocab),
+        prefill_chunk: cfg.prefill_chunk.max(1),
         ..Default::default()
     };
     let engines = engines.max(1);
@@ -633,6 +749,10 @@ pub fn dry_run(
     )?;
     if let Json::Obj(m) = &mut row {
         m.insert("engines".into(), json::num(engines as f64));
+        m.insert(
+            "prefill_chunk".into(),
+            json::num(cfg.prefill_chunk.max(1) as f64),
+        );
     }
     Ok(row)
 }
@@ -691,6 +811,69 @@ mod tests {
         let total = p.last().unwrap().at.as_secs_f64();
         let mean_dt = total / p.len() as f64;
         assert!((mean_dt - 0.02).abs() < 0.004, "mean dt {mean_dt}");
+    }
+
+    #[test]
+    fn prompt_dist_fixed_and_lognormal_respect_range() {
+        let base = LoadgenCfg {
+            requests: 256,
+            prompt_len: (4, 256),
+            seed: 11,
+            ..Default::default()
+        };
+        let fixed = plan(&LoadgenCfg {
+            prompt_dist: PromptDist::Fixed,
+            ..base.clone()
+        });
+        assert!(fixed.iter().all(|p| p.prompt.len() == 256));
+        let logn = plan(&LoadgenCfg {
+            prompt_dist: PromptDist::Lognormal,
+            ..base.clone()
+        });
+        assert!(logn
+            .iter()
+            .all(|p| (4..=256).contains(&p.prompt.len())));
+        // heavy tail: the median sits near the geometric mean (32),
+        // far below the arithmetic midpoint (130)
+        let mut lens: Vec<usize> =
+            logn.iter().map(|p| p.prompt.len()).collect();
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2];
+        assert!(
+            (8..=96).contains(&median),
+            "lognormal median {median} out of the expected band"
+        );
+        // and the two shapes genuinely differ
+        assert!(lens.iter().any(|&l| l != 256));
+    }
+
+    #[test]
+    fn prompt_dist_parse_roundtrip() {
+        for d in [
+            PromptDist::Fixed,
+            PromptDist::Uniform,
+            PromptDist::Lognormal,
+        ] {
+            assert_eq!(PromptDist::parse(d.as_str()).unwrap(), d);
+        }
+        assert!(PromptDist::parse("zipf").is_err());
+    }
+
+    #[test]
+    fn prompt_buckets_cover_all_lengths_in_order() {
+        assert_eq!(prompt_bucket_idx(1), 0);
+        assert_eq!(prompt_bucket_idx(8), 0);
+        assert_eq!(prompt_bucket_idx(9), 1);
+        assert_eq!(prompt_bucket_idx(256), 5);
+        assert_eq!(prompt_bucket_idx(257), 6);
+        assert_eq!(prompt_bucket_idx(100_000), PROMPT_BUCKETS.len() - 1);
+        // monotone: longer prompts never map to an earlier bucket
+        let mut last = 0;
+        for len in 1..3000 {
+            let b = prompt_bucket_idx(len);
+            assert!(b >= last);
+            last = b;
+        }
     }
 
     #[test]

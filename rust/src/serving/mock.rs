@@ -1,9 +1,11 @@
 //! A deterministic, device-free [`EngineBackend`]: same lane /
 //! continuous-batching shape as the real [`crate::serving::Engine`]
-//! (one token per active lane per pump, prompt phase first, FIFO
-//! internal queue) but tokens are a pure function of the prompt, so the
-//! scheduler and HTTP layers can be tested — and `loadgen --dry-run`
-//! exercised end to end — without artifacts or a PJRT device.
+//! (chunked prefill — up to C prompt tokens per lane per pump via
+//! [`MockBackend::with_prefill_chunk`], default single-token; prompt
+//! phase first, FIFO internal queue) but tokens are a pure function of
+//! the prompt, so the scheduler and HTTP layers can be tested — and
+//! `loadgen --dry-run` exercised end to end — without artifacts or a
+//! PJRT device.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -23,9 +25,11 @@ use crate::serving::engine::{
 pub enum MockFault {
     /// After `n` executed pumps, `pump` blocks (a wedged device: the
     /// driver thread stops heartbeating and the router must detect it).
-    /// The block is released — returning an error — when the backend's
-    /// [`MockBackend::stall_release`] flag is set, so tests can always
-    /// join their driver threads.
+    /// The block is released — returning one error, after which the
+    /// fault is cleared and the backend pumps cleanly again (an
+    /// unwedged device, the router's re-admission candidate) — when the
+    /// backend's [`MockBackend::stall_release`] flag is set, so tests
+    /// can always join their driver threads.
     StallAfter(u64),
     /// After `n` executed pumps, every `pump` returns an error (a
     /// crashed runtime: the driver's consecutive-error counter trips).
@@ -67,12 +71,23 @@ pub struct MockBackend {
     /// artificial per-pump latency, to simulate device step time in
     /// backpressure tests and dry-run load generation
     step_delay: Duration,
+    /// prompt tokens one pump ingests per lane (chunked prefill width
+    /// C); 1 mirrors an artifact without the `prefill` program
+    prefill_chunk: usize,
     fault: Option<MockFault>,
     /// releases a [`MockFault::StallAfter`] block (shared with the
     /// test / fleet harness so wedged driver threads can be joined)
     stall_release: Arc<AtomicBool>,
     pub steps_executed: u64,
     pub tokens_generated: u64,
+    /// pumps that ingested prompt tokens through the chunked path
+    /// (chunk > 1), mirroring the engine's `prefill_steps_device`
+    pub prefill_steps_device: u64,
+    /// pumps that ingested prompt tokens one-per-lane (chunk == 1),
+    /// mirroring the engine's `prefill_steps_host` fallback counter
+    pub prefill_steps_host: u64,
+    /// prompt tokens consumed through the chunked path
+    pub prefill_tokens: u64,
 }
 
 impl MockBackend {
@@ -82,15 +97,28 @@ impl MockBackend {
             queue: VecDeque::new(),
             vocab: vocab.max(2) as i32,
             step_delay: Duration::ZERO,
+            prefill_chunk: 1,
             fault: None,
             stall_release: Arc::new(AtomicBool::new(false)),
             steps_executed: 0,
             tokens_generated: 0,
+            prefill_steps_device: 0,
+            prefill_steps_host: 0,
+            prefill_tokens: 0,
         }
     }
 
     pub fn with_step_delay(mut self, d: Duration) -> Self {
         self.step_delay = d;
+        self
+    }
+
+    /// Ingest up to `c` prompt tokens per lane per pump (the mock's
+    /// chunked prefill — same pump accounting as the real engine's
+    /// `prefill` dispatch, so the scheduler/router/loadgen stack
+    /// exercises chunked prompt ingestion without a device).
+    pub fn with_prefill_chunk(mut self, c: usize) -> Self {
+        self.prefill_chunk = c.max(1);
         self
     }
 
@@ -129,6 +157,9 @@ impl MockBackend {
                 while !self.stall_release.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(1));
                 }
+                // unwedged: surface one error, then pump cleanly (the
+                // recovered device the router may re-admit)
+                self.fault = None;
                 Err(Error::Serving(
                     "stalled mock engine released (StallAfter)".into(),
                 ))
@@ -138,7 +169,7 @@ impl MockBackend {
                     .lanes
                     .iter()
                     .flatten()
-                    .any(|l| l.prompt_left <= 1) =>
+                    .any(|l| l.prompt_left <= self.prefill_chunk) =>
             {
                 // same failure shape as the real engine's poisoned-
                 // state guard: raised the moment a token would be
@@ -219,11 +250,16 @@ impl EngineBackend for MockBackend {
             std::thread::sleep(self.step_delay);
         }
         self.steps_executed += 1;
+        let chunk = self.prefill_chunk;
+        let mut prompt_tokens = 0u64;
         for slot in self.lanes.iter_mut() {
             let Some(lane) = slot else { continue };
             if lane.prompt_left > 0 {
-                // prompt phase: consume one token, emit nothing
-                lane.prompt_left -= 1;
+                // prompt phase: consume up to `chunk` tokens, emit
+                // nothing until the prompt drains
+                let k = lane.prompt_left.min(chunk);
+                lane.prompt_left -= k;
+                prompt_tokens += k as u64;
                 if lane.prompt_left > 0 {
                     continue;
                 }
@@ -250,13 +286,35 @@ impl EngineBackend for MockBackend {
                 let _ = lane.events.send(StreamEvent::Done(res));
             }
         }
+        if prompt_tokens > 0 {
+            if chunk > 1 {
+                self.prefill_steps_device += 1;
+                self.prefill_tokens += prompt_tokens;
+            } else {
+                self.prefill_steps_host += 1;
+            }
+        }
         Ok(self.active() + self.queue.len())
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     fn stats(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
         m.insert("steps_executed".into(), self.steps_executed as f64);
         m.insert("tokens_generated".into(), self.tokens_generated as f64);
+        m.insert("prefill_chunk".into(), self.prefill_chunk as f64);
+        m.insert(
+            "prefill_steps_device".into(),
+            self.prefill_steps_device as f64,
+        );
+        m.insert(
+            "prefill_steps_host".into(),
+            self.prefill_steps_host as f64,
+        );
+        m.insert("prefill_tokens".into(), self.prefill_tokens as f64);
         m.insert("n_lanes".into(), self.lanes.len() as f64);
         m.insert("mock".into(), 1.0);
         m
@@ -373,6 +431,129 @@ mod tests {
         // matching the real engine's poisoned-state guard
         let err = b.pump().unwrap_err();
         assert!(err.to_string().contains("non-finite logits"), "{err}");
+    }
+
+    /// Drain a backend, splitting one receiver's events into (tokens,
+    /// done results).
+    fn drain(
+        b: &mut MockBackend,
+        rx: &mpsc::Receiver<StreamEvent>,
+    ) -> (Vec<i32>, Vec<GenResult>) {
+        while b.pump().unwrap() > 0 {}
+        let mut toks = Vec::new();
+        let mut dones = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Token(t) => toks.push(t),
+                StreamEvent::Done(r) => dones.push(r),
+                _ => {}
+            }
+        }
+        (toks, dones)
+    }
+
+    #[test]
+    fn chunked_prefill_matches_single_token_for_ragged_lengths() {
+        // prompt lengths straddling the chunk boundary must produce
+        // bit-identical streams at C and C=1, with ⌈L/C⌉ prompt pumps
+        // instead of L (the pump consuming the last prompt token
+        // already samples, so total pumps = ⌈L/C⌉ + budget - 1)
+        const C: usize = 4;
+        for len in [C - 1, C, C + 1, 2 * C + 3] {
+            let prompt: Vec<i32> =
+                (0..len as i32).map(|t| t % 10).collect();
+            let budget = 5;
+            let mut chunked =
+                MockBackend::new(1, 50).with_prefill_chunk(C);
+            let (tx, rx) = mpsc::channel();
+            chunked.submit_streaming(req(prompt.clone(), budget), tx);
+            let (toks_c, dones_c) = drain(&mut chunked, &rx);
+
+            let mut single = MockBackend::new(1, 50);
+            let (tx, rx) = mpsc::channel();
+            single.submit_streaming(req(prompt.clone(), budget), tx);
+            let (toks_s, dones_s) = drain(&mut single, &rx);
+
+            assert_eq!(toks_c, toks_s, "len {len}");
+            assert_eq!(dones_c.len(), 1);
+            assert_eq!(dones_c[0].tokens, dones_s[0].tokens);
+            assert_eq!(dones_c[0].prompt_len, len);
+            assert_eq!(
+                chunked.steps_executed as usize,
+                len.div_ceil(C) + budget - 1,
+                "len {len}: chunked pump count"
+            );
+            assert_eq!(
+                single.steps_executed as usize,
+                len + budget - 1,
+                "len {len}: single-token pump count"
+            );
+            assert_eq!(chunked.prefill_tokens as usize, len);
+            assert!(chunked.prefill_steps_device as usize >= 1);
+            assert_eq!(chunked.prefill_steps_host, 0);
+            // the single-token path is the fallback counter's domain
+            assert_eq!(single.prefill_steps_device, 0);
+            assert!(single.prefill_steps_host as usize >= 1);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_cuts_dispatches_3x_for_256_token_prompts() {
+        // the BENCH_serve acceptance bar: ≥3x fewer engine dispatches
+        // per 256-token prompt at C=16 (measured: 31 vs 271)
+        let run = |chunk: usize| -> u64 {
+            let mut b = MockBackend::new(1, 50).with_prefill_chunk(chunk);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(req((0..256).collect(), 16), tx);
+            while b.pump().unwrap() > 0 {}
+            b.steps_executed
+        };
+        let single = run(1);
+        let chunked = run(16);
+        assert!(
+            single >= 3 * chunked,
+            "C=16 must cut dispatches ≥3x: {single} vs {chunked}"
+        );
+    }
+
+    #[test]
+    fn mixed_prefill_and_decode_lanes_share_one_pump() {
+        // lane 0 is mid-decode while lane 1 prefills a long prompt in
+        // the same pumps; both streams must stay correct and the
+        // chunked accounting must only count lane 1's prompt tokens
+        const C: usize = 4;
+        let mut b = MockBackend::new(2, 50).with_prefill_chunk(C);
+        let (tx0, rx0) = mpsc::channel();
+        b.submit_streaming(req(vec![1], 8), tx0);
+        // lane 0 consumes its 1-token prompt and samples
+        b.pump().unwrap();
+        let (tx1, rx1) = mpsc::channel();
+        b.submit_streaming(req((0..9).collect(), 2), tx1);
+        while b.pump().unwrap() > 0 {}
+        let toks0: Vec<i32> = std::iter::from_fn(|| rx0.try_recv().ok())
+            .filter_map(|ev| match ev {
+                StreamEvent::Token(t) => Some(t),
+                _ => None,
+            })
+            .collect();
+        let toks1: Vec<i32> = std::iter::from_fn(|| rx1.try_recv().ok())
+            .filter_map(|ev| match ev {
+                StreamEvent::Token(t) => Some(t),
+                _ => None,
+            })
+            .collect();
+        let expect0: Vec<i32> = (0..8)
+            .map(|i| MockBackend::expected_token(&[1], i, 50))
+            .collect();
+        let p1: Vec<i32> = (0..9).collect();
+        let expect1: Vec<i32> = (0..2)
+            .map(|i| MockBackend::expected_token(&p1, i, 50))
+            .collect();
+        assert_eq!(toks0, expect0);
+        assert_eq!(toks1, expect1);
+        // all 10 prompt tokens (lane 0's 1 + lane 1's 9) flowed
+        // through the chunked ingest accounting
+        assert_eq!(b.prefill_tokens, 10);
     }
 
     #[test]

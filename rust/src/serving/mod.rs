@@ -12,9 +12,12 @@
 //!   policies, 429 backpressure on overflow, queue + latency
 //!   histograms.
 //! * [`engine`] — the continuous-batching [`Engine`]: `serve_batch`
-//!   device-resident lanes stepping together one token per `step_fwd`
-//!   call, finished lanes refilled without draining the others, lane
-//!   memory reset on device via the AOT'd `reset_lanes` mask program.
+//!   device-resident lanes stepping together — chunked `prefill`
+//!   dispatches ingest up to C prompt tokens per lane per pump (decode
+//!   lanes ride along 1-active), pure-decode pumps use single-token
+//!   `step_fwd` — finished lanes refilled without draining the others,
+//!   lane memory reset on device via the AOT'd `reset_lanes` mask
+//!   program.
 //! * [`router`] — the multi-engine fleet: N driver threads each owning
 //!   an independent backend behind one shared admission scheduler,
 //!   with placement policies, heartbeat/error health tracking, and

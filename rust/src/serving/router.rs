@@ -15,7 +15,12 @@
 //! * **Health** — every driver iteration stores a heartbeat and
 //!   publishes `free_lanes`; a driver that stops beating (wedged device)
 //!   or crosses `error_threshold` consecutive `pump` failures is marked
-//!   unhealthy and receives no new placements.
+//!   unhealthy and receives no new placements.  Quarantine is not
+//!   permanent: the driver keeps beating and pumping, and after
+//!   `readmit_after` consecutive clean pumps (with a fresh heartbeat)
+//!   the placer returns the engine to rotation — a recovered engine
+//!   serves again without a process restart.  A driver wedged inside a
+//!   device call never beats, so it can never ride back in.
 //! * **Failover** — an unhealthy engine's placed + in-flight requests
 //!   are re-queued onto survivors *exactly once per failure* (the
 //!   request registry is the single source of truth: ownership changes
@@ -99,6 +104,15 @@ pub struct RouterCfg {
     /// How many times a request may be re-placed after an engine
     /// failure before it is dropped with 503 `engine-failure`.
     pub max_retries: usize,
+    /// Consecutive clean (error-free) pumps a quarantined engine must
+    /// log before it rejoins the placement set.  A quarantined driver
+    /// keeps beating and pumping its (drained) backend; once it proves
+    /// itself for this many iterations — and is still heartbeating
+    /// fresh — the placer re-admits it without a restart.  0 disables
+    /// re-admission (quarantine is then permanent, the pre-readmission
+    /// behavior).  An engine wedged *inside* a device call never beats,
+    /// so it can never ride this back in.
+    pub readmit_after: u64,
 }
 
 impl Default for RouterCfg {
@@ -109,6 +123,7 @@ impl Default for RouterCfg {
             heartbeat_timeout: Duration::from_secs(5),
             error_threshold: 3,
             max_retries: 1,
+            readmit_after: 20,
         }
     }
 }
@@ -139,8 +154,21 @@ struct EngineState {
     last_beat_ms: AtomicU64,
     consec_errors: AtomicU64,
     /// Set once the placer has re-queued this engine's work after it
-    /// went unhealthy (the requeue must happen exactly once).
+    /// went unhealthy (the requeue must happen exactly once per
+    /// failure; cleared again on re-admission).
     drained: AtomicBool,
+    /// Consecutive clean pumps while quarantined — the driver's
+    /// evidence for re-admission; reset by any pump error.
+    clean_beats: AtomicU64,
+    /// Clean-pump streak currently required for re-admission: starts
+    /// at `cfg.readmit_after` on first quarantine and doubles on every
+    /// relapse (0 = not yet quarantined).  A drained backend's idle
+    /// pumps are weak evidence — an engine that only fails under load
+    /// would otherwise flap in and out of rotation at a constant rate,
+    /// burning request retries forever; the exponential backoff bounds
+    /// that to a geometrically decaying rate while leaving a genuinely
+    /// recovered engine's first re-admission prompt.
+    readmit_threshold: AtomicU64,
     /// The driver thread returned (cleanly or not).
     thread_done: AtomicBool,
     placements: AtomicU64,
@@ -160,6 +188,8 @@ impl EngineState {
             last_beat_ms: AtomicU64::new(NEVER_BEAT),
             consec_errors: AtomicU64::new(0),
             drained: AtomicBool::new(false),
+            clean_beats: AtomicU64::new(0),
+            readmit_threshold: AtomicU64::new(0),
             thread_done: AtomicBool::new(false),
             placements: AtomicU64::new(0),
             completions: AtomicU64::new(0),
@@ -214,6 +244,9 @@ pub struct Fleet {
     retries_exhausted: AtomicU64,
     /// Deadline drops detected after admission (retry queue).
     dropped_deadline: AtomicU64,
+    /// Quarantined engines returned to rotation after `readmit_after`
+    /// consecutive clean pumps.
+    readmissions: AtomicU64,
 }
 
 impl Fleet {
@@ -223,10 +256,23 @@ impl Fleet {
         policy: Policy,
         shutdown: Arc<AtomicBool>,
     ) -> Self {
+        Self::with_prefill_chunk(cfg, queue_cap, policy, shutdown, 1)
+    }
+
+    /// [`Fleet::new`] with the engines' prefill chunk width C so the
+    /// shared scheduler costs prompts in ⌈len/C⌉ prefill dispatches.
+    pub fn with_prefill_chunk(
+        cfg: RouterCfg,
+        queue_cap: usize,
+        policy: Policy,
+        shutdown: Arc<AtomicBool>,
+        prefill_chunk: usize,
+    ) -> Self {
         let n = cfg.engines.max(1);
         Fleet {
             cfg,
-            sched: Scheduler::new(queue_cap, policy),
+            sched: Scheduler::new(queue_cap, policy)
+                .with_prefill_chunk(prefill_chunk),
             engines: (0..n).map(|_| EngineState::new()).collect(),
             registry: Mutex::new(BTreeMap::new()),
             retry_queue: Mutex::new(VecDeque::new()),
@@ -237,6 +283,7 @@ impl Fleet {
             requeues: AtomicU64::new(0),
             retries_exhausted: AtomicU64::new(0),
             dropped_deadline: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
         }
     }
 
@@ -271,6 +318,10 @@ impl Fleet {
 
     pub fn retries_exhausted(&self) -> u64 {
         self.retries_exhausted.load(Ordering::Relaxed)
+    }
+
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::Relaxed)
     }
 
     pub fn engine_placements(&self, id: usize) -> u64 {
@@ -498,23 +549,52 @@ impl Fleet {
     }
 
     /// Mark engines that stopped heartbeating (wedged) or whose driver
-    /// exited as unhealthy, and re-queue each unhealthy engine's work
-    /// exactly once.
+    /// exited as unhealthy, re-queue each unhealthy engine's work
+    /// exactly once — and return a quarantined engine to rotation once
+    /// it has proven itself with `readmit_after` consecutive clean
+    /// pumps while still heartbeating (its driver thread must be
+    /// alive; re-admission re-arms the drain guard so a relapse
+    /// re-queues exactly once again).
     fn health_check(&self, _now: Instant) {
         let timeout_ms = self.cfg.heartbeat_timeout.as_millis() as u64;
         let now_ms = self.now_ms();
         for i in 0..self.engines.len() {
             let e = &self.engines[i];
+            if !e.healthy.load(Ordering::Relaxed)
+                && self.cfg.readmit_after > 0
+                && !e.thread_done.load(Ordering::Relaxed)
+                && e.drained.load(Ordering::Relaxed)
+                && e.clean_beats.load(Ordering::Relaxed)
+                    >= e.readmit_threshold
+                        .load(Ordering::Relaxed)
+                        .max(self.cfg.readmit_after)
+            {
+                let beat = e.last_beat_ms.load(Ordering::Relaxed);
+                let fresh = beat != NEVER_BEAT
+                    && now_ms.saturating_sub(beat) <= timeout_ms;
+                if fresh {
+                    e.clean_beats.store(0, Ordering::Relaxed);
+                    e.consec_errors.store(0, Ordering::Relaxed);
+                    // re-arm the exactly-once drain guard *before*
+                    // flipping healthy: a relapse after re-admission
+                    // must re-queue this engine's work again
+                    e.drained.store(false, Ordering::SeqCst);
+                    e.healthy.store(true, Ordering::SeqCst);
+                    self.readmissions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
             if e.healthy.load(Ordering::Relaxed) {
                 let beat = e.last_beat_ms.load(Ordering::Relaxed);
                 // an engine that never beat is still constructing its
                 // backend, and bundle loading can dwarf both a step
                 // and the heartbeat timeout — so construction gets its
-                // own generous grace (floored at 2 minutes, since
-                // there is no re-admission once quarantined).  But not
+                // own generous grace (floored at 2 minutes).  But not
                 // forever: a driver wedged *inside construction* must
                 // also leave rotation, or affinity placement would pin
-                // matching requests onto it until their timeouts.
+                // matching requests onto it until their timeouts.  A
+                // slow loader quarantined here that *does* come up
+                // rides back in through the clean-pump re-admission
+                // path above.
                 let stale = if beat == NEVER_BEAT {
                     now_ms > timeout_ms.saturating_mul(4).max(120_000)
                 } else {
@@ -527,6 +607,18 @@ impl Fleet {
             if !e.healthy.load(Ordering::Relaxed)
                 && !e.drained.swap(true, Ordering::SeqCst)
             {
+                // each quarantine raises the clean-streak bar for the
+                // next re-admission (exponential backoff against
+                // fails-only-under-load flapping)
+                let t = e.readmit_threshold.load(Ordering::Relaxed);
+                e.readmit_threshold.store(
+                    if t == 0 {
+                        self.cfg.readmit_after
+                    } else {
+                        t.saturating_mul(2)
+                    },
+                    Ordering::Relaxed,
+                );
                 self.requeue_engine(i);
             }
         }
@@ -716,8 +808,12 @@ impl Fleet {
 
     /// The engine-driver loop: submit placed work, pump the backend,
     /// relay events, heartbeat, publish stats.  Call from a dedicated
-    /// thread owning `backend`; returns at shutdown or once this engine
-    /// is unhealthy (its work re-queued by the placer).
+    /// thread owning `backend`; returns at shutdown.  A driver whose
+    /// engine is quarantined keeps beating and pumping its (drained)
+    /// backend — the consecutive-clean-pump streak it logs is what the
+    /// placer's health check uses to re-admit it (`readmit_after`);
+    /// with re-admission disabled it idles in quarantine until
+    /// shutdown.
     pub fn run_engine(
         &self,
         id: usize,
@@ -727,12 +823,13 @@ impl Fleet {
         let mut inflight: Vec<(u64, mpsc::Receiver<StreamEvent>)> =
             Vec::new();
         let mut last_publish = Instant::now();
+        // clamp the shared scheduler's prompt costing down to this
+        // engine's real chunk width (1 after a prefill fallback)
+        self.sched.observe_prefill_chunk(backend.prefill_chunk());
         self.publish(id, backend);
         let mut result = Ok(());
         loop {
-            if self.shutdown.load(Ordering::Relaxed)
-                || !me.healthy.load(Ordering::Relaxed)
-            {
+            if self.shutdown.load(Ordering::Relaxed) {
                 break;
             }
             self.beat(id, backend);
@@ -767,12 +864,44 @@ impl Fleet {
             let remaining = match backend.pump() {
                 Ok(n) => {
                     me.consec_errors.store(0, Ordering::Relaxed);
+                    if me.healthy.load(Ordering::Relaxed) {
+                        // a re-admitted engine serving again must not
+                        // report its stale quarantine error at
+                        // shutdown as if it had died
+                        if result.is_err() {
+                            result = Ok(());
+                        }
+                    } else {
+                        if n == 0 {
+                            // quarantined, pumping cleanly, AND fully
+                            // drained: build the streak the placer
+                            // re-admits on
+                            me.clean_beats
+                                .fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            // still draining pre-quarantine lanes.
+                            // Their requests were already re-placed
+                            // elsewhere (or parked for retry) at
+                            // requeue time; re-admitting before the
+                            // backend is empty could place one of
+                            // them HERE a second time while its first
+                            // attempt still runs on a lane — two
+                            // generations interleaving into one
+                            // client stream.  Not clean evidence.
+                            me.clean_beats.store(0, Ordering::Relaxed);
+                        }
+                    }
                     n
                 }
                 Err(err) => {
+                    me.clean_beats.store(0, Ordering::Relaxed);
                     let n =
                         me.consec_errors.fetch_add(1, Ordering::Relaxed) + 1;
-                    if n >= self.cfg.error_threshold {
+                    if !me.healthy.load(Ordering::Relaxed) {
+                        // already quarantined: back off and keep
+                        // probing; the clean streak restarts from zero
+                        std::thread::sleep(ENGINE_TICK);
+                    } else if n >= self.cfg.error_threshold {
                         me.healthy.store(false, Ordering::Relaxed);
                         result = Err(err);
                     } else {
@@ -916,6 +1045,17 @@ impl Fleet {
                             as f64),
                     ),
                     (
+                        "readmissions",
+                        json::num(
+                            self.readmissions.load(Ordering::Relaxed)
+                                as f64,
+                        ),
+                    ),
+                    (
+                        "readmit_after",
+                        json::num(self.cfg.readmit_after as f64),
+                    ),
+                    (
                         "dropped_deadline_post_admission",
                         json::num(self
                             .dropped_deadline
@@ -1006,11 +1146,12 @@ pub fn serve_fleet<F>(
 where
     F: Fn(usize, &Fleet) -> Result<()> + Send + Sync,
 {
-    let fleet = Arc::new(Fleet::new(
+    let fleet = Arc::new(Fleet::with_prefill_chunk(
         rcfg,
         cfg.queue_cap,
         cfg.policy,
         shutdown.clone(),
+        cfg.prefill_chunk,
     ));
     let state = Arc::new(FleetState {
         cfg,

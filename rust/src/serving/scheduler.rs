@@ -10,6 +10,7 @@
 //! [`Histogram`]s for `/metrics` live behind the same lock.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -24,7 +25,12 @@ pub enum Policy {
     /// Oldest request first.
     Fifo,
     /// Shortest prompt first (FIFO tiebreak) — minimizes mean wait under
-    /// mixed prompt lengths at the cost of long-prompt fairness.
+    /// mixed prompt lengths at the cost of long-prompt fairness.  With
+    /// chunked prefill ([`Scheduler::with_prefill_chunk`]) "shortest"
+    /// means fewest ⌈len/C⌉ prefill dispatches, the engine's actual
+    /// cost unit: prompts that drain in the same number of chunks are
+    /// served FIFO rather than micro-ordered by a token-count
+    /// difference the engine cannot even observe.
     ShortestPrompt,
     /// Earliest deadline first; requests whose deadline already expired
     /// are dropped at take time (their stream gets
@@ -216,6 +222,14 @@ struct Inner {
 pub struct Scheduler {
     capacity: usize,
     policy: Policy,
+    /// Engine prefill chunk width C: the shortest-prompt policy costs a
+    /// request as ⌈prompt_len/C⌉ dispatches rather than raw tokens.
+    /// Seeded from the manifest, then clamped down by every driver's
+    /// *actual* engine chunk ([`Scheduler::observe_prefill_chunk`]) —
+    /// an engine whose `prefill` program failed validation falls back
+    /// to C = 1, and the scheduler must not keep costing prompts in
+    /// chunks the engine doesn't have.
+    prefill_chunk: AtomicUsize,
     inner: Mutex<Inner>,
     nonempty: Condvar,
 }
@@ -225,6 +239,7 @@ impl Scheduler {
         Scheduler {
             capacity: capacity.max(1),
             policy,
+            prefill_chunk: AtomicUsize::new(1),
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 next_id: 0,
@@ -235,12 +250,37 @@ impl Scheduler {
         }
     }
 
+    /// Cost prompts in prefill chunks of `c` tokens (the engine's
+    /// dispatch granularity) for the shortest-prompt policy.
+    pub fn with_prefill_chunk(self, c: usize) -> Self {
+        self.prefill_chunk.store(c.max(1), Ordering::Relaxed);
+        self
+    }
+
+    /// A driver reporting its engine's real chunk width.  Clamps the
+    /// costing chunk *down* (min over the fleet): one engine on the
+    /// single-token fallback makes token-granular costing the honest
+    /// common denominator.
+    pub fn observe_prefill_chunk(&self, c: usize) {
+        self.prefill_chunk.fetch_min(c.max(1), Ordering::Relaxed);
+    }
+
     pub fn policy(&self) -> Policy {
         self.policy
     }
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk.load(Ordering::Relaxed)
+    }
+
+    /// Admission cost of a prompt: prefill dispatches needed to ingest
+    /// it (⌈len/C⌉; plain token count when C is 1).
+    pub fn prompt_cost(&self, prompt_len: usize) -> usize {
+        prompt_len.div_ceil(self.prefill_chunk())
     }
 
     /// Enqueue a request, or reject it synchronously when the queue is
@@ -350,9 +390,9 @@ impl Scheduler {
                 Policy::ShortestPrompt => {
                     let mut best: Option<(usize, usize)> = None;
                     for (i, q) in inner.queue.iter().enumerate() {
-                        let len = q.req.prompt.len();
-                        if best.is_none_or(|(_, b)| len < b) {
-                            best = Some((i, len));
+                        let cost = self.prompt_cost(q.req.prompt.len());
+                        if best.is_none_or(|(_, b)| cost < b) {
+                            best = Some((i, cost));
                         }
                     }
                     best?.0
@@ -432,6 +472,7 @@ impl Scheduler {
         json::obj(vec![
             ("policy", json::s(self.policy.as_str())),
             ("capacity", json::num(self.capacity as f64)),
+            ("prefill_chunk", json::num(self.prefill_chunk() as f64)),
             ("depth", json::num(inner.queue.len() as f64)),
             ("max_depth", json::num(m.max_depth as f64)),
             ("enqueued", json::num(m.enqueued as f64)),
@@ -506,6 +547,40 @@ mod tests {
             (0..4).map(|_| s.take_next(now).unwrap().id).collect();
         // both len-2 prompts first, in arrival order; then 5; then 7
         assert_eq!(order, vec![ids[1], ids[3], ids[0], ids[2]]);
+    }
+
+    #[test]
+    fn shortest_prompt_costs_in_prefill_chunks() {
+        // C=8: 5- and 8-token prompts are both one chunk (FIFO between
+        // them), 9 tokens is two chunks, 17 is three
+        let s = Scheduler::new(8, Policy::ShortestPrompt)
+            .with_prefill_chunk(8);
+        assert_eq!(s.prompt_cost(5), 1);
+        assert_eq!(s.prompt_cost(8), 1);
+        assert_eq!(s.prompt_cost(9), 2);
+        assert_eq!(s.prompt_cost(17), 3);
+        let mut held = Vec::new();
+        let ids: Vec<u64> = [17, 8, 9, 5]
+            .iter()
+            .map(|&n| enq(&s, n, None, &mut held))
+            .collect();
+        let now = Instant::now();
+        let order: Vec<u64> =
+            (0..4).map(|_| s.take_next(now).unwrap().id).collect();
+        // one-chunk prompts first in arrival order (8 before 5 — same
+        // cost, FIFO), then two chunks, then three
+        assert_eq!(order, vec![ids[1], ids[3], ids[2], ids[0]]);
+        let m = s.metrics_json();
+        assert_eq!(
+            m.get("prefill_chunk").unwrap().as_f64().unwrap(),
+            8.0
+        );
+        // a driver on the single-token fallback clamps costing back to
+        // token granularity; a wider report never raises it again
+        s.observe_prefill_chunk(1);
+        assert_eq!(s.prompt_cost(17), 17);
+        s.observe_prefill_chunk(8);
+        assert_eq!(s.prompt_cost(17), 17);
     }
 
     #[test]

@@ -70,6 +70,11 @@ pub struct ServerConfig {
     /// server closes it (bounds how long a single client can pin a
     /// connection thread).
     pub keepalive_max_requests: usize,
+    /// Engine prefill chunk width C (from the artifact manifest): the
+    /// scheduler's shortest-prompt policy costs prompts in ⌈len/C⌉
+    /// prefill dispatches instead of raw tokens.  1 = single-token
+    /// prompt ingestion.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
@@ -84,6 +89,7 @@ impl Default for ServerConfig {
             request_timeout: Duration::from_secs(300),
             keepalive_idle: Duration::from_secs(5),
             keepalive_max_requests: 128,
+            prefill_chunk: 1,
         }
     }
 }
@@ -447,6 +453,10 @@ impl Driver {
     /// drained.  Returns when the server shuts down.
     pub fn drive(self, backend: &mut dyn EngineBackend) -> Result<()> {
         let sh = &self.shared;
+        // the manifest promised a chunk width; the engine reports what
+        // it actually mapped (1 after a prefill-signature fallback) so
+        // spf keeps costing prompts in real dispatch units
+        sh.sched.observe_prefill_chunk(backend.prefill_chunk());
         self.publish(backend);
         let mut last_publish = Instant::now();
         while !sh.shutdown.load(Ordering::Relaxed) {
@@ -495,7 +505,8 @@ where
     F: FnOnce(Driver) -> Result<()> + Send,
 {
     let shared = Arc::new(Shared {
-        sched: Scheduler::new(cfg.queue_cap, cfg.policy),
+        sched: Scheduler::new(cfg.queue_cap, cfg.policy)
+            .with_prefill_chunk(cfg.prefill_chunk),
         cfg,
         engine_stats: Mutex::new(BTreeMap::new()),
         shutdown,

@@ -228,6 +228,112 @@ fn engine_admission_is_fifo_and_resets_lane_memory() {
 }
 
 #[test]
+fn chunked_prefill_matches_single_token_on_device() {
+    // the real-device logits comparison for chunked prefill: the same
+    // greedy requests — ragged prompt lengths straddling the chunk
+    // boundary (C-1, C, C+1, 2C+3) — run through (a) an engine with
+    // the AOT'd `prefill` program and (b) an engine loaded *without*
+    // it (the validated single-token fallback).  Greedy sampling makes
+    // token equality a logits comparison at every sampled position;
+    // memory equivalence follows because each later token is sampled
+    // from logits conditioned on the updated memory.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("tiny-moe");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts for tiny-moe not built");
+        return;
+    }
+    let client = Client::cpu().expect("pjrt client");
+    let manifest =
+        sigma_moe::runtime::Manifest::load(&dir).expect("manifest");
+    if !manifest.functions.contains_key("prefill") {
+        eprintln!("skipping: artifacts predate the prefill program");
+        return;
+    }
+    let chunk = manifest.prefill_chunk;
+    assert!(chunk > 1, "manifest prefill_chunk must be > 1");
+    let lens =
+        [chunk - 1, chunk, chunk + 1, 2 * chunk + 3, 1, 3 * chunk];
+    let run = |with_prefill: bool| -> (Vec<Vec<i32>>, u64, u64, u64) {
+        let mut names = vec!["init", "step_fwd"];
+        if with_prefill {
+            names.push("prefill");
+        }
+        let bundle = ModelBundle::load_subset(&client, &dir, &names)
+            .expect("bundle");
+        let init = bundle.program("init").unwrap();
+        let out = init
+            .run(&[sigma_moe::tensor::HostTensor::scalar_u32(3)])
+            .unwrap();
+        let params: Vec<(String, sigma_moe::tensor::HostTensor)> = init
+            .spec
+            .outputs
+            .iter()
+            .map(|b| b.name.clone())
+            .zip(out)
+            .collect();
+        let mut engine =
+            Engine::new(&bundle, &params, 13).expect("engine");
+        assert_eq!(
+            engine.prefill_chunk(),
+            if with_prefill { chunk } else { 1 }
+        );
+        let mut rxs = Vec::new();
+        for (i, &len) in lens.iter().enumerate() {
+            rxs.push(engine.submit(GenRequest {
+                prompt: (0..len)
+                    .map(|j| ((i * 31 + j * 7) % 50) as i32)
+                    .collect(),
+                max_new_tokens: 6,
+                sampler: Sampler::greedy(),
+            }));
+        }
+        let results = engine.run_to_completion(rxs).expect("generate");
+        (
+            results.into_iter().map(|r| r.tokens).collect(),
+            engine.steps_executed,
+            engine.prefill_steps_device,
+            engine.prefill_steps_host,
+        )
+    };
+    let (toks_chunked, steps_c, dev_c, host_c) = run(true);
+    let (toks_single, steps_s, dev_s, host_s) = run(false);
+    // the two differently-compiled programs can disagree by float-
+    // association noise (the jnp-level check needed rtol=2e-4), and a
+    // near-tie in the top-2 logits can flip one greedy argmax, which
+    // then rewrites that lane's whole tail.  A prefill wiring bug
+    // (mask off-by-one, wrong memory gather) corrupts every
+    // multi-token-prompt lane at once, so: at most one lane may
+    // diverge, and it must be tie-shaped (nonempty or trivial shared
+    // prefix is not required — the flip can hit token 0).
+    let mismatched: Vec<usize> = toks_chunked
+        .iter()
+        .zip(&toks_single)
+        .enumerate()
+        .filter(|(_, (c, s))| c != s)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(
+        mismatched.len() <= 1,
+        "chunked prefill diverged from single-token feeding on lanes \
+         {mismatched:?} (prompt lens {:?}) — more than a greedy \
+         tie-flip can explain:\n  chunked: {toks_chunked:?}\n  single: \
+         {toks_single:?}",
+        mismatched.iter().map(|&i| lens[i]).collect::<Vec<_>>(),
+    );
+    assert!(dev_c > 0, "chunked engine must use the prefill program");
+    assert_eq!(host_c, 0);
+    assert_eq!(dev_s, 0, "fallback engine must not see the program");
+    assert!(host_s > 0, "fallback must count its prompt pumps");
+    assert!(
+        steps_c < steps_s,
+        "chunked prompts must take fewer dispatches ({steps_c} vs \
+         {steps_s})"
+    );
+}
+
+#[test]
 fn manifest_flops_match_rust_model() {
     let Some((_c, bundle)) = bundle_for("tiny-moe") else { return };
     let m = &bundle.manifest;

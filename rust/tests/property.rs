@@ -12,7 +12,8 @@ use sigma_moe::json::{self, Json};
 use sigma_moe::rng::Rng;
 use sigma_moe::serving::Sampler;
 use sigma_moe::serving::{
-    DropReason, GenRequest, Histogram, Policy, Scheduler, StreamEvent,
+    DropReason, EngineBackend, GenRequest, Histogram, MockBackend, Policy,
+    Scheduler, StreamEvent,
 };
 use sigma_moe::tensor::{DType, HostTensor};
 use sigma_moe::{flops, Error};
@@ -288,6 +289,111 @@ fn prop_histogram_percentile_monotone_bounded_count_consistent() {
                  (rank {rank})"
             );
         }
+    }
+}
+
+#[test]
+fn prop_chunked_prefill_stream_equivalence_under_mixed_pumps() {
+    // randomized submit/pump interleavings over a multi-lane mock with
+    // chunked prefill: lanes mid-decode share pumps with lanes mid-
+    // prefill (ragged lengths straddling the chunk boundary).  Replay
+    // the identical schedule on a single-token backend: every
+    // request's token stream and Done result must be identical, the
+    // chunked run must never use more pumps, and the chunked-path
+    // accounting must cover exactly the prompt tokens.
+    const C: usize = 4;
+    let mut rng = Rng::new(12);
+    for round in 0..15 {
+        // one shared op schedule: Some(prompt_len, budget) = submit,
+        // None = pump
+        let mut ops: Vec<Option<(usize, usize)>> = Vec::new();
+        for _ in 0..40 {
+            if rng.coin(0.3) {
+                let len = match rng.below(5) {
+                    0 => C - 1,
+                    1 => C,
+                    2 => C + 1,
+                    3 => 2 * C + 3,
+                    _ => 1 + rng.below(3 * C),
+                };
+                ops.push(Some((len, 1 + rng.below(6))));
+            } else {
+                ops.push(None);
+            }
+        }
+        let run = |chunk: usize| -> (
+            Vec<(Vec<i32>, mpsc::Receiver<StreamEvent>)>,
+            u64,
+            u64,
+        ) {
+            let mut b =
+                MockBackend::new(3, 50).with_prefill_chunk(chunk);
+            let mut streams = Vec::new();
+            let mut tag = 0i32;
+            for op in &ops {
+                match op {
+                    Some((len, budget)) => {
+                        tag += 1;
+                        let prompt: Vec<i32> = (0..*len as i32)
+                            .map(|j| (tag * 7 + j) % 50)
+                            .collect();
+                        let (tx, rx) = mpsc::channel();
+                        b.submit_streaming(
+                            GenRequest {
+                                prompt: prompt.clone(),
+                                max_new_tokens: *budget,
+                                sampler: Sampler::greedy(),
+                            },
+                            tx,
+                        );
+                        streams.push((prompt, rx));
+                    }
+                    None => {
+                        let _ = b.pump().unwrap();
+                    }
+                }
+            }
+            while b.pump().unwrap() > 0 {}
+            (streams, b.steps_executed, b.prefill_tokens)
+        };
+        let (chunked, pumps_c, prefill_tokens) = run(C);
+        let (single, pumps_s, _) = run(1);
+        assert!(
+            pumps_c <= pumps_s,
+            "round {round}: chunked used more pumps ({pumps_c} > \
+             {pumps_s})"
+        );
+        let mut total_prompt = 0usize;
+        for ((prompt, rx_c), (_, rx_s)) in
+            chunked.iter().zip(single.iter())
+        {
+            total_prompt += prompt.len();
+            let collect = |rx: &mpsc::Receiver<StreamEvent>| {
+                let mut toks = Vec::new();
+                let mut dones = Vec::new();
+                while let Ok(ev) = rx.try_recv() {
+                    match ev {
+                        StreamEvent::Token(t) => toks.push(t),
+                        StreamEvent::Done(r) => dones.push(r.tokens),
+                        _ => {}
+                    }
+                }
+                (toks, dones)
+            };
+            let (toks_c, dones_c) = collect(rx_c);
+            let (toks_s, dones_s) = collect(rx_s);
+            assert_eq!(
+                toks_c, toks_s,
+                "round {round}: stream diverged for prompt {prompt:?}"
+            );
+            assert_eq!(dones_c.len(), 1, "round {round}");
+            assert_eq!(dones_c, dones_s, "round {round}");
+        }
+        assert_eq!(
+            prefill_tokens as usize, total_prompt,
+            "round {round}: chunked accounting must cover exactly the \
+             prompt tokens"
+        );
     }
 }
 

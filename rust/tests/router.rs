@@ -144,6 +144,7 @@ fn failover_requeues_inflight_exactly_once() {
         heartbeat_timeout: Duration::from_millis(150),
         error_threshold: 1,
         max_retries: 2,
+        readmit_after: 0,
     };
     let tf = start_fleet(
         rcfg,
@@ -212,6 +213,7 @@ fn unhealthy_engine_receives_no_new_placements() {
         heartbeat_timeout: Duration::from_secs(5),
         error_threshold: 1,
         max_retries: 2,
+        readmit_after: 0,
     };
     let tf = start_fleet(
         rcfg,
@@ -265,6 +267,7 @@ fn exhausted_retries_drop_with_engine_failure() {
         heartbeat_timeout: Duration::from_secs(5),
         error_threshold: 1,
         max_retries: 0,
+        readmit_after: 0,
     };
     let tf = start_fleet(
         rcfg,
@@ -302,6 +305,7 @@ fn affinity_places_same_prefix_on_one_engine() {
         heartbeat_timeout: Duration::from_secs(5),
         error_threshold: 3,
         max_retries: 1,
+        readmit_after: 0,
     };
     let tf = start_fleet(rcfg, 2, Duration::ZERO, vec![None, None]);
     wait_ready(&tf.fleet, 2);
@@ -325,6 +329,94 @@ fn affinity_places_same_prefix_on_one_engine() {
     assert!(
         p0 == 6 || p1 == 6,
         "same-prefix requests must land on one engine (got {p0}/{p1})"
+    );
+    tf.stop();
+}
+
+#[test]
+fn recovered_stall_after_engine_rejoins_and_serves() {
+    // engine 0 wedges (stops heartbeating) mid-run and is quarantined;
+    // its requests fail over to engine 1.  When the wedge releases,
+    // the driver's consecutive clean pumps must ride it back into the
+    // placement set — no restart — and it must complete new work.
+    let rcfg = RouterCfg {
+        engines: 2,
+        placement: Placement::RoundRobin,
+        heartbeat_timeout: Duration::from_millis(120),
+        error_threshold: 10, // quarantine via heartbeat, not errors
+        max_retries: 2,
+        readmit_after: 3,
+    };
+    let tf = start_fleet(
+        rcfg,
+        2,
+        Duration::from_millis(1),
+        vec![Some(MockFault::StallAfter(2)), None],
+    );
+    wait_ready(&tf.fleet, 2);
+    let mut rxs = Vec::new();
+    for i in 0..6i32 {
+        let (tx, rx) = mpsc::channel();
+        tf.fleet
+            .sched()
+            .enqueue(greq(vec![i + 1], 4), None, tx)
+            .unwrap();
+        rxs.push(rx);
+    }
+    // all requests complete on the survivor while engine 0 is wedged
+    for rx in &rxs {
+        let (_, terminals) =
+            collect_terminal(rx, Duration::from_secs(15));
+        assert_eq!(terminals.len(), 1);
+        assert!(matches!(terminals[0], StreamEvent::Done(_)));
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while tf.fleet.engine_healthy(0) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        !tf.fleet.engine_healthy(0),
+        "wedged engine must be quarantined first"
+    );
+    let completions_quarantined = tf.fleet.engine_completions(0);
+
+    // unwedge the device: one released-stall error surfaces, then the
+    // backend pumps cleanly and the clean streak re-admits it
+    tf.release.store(true, Ordering::SeqCst);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !tf.fleet.engine_healthy(0) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        tf.fleet.engine_healthy(0),
+        "recovered engine must rejoin the placement set"
+    );
+    assert!(tf.fleet.readmissions() >= 1);
+
+    // the re-admitted engine serves new work without a restart:
+    // round-robin over a saturating batch must complete more requests
+    // on engine 0 than it had while quarantined
+    let mut rxs = Vec::new();
+    for i in 0..8i32 {
+        let (tx, rx) = mpsc::channel();
+        tf.fleet
+            .sched()
+            .enqueue(greq(vec![100 + i], 4), None, tx)
+            .unwrap();
+        rxs.push(rx);
+    }
+    for rx in &rxs {
+        let (_, terminals) =
+            collect_terminal(rx, Duration::from_secs(15));
+        assert_eq!(terminals.len(), 1);
+        assert!(matches!(terminals[0], StreamEvent::Done(_)));
+    }
+    assert!(
+        tf.fleet.engine_completions(0) > completions_quarantined,
+        "re-admitted engine completed no new requests \
+         ({} before, {} after)",
+        completions_quarantined,
+        tf.fleet.engine_completions(0)
     );
     tf.stop();
 }

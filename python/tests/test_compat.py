@@ -1,5 +1,10 @@
 """HLO-compat helpers vs their modern-JAX equivalents."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the offline test environment")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -3,12 +3,16 @@
 Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
 """
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the offline test environment")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from compile.kernels import cvmm, pkm_score, ref, topk_act

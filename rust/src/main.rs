@@ -8,6 +8,9 @@
 //!   sigma-moe serve --preset tiny-moe --http 127.0.0.1:8077 --policy spf
 //!   sigma-moe loadgen --addr 127.0.0.1:8077 --requests 64 --rps 16
 //!   sigma-moe loadgen --dry-run --requests 32
+//!   sigma-moe loadgen --record trace.jsonl --requests 32
+//!   sigma-moe loadgen --replay trace.jsonl
+//!   sigma-moe chaos --engines 3 --seed 7 --pumps 600
 //!   sigma-moe flops --table 7
 //!   sigma-moe paper --table 3 --steps 300
 //!   sigma-moe analyze --preset tiny-moe --fig 3
@@ -24,8 +27,8 @@ use sigma_moe::data;
 use sigma_moe::json::Json;
 use sigma_moe::runtime::{Client, Manifest, ModelBundle};
 use sigma_moe::serving::{
-    loadgen, router, server, Engine, GenRequest, Placement, Policy,
-    RouterCfg, Sampler, ServerConfig,
+    chaos, loadgen, router, server, Engine, GenRequest, Placement,
+    Policy, RouterCfg, Sampler, ServerConfig,
 };
 use sigma_moe::tensor::HostTensor;
 use sigma_moe::{flops, Error, Result};
@@ -56,6 +59,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
         "loadgen" => cmd_loadgen(rest),
+        "chaos" => cmd_chaos(rest),
         "flops" => cmd_flops(rest),
         "analyze" => cmd_analyze(rest),
         "paper" => cmd_paper(rest),
@@ -69,7 +73,10 @@ fn run(argv: &[String]) -> Result<()> {
                  \x20 serve    batched inference: in-process demo, or --http for the\n\
                  \x20          continuous-batching HTTP frontend (streaming, /metrics)\n\
                  \x20 loadgen  open-loop Poisson load generator against `serve --http`\n\
-                 \x20          (writes BENCH_serve.json; --dry-run needs no device)\n\
+                 \x20          (writes BENCH_serve.json; --dry-run needs no device;\n\
+                 \x20          --record / --replay for deterministic traces)\n\
+                 \x20 chaos    seeded fault storm over a simulated mock fleet with\n\
+                 \x20          record/replay (a failing seed reproduces exactly)\n\
                  \x20 flops    analytic resource tables (Tab. 3 %FLOPs, Tab. 7)\n\
                  \x20 analyze  expert utilization / active channels (Figs. 1,3,6,7)\n\
                  \x20 paper    regenerate a paper table (scaled)\n\
@@ -496,6 +503,130 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
     })
 }
 
+/// `chaos`: a seeded fault storm over a simulated mock fleet.  Runs
+/// the real placer/engine-driver steps single-threaded on a simulated
+/// clock — no device, no sockets, no wall time — so every scheduling
+/// decision is journaled and the whole run replays bit-for-bit from
+/// its seed.
+fn cmd_chaos(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "seeded chaos storm over a simulated mock fleet: stalls, error \
+         storms, NaN logits, restarts and outage windows, with every \
+         scheduling decision journaled; a tripped invariant dumps its \
+         trace and the seed reproduces the run exactly (no device)",
+    )
+    .opt("engines", "3", "mock engines (engine 0 is never faulted, so \
+                          the storm cannot extinguish the fleet)")
+    .opt("lanes", "2", "lanes per mock engine")
+    .opt("vocab", "64", "mock vocabulary size")
+    .opt("requests", "24", "requests injected over the storm")
+    .opt("pumps", "600", "scheduled storm rounds (10ms simulated each; \
+                          the run drains to quiescence after)")
+    .opt("seed", "1", "master seed: requests, arrivals, deadlines, \
+                       faults and outage windows all derive from it")
+    .opt("trace", "chaos_trace.jsonl", "where the trace is dumped when \
+                                        an invariant trips")
+    .optional("record", "also write the trace here on a clean run")
+    .optional("replay", "replay this recorded trace instead of running \
+                         a storm: re-executes from the trace header and \
+                         verifies the decision stream + final metrics \
+                         bit-for-bit")
+    .flag("no-storm", "disable fault injection (clean load run)")
+    .parse_from(argv)?;
+
+    if let Some(path) = p.get("replay") {
+        return run_replay(std::path::Path::new(path));
+    }
+    let cfg = chaos::ChaosCfg {
+        engines: p.usize("engines")?.max(1),
+        lanes: p.usize("lanes")?.max(1),
+        vocab: p.usize("vocab")?.max(2),
+        requests: p.usize("requests")?,
+        pumps: p.u64("pumps")?.max(2),
+        seed: p.u64("seed")?,
+        storm: !p.flag("no-storm"),
+    };
+    eprintln!(
+        "[chaos] seed {} | {} engine(s) x {} lanes | {} requests over \
+         {} rounds | storm {}",
+        cfg.seed,
+        cfg.engines,
+        cfg.lanes,
+        cfg.requests,
+        cfg.pumps,
+        if cfg.storm { "on" } else { "off" },
+    );
+    let report = chaos::run(&cfg)?;
+    println!("{}", report.summary_json().to_string_compact());
+    if let Some(rec) = p.get("record") {
+        report.write_trace(std::path::Path::new(rec))?;
+        eprintln!(
+            "[chaos] trace recorded to {rec}; verify with: \
+             sigma-moe chaos --replay {rec}"
+        );
+    }
+    if report.ok() {
+        eprintln!(
+            "[chaos] clean: {} done + {} dropped + {} rejected = {} \
+             requests; {} failovers, {} readmissions; all invariants \
+             held",
+            report.dones,
+            report.drops,
+            report.rejected,
+            report.cfg.requests,
+            report.failovers,
+            report.readmissions,
+        );
+        return Ok(());
+    }
+    let trace_path = p.str("trace")?;
+    report.write_trace(std::path::Path::new(trace_path))?;
+    for v in &report.violations {
+        eprintln!("[chaos] VIOLATION: {v}");
+    }
+    eprintln!(
+        "[chaos] seed {}: trace dumped to {trace_path} — reproduce \
+         this exact run with:\n  sigma-moe chaos --replay {trace_path}",
+        cfg.seed,
+    );
+    Err(Error::Serving(format!(
+        "chaos: {} invariant violation(s) at seed {}",
+        report.violations.len(),
+        cfg.seed
+    )))
+}
+
+/// Shared by `chaos --replay` and `loadgen --replay`: re-execute a
+/// recorded trace from its header and verify the decision stream and
+/// final metrics snapshot reproduce bit-for-bit.
+fn run_replay(path: &std::path::Path) -> Result<()> {
+    eprintln!("[replay] re-executing {} ...", path.display());
+    let out = chaos::replay_path(path)?;
+    println!("{}", out.report.summary_json().to_string_compact());
+    // a failure dump replays *with* its violations — reproducing them
+    // is the point; replay verdict is about determinism alone
+    for v in &out.report.violations {
+        eprintln!("[replay] reproduced violation: {v}");
+    }
+    if out.ok() {
+        eprintln!(
+            "[replay] {} events and the final metrics snapshot \
+             reproduced bit-for-bit",
+            out.report.events.lines().count(),
+        );
+        return Ok(());
+    }
+    if let Some(d) = &out.divergence {
+        eprintln!("[replay] decision stream diverged: {d}");
+    }
+    if !out.metrics_match {
+        eprintln!("[replay] final metrics snapshot diverged");
+    }
+    Err(Error::Serving(
+        "replay did not reproduce the recorded run".into(),
+    ))
+}
+
 fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let p = Args::new(
         "open-loop Poisson load generator for `serve --http`; writes a \
@@ -530,7 +661,58 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                           Poisson plan, for scaling comparisons")
     .flag("keep-alive", "reuse connections (HTTP keep-alive pool) \
                          instead of one connection per request")
+    .optional("record", "deterministic device-free run over the mock \
+                         fleet on a simulated clock; writes the full \
+                         decision trace here (see --replay)")
+    .optional("replay", "re-execute a recorded trace and verify the \
+                         decision stream + metrics bit-for-bit")
+    .opt("pumps", "600", "--record: simulated rounds (10ms each)")
     .parse_from(argv)?;
+
+    if let Some(path) = p.get("replay") {
+        return run_replay(std::path::Path::new(path));
+    }
+    if let Some(path) = p.get("record") {
+        let engines = p
+            .str("engines")?
+            .split(',')
+            .next()
+            .unwrap_or("1")
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| Error::Config(format!("--engines: {e}")))?;
+        let cfg = chaos::ChaosCfg {
+            engines: engines.max(1),
+            lanes: p.usize("mock-lanes")?.max(1),
+            vocab: p.usize("vocab")?.max(2),
+            requests: p.usize("requests")?,
+            pumps: p.u64("pumps")?.max(2),
+            seed: p.u64("seed")?,
+            storm: false,
+        };
+        eprintln!(
+            "[loadgen] recording a deterministic run: seed {} | {} \
+             mock engine(s) x {} lanes | {} requests",
+            cfg.seed, cfg.engines, cfg.lanes, cfg.requests,
+        );
+        let report = chaos::record(&cfg, std::path::Path::new(path))?;
+        println!("{}", report.summary_json().to_string_compact());
+        if !report.ok() {
+            for v in &report.violations {
+                eprintln!("[loadgen] VIOLATION: {v}");
+            }
+            return Err(Error::Serving(format!(
+                "record: {} invariant violation(s) at seed {}",
+                report.violations.len(),
+                cfg.seed
+            )));
+        }
+        eprintln!(
+            "[loadgen] trace recorded to {path}; replay with: \
+             sigma-moe loadgen --replay {path}"
+        );
+        return Ok(());
+    }
 
     let cfg = loadgen::LoadgenCfg {
         requests: p.usize("requests")?,

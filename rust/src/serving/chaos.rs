@@ -1,0 +1,719 @@
+//! Seeded chaos harness + deterministic record/replay over the mock
+//! fleet.
+//!
+//! The harness runs the *real* router — [`Fleet::placer_step`] and
+//! [`Fleet::engine_step`] are the same code the production threads
+//! loop over — but single-threaded, on a [`SimClock`], against
+//! [`MockBackend`]s with seeded faults.  Every scheduling decision the
+//! fleet makes lands in a [`Journal`] as a logically-timestamped JSONL
+//! event, so a run is fully described by its [`ChaosCfg`] (itself
+//! fully described by a seed): re-running the same config MUST
+//! reproduce the identical decision stream and the identical final
+//! metrics snapshot, byte for byte.  That is what [`replay`] asserts.
+//!
+//! A chaos run layers four failure modes over the fleet:
+//!
+//! * [`MockFault::ErrorAfter`] — an engine starts erroring forever
+//!   (consecutive-error quarantine, permanent loss),
+//! * [`MockFault::RestartAfter`] — an engine drops all device state
+//!   and errors for a bounded streak (quarantine → failover →
+//!   re-admission),
+//! * [`MockFault::NanLogits`] — poisoned device state surfaces at
+//!   sample time,
+//! * [`MockFault::StallAfter`] with a pre-released flag — a wedge
+//!   that resolves into a single error (a blocking wedge would
+//!   deadlock a single-threaded harness; true wedges are modelled as
+//!   *outage windows* instead: the schedule simply stops stepping an
+//!   engine, its heartbeat goes stale, and the staleness quarantine
+//!   path runs).
+//!
+//! After the storm the harness checks the serving invariants that the
+//! multi-threaded integration tests check statistically, but here
+//! exhaustively and reproducibly:
+//!
+//! 1. **exactly-once** — every accepted request sees exactly one
+//!    terminal event (`Done` or `Dropped`), never zero, never two;
+//! 2. **never-double-send** — a completed request's token stream is
+//!    exactly the deterministic greedy continuation of its prompt, at
+//!    exactly its budget length: a replayed-after-failover request
+//!    must not leak duplicate or stale tokens through the relay;
+//! 3. **row-sum-equals-totals** — per-engine completion counters sum
+//!    to the number of `Done` events observed at the frontends.
+//!
+//! Any violation carries the seed and the trace; `replay` re-executes
+//! the trace device-free from its header alone.
+
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::rng::Rng;
+use crate::serving::clock::{Clock, SharedClock, SimClock};
+use crate::serving::engine::{GenRequest, StreamEvent};
+use crate::serving::journal::{Journal, Trace};
+use crate::serving::mock::{MockBackend, MockFault};
+use crate::serving::router::{Fleet, Placement, RouterCfg};
+use crate::serving::sampler::Sampler;
+use crate::serving::scheduler::Policy;
+
+/// Simulated time per harness round (placer step + one step per
+/// live engine).  Matches the production placer tick.
+pub const CHAOS_TICK: Duration = Duration::from_millis(10);
+
+/// Heartbeat staleness bound for harness fleets.  Must exceed the
+/// worst-case simulated time a single round can advance (the tick
+/// plus one error-backoff sleep per faulty engine), with margin, so
+/// an engine that *is* stepped every round is never spuriously
+/// quarantined.
+const HEARTBEAT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Extra drain rounds after the scheduled storm before undelivered
+/// terminals are declared a liveness violation.
+const DRAIN_ROUNDS: u64 = 20_000;
+
+/// How many violations are itemized before the rest are summarized.
+const MAX_REPORTED: usize = 20;
+
+/// One seeded chaos/record run, fully describing the deterministic
+/// schedule: same config ⇒ same decision stream, byte for byte.
+#[derive(Debug, Clone)]
+pub struct ChaosCfg {
+    /// Mock engines in the fleet (engine 0 is always kept fault- and
+    /// outage-free so the storm cannot extinguish the whole fleet).
+    pub engines: usize,
+    /// Lanes per mock engine.
+    pub lanes: usize,
+    /// Mock vocabulary (token values are `< vocab`).
+    pub vocab: usize,
+    /// Requests injected over the first half of the storm.
+    pub requests: usize,
+    /// Scheduled storm rounds (the drain grace comes on top).
+    pub pumps: u64,
+    /// Master seed: requests, arrival times, deadlines, faults and
+    /// outage windows all derive from it.
+    pub seed: u64,
+    /// Inject the fault storm.  Off = a clean deterministic load run
+    /// (the `loadgen --record` path).
+    pub storm: bool,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg {
+            engines: 3,
+            lanes: 2,
+            vocab: 64,
+            requests: 24,
+            pumps: 600,
+            seed: 1,
+            storm: true,
+        }
+    }
+}
+
+impl ChaosCfg {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("engines", json::num(self.engines as f64)),
+            ("lanes", json::num(self.lanes as f64)),
+            ("vocab", json::num(self.vocab as f64)),
+            ("requests", json::num(self.requests as f64)),
+            ("pumps", json::num(self.pumps as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("storm", Json::Bool(self.storm)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChaosCfg> {
+        Ok(ChaosCfg {
+            engines: j.get("engines")?.as_usize()?,
+            lanes: j.get("lanes")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            requests: j.get("requests")?.as_usize()?,
+            pumps: j.get("pumps")?.as_f64()? as u64,
+            seed: j.get("seed")?.as_f64()? as u64,
+            storm: j.get("storm")?.as_bool()?,
+        })
+    }
+}
+
+/// What happened in one chaos run: counts, invariant violations, the
+/// recorded decision stream, and the deterministic metrics snapshot.
+pub struct ChaosReport {
+    pub cfg: ChaosCfg,
+    /// Rounds actually executed (storm + drain until quiescent).
+    pub rounds: u64,
+    /// Requests the scheduler accepted (vs. rejected at the queue).
+    pub accepted: usize,
+    pub rejected: usize,
+    pub dones: usize,
+    pub drops: usize,
+    pub failovers: u64,
+    pub readmissions: u64,
+    /// Invariant violations (empty on a clean run).  Each line is
+    /// self-contained; the seed reproduces all of them.
+    pub violations: Vec<String>,
+    /// The journal's event stream (JSONL) — the byte stream replay
+    /// diffs.
+    pub events: String,
+    /// The full trace document (header + events).
+    pub trace: String,
+    /// Deterministic final metrics (fleet + scheduler JSON).
+    pub metrics: Json,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Flush the trace document to `path` (creating parent
+    /// directories).
+    pub fn write_trace(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, &self.trace)?;
+        Ok(())
+    }
+
+    /// One summary row for the CLI / CI log.
+    pub fn summary_json(&self) -> Json {
+        json::obj(vec![
+            ("mode", json::s("chaos")),
+            ("seed", json::num(self.cfg.seed as f64)),
+            ("engines", json::num(self.cfg.engines as f64)),
+            ("requests", json::num(self.cfg.requests as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("accepted", json::num(self.accepted as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("done", json::num(self.dones as f64)),
+            ("dropped", json::num(self.drops as f64)),
+            ("failovers", json::num(self.failovers as f64)),
+            ("readmissions", json::num(self.readmissions as f64)),
+            ("events", json::num(self.events.lines().count() as f64)),
+            ("violations", json::num(self.violations.len() as f64)),
+        ])
+    }
+}
+
+/// One frontend: the receiver half of an accepted request plus what
+/// has been observed on it.
+struct Client {
+    prompt: Vec<i32>,
+    budget: usize,
+    deadline: Option<Duration>,
+    arrival: u64,
+    rx: Option<mpsc::Receiver<StreamEvent>>,
+    rejected: bool,
+    admitted: u32,
+    dones: u32,
+    drops: u32,
+    tokens: Vec<i32>,
+    done_len: usize,
+}
+
+impl Client {
+    fn terminal(&self) -> bool {
+        self.rejected || self.dones + self.drops > 0
+    }
+
+    fn drain(&mut self) {
+        let Some(rx) = &self.rx else { return };
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                StreamEvent::Admitted => self.admitted += 1,
+                StreamEvent::Token(t) => self.tokens.push(t),
+                StreamEvent::Done(res) => {
+                    self.dones += 1;
+                    self.done_len = res.tokens.len();
+                }
+                StreamEvent::Dropped(_) => self.drops += 1,
+            }
+        }
+    }
+}
+
+/// The seeded per-engine trouble assignment.
+enum Trouble {
+    None,
+    Fault(MockFault),
+    /// Pre-released stall: the wedge resolves into one error the
+    /// moment it trips (a live wedge would deadlock the
+    /// single-threaded harness — see the module docs).
+    ReleasedStall(u64),
+    /// The schedule stops stepping this engine for rounds in
+    /// `[start, start + len)`: its heartbeat goes stale and the
+    /// staleness-quarantine / re-admission path runs.
+    Outage { start: u64, len: u64 },
+}
+
+/// Derive the full deterministic schedule from the seed: request
+/// specs, arrival rounds, and per-engine trouble.
+fn build_schedule(
+    cfg: &ChaosCfg,
+    rng: &mut Rng,
+) -> (Vec<(Vec<i32>, usize, Option<Duration>, u64)>, Vec<Trouble>) {
+    let horizon = (cfg.pumps / 2).max(1) as usize;
+    let mut reqs = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let plen = 1 + rng.below(6);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let budget = 1 + rng.below(6);
+        let deadline = if rng.coin(0.15) {
+            Some(Duration::from_millis(100 + rng.below(400) as u64))
+        } else {
+            None
+        };
+        let arrival = rng.below(horizon) as u64;
+        reqs.push((prompt, budget, deadline, arrival));
+    }
+    let mut trouble = Vec::with_capacity(cfg.engines);
+    for e in 0..cfg.engines {
+        if !cfg.storm || e == 0 {
+            // engine 0 never fails: the storm degrades the fleet, it
+            // must not be able to extinguish it
+            trouble.push(Trouble::None);
+            continue;
+        }
+        let after = 5 + rng.below(40) as u64;
+        trouble.push(match rng.below(5) {
+            0 => Trouble::Fault(MockFault::ErrorAfter(after)),
+            1 => Trouble::Fault(MockFault::RestartAfter(after)),
+            2 => Trouble::Fault(MockFault::NanLogits),
+            3 => Trouble::ReleasedStall(after),
+            _ => Trouble::Outage {
+                start: cfg.pumps / 4 + rng.below((cfg.pumps / 4).max(1) as usize) as u64,
+                len: 80 + rng.below(80) as u64,
+            },
+        });
+    }
+    (reqs, trouble)
+}
+
+/// Run one seeded chaos/record schedule to quiescence and check the
+/// serving invariants.  Pure simulation: no threads, no sockets, no
+/// wall clock — same config in, same bytes out.
+pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
+    if cfg.engines == 0 || cfg.lanes == 0 || cfg.vocab == 0 {
+        return Err(Error::Serving(
+            "chaos: engines, lanes and vocab must be positive".into(),
+        ));
+    }
+    let sim = SimClock::shared();
+    let clock: SharedClock = sim.clone();
+    let journal = Arc::new(Journal::new(clock.clone()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let rcfg = RouterCfg {
+        engines: cfg.engines,
+        placement: Placement::LeastLoaded,
+        heartbeat_timeout: HEARTBEAT_TIMEOUT,
+        error_threshold: 3,
+        max_retries: 3,
+        readmit_after: 5,
+    };
+    let fleet = Fleet::with_clock_journal(
+        rcfg,
+        cfg.requests.max(1),
+        Policy::Deadline,
+        shutdown,
+        1,
+        clock.clone(),
+        journal.clone(),
+    );
+
+    let mut rng = Rng::new(cfg.seed);
+    let (reqs, trouble) = build_schedule(cfg, &mut rng);
+
+    let mut backends: Vec<MockBackend> = Vec::with_capacity(cfg.engines);
+    let mut outages: Vec<Option<(u64, u64)>> = Vec::with_capacity(cfg.engines);
+    for t in &trouble {
+        let mut b = MockBackend::new(cfg.lanes, cfg.vocab)
+            .with_clock(clock.clone());
+        let mut window = None;
+        match t {
+            Trouble::None => {}
+            Trouble::Fault(f) => b = b.with_fault(f.clone()),
+            Trouble::ReleasedStall(after) => {
+                b = b.with_fault(MockFault::StallAfter(*after));
+                b.stall_release()
+                    .store(true, std::sync::atomic::Ordering::Relaxed);
+            }
+            Trouble::Outage { start, len } => {
+                window = Some((*start, *start + *len));
+            }
+        }
+        backends.push(b);
+        outages.push(window);
+    }
+
+    let mut inflights: Vec<Vec<(u64, mpsc::Receiver<StreamEvent>)>> =
+        (0..cfg.engines).map(|_| Vec::new()).collect();
+    let mut results: Vec<Result<()>> = (0..cfg.engines).map(|_| Ok(())).collect();
+
+    // bucket arrivals by round
+    let horizon = (cfg.pumps / 2).max(1) as usize;
+    let mut arrivals: Vec<Vec<usize>> = vec![Vec::new(); horizon];
+    let mut clients: Vec<Client> = Vec::with_capacity(cfg.requests);
+    for (i, (prompt, budget, deadline, arrival)) in reqs.into_iter().enumerate() {
+        arrivals[arrival as usize].push(i);
+        clients.push(Client {
+            prompt,
+            budget,
+            deadline,
+            arrival,
+            rx: None,
+            rejected: false,
+            admitted: 0,
+            dones: 0,
+            drops: 0,
+            tokens: Vec::new(),
+            done_len: 0,
+        });
+    }
+
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    let max_rounds = cfg.pumps + DRAIN_ROUNDS;
+    let mut round: u64 = 0;
+    while round < max_rounds {
+        if let Some(due) = arrivals.get(round as usize) {
+            for &ci in due {
+                let c = &mut clients[ci];
+                let (tx, rx) = mpsc::channel();
+                let req = GenRequest {
+                    prompt: c.prompt.clone(),
+                    max_new_tokens: c.budget,
+                    sampler: Sampler::greedy(),
+                };
+                match fleet.sched().enqueue(req, c.deadline, tx) {
+                    Ok(_) => {
+                        c.rx = Some(rx);
+                        accepted += 1;
+                    }
+                    Err(_) => {
+                        c.rejected = true;
+                        rejected += 1;
+                    }
+                }
+            }
+        }
+        fleet.placer_step(clock.now());
+        for e in 0..cfg.engines {
+            if let Some((start, end)) = outages[e] {
+                if round >= start && round < end {
+                    continue; // wedged: no beat, no pump, no relay
+                }
+            }
+            let _ = fleet.engine_step(
+                e,
+                &mut backends[e],
+                &mut inflights[e],
+                &mut results[e],
+            );
+        }
+        for c in clients.iter_mut() {
+            c.drain();
+        }
+        sim.advance(CHAOS_TICK);
+        round += 1;
+        if round as usize >= horizon && clients.iter().all(Client::terminal) {
+            break;
+        }
+    }
+    // late events can still sit in channels after the final step
+    for c in clients.iter_mut() {
+        c.drain();
+    }
+
+    let mut violations = Vec::new();
+    let push = |violations: &mut Vec<String>, msg: String| {
+        if violations.len() < MAX_REPORTED {
+            violations.push(msg);
+        } else if violations.len() == MAX_REPORTED {
+            violations.push("... further violations elided".to_string());
+        }
+    };
+    let mut dones = 0usize;
+    let mut drops = 0usize;
+    for (i, c) in clients.iter().enumerate() {
+        dones += c.dones as usize;
+        drops += c.drops as usize;
+        if c.rejected {
+            continue;
+        }
+        let terminals = c.dones + c.drops;
+        if terminals == 0 {
+            push(
+                &mut violations,
+                format!(
+                    "liveness: request {i} (arrival round {}) never \
+                     reached a terminal event after {round} rounds",
+                    c.arrival
+                ),
+            );
+            continue;
+        }
+        if terminals > 1 {
+            push(
+                &mut violations,
+                format!(
+                    "exactly-once: request {i} saw {terminals} terminal \
+                     events ({} done, {} dropped)",
+                    c.dones, c.drops
+                ),
+            );
+        }
+        if c.admitted > 1 {
+            push(
+                &mut violations,
+                format!(
+                    "exactly-once: request {i} saw {} Admitted events",
+                    c.admitted
+                ),
+            );
+        }
+        if c.dones > 0 {
+            // never-double-send: the frontend stream must be exactly
+            // the deterministic greedy continuation, at exactly the
+            // budget length — failover replays must not leak stale or
+            // duplicate tokens through the relay
+            if c.tokens.len() != c.budget || c.done_len != c.budget {
+                push(
+                    &mut violations,
+                    format!(
+                        "double-send: request {i} streamed {} tokens \
+                         (result carried {}) for budget {}",
+                        c.tokens.len(),
+                        c.done_len,
+                        c.budget
+                    ),
+                );
+            }
+            for (k, &t) in c.tokens.iter().enumerate() {
+                let want =
+                    MockBackend::expected_token(&c.prompt, k, cfg.vocab);
+                if t != want {
+                    push(
+                        &mut violations,
+                        format!(
+                            "double-send: request {i} token {k} is {t}, \
+                             expected {want}"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    let completions: u64 =
+        (0..cfg.engines).map(|e| fleet.engine_completions(e)).sum();
+    if completions != dones as u64 {
+        push(
+            &mut violations,
+            format!(
+                "row-sum: per-engine completions sum to {completions} \
+                 but frontends observed {dones} Done events"
+            ),
+        );
+    }
+
+    let metrics = json::obj(vec![
+        ("fleet", fleet.fleet_json()),
+        ("scheduler", fleet.sched().metrics_json()),
+    ]);
+    journal.set_meta(json::obj(vec![
+        ("kind", json::s("chaos")),
+        ("seed", json::num(cfg.seed as f64)),
+        ("cfg", cfg.to_json()),
+        ("metrics", metrics.clone()),
+        ("rounds", json::num(round as f64)),
+    ]));
+
+    Ok(ChaosReport {
+        cfg: cfg.clone(),
+        rounds: round,
+        accepted,
+        rejected,
+        dones,
+        drops,
+        failovers: fleet.failovers(),
+        readmissions: fleet.readmissions(),
+        violations,
+        events: journal.events_jsonl(),
+        trace: journal.to_trace(),
+        metrics,
+    })
+}
+
+/// Run a schedule and flush its trace to `path` (the `loadgen
+/// --record` / `chaos --record` path).
+pub fn record(cfg: &ChaosCfg, path: &Path) -> Result<ChaosReport> {
+    let report = run(cfg)?;
+    report.write_trace(path)?;
+    Ok(report)
+}
+
+/// The verdict of replaying a recorded trace: the fresh report plus
+/// whether its decision stream and metrics snapshot reproduced the
+/// recording bit-for-bit.
+pub struct ReplayOutcome {
+    pub report: ChaosReport,
+    pub events_match: bool,
+    pub metrics_match: bool,
+    /// First mismatching event (line number + both lines), if any.
+    pub divergence: Option<String>,
+}
+
+impl ReplayOutcome {
+    pub fn ok(&self) -> bool {
+        self.events_match && self.metrics_match
+    }
+}
+
+/// Re-execute a recorded trace from its header alone and diff the
+/// fresh decision stream and metrics against the recording.
+pub fn replay(trace: &Trace) -> Result<ReplayOutcome> {
+    let cfg = ChaosCfg::from_json(trace.header.get("cfg")?)?;
+    let report = run(&cfg)?;
+    let recorded = trace.events_jsonl();
+    let events_match = report.events == recorded;
+    let divergence = if events_match {
+        None
+    } else {
+        let old: Vec<&str> = recorded.lines().collect();
+        let new: Vec<&str> = report.events.lines().collect();
+        let mut d = format!(
+            "recorded {} events, replay produced {}",
+            old.len(),
+            new.len()
+        );
+        for i in 0..old.len().max(new.len()) {
+            let a = old.get(i).copied().unwrap_or("<missing>");
+            let b = new.get(i).copied().unwrap_or("<missing>");
+            if a != b {
+                d = format!(
+                    "event {i} diverged:\n  recorded: {a}\n  replayed: {b}"
+                );
+                break;
+            }
+        }
+        Some(d)
+    };
+    let metrics_match = match trace.header.opt("metrics") {
+        Some(m) => {
+            m.to_string_compact() == report.metrics.to_string_compact()
+        }
+        None => false,
+    };
+    Ok(ReplayOutcome {
+        report,
+        events_match,
+        metrics_match,
+        divergence,
+    })
+}
+
+/// [`replay`] from a trace file on disk.
+pub fn replay_path(path: &Path) -> Result<ReplayOutcome> {
+    replay(&Trace::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(storm: bool, seed: u64) -> ChaosCfg {
+        ChaosCfg {
+            engines: 3,
+            lanes: 2,
+            vocab: 32,
+            requests: 12,
+            pumps: 400,
+            seed,
+            storm,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "sigma-moe-chaos-{}-{name}",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn clean_run_holds_invariants_and_is_deterministic() {
+        let cfg = small(false, 7);
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert!(a.ok(), "violations: {:?}", a.violations);
+        assert_eq!(a.accepted, cfg.requests);
+        assert!(a.dones > 0);
+        assert_eq!(a.events, b.events, "decision streams diverged");
+        assert_eq!(
+            a.metrics.to_string_compact(),
+            b.metrics.to_string_compact(),
+            "metrics snapshots diverged"
+        );
+    }
+
+    #[test]
+    fn storm_run_holds_invariants_and_is_deterministic() {
+        let cfg = small(true, 3);
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert!(a.ok(), "violations: {:?}", a.violations);
+        assert_eq!(a.events, b.events, "decision streams diverged");
+        assert_eq!(
+            a.metrics.to_string_compact(),
+            b.metrics.to_string_compact()
+        );
+        // every request still ends terminally under the storm
+        assert_eq!(a.dones + a.drops + a.rejected, cfg.requests);
+    }
+
+    #[test]
+    fn record_then_replay_matches_bit_for_bit() {
+        let cfg = small(true, 11);
+        let path = tmp("roundtrip.jsonl");
+        let rec = record(&cfg, &path).unwrap();
+        assert!(rec.ok(), "violations: {:?}", rec.violations);
+        let out = replay_path(&path).unwrap();
+        assert!(
+            out.events_match,
+            "divergence: {:?}",
+            out.divergence
+        );
+        assert!(out.metrics_match, "metrics snapshot diverged");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_flags_a_tampered_trace() {
+        let cfg = small(true, 13);
+        let rec = run(&cfg).unwrap();
+        let mut trace = Trace::parse(&rec.trace).unwrap();
+        assert!(!trace.event_lines.is_empty());
+        trace.event_lines.pop();
+        let out = replay(&trace).unwrap();
+        assert!(!out.events_match, "a truncated trace must not verify");
+        assert!(out.divergence.is_some());
+    }
+
+    #[test]
+    fn from_json_roundtrips_cfg() {
+        let cfg = ChaosCfg { seed: 42, ..ChaosCfg::default() };
+        let back = ChaosCfg::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.engines, cfg.engines);
+        assert_eq!(back.pumps, cfg.pumps);
+        assert_eq!(back.storm, cfg.storm);
+    }
+}

@@ -1,0 +1,172 @@
+//! Injectable time for the serving stack.
+//!
+//! Every layer of the serving stack — scheduler deadlines, router
+//! heartbeats, quarantine/re-admission backoff, histogram timestamps —
+//! reads time through one [`Clock`] handle instead of calling
+//! [`Instant::now`] directly.  Production wires in [`WallClock`]
+//! (identical behaviour to before); the record/replay and chaos
+//! harnesses wire in a [`SimClock`] whose time only moves when the
+//! harness advances it, which makes deadline expiry, heartbeat
+//! staleness, and backoff windows exact functions of the test schedule
+//! rather than of host scheduling jitter.
+//!
+//! `Instant` is an opaque monotonic point, so a simulated clock cannot
+//! fabricate one from nothing; [`SimClock`] anchors itself at a real
+//! instant on construction and returns `base + virtual_offset`.  All
+//! arithmetic downstream (`duration_since`, deadline comparisons) then
+//! behaves as if that much time had truly passed, while no thread ever
+//! sleeps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source the serving stack reads instead of
+/// [`Instant::now`].  Implementations must be cheap and thread-safe:
+/// the placer, every engine driver, and every connection thread share
+/// one handle.
+pub trait Clock: Send + Sync {
+    /// The current instant on this clock.
+    fn now(&self) -> Instant;
+
+    /// Milliseconds elapsed since the clock's epoch (construction).
+    /// Heartbeats and journal timestamps use this directly so traces
+    /// carry small logical numbers, not opaque instants.
+    fn now_ms(&self) -> u64;
+
+    /// Sleep for `d` on this clock.  The wall clock really sleeps; the
+    /// simulated clock just advances itself, so single-threaded
+    /// replays burn no real time.
+    fn sleep(&self, d: Duration);
+}
+
+/// Shared clock handle, as stored by every serving component.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// The production clock: real time, real sleeps.
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { epoch: Instant::now() }
+    }
+
+    /// The default clock used by constructors that don't take one.
+    pub fn shared() -> SharedClock {
+        Arc::new(WallClock::new())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// A simulated clock for deterministic replay: time stands still until
+/// [`SimClock::advance`] (or a [`Clock::sleep`]) moves it.  Anchored at
+/// a real instant so downstream `Instant` arithmetic keeps working.
+#[derive(Debug)]
+pub struct SimClock {
+    base: Instant,
+    offset_us: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { base: Instant::now(), offset_us: AtomicU64::new(0) }
+    }
+
+    pub fn shared() -> Arc<SimClock> {
+        Arc::new(SimClock::new())
+    }
+
+    /// Advance virtual time by `d`.
+    pub fn advance(&self, d: Duration) {
+        self.offset_us
+            .fetch_add(d.as_micros() as u64, Ordering::SeqCst);
+    }
+
+    /// Microseconds of virtual time elapsed since construction.
+    pub fn elapsed_us(&self) -> u64 {
+        self.offset_us.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Instant {
+        self.base + Duration::from_micros(self.elapsed_us())
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.elapsed_us() / 1000
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = WallClock::new();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now() > a);
+        assert!(c.now_ms() <= 10_000);
+    }
+
+    #[test]
+    fn sim_clock_only_moves_when_advanced() {
+        let c = SimClock::new();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(c.now(), a, "sim time must not follow wall time");
+        assert_eq!(c.now_ms(), 0);
+        c.advance(Duration::from_millis(1500));
+        assert_eq!(c.now_ms(), 1500);
+        assert_eq!(c.now(), a + Duration::from_millis(1500));
+        // sleep is just an advance
+        c.sleep(Duration::from_millis(500));
+        assert_eq!(c.now_ms(), 2000);
+    }
+
+    #[test]
+    fn sim_clock_is_shareable_across_threads() {
+        let c = SimClock::shared();
+        let c2: SharedClock = c.clone();
+        let t = {
+            let c = c.clone();
+            std::thread::spawn(move || c.advance(Duration::from_secs(1)))
+        };
+        t.join().unwrap();
+        assert_eq!(c2.now_ms(), 1000);
+    }
+}

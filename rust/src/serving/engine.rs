@@ -35,6 +35,7 @@ use crate::error::{Error, Result};
 use crate::rng::Rng;
 use crate::runtime::device::{download, upload};
 use crate::runtime::{DeviceState, ModelBundle, TransferSnapshot};
+use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
 
@@ -142,8 +143,8 @@ impl Lane {
         req: GenRequest,
         done_tx: Option<mpsc::Sender<GenResult>>,
         events: Option<mpsc::Sender<StreamEvent>>,
+        now: Instant,
     ) -> Self {
-        let now = Instant::now();
         Lane {
             pending: req.prompt.iter().copied().collect(),
             generated: Vec::new(),
@@ -164,12 +165,13 @@ impl Lane {
 fn admit_fifo(
     lanes: &mut [Option<Lane>],
     queue: &mut VecDeque<Lane>,
+    now: Instant,
 ) -> Vec<usize> {
     let mut admitted = Vec::new();
     for (i, slot) in lanes.iter_mut().enumerate() {
         if slot.is_none() {
             if let Some(mut lane) = queue.pop_front() {
-                lane.admitted_at = Instant::now();
+                lane.admitted_at = now;
                 *slot = Some(lane);
                 admitted.push(i);
             } else {
@@ -236,6 +238,9 @@ pub struct Engine<'a> {
     lanes: Vec<Option<Lane>>,
     queue: VecDeque<Lane>,
     rng: Rng,
+    /// injectable time source for queue/run timing (wall clock in
+    /// production; a simulated clock under the record/replay harness)
+    clock: SharedClock,
     pub steps_executed: u64,
     /// sampled continuation tokens only
     pub tokens_generated: u64,
@@ -324,6 +329,7 @@ impl<'a> Engine<'a> {
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
             rng: Rng::new(seed),
+            clock: WallClock::shared(),
             steps_executed: 0,
             tokens_generated: 0,
             tokens_processed: 0,
@@ -334,6 +340,13 @@ impl<'a> Engine<'a> {
             prefill_tokens: 0,
             lanes_poisoned: 0,
         })
+    }
+
+    /// Replace the engine's time source (used by deterministic
+    /// harnesses; production keeps the wall-clock default).
+    pub fn with_clock(mut self, clock: SharedClock) -> Self {
+        self.clock = clock;
+        self
     }
 
     /// Map the optional AOT'd `reset_lanes` program onto the step_fwd
@@ -514,7 +527,7 @@ impl<'a> Engine<'a> {
     /// when `pump` drives it to completion.
     pub fn submit(&mut self, req: GenRequest) -> mpsc::Receiver<GenResult> {
         let (tx, rx) = mpsc::channel();
-        self.queue.push_back(Lane::new(req, Some(tx), None));
+        self.queue.push_back(Lane::new(req, Some(tx), None, self.clock.now()));
         rx
     }
 
@@ -528,7 +541,7 @@ impl<'a> Engine<'a> {
         req: GenRequest,
         events: mpsc::Sender<StreamEvent>,
     ) {
-        self.queue.push_back(Lane::new(req, None, Some(events)));
+        self.queue.push_back(Lane::new(req, None, Some(events), self.clock.now()));
     }
 
     /// Zero lane `lane`'s XL memory on the host (fresh sequence).  This
@@ -582,7 +595,7 @@ impl<'a> Engine<'a> {
     }
 
     fn admit(&mut self) -> Result<()> {
-        let admitted = admit_fifo(&mut self.lanes, &mut self.queue);
+        let admitted = admit_fifo(&mut self.lanes, &mut self.queue, self.clock.now());
         if admitted.is_empty() {
             return Ok(());
         }
@@ -836,7 +849,7 @@ impl<'a> Engine<'a> {
                     prompt: lane.request.prompt.clone(),
                     tokens: lane.generated,
                     queue_time: lane.admitted_at - lane.queued_at,
-                    run_time: lane.admitted_at.elapsed(),
+                    run_time: self.clock.now().duration_since(lane.admitted_at),
                     prompt_len: lane.request.prompt.len(),
                 };
                 if let Some(tx) = lane.done_tx {
@@ -979,6 +992,7 @@ mod tests {
             },
             Some(tx),
             None,
+            Instant::now(),
         )
     }
 
@@ -991,7 +1005,7 @@ mod tests {
         let mut lanes: Vec<Option<Lane>> = (0..3).map(|_| None).collect();
         let mut queue: VecDeque<Lane> =
             (0..5).map(|i| mk_lane(i as i32)).collect();
-        let admitted = admit_fifo(&mut lanes, &mut queue);
+        let admitted = admit_fifo(&mut lanes, &mut queue, Instant::now());
         assert_eq!(admitted, vec![0, 1, 2]);
         assert_eq!(queue.len(), 2);
         // oldest request landed in the lowest lane
@@ -1000,7 +1014,7 @@ mod tests {
         }
         // free lane 1; the next queued request (tag 3) must take it
         lanes[1] = None;
-        let admitted = admit_fifo(&mut lanes, &mut queue);
+        let admitted = admit_fifo(&mut lanes, &mut queue, Instant::now());
         assert_eq!(admitted, vec![1]);
         assert_eq!(tag_of(&lanes[1]), 3);
         assert_eq!(queue.front().unwrap().request.prompt[0], 4);
@@ -1010,7 +1024,7 @@ mod tests {
     fn admit_with_empty_queue_is_noop() {
         let mut lanes: Vec<Option<Lane>> = (0..2).map(|_| None).collect();
         let mut queue: VecDeque<Lane> = VecDeque::new();
-        assert!(admit_fifo(&mut lanes, &mut queue).is_empty());
+        assert!(admit_fifo(&mut lanes, &mut queue, Instant::now()).is_empty());
         assert!(lanes.iter().all(|l| l.is_none()));
     }
 
@@ -1025,6 +1039,7 @@ mod tests {
             },
             None,
             Some(tx),
+            Instant::now(),
         );
         assert_eq!(lane.pending, VecDeque::from(vec![3, 1, 4]));
         assert_eq!(lane.budget, 5);

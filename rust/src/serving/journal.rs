@@ -1,0 +1,335 @@
+//! Decision journal for deterministic record/replay.
+//!
+//! Every load-bearing decision the serving stack makes — admission,
+//! placement, pump outcome, heartbeat, quarantine, failover, retry,
+//! re-admission — is recorded as one logically-timestamped event in a
+//! bounded in-memory ring.  The ring costs nothing observable on the
+//! hot path (one short mutex hold per decision, and nothing at all for
+//! the disabled journal production wires in) and can be flushed to a
+//! JSONL trace at any point: on an invariant failure, or explicitly by
+//! `loadgen --record` / the `chaos` subcommand.
+//!
+//! Trace format (`sigma-moe/trace/v1`): line 1 is a header object
+//! carrying the schema tag, the run seed, and the full run
+//! configuration — everything needed to re-execute the run.  Every
+//! following line is one event:
+//!
+//! ```text
+//! {"cfg":{...},"schema":"sigma-moe/trace/v1","seed":42}
+//! {"engine":0,"id":0,"kind":"place","seq":3,"t_ms":12}
+//! ```
+//!
+//! Events carry `seq` (a global monotonic sequence number) and `t_ms`
+//! (milliseconds on the injected [`Clock`](super::clock::Clock) —
+//! *logical* time under a `SimClock`).  Keys are emitted sorted (the
+//! JSON writer is `BTreeMap`-backed), so two runs that make the same
+//! decisions at the same logical times produce byte-identical event
+//! streams — which is exactly the property `loadgen --replay` asserts.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::serving::clock::{Clock, SharedClock};
+
+/// Trace schema tag written into every header.
+pub const TRACE_SCHEMA: &str = "sigma-moe/trace/v1";
+
+/// Default ring capacity: enough for a full chaos run while bounding a
+/// runaway recorder to a few MB.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+struct Inner {
+    /// Compact-serialized events in arrival order (ring-evicted from
+    /// the front at capacity).
+    lines: std::collections::VecDeque<String>,
+    /// Events evicted from the ring (reported in the header on flush so
+    /// a truncated trace is never mistaken for a complete one).
+    evicted: u64,
+    seq: u64,
+}
+
+/// Thread-safe bounded decision recorder shared by the scheduler, the
+/// router, and the chaos harness.
+pub struct Journal {
+    enabled: bool,
+    capacity: usize,
+    clock: SharedClock,
+    /// Header metadata (seed + run config), set once by the harness.
+    meta: Mutex<Json>,
+    inner: Mutex<Inner>,
+}
+
+impl Journal {
+    /// A recording journal timestamping events on `clock`.
+    pub fn new(clock: SharedClock) -> Self {
+        Journal::with_capacity(clock, DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(clock: SharedClock, capacity: usize) -> Self {
+        Journal {
+            enabled: true,
+            capacity: capacity.max(1),
+            clock,
+            meta: Mutex::new(Json::Null),
+            inner: Mutex::new(Inner {
+                lines: std::collections::VecDeque::new(),
+                evicted: 0,
+                seq: 0,
+            }),
+        }
+    }
+
+    /// The no-op journal production paths wire in: `record` returns
+    /// before touching any lock.
+    pub fn disabled(clock: SharedClock) -> Self {
+        Journal {
+            enabled: false,
+            capacity: 1,
+            clock,
+            meta: Mutex::new(Json::Null),
+            inner: Mutex::new(Inner {
+                lines: std::collections::VecDeque::new(),
+                evicted: 0,
+                seq: 0,
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Attach header metadata (`seed`, `cfg`, ...) merged into the
+    /// trace header on flush.
+    pub fn set_meta(&self, meta: Json) {
+        *self.meta.lock().unwrap() = meta;
+    }
+
+    /// Record one decision.  `fields` must not contain `kind`, `seq`,
+    /// or `t_ms` (the journal owns those).
+    pub fn record(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        if !self.enabled {
+            return;
+        }
+        let t_ms = self.clock.now_ms();
+        let mut obj = fields;
+        obj.push(("kind", json::s(kind)));
+        obj.push(("t_ms", json::num(t_ms as f64)));
+        let mut inner = self.inner.lock().unwrap();
+        obj.push(("seq", json::num(inner.seq as f64)));
+        inner.seq += 1;
+        let line = json::obj(obj).to_string_compact();
+        if inner.lines.len() >= self.capacity {
+            inner.lines.pop_front();
+            inner.evicted += 1;
+        }
+        inner.lines.push_back(line);
+    }
+
+    /// Number of events currently held (post-eviction).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded (including ring-evicted ones).
+    pub fn total_recorded(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.seq
+    }
+
+    /// The event stream alone (no header), one compact JSON object per
+    /// line.  This is the byte stream replay diffs.
+    pub fn events_jsonl(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for line in &inner.lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Header line: the meta object plus schema tag and eviction count.
+    pub fn header_json(&self) -> Json {
+        let meta = self.meta.lock().unwrap().clone();
+        let inner = self.inner.lock().unwrap();
+        let mut fields: Vec<(String, Json)> = match meta {
+            Json::Obj(m) => m.into_iter().collect(),
+            Json::Null => Vec::new(),
+            other => vec![("meta".to_string(), other)],
+        };
+        fields.push(("schema".to_string(), json::s(TRACE_SCHEMA)));
+        fields.push(("events".to_string(), json::num(inner.lines.len() as f64)));
+        fields.push(("evicted".to_string(), json::num(inner.evicted as f64)));
+        Json::Obj(fields.into_iter().collect())
+    }
+
+    /// Full trace: header line + events.
+    pub fn to_trace(&self) -> String {
+        let mut out = self.header_json().to_string_compact();
+        out.push('\n');
+        out.push_str(&self.events_jsonl());
+        out
+    }
+
+    /// Flush the trace to `path` (creating parent directories).
+    pub fn write_trace(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_trace())?;
+        Ok(())
+    }
+}
+
+/// A parsed trace file: the header object plus the raw event lines
+/// (kept as strings so replay can diff byte-for-byte without
+/// re-serialization concerns).
+pub struct Trace {
+    pub header: Json,
+    pub event_lines: Vec<String>,
+}
+
+impl Trace {
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut lines = text.lines();
+        let header_line = lines.next().ok_or_else(|| {
+            Error::Serving("empty trace file".to_string())
+        })?;
+        let header = Json::parse(header_line).map_err(|e| {
+            Error::Serving(format!("bad trace header: {e}"))
+        })?;
+        let schema = header
+            .get("schema")
+            .and_then(|s| s.as_str().map(str::to_string))
+            .map_err(|e| Error::Serving(format!("bad trace header: {e}")))?;
+        if schema != TRACE_SCHEMA {
+            return Err(Error::Serving(format!(
+                "trace schema {schema:?} != {TRACE_SCHEMA:?}"
+            )));
+        }
+        let mut event_lines = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            Json::parse(line).map_err(|e| {
+                Error::Serving(format!("bad trace event on line {}: {e}", i + 2))
+            })?;
+            event_lines.push(line.to_string());
+        }
+        Ok(Trace { header, event_lines })
+    }
+
+    pub fn read(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Trace::parse(&text)
+    }
+
+    /// The event stream as one JSONL string (for diffing against a
+    /// replayed journal's [`Journal::events_jsonl`]).
+    pub fn events_jsonl(&self) -> String {
+        let mut out = String::new();
+        for line in &self.event_lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::clock::SimClock;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn records_are_sequenced_and_logically_timestamped() {
+        let clock = SimClock::shared();
+        let j = Journal::new(clock.clone());
+        j.record("admit", vec![("id", json::num(0.0))]);
+        clock.advance(Duration::from_millis(7));
+        j.record("place", vec![("id", json::num(0.0)), ("engine", json::num(1.0))]);
+        let text = j.events_jsonl();
+        let rows: Vec<&str> = text.lines().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0],
+            r#"{"id":0,"kind":"admit","seq":0,"t_ms":0}"#
+        );
+        assert_eq!(
+            rows[1],
+            r#"{"engine":1,"id":0,"kind":"place","seq":1,"t_ms":7}"#
+        );
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        let j = Journal::disabled(SimClock::shared());
+        j.record("admit", vec![]);
+        assert!(j.is_empty());
+        assert!(!j.is_enabled());
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_reports_it() {
+        let j = Journal::with_capacity(SimClock::shared(), 2);
+        for i in 0..5 {
+            j.record("pump", vec![("n", json::num(i as f64))]);
+        }
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.total_recorded(), 5);
+        let h = j.header_json();
+        assert_eq!(h.get("evicted").unwrap().as_f64().unwrap(), 3.0);
+        // the survivors are the two newest
+        assert!(j.events_jsonl().contains("\"seq\":4"));
+        assert!(!j.events_jsonl().contains("\"seq\":0"));
+    }
+
+    #[test]
+    fn trace_roundtrips_through_parse() {
+        let clock = SimClock::shared();
+        let j = Journal::new(clock.clone());
+        j.set_meta(json::obj(vec![
+            ("seed", json::num(42.0)),
+            ("cfg", json::obj(vec![("engines", json::num(2.0))])),
+        ]));
+        j.record("admit", vec![("id", json::num(0.0))]);
+        clock.advance(Duration::from_millis(3));
+        j.record("done", vec![("id", json::num(0.0))]);
+        let text = j.to_trace();
+        let trace = Trace::parse(&text).unwrap();
+        assert_eq!(
+            trace.header.get("seed").unwrap().as_f64().unwrap(),
+            42.0
+        );
+        assert_eq!(trace.event_lines.len(), 2);
+        assert_eq!(trace.events_jsonl(), j.events_jsonl());
+        // wrong schema is refused
+        let bad = text.replace("trace/v1", "trace/v9");
+        assert!(Trace::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn write_trace_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("sigma_moe_journal_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("trace.jsonl");
+        let j = Journal::new(Arc::new(SimClock::new()));
+        j.record("beat", vec![("engine", json::num(0.0))]);
+        j.write_trace(&path).unwrap();
+        let trace = Trace::read(&path).unwrap();
+        assert_eq!(trace.event_lines.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

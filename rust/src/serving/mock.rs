@@ -13,6 +13,7 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{
     EngineBackend, GenRequest, GenResult, StreamEvent,
 };
@@ -44,7 +45,25 @@ pub enum MockFault {
     ///
     /// [`Engine`]: crate::serving::Engine
     NanLogits,
+    /// After `n` executed pumps the engine "restarts": all in-flight
+    /// lanes plus the internal queue are dropped on the floor (their
+    /// event senders close without a terminal event, so the router's
+    /// relay sees a disconnect), and `pump` errors for the next
+    /// [`RESTART_ERRORS`] calls — long enough to trip any sane
+    /// consecutive-error threshold, so the router quarantines the
+    /// engine and fails its lost requests over.  After that the fault
+    /// is fully cleared and pumps are clean again, modelling a
+    /// crashed-and-restarted runtime that lost its device state but is
+    /// otherwise healthy (the router's re-admission candidate).
+    /// Counters are cumulative across the restart, like a
+    /// supervisor-side metrics scrape.
+    RestartAfter(u64),
 }
+
+/// How many consecutive `pump` calls fail while a
+/// [`MockFault::RestartAfter`] restart is in progress (> the default
+/// router `error_threshold`, so the quarantine/failover path runs).
+pub const RESTART_ERRORS: u64 = 6;
 
 struct MockLane {
     prompt_left: usize,
@@ -88,6 +107,12 @@ pub struct MockBackend {
     pub prefill_steps_host: u64,
     /// prompt tokens consumed through the chunked path
     pub prefill_tokens: u64,
+    /// injectable time source for queue/run timing (wall clock by
+    /// default; simulated under the deterministic harness)
+    clock: SharedClock,
+    /// pumps still erroring while a [`MockFault::RestartAfter`]
+    /// restart is in progress
+    restart_down: u64,
 }
 
 impl MockBackend {
@@ -105,11 +130,19 @@ impl MockBackend {
             prefill_steps_device: 0,
             prefill_steps_host: 0,
             prefill_tokens: 0,
+            clock: WallClock::shared(),
+            restart_down: 0,
         }
     }
 
     pub fn with_step_delay(mut self, d: Duration) -> Self {
         self.step_delay = d;
+        self
+    }
+
+    /// Replace the backend's time source (deterministic harnesses).
+    pub fn with_clock(mut self, clock: SharedClock) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -148,6 +181,26 @@ impl MockBackend {
             Some(MockFault::ErrorAfter(n)) if self.steps_executed >= n => {
                 Err(Error::Serving(format!(
                     "mock engine failed after {n} pumps (ErrorAfter)"
+                )))
+            }
+            Some(MockFault::RestartAfter(n))
+                if self.steps_executed >= n =>
+            {
+                // the restart loses all device-resident state: lanes
+                // and queue vanish, their senders drop without a
+                // terminal event (the relay observes a disconnect).
+                // The runtime stays down for RESTART_ERRORS pumps —
+                // enough consecutive errors to trip quarantine, so the
+                // router re-places the lost requests on survivors.
+                for slot in self.lanes.iter_mut() {
+                    *slot = None;
+                }
+                self.queue.clear();
+                self.fault = None;
+                self.restart_down = RESTART_ERRORS.saturating_sub(1);
+                Err(Error::Serving(format!(
+                    "mock engine restarted after {n} pumps \
+                     (RestartAfter): all lanes lost"
                 )))
             }
             Some(MockFault::StallAfter(n)) if self.steps_executed >= n => {
@@ -208,7 +261,7 @@ impl MockBackend {
                     prompt: q.req.prompt,
                     events: q.events,
                     queued_at: q.queued_at,
-                    admitted_at: Instant::now(),
+                    admitted_at: self.clock.now(),
                 });
             }
         }
@@ -236,18 +289,29 @@ impl EngineBackend for MockBackend {
         self.queue.push_back(QueuedMock {
             req,
             events,
-            queued_at: Instant::now(),
+            queued_at: self.clock.now(),
         });
     }
 
     fn pump(&mut self) -> Result<usize> {
+        if self.restart_down > 0 {
+            // mid-restart: the runtime is down regardless of load —
+            // checked before admission so even an idle pump errors
+            // (the router must see the consecutive-error streak)
+            self.restart_down -= 1;
+            return Err(Error::Serving(
+                "mock engine restarting (RestartAfter): runtime \
+                 unavailable"
+                    .into(),
+            ));
+        }
         self.admit();
         if self.active() == 0 {
             return Ok(self.queue.len());
         }
         self.check_fault()?;
         if !self.step_delay.is_zero() {
-            std::thread::sleep(self.step_delay);
+            self.clock.sleep(self.step_delay);
         }
         self.steps_executed += 1;
         let chunk = self.prefill_chunk;
@@ -281,7 +345,10 @@ impl EngineBackend for MockBackend {
                     prompt: lane.prompt,
                     tokens: lane.generated,
                     queue_time: lane.admitted_at - lane.queued_at,
-                    run_time: lane.admitted_at.elapsed(),
+                    run_time: self
+                        .clock
+                        .now()
+                        .duration_since(lane.admitted_at),
                 };
                 let _ = lane.events.send(StreamEvent::Done(res));
             }
@@ -417,6 +484,51 @@ mod tests {
         assert!(!t.is_finished(), "pump returned while stalled");
         release.store(true, Ordering::SeqCst);
         assert!(t.join().unwrap(), "released stall must surface an error");
+    }
+
+    #[test]
+    fn restart_after_drops_lanes_then_pumps_cleanly() {
+        let mut b = MockBackend::new(2, 10)
+            .with_fault(MockFault::RestartAfter(2));
+        let (tx, rx) = mpsc::channel();
+        b.submit_streaming(req(vec![1], 8), tx);
+        assert!(b.pump().is_ok());
+        assert!(b.pump().is_ok());
+        // the restart: lanes + queue gone, senders dropped without a
+        // terminal event, and the pump errors for RESTART_ERRORS calls
+        // (the quarantine-worthy streak)
+        for i in 0..RESTART_ERRORS {
+            assert!(b.pump().is_err(), "restart error {i} expected");
+        }
+        assert_eq!(b.active(), 0);
+        assert_eq!(b.free_lanes(), 2);
+        let mut saw_terminal = false;
+        loop {
+            match rx.try_recv() {
+                Ok(StreamEvent::Done(_))
+                | Ok(StreamEvent::Dropped(_)) => saw_terminal = true,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        assert!(
+            !saw_terminal,
+            "a restart must lose lanes without a terminal event \
+             (the router's relay sees the disconnect)"
+        );
+        // restarted: new work runs cleanly, counters stay cumulative
+        let steps_before = b.steps_executed;
+        let (tx, rx) = mpsc::channel();
+        b.submit_streaming(req(vec![2], 1), tx);
+        while b.pump().unwrap() > 0 {}
+        assert!(b.steps_executed > steps_before);
+        let toks: Vec<i32> = std::iter::from_fn(|| rx.try_recv().ok())
+            .filter_map(|ev| match ev {
+                StreamEvent::Token(t) => Some(t),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks, vec![MockBackend::expected_token(&[2], 0, 10)]);
     }
 
     #[test]

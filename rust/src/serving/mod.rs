@@ -28,8 +28,20 @@
 //! * [`mock`] — a deterministic device-free [`EngineBackend`] (with
 //!   injectable [`MockFault`]s) so the scheduler/HTTP/router layers
 //!   test — and `loadgen --dry-run` runs — without artifacts.
+//! * [`clock`] — the injectable time source behind all of the above:
+//!   wall clock in production, [`SimClock`] under the deterministic
+//!   harness.
+//! * [`journal`] — the seeded, logically-timestamped decision journal
+//!   (admissions, placements, heartbeats, quarantines, failovers,
+//!   re-admissions) flushed as a JSONL trace.
+//! * [`chaos`] — the seeded chaos + record/replay harness: the real
+//!   placer/engine steps, single-threaded on a [`SimClock`] over mock
+//!   fleets with fault storms; replays a recorded trace bit-for-bit.
 
+pub mod chaos;
+pub mod clock;
 pub mod engine;
+pub mod journal;
 pub mod loadgen;
 pub mod mock;
 pub mod router;
@@ -37,9 +49,12 @@ pub mod sampler;
 pub mod scheduler;
 pub mod server;
 
+pub use chaos::{ChaosCfg, ChaosReport, ReplayOutcome};
+pub use clock::{Clock, SharedClock, SimClock, WallClock};
 pub use engine::{
     DropReason, Engine, EngineBackend, GenRequest, GenResult, StreamEvent,
 };
+pub use journal::{Journal, Trace};
 pub use mock::{MockBackend, MockFault};
 pub use router::{Fleet, Placement, RouterCfg};
 pub use sampler::Sampler;

@@ -47,7 +47,9 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::json::{self, Json};
+use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, EngineBackend, GenRequest, StreamEvent};
+use crate::serving::journal::Journal;
 use crate::serving::scheduler::{Policy, QueuedRequest, Scheduler};
 use crate::serving::server::{self, ServeState, ServerConfig};
 
@@ -235,6 +237,12 @@ pub struct Fleet {
     retry_queue: Mutex<VecDeque<u64>>,
     rr: AtomicUsize,
     started: Instant,
+    /// Time source shared with the scheduler: wall clock in production,
+    /// simulated under the deterministic record/replay harness.
+    clock: SharedClock,
+    /// Decision recorder (no-op in production; shared with the
+    /// scheduler so the trace interleaves both layers' events).
+    journal: Arc<Journal>,
     shutdown: Arc<AtomicBool>,
     /// Engines taken out of rotation (failure events).
     failovers: AtomicU64,
@@ -268,16 +276,47 @@ impl Fleet {
         shutdown: Arc<AtomicBool>,
         prefill_chunk: usize,
     ) -> Self {
+        let clock = WallClock::shared();
+        let journal = Arc::new(Journal::disabled(clock.clone()));
+        Self::with_clock_journal(
+            cfg,
+            queue_cap,
+            policy,
+            shutdown,
+            prefill_chunk,
+            clock,
+            journal,
+        )
+    }
+
+    /// Full constructor: the deterministic record/replay and chaos
+    /// harnesses inject a [`SimClock`](super::clock::SimClock) and a
+    /// recording [`Journal`]; production uses the wall-clock/disabled
+    /// defaults via [`Fleet::new`] / [`Fleet::with_prefill_chunk`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_clock_journal(
+        cfg: RouterCfg,
+        queue_cap: usize,
+        policy: Policy,
+        shutdown: Arc<AtomicBool>,
+        prefill_chunk: usize,
+        clock: SharedClock,
+        journal: Arc<Journal>,
+    ) -> Self {
         let n = cfg.engines.max(1);
         Fleet {
             cfg,
             sched: Scheduler::new(queue_cap, policy)
-                .with_prefill_chunk(prefill_chunk),
+                .with_prefill_chunk(prefill_chunk)
+                .with_clock(clock.clone())
+                .with_journal(journal.clone()),
             engines: (0..n).map(|_| EngineState::new()).collect(),
             registry: Mutex::new(BTreeMap::new()),
             retry_queue: Mutex::new(VecDeque::new()),
             rr: AtomicUsize::new(0),
-            started: Instant::now(),
+            started: clock.now(),
+            clock,
+            journal,
             shutdown,
             failovers: AtomicU64::new(0),
             requeues: AtomicU64::new(0),
@@ -336,8 +375,18 @@ impl Fleet {
         self.engines[id].healthy.load(Ordering::Relaxed)
     }
 
+    /// The fleet's clock (the harness advances it between steps).
+    pub fn clock(&self) -> &SharedClock {
+        &self.clock
+    }
+
+    /// The fleet's decision journal.
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
+    }
+
     fn now_ms(&self) -> u64 {
-        self.started.elapsed().as_millis() as u64
+        self.clock.now().duration_since(self.started).as_millis() as u64
     }
 
     /// FNV-1a over the prompt prefix — the session-affinity key.
@@ -447,6 +496,13 @@ impl Fleet {
         let e = &self.engines[target];
         e.mailbox.lock().unwrap().push_back(id);
         e.placements.fetch_add(1, Ordering::Relaxed);
+        self.journal.record(
+            "place",
+            vec![
+                ("id", json::num(id as f64)),
+                ("engine", json::num(target as f64)),
+            ],
+        );
         e.work.notify_all();
     }
 
@@ -472,6 +528,10 @@ impl Fleet {
                         .frontend
                         .send(StreamEvent::Dropped(DropReason::Deadline));
                     self.dropped_deadline.fetch_add(1, Ordering::Relaxed);
+                    self.journal.record(
+                        "drop_deadline_post",
+                        vec![("id", json::num(id as f64))],
+                    );
                     continue;
                 }
                 e.req.prompt.clone()
@@ -581,6 +641,10 @@ impl Fleet {
                     e.drained.store(false, Ordering::SeqCst);
                     e.healthy.store(true, Ordering::SeqCst);
                     self.readmissions.fetch_add(1, Ordering::Relaxed);
+                    self.journal.record(
+                        "readmit",
+                        vec![("engine", json::num(i as f64))],
+                    );
                 }
             }
             if e.healthy.load(Ordering::Relaxed) {
@@ -602,6 +666,18 @@ impl Fleet {
                 };
                 if stale || e.thread_done.load(Ordering::Relaxed) {
                     e.healthy.store(false, Ordering::Relaxed);
+                    let reason = if e.thread_done.load(Ordering::Relaxed) {
+                        "thread_done"
+                    } else {
+                        "stale"
+                    };
+                    self.journal.record(
+                        "quarantine",
+                        vec![
+                            ("engine", json::num(i as f64)),
+                            ("reason", json::s(reason)),
+                        ],
+                    );
                 }
             }
             if !e.healthy.load(Ordering::Relaxed)
@@ -659,6 +735,20 @@ impl Fleet {
                 }
             }
         }
+        self.journal.record(
+            "failover",
+            vec![
+                ("engine", json::num(dead as f64)),
+                ("requeued", json::num(retry.len() as f64)),
+                ("exhausted", json::num(exhausted.len() as f64)),
+            ],
+        );
+        for id in &exhausted {
+            self.journal.record(
+                "retry_exhausted",
+                vec![("id", json::num(*id as f64))],
+            );
+        }
         self.retries_exhausted
             .fetch_add(exhausted.len() as u64, Ordering::Relaxed);
         if !retry.is_empty() {
@@ -666,6 +756,8 @@ impl Fleet {
                 .fetch_add(retry.len() as u64, Ordering::Relaxed);
             let mut q = self.retry_queue.lock().unwrap();
             for id in retry {
+                self.journal
+                    .record("retry", vec![("id", json::num(id as f64))]);
                 q.push_back(id);
             }
         }
@@ -677,7 +769,7 @@ impl Fleet {
         if matches!(reason, DropReason::Shutdown) {
             self.sched.drain_shutdown();
         } else {
-            let now = Instant::now();
+            let now = self.clock.now();
             while let Some(q) = self.sched.take_next(now) {
                 let _ = q.events.send(StreamEvent::Dropped(reason));
             }
@@ -692,6 +784,24 @@ impl Fleet {
         }
     }
 
+    /// One placer iteration at `now`: expire deadlines, watch health,
+    /// place retries then fresh work.  Returns whether anything was
+    /// dispatched.  [`Fleet::run_placer`] loops over this with real
+    /// idle waits; the deterministic harness calls it directly between
+    /// simulated-clock advances, so the placement decision sequence is
+    /// an exact function of the schedule.
+    pub fn placer_step(&self, now: Instant) -> bool {
+        self.sched.expire(now);
+        self.health_check(now);
+        if self.healthy_count() == 0 {
+            // nothing can ever run; fail pending work fast (new
+            // arrivals are rejected up front via `alive()`)
+            self.drain_all(DropReason::EngineFailure);
+            return false;
+        }
+        self.place_retries(now) | self.place_fresh(now)
+    }
+
     /// The placer loop: expire deadlines, watch health, place retries
     /// then fresh work, idle briefly.  Returns at shutdown after
     /// draining everything still queued.
@@ -701,25 +811,19 @@ impl Fleet {
                 self.drain_all(DropReason::Shutdown);
                 return;
             }
-            let now = Instant::now();
-            self.sched.expire(now);
-            self.health_check(now);
+            let now = self.clock.now();
+            let placed = self.placer_step(now);
             if self.healthy_count() == 0 {
-                // nothing can ever run; fail pending work fast (new
-                // arrivals are rejected up front via `alive()`)
-                self.drain_all(DropReason::EngineFailure);
-                std::thread::sleep(PLACER_TICK);
+                self.clock.sleep(PLACER_TICK);
                 continue;
             }
-            let placed =
-                self.place_retries(now) | self.place_fresh(now);
             if !placed {
                 if self.sched.depth() == 0 {
                     self.sched.wait_for_work(PLACER_TICK);
                 } else {
                     // work is queued but no engine has capacity —
                     // bounded nap instead of a hot spin
-                    std::thread::sleep(SPIN_TICK);
+                    self.clock.sleep(SPIN_TICK);
                 }
             }
         }
@@ -727,8 +831,16 @@ impl Fleet {
 
     fn beat(&self, id: usize, backend: &dyn EngineBackend) {
         let e = &self.engines[id];
+        let free = backend.free_lanes();
         e.last_beat_ms.store(self.now_ms(), Ordering::Relaxed);
-        e.free_lanes.store(backend.free_lanes(), Ordering::Relaxed);
+        e.free_lanes.store(free, Ordering::Relaxed);
+        self.journal.record(
+            "beat",
+            vec![
+                ("engine", json::num(id as f64)),
+                ("free", json::num(free as f64)),
+            ],
+        );
     }
 
     fn publish(&self, id: usize, backend: &dyn EngineBackend) {
@@ -785,12 +897,30 @@ impl Fleet {
                                 res.tokens.len() as u64,
                                 Ordering::Relaxed,
                             );
+                            self.journal.record(
+                                "done",
+                                vec![
+                                    ("id", json::num(rid as f64)),
+                                    ("engine", json::num(engine as f64)),
+                                    (
+                                        "tokens",
+                                        json::num(res.tokens.len() as f64),
+                                    ),
+                                ],
+                            );
                             let _ =
                                 e.frontend.send(StreamEvent::Done(res));
                             return false;
                         }
                         StreamEvent::Dropped(r) => {
                             let e = reg.remove(&rid).unwrap();
+                            self.journal.record(
+                                "dropped",
+                                vec![
+                                    ("id", json::num(rid as f64)),
+                                    ("engine", json::num(engine as f64)),
+                                ],
+                            );
                             let _ =
                                 e.frontend.send(StreamEvent::Dropped(r));
                             return false;
@@ -814,6 +944,120 @@ impl Fleet {
     /// placer's health check uses to re-admit it (`readmit_after`);
     /// with re-admission disabled it idles in quarantine until
     /// shutdown.
+    /// One driver iteration: heartbeat, submit placed work, pump the
+    /// backend once, relay events.  Returns the backend's remaining
+    /// busy-lane count (inflight length on a pump error).  Extracted
+    /// from [`Fleet::run_engine`] so the deterministic harness can
+    /// interleave engine iterations with placer iterations on a
+    /// simulated clock, one step at a time.
+    pub fn engine_step(
+        &self,
+        id: usize,
+        backend: &mut dyn EngineBackend,
+        inflight: &mut Vec<(u64, mpsc::Receiver<StreamEvent>)>,
+        result: &mut Result<()>,
+    ) -> usize {
+        let me = &self.engines[id];
+        self.beat(id, backend);
+        // submit placed work (ownership re-checked under the
+        // registry lock: a request re-placed since its mailbox
+        // entry was written must not run here too)
+        loop {
+            let rid = me.mailbox.lock().unwrap().pop_front();
+            let Some(rid) = rid else { break };
+            let req = {
+                let mut reg = self.registry.lock().unwrap();
+                match reg.get_mut(&rid) {
+                    Some(e) if e.owner == Some(id) => {
+                        e.submitted = true;
+                        Some(e.req.clone())
+                    }
+                    _ => None,
+                }
+            };
+            if let Some(req) = req {
+                let (tx, rx) = mpsc::channel();
+                backend.submit_streaming(req, tx);
+                inflight.push((rid, rx));
+            }
+        }
+        // re-publish capacity now that the mailbox is drained into
+        // the backend: the placer must not read an empty mailbox
+        // against the pre-submit free_lanes and overplace into the
+        // backend's internal FIFO (where policy ordering and
+        // deadline expiry no longer apply)
+        me.free_lanes.store(backend.free_lanes(), Ordering::Relaxed);
+        let remaining = match backend.pump() {
+            Ok(n) => {
+                me.consec_errors.store(0, Ordering::Relaxed);
+                if n > 0 {
+                    self.journal.record(
+                        "pump",
+                        vec![
+                            ("engine", json::num(id as f64)),
+                            ("busy", json::num(n as f64)),
+                        ],
+                    );
+                }
+                if me.healthy.load(Ordering::Relaxed) {
+                    // a re-admitted engine serving again must not
+                    // report its stale quarantine error at
+                    // shutdown as if it had died
+                    if result.is_err() {
+                        *result = Ok(());
+                    }
+                } else if n == 0 {
+                    // quarantined, pumping cleanly, AND fully
+                    // drained: build the streak the placer
+                    // re-admits on
+                    me.clean_beats.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // still draining pre-quarantine lanes.
+                    // Their requests were already re-placed
+                    // elsewhere (or parked for retry) at
+                    // requeue time; re-admitting before the
+                    // backend is empty could place one of
+                    // them HERE a second time while its first
+                    // attempt still runs on a lane — two
+                    // generations interleaving into one
+                    // client stream.  Not clean evidence.
+                    me.clean_beats.store(0, Ordering::Relaxed);
+                }
+                n
+            }
+            Err(err) => {
+                me.clean_beats.store(0, Ordering::Relaxed);
+                let n =
+                    me.consec_errors.fetch_add(1, Ordering::Relaxed) + 1;
+                self.journal.record(
+                    "pump_err",
+                    vec![("engine", json::num(id as f64))],
+                );
+                if !me.healthy.load(Ordering::Relaxed) {
+                    // already quarantined: back off and keep
+                    // probing; the clean streak restarts from zero
+                    self.clock.sleep(ENGINE_TICK);
+                } else if n >= self.cfg.error_threshold {
+                    me.healthy.store(false, Ordering::Relaxed);
+                    self.journal.record(
+                        "quarantine",
+                        vec![
+                            ("engine", json::num(id as f64)),
+                            ("reason", json::s("errors")),
+                        ],
+                    );
+                    *result = Err(err);
+                } else {
+                    // transient? brief backoff, then retry
+                    self.clock.sleep(Duration::from_millis(1));
+                }
+                inflight.len()
+            }
+        };
+        inflight.retain(|(rid, rx)| self.relay(id, *rid, rx));
+        remaining
+    }
+
     pub fn run_engine(
         &self,
         id: usize,
@@ -822,7 +1066,7 @@ impl Fleet {
         let me = &self.engines[id];
         let mut inflight: Vec<(u64, mpsc::Receiver<StreamEvent>)> =
             Vec::new();
-        let mut last_publish = Instant::now();
+        let mut last_publish = self.clock.now();
         // clamp the shared scheduler's prompt costing down to this
         // engine's real chunk width (1 after a prefill fallback)
         self.sched.observe_prefill_chunk(backend.prefill_chunk());
@@ -832,89 +1076,12 @@ impl Fleet {
             if self.shutdown.load(Ordering::Relaxed) {
                 break;
             }
-            self.beat(id, backend);
-            // submit placed work (ownership re-checked under the
-            // registry lock: a request re-placed since its mailbox
-            // entry was written must not run here too)
-            loop {
-                let rid = me.mailbox.lock().unwrap().pop_front();
-                let Some(rid) = rid else { break };
-                let req = {
-                    let mut reg = self.registry.lock().unwrap();
-                    match reg.get_mut(&rid) {
-                        Some(e) if e.owner == Some(id) => {
-                            e.submitted = true;
-                            Some(e.req.clone())
-                        }
-                        _ => None,
-                    }
-                };
-                if let Some(req) = req {
-                    let (tx, rx) = mpsc::channel();
-                    backend.submit_streaming(req, tx);
-                    inflight.push((rid, rx));
-                }
-            }
-            // re-publish capacity now that the mailbox is drained into
-            // the backend: the placer must not read an empty mailbox
-            // against the pre-submit free_lanes and overplace into the
-            // backend's internal FIFO (where policy ordering and
-            // deadline expiry no longer apply)
-            me.free_lanes.store(backend.free_lanes(), Ordering::Relaxed);
-            let remaining = match backend.pump() {
-                Ok(n) => {
-                    me.consec_errors.store(0, Ordering::Relaxed);
-                    if me.healthy.load(Ordering::Relaxed) {
-                        // a re-admitted engine serving again must not
-                        // report its stale quarantine error at
-                        // shutdown as if it had died
-                        if result.is_err() {
-                            result = Ok(());
-                        }
-                    } else {
-                        if n == 0 {
-                            // quarantined, pumping cleanly, AND fully
-                            // drained: build the streak the placer
-                            // re-admits on
-                            me.clean_beats
-                                .fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            // still draining pre-quarantine lanes.
-                            // Their requests were already re-placed
-                            // elsewhere (or parked for retry) at
-                            // requeue time; re-admitting before the
-                            // backend is empty could place one of
-                            // them HERE a second time while its first
-                            // attempt still runs on a lane — two
-                            // generations interleaving into one
-                            // client stream.  Not clean evidence.
-                            me.clean_beats.store(0, Ordering::Relaxed);
-                        }
-                    }
-                    n
-                }
-                Err(err) => {
-                    me.clean_beats.store(0, Ordering::Relaxed);
-                    let n =
-                        me.consec_errors.fetch_add(1, Ordering::Relaxed) + 1;
-                    if !me.healthy.load(Ordering::Relaxed) {
-                        // already quarantined: back off and keep
-                        // probing; the clean streak restarts from zero
-                        std::thread::sleep(ENGINE_TICK);
-                    } else if n >= self.cfg.error_threshold {
-                        me.healthy.store(false, Ordering::Relaxed);
-                        result = Err(err);
-                    } else {
-                        // transient? brief backoff, then retry
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
-                    inflight.len()
-                }
-            };
-            inflight.retain(|(rid, rx)| self.relay(id, *rid, rx));
-            if last_publish.elapsed() >= PUBLISH_EVERY {
+            let remaining =
+                self.engine_step(id, backend, &mut inflight, &mut result);
+            let now = self.clock.now();
+            if now.duration_since(last_publish) >= PUBLISH_EVERY {
                 self.publish(id, backend);
-                last_publish = Instant::now();
+                last_publish = now;
             }
             if remaining == 0 && inflight.is_empty() {
                 let mb = me.mailbox.lock().unwrap();
@@ -1104,6 +1271,10 @@ impl ServeState for FleetState {
         self.fleet.shutdown.load(Ordering::Relaxed)
     }
 
+    fn clock(&self) -> &SharedClock {
+        self.fleet.clock()
+    }
+
     fn metrics_json(&self) -> Json {
         let fleet = self.fleet.fleet_json();
         let mut doc: BTreeMap<String, Json> = match fleet {
@@ -1116,7 +1287,13 @@ impl ServeState for FleetState {
             json::obj(vec![
                 (
                     "uptime_s",
-                    json::num(self.started.elapsed().as_secs_f64()),
+                    json::num(
+                        self.fleet
+                            .clock()
+                            .now()
+                            .duration_since(self.started)
+                            .as_secs_f64(),
+                    ),
                 ),
                 ("driver_alive", Json::Bool(self.fleet.alive())),
             ]),
@@ -1153,10 +1330,11 @@ where
         shutdown.clone(),
         cfg.prefill_chunk,
     ));
+    let started = fleet.clock().now();
     let state = Arc::new(FleetState {
         cfg,
         fleet: fleet.clone(),
-        started: Instant::now(),
+        started,
     });
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {

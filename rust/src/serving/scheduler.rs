@@ -15,9 +15,13 @@ use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
 use crate::json::{self, Json};
+use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, GenRequest, StreamEvent};
+use crate::serving::journal::Journal;
 
 /// Admission ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -230,16 +234,25 @@ pub struct Scheduler {
     /// to C = 1, and the scheduler must not keep costing prompts in
     /// chunks the engine doesn't have.
     prefill_chunk: AtomicUsize,
+    /// Time source for enqueue stamps, deadline arithmetic, and the
+    /// freshness clamp (wall clock in production, simulated under the
+    /// record/replay harness).
+    clock: SharedClock,
+    /// Decision recorder (the disabled no-op journal in production).
+    journal: Arc<Journal>,
     inner: Mutex<Inner>,
     nonempty: Condvar,
 }
 
 impl Scheduler {
     pub fn new(capacity: usize, policy: Policy) -> Self {
+        let clock = WallClock::shared();
         Scheduler {
             capacity: capacity.max(1),
             policy,
             prefill_chunk: AtomicUsize::new(1),
+            journal: Arc::new(Journal::disabled(clock.clone())),
+            clock,
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 next_id: 0,
@@ -248,6 +261,18 @@ impl Scheduler {
             }),
             nonempty: Condvar::new(),
         }
+    }
+
+    /// Replace the scheduler's time source (deterministic harnesses).
+    pub fn with_clock(mut self, clock: SharedClock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Attach a recording decision journal.
+    pub fn with_journal(mut self, journal: Arc<Journal>) -> Self {
+        self.journal = journal;
+        self
     }
 
     /// Cost prompts in prefill chunks of `c` tokens (the engine's
@@ -300,9 +325,10 @@ impl Scheduler {
             inner.metrics.rejected += 1;
             return Err(Rejection::QueueFull);
         }
-        let now = Instant::now();
+        let now = self.clock.now();
         let id = inner.next_id;
         inner.next_id += 1;
+        let prompt_len = req.prompt.len();
         inner.queue.push_back(QueuedRequest {
             id,
             req,
@@ -314,11 +340,18 @@ impl Scheduler {
         let depth = inner.queue.len();
         inner.metrics.max_depth = inner.metrics.max_depth.max(depth);
         drop(inner);
+        self.journal.record(
+            "admit",
+            vec![
+                ("id", json::num(id as f64)),
+                ("prompt_len", json::num(prompt_len as f64)),
+            ],
+        );
         self.nonempty.notify_all();
         Ok(id)
     }
 
-    fn drop_expired(inner: &mut Inner, now: Instant) {
+    fn drop_expired(&self, inner: &mut Inner, now: Instant) {
         let expired: Vec<usize> = inner
             .queue
             .iter()
@@ -330,6 +363,8 @@ impl Scheduler {
             let q = inner.queue.remove(i).unwrap();
             let _ = q.events.send(StreamEvent::Dropped(DropReason::Deadline));
             inner.metrics.dropped_deadline += 1;
+            self.journal
+                .record("drop_deadline", vec![("id", json::num(q.id as f64))]);
         }
     }
 
@@ -343,9 +378,9 @@ impl Scheduler {
         if self.policy != Policy::Deadline {
             return;
         }
-        let now = Self::freshen(now);
+        let now = self.freshen(now);
         let mut inner = self.inner.lock().unwrap();
-        Self::drop_expired(&mut inner, now);
+        self.drop_expired(&mut inner, now);
     }
 
     /// Expiry must never be checked against a timestamp older than the
@@ -356,9 +391,11 @@ impl Scheduler {
     /// request the deadline policy promised to drop, and splitting the
     /// outcome between `deadline_drops` and completions depending on
     /// thread timing.  Callers may still pass a *future* instant
-    /// (simulated time in tests); only the past is disallowed.
-    fn freshen(now: Instant) -> Instant {
-        now.max(Instant::now())
+    /// (simulated time in tests); only the past is disallowed.  The
+    /// clamp reads the scheduler's injected clock, so a simulated-time
+    /// run is never polluted by the wall clock.
+    fn freshen(&self, now: Instant) -> Instant {
+        now.max(self.clock.now())
     }
 
     /// Pop the next request per policy, dropping expired-deadline
@@ -374,10 +411,10 @@ impl Scheduler {
     /// taken instead.  The engine re-announces `Admitted` when the lane
     /// actually starts; receivers treat the duplicate as a refresh.
     pub fn take_next(&self, now: Instant) -> Option<QueuedRequest> {
-        let now = Self::freshen(now);
+        let now = self.freshen(now);
         let mut inner = self.inner.lock().unwrap();
         if self.policy == Policy::Deadline {
-            Self::drop_expired(&mut inner, now);
+            self.drop_expired(&mut inner, now);
         }
         loop {
             let idx = match self.policy {
@@ -416,11 +453,15 @@ impl Scheduler {
             let q = inner.queue.remove(idx).unwrap();
             if q.events.send(StreamEvent::Admitted).is_err() {
                 inner.metrics.dropped_dead += 1;
+                self.journal
+                    .record("drop_dead", vec![("id", json::num(q.id as f64))]);
                 continue;
             }
             let wait = now.saturating_duration_since(q.enqueued_at);
             inner.metrics.queue_wait.observe(wait);
             inner.metrics.started += 1;
+            self.journal
+                .record("take", vec![("id", json::num(q.id as f64))]);
             return Some(q);
         }
     }
@@ -449,6 +490,8 @@ impl Scheduler {
         while let Some(q) = inner.queue.pop_front() {
             let _ = q.events.send(StreamEvent::Dropped(DropReason::Shutdown));
             inner.metrics.dropped_shutdown += 1;
+            self.journal
+                .record("drop_shutdown", vec![("id", json::num(q.id as f64))]);
         }
     }
 

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::json::{self, Json};
+use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{EngineBackend, GenRequest, StreamEvent};
 use crate::serving::sampler::Sampler;
 use crate::serving::scheduler::{Policy, Rejection, Scheduler};
@@ -395,6 +396,9 @@ pub(crate) trait ServeState: Send + Sync {
     fn shutting_down(&self) -> bool;
     /// The full `/metrics` document.
     fn metrics_json(&self) -> Json;
+    /// Time source for request latency stamps (wall clock in
+    /// production; the fleet's injected clock behind the router).
+    fn clock(&self) -> &SharedClock;
 }
 
 /// State shared between the accept loop, connection threads, and the
@@ -406,6 +410,7 @@ struct Shared {
     shutdown: Arc<AtomicBool>,
     driver_dead: AtomicBool,
     started: Instant,
+    clock: SharedClock,
 }
 
 impl ServeState for Shared {
@@ -427,6 +432,10 @@ impl ServeState for Shared {
 
     fn metrics_json(&self) -> Json {
         metrics_document(self)
+    }
+
+    fn clock(&self) -> &SharedClock {
+        &self.clock
     }
 }
 
@@ -458,9 +467,9 @@ impl Driver {
         // spf keeps costing prompts in real dispatch units
         sh.sched.observe_prefill_chunk(backend.prefill_chunk());
         self.publish(backend);
-        let mut last_publish = Instant::now();
+        let mut last_publish = sh.clock.now();
         while !sh.shutdown.load(Ordering::Relaxed) {
-            let now = Instant::now();
+            let now = sh.clock.now();
             // expire first, even with zero free lanes: dead requests
             // must not hold queue slots or keep their clients waiting
             sh.sched.expire(now);
@@ -471,9 +480,10 @@ impl Driver {
                 }
             }
             let remaining = backend.pump()?;
-            if last_publish.elapsed() >= PUBLISH_EVERY {
+            let after = sh.clock.now();
+            if after.duration_since(last_publish) >= PUBLISH_EVERY {
                 self.publish(backend);
-                last_publish = Instant::now();
+                last_publish = after;
             }
             if remaining == 0 {
                 sh.sched.wait_for_work(TICK);
@@ -504,14 +514,17 @@ pub fn serve<F>(
 where
     F: FnOnce(Driver) -> Result<()> + Send,
 {
+    let clock = WallClock::shared();
     let shared = Arc::new(Shared {
         sched: Scheduler::new(cfg.queue_cap, cfg.policy)
-            .with_prefill_chunk(cfg.prefill_chunk),
+            .with_prefill_chunk(cfg.prefill_chunk)
+            .with_clock(clock.clone()),
         cfg,
         engine_stats: Mutex::new(BTreeMap::new()),
         shutdown,
         driver_dead: AtomicBool::new(false),
-        started: Instant::now(),
+        started: clock.now(),
+        clock,
     });
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {
@@ -656,7 +669,12 @@ fn metrics_document(sh: &Shared) -> Json {
             json::obj(vec![
                 (
                     "uptime_s",
-                    json::num(sh.started.elapsed().as_secs_f64()),
+                    json::num(
+                        sh.clock
+                            .now()
+                            .duration_since(sh.started)
+                            .as_secs_f64(),
+                    ),
                 ),
                 (
                     "driver_alive",
@@ -687,7 +705,7 @@ fn handle_completion<S: ServeState>(
         );
     }
     let (tx, rx) = mpsc::channel();
-    let t0 = Instant::now();
+    let t0 = sh.clock().now();
     let stream_mode = creq.stream;
     let id = match sh.sched().enqueue(creq.gen, creq.deadline, tx) {
         Ok(id) => id,
@@ -727,12 +745,13 @@ fn unary_completion<S: ServeState>(
     loop {
         match rx.recv_timeout(TICK) {
             Ok(StreamEvent::Admitted) => {
-                queue_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                let waited = sh.clock().now().duration_since(t0);
+                queue_ms = Some(waited.as_secs_f64() * 1e3);
             }
             Ok(StreamEvent::Token(_)) => {}
             Ok(StreamEvent::Done(res)) => {
-                sh.sched()
-                    .observe_completion(t0.elapsed(), res.tokens.len());
+                let e2e = sh.clock().now().duration_since(t0);
+                sh.sched().observe_completion(e2e, res.tokens.len());
                 let tokens =
                     res.tokens.iter().map(|&t| json::num(t as f64)).collect();
                 let body = json::obj(vec![
@@ -759,7 +778,8 @@ fn unary_completion<S: ServeState>(
                 );
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if t0.elapsed() > sh.cfg().request_timeout {
+                let waited = sh.clock().now().duration_since(t0);
+                if waited > sh.cfg().request_timeout {
                     return write_json(
                         w,
                         504,
@@ -804,7 +824,8 @@ fn stream_completion<S: ServeState>(
     loop {
         match rx.recv_timeout(TICK) {
             Ok(StreamEvent::Admitted) => {
-                queue_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                let waited = sh.clock().now().duration_since(t0);
+                queue_ms = Some(waited.as_secs_f64() * 1e3);
                 send_line(
                     w,
                     &json::obj(vec![
@@ -820,8 +841,8 @@ fn stream_completion<S: ServeState>(
                 )?;
             }
             Ok(StreamEvent::Done(res)) => {
-                sh.sched()
-                    .observe_completion(t0.elapsed(), res.tokens.len());
+                let e2e = sh.clock().now().duration_since(t0);
+                sh.sched().observe_completion(e2e, res.tokens.len());
                 send_line(
                     w,
                     &json::obj(vec![
@@ -849,7 +870,8 @@ fn stream_completion<S: ServeState>(
                 return w.write_all(LAST_CHUNK);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if t0.elapsed() > sh.cfg().request_timeout {
+                let waited = sh.clock().now().duration_since(t0);
+                if waited > sh.cfg().request_timeout {
                     send_line(
                         w,
                         &json::obj(vec![(

@@ -1,0 +1,206 @@
+//! Deterministic record/replay + chaos-harness tests (device-free).
+//!
+//! These drive the real router/scheduler code single-threaded on a
+//! simulated clock: same seed in, same decision stream out, byte for
+//! byte — including under fault storms with quarantine, failover and
+//! re-admission in the schedule.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use sigma_moe::serving::chaos::{self, ChaosCfg};
+use sigma_moe::serving::{
+    Clock, GenRequest, Journal, Policy, Sampler, Scheduler,
+    SharedClock, SimClock, StreamEvent,
+};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "sigma-moe-chaos-it-{}-{name}",
+        std::process::id()
+    ))
+}
+
+fn storm_cfg(seed: u64) -> ChaosCfg {
+    ChaosCfg {
+        engines: 3,
+        lanes: 2,
+        vocab: 32,
+        requests: 16,
+        pumps: 500,
+        seed,
+        storm: true,
+    }
+}
+
+/// Property (over the recorded artifact): two independent replays of
+/// the same recorded chaos trace produce identical journals AND
+/// identical final metrics snapshots — and both match the recording.
+#[test]
+fn recorded_chaos_trace_replays_identically_twice() {
+    let cfg = storm_cfg(29);
+    let path = tmp("prop.jsonl");
+    let rec = chaos::record(&cfg, &path).unwrap();
+    assert!(rec.ok(), "recording violated invariants: {:?}", rec.violations);
+    assert!(!rec.events.is_empty(), "a storm must journal decisions");
+
+    let r1 = chaos::replay_path(&path).unwrap();
+    let r2 = chaos::replay_path(&path).unwrap();
+    assert!(
+        r1.events_match && r1.metrics_match,
+        "first replay diverged: {:?}",
+        r1.divergence
+    );
+    assert!(
+        r2.events_match && r2.metrics_match,
+        "second replay diverged: {:?}",
+        r2.divergence
+    );
+    assert_eq!(
+        r1.report.events, r2.report.events,
+        "two replays of one trace produced different journals"
+    );
+    assert_eq!(
+        r1.report.metrics.to_string_compact(),
+        r2.report.metrics.to_string_compact(),
+        "two replays of one trace produced different metrics"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Seeded sweep: the serving invariants (exactly-once terminals,
+/// greedy-exact token streams, row-sums) hold across fault storms,
+/// and the sweep actually exercises the failover machinery.
+#[test]
+fn chaos_invariants_hold_across_seeds() {
+    let mut any_failover = false;
+    let mut any_readmission = false;
+    for seed in 1..=8 {
+        let cfg = ChaosCfg {
+            requests: 14,
+            pumps: 400,
+            ..storm_cfg(seed)
+        };
+        let r = chaos::run(&cfg).unwrap();
+        assert!(r.ok(), "seed {seed}: {:?}", r.violations);
+        assert_eq!(
+            r.dones + r.drops + r.rejected,
+            cfg.requests,
+            "seed {seed}: terminal accounting is incomplete"
+        );
+        any_failover |= r.failovers > 0;
+        any_readmission |= r.readmissions > 0;
+    }
+    assert!(
+        any_failover,
+        "no seed in the sweep exercised the failover path — the storm \
+         is too tame to be a chaos test"
+    );
+    // re-admission depends on an outage/restart draw landing in the
+    // sweep; it almost always does, but it is not an invariant
+    let _ = any_readmission;
+}
+
+/// Run one fixed deadline-expiry schedule against a simulated-clock
+/// scheduler and return (journal, admitted ids, per-client terminal
+/// observations).
+fn sim_deadline_run() -> (String, Vec<u64>, Vec<&'static str>) {
+    let sim = SimClock::shared();
+    let clock: SharedClock = sim.clone();
+    let journal = Arc::new(Journal::new(clock.clone()));
+    let sched = Scheduler::new(8, Policy::Deadline)
+        .with_clock(clock.clone())
+        .with_journal(journal.clone());
+
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let (tx, rx) = mpsc::channel();
+        let deadline = if i % 2 == 0 {
+            Duration::from_millis(50) // expires under the advance below
+        } else {
+            Duration::from_millis(500)
+        };
+        sched
+            .enqueue(
+                GenRequest {
+                    prompt: vec![i as i32 + 1],
+                    max_new_tokens: 4,
+                    sampler: Sampler::greedy(),
+                },
+                Some(deadline),
+                tx,
+            )
+            .unwrap();
+        rxs.push(rx);
+    }
+    sim.advance(Duration::from_millis(100));
+    sched.expire(clock.now());
+    let mut taken = Vec::new();
+    while let Some(q) = sched.take_next(clock.now()) {
+        taken.push(q.id);
+    }
+    let outcomes = rxs
+        .iter()
+        .map(|rx| {
+            let mut out = "none";
+            while let Ok(ev) = rx.try_recv() {
+                out = match ev {
+                    StreamEvent::Admitted => "admitted",
+                    StreamEvent::Dropped(_) => "dropped",
+                    _ => out,
+                };
+            }
+            out
+        })
+        .collect();
+    (journal.events_jsonl(), taken, outcomes)
+}
+
+/// Satellite: a simulated-clock scheduler expires deadlines
+/// identically across runs — same drop set, same admission order,
+/// same journal bytes.
+#[test]
+fn sim_clock_scheduler_expires_deadlines_identically() {
+    let (j1, taken1, out1) = sim_deadline_run();
+    let (j2, taken2, out2) = sim_deadline_run();
+    assert_eq!(j1, j2, "scheduler journals diverged across runs");
+    assert_eq!(taken1, taken2);
+    assert_eq!(out1, out2);
+    // the 50ms deadlines (even ids) expired under the 100ms advance;
+    // the 500ms ones (odd ids) survived and were admitted in order
+    assert_eq!(taken1, vec![1, 3, 5]);
+    assert_eq!(
+        out1,
+        vec![
+            "dropped", "admitted", "dropped", "admitted", "dropped",
+            "admitted"
+        ]
+    );
+    // the journal recorded each decision exactly once
+    assert_eq!(j1.matches("\"kind\":\"admit\"").count(), 6);
+    assert_eq!(j1.matches("\"kind\":\"drop_deadline\"").count(), 3);
+    assert_eq!(j1.matches("\"kind\":\"take\"").count(), 3);
+}
+
+/// A tampered trace must fail replay verification with a pointed
+/// divergence message (the CI failure-reproduction path relies on
+/// this distinguishing real nondeterminism from artifact corruption).
+#[test]
+fn replay_rejects_modified_traces() {
+    let cfg = storm_cfg(5);
+    let path = tmp("tamper.jsonl");
+    let rec = chaos::record(&cfg, &path).unwrap();
+    assert!(rec.ok(), "{:?}", rec.violations);
+    let text = std::fs::read_to_string(&path).unwrap();
+    // flip one decision event in the middle of the stream
+    let mut lines: Vec<&str> = text.lines().collect();
+    let mid = lines.len() / 2;
+    let swapped = lines[mid].replace("\"kind\":\"", "\"kind\":\"x");
+    lines[mid] = &swapped;
+    let tampered = lines.join("\n");
+    std::fs::write(&path, tampered).unwrap();
+    let out = chaos::replay_path(&path).unwrap();
+    assert!(!out.events_match, "a tampered trace must not verify");
+    assert!(out.divergence.is_some());
+    std::fs::remove_file(&path).ok();
+}

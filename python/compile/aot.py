@@ -152,6 +152,14 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
         "eval_mem_len": eval_mem_len,
         "serve_batch": serve_batch,
         "prefill_chunk": prefill_chunk,
+        # Expert-utilization telemetry: MoE presets append a per-layer
+        # expert-count output [layers, n_experts] to step_fwd/prefill;
+        # the serving engine reads this block to size its histograms.
+        # None for dense/topk/pkm presets (two-output signature).
+        "expert_counts": ({"layers": cfg.n_layers,
+                           "n_experts": cfg.moe.n_experts,
+                           "k": cfg.moe.k}
+                          if cfg.ff_variant == "moe" else None),
         "flops": flops.summarize(cfg),
         "functions": {},
     }

@@ -99,13 +99,25 @@ def make_eval_step(cfg: ModelConfig, eval_mem_len: int):
 
 def make_step_fwd(cfg: ModelConfig, mem_len: int):
     """Single-token incremental forward for serving: T=1, returns the
-    next-token logits and the updated memory."""
+    next-token logits and the updated memory.
+
+    For MoE presets a third output is appended: per-layer expert
+    selection counts ``[n_layers, n_experts]`` float32 — a pure
+    reduction of the router's already-computed top-K one-hot, so the
+    logits and memories are bit-for-bit identical to the two-output
+    signature (the telemetry test asserts this).  Non-MoE presets keep
+    the two-output signature; the Rust engine treats the counts output
+    as optional and falls back cleanly (``expert_stats_unavailable``).
+    """
 
     def step_fwd(params, mems, tokens):
         rng = jax.random.PRNGKey(0)
-        logits, new_mems, _ = M.forward(
+        logits, new_mems, aux = M.forward(
             params, cfg, tokens, mems, rng, deterministic=True,
             mem_len=mem_len)
+        if "tok_usage" in aux:
+            counts = aux["tok_usage"].sum(axis=1)      # [L, NE]
+            return (logits[:, -1, :], new_mems, counts)
         return (logits[:, -1, :], new_mems)
 
     return step_fwd
@@ -135,13 +147,21 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
     ``where``/gather-select, never multiplication, so NaN/Inf in padded
     positions or in an idle lane's memory stays contained to that lane
     (see EXPERIMENTS.md §Prefill).
+
+    For MoE presets a third output is appended: per-layer expert
+    selection counts ``[n_layers, n_experts]`` float32.  Padded
+    positions flow through the dense routing math but are masked out of
+    the counts (``where``, not multiplication), so the counts sum to
+    exactly ``sum(active_len) * K`` per layer and NaN in a padded row
+    cannot poison the telemetry.  The logits/memory outputs are
+    untouched by the extra reduction.
     """
 
     def prefill(params, mems, tokens, active_len):
         b, c = tokens.shape
         active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
         rng = jax.random.PRNGKey(0)
-        logits, new_mems, _ = M.forward(
+        logits, new_mems, aux = M.forward(
             params, cfg, tokens, mems, rng, deterministic=True,
             mem_len=mem_len, active_len=active_len)
         # logits[i, active_len[i] - 1, :] via a flat row gather
@@ -151,6 +171,14 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
         rows = jnp.arange(b, dtype=jnp.int32) * c + last
         logits_last = jnp.take(
             logits.reshape(b * c, -1), rows, axis=0)
+        if "tok_usage" in aux:
+            tu = aux["tok_usage"]                      # [L, B*C, NE]
+            nl, _, ne = tu.shape
+            valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                     < active_len[:, None])            # [B, C]
+            tu = jnp.where(valid.reshape(1, b * c, 1), tu, 0.0)
+            counts = tu.reshape(nl, b * c, ne).sum(axis=1)  # [L, NE]
+            return (logits_last, new_mems, counts)
         return (logits_last, new_mems)
 
     return prefill

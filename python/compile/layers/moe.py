@@ -220,6 +220,11 @@ def moe_ff(p: Params, x: jax.Array, rng: jax.Array, cfg: MoEConfig,
         "sel_weight": sel_weight,
         "mean_prob": probs.mean(axis=0),
         "cooccurrence": cooc,
+        # per-token selection counts [N, NE] (usage before the token-axis
+        # reduction): the serving stack's expert-utilization telemetry
+        # masks padding rows and sums these — kept separate from `usage`
+        # so eval/train statistics are untouched
+        "tok_usage": tok,
         "active_channels": active.sum(axis=-1).mean(),
         "active_channels_std": active.sum(axis=-1).std(),
     }

@@ -103,6 +103,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
     reg_total = jnp.zeros((), jnp.float32)
     stats: Dict[str, Any] = {"usage": [], "mean_prob": [],
                              "sel_weight": [], "cooccurrence": [],
+                             "tok_usage": [],
                              "active_channels": [],
                              "active_channels_std": []}
     for i, lp in enumerate(params["layers"]):
@@ -127,7 +128,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
         y = dropout(r_ff, y.reshape(b, t, -1), cfg.dropout, deterministic)
         x = x + y
         reg_total = reg_total + aux["reg"]
-        for key in ("usage", "mean_prob", "sel_weight", "cooccurrence"):
+        for key in ("usage", "mean_prob", "sel_weight", "cooccurrence",
+                    "tok_usage"):
             if key in aux:
                 stats[key].append(aux[key])
         stats["active_channels"].append(aux.get(
@@ -144,7 +146,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
         "active_channels": jnp.stack(stats["active_channels"]),
         "active_channels_std": jnp.stack(stats["active_channels_std"]),
     }
-    for key in ("usage", "mean_prob", "sel_weight", "cooccurrence"):
+    for key in ("usage", "mean_prob", "sel_weight", "cooccurrence",
+                "tok_usage"):
         if stats[key]:
             aux_out[key] = jnp.stack(stats[key])     # [L, ...]
     return logits, new_mems, aux_out

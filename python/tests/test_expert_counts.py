@@ -1,0 +1,158 @@
+"""Expert-utilization telemetry: the expert-count-returning
+``step_fwd``/``prefill`` signatures must be *bit-for-bit* logit- and
+memory-equivalent to the two-output signatures (the counts are a pure
+extra reduction of the router's one-hot — never a perturbation of the
+model math), counts must sum to ``valid_tokens * K`` per layer, and
+non-MoE presets must keep the two-output signature so old artifacts
+fall back cleanly on the Rust side (``expert_stats_unavailable``)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, api
+from compile import model as M
+from compile.configs import MoEConfig, ModelConfig
+
+CHUNK = 4
+
+
+def tiny_cfg(variant="moe"):
+    return ModelConfig(
+        name=f"t-{variant}", vocab_size=64, d_model=16, d_ff=32,
+        n_layers=3, n_heads=2, head_dim=8, context=8, mem_len=8,
+        ff_variant=variant,
+        moe=MoEConfig(n_experts=4, group_size=8, k=2))
+
+
+def setup(cfg, batch, seed=0):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    mems = [jnp.asarray(rng.normal(size=(batch, cfg.mem_len,
+                                         cfg.d_model)), jnp.float32)
+            for _ in range(cfg.n_layers)]
+    return params, mems
+
+
+def old_step_fwd(cfg, mem_len):
+    """The pre-telemetry two-output signature, reconstructed inline —
+    the bit-equivalence baseline."""
+    def step_fwd(params, mems, tokens):
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, _ = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len)
+        return (logits[:, -1, :], new_mems)
+    return step_fwd
+
+
+def old_prefill(cfg, mem_len):
+    def prefill(params, mems, tokens, active_len):
+        b, c = tokens.shape
+        active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, _ = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len, active_len=active_len)
+        last = jnp.clip(active_len - 1, 0, c - 1)
+        rows = jnp.arange(b, dtype=jnp.int32) * c + last
+        logits_last = jnp.take(logits.reshape(b * c, -1), rows, axis=0)
+        return (logits_last, new_mems)
+    return prefill
+
+
+def test_step_fwd_logits_bit_identical_to_old_signature():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=5)
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (b, 1)),
+        jnp.int32)
+    new = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
+    old = jax.jit(old_step_fwd(cfg, cfg.mem_len))
+    logits_n, mems_n, counts = new(params, mems, toks)
+    logits_o, mems_o = old(params, mems, toks)
+    np.testing.assert_array_equal(np.asarray(logits_n),
+                                  np.asarray(logits_o))
+    for l, (mn, mo) in enumerate(zip(mems_n, mems_o)):
+        np.testing.assert_array_equal(np.asarray(mn), np.asarray(mo),
+                                      err_msg=f"layer {l} memory")
+    # every token selects exactly K experts in every layer
+    c = np.asarray(counts)
+    assert c.shape == (cfg.n_layers, cfg.moe.n_experts)
+    np.testing.assert_array_equal(c.sum(axis=1),
+                                  np.full(cfg.n_layers, b * cfg.moe.k))
+    assert np.all(c >= 0)
+
+
+def test_prefill_logits_bit_identical_and_counts_mask_padding():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=9)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, CHUNK)),
+                       jnp.int32)
+    active = jnp.asarray([CHUNK, 2, 0], jnp.int32)
+    new = jax.jit(api.make_prefill(cfg, cfg.mem_len))
+    old = jax.jit(old_prefill(cfg, cfg.mem_len))
+    logits_n, mems_n, counts = new(params, mems, toks, active)
+    logits_o, mems_o = old(params, mems, toks, active)
+    np.testing.assert_array_equal(np.asarray(logits_n),
+                                  np.asarray(logits_o))
+    for l, (mn, mo) in enumerate(zip(mems_n, mems_o)):
+        np.testing.assert_array_equal(np.asarray(mn), np.asarray(mo),
+                                      err_msg=f"layer {l} memory")
+    # padded positions route through the dense math but are masked out
+    # of the counts: per layer, counts sum to sum(active_len) * K
+    c = np.asarray(counts)
+    valid = int(np.asarray(active).sum())
+    np.testing.assert_array_equal(
+        c.sum(axis=1), np.full(cfg.n_layers, valid * cfg.moe.k))
+
+
+def test_prefill_counts_survive_nan_poisoned_idle_lane():
+    # an idle lane with NaN memory must not poison the counts (masking
+    # is where-based, and the one-hot is computed from indices, but the
+    # padded rows' logits may be NaN — the mask must drop them)
+    cfg = tiny_cfg()
+    b = 2
+    params, mems = setup(cfg, b, seed=3)
+    mems = [m.at[1].set(jnp.nan) for m in mems]
+    toks = jnp.zeros((b, CHUNK), jnp.int32)
+    active = jnp.asarray([CHUNK, 0], jnp.int32)
+    pre = jax.jit(api.make_prefill(cfg, cfg.mem_len))
+    _, _, counts = pre(params, mems, toks, active)
+    c = np.asarray(counts)
+    assert np.all(np.isfinite(c))
+    np.testing.assert_array_equal(
+        c.sum(axis=1), np.full(cfg.n_layers, CHUNK * cfg.moe.k))
+
+
+def test_non_moe_presets_keep_two_output_signature():
+    # dense artifacts must lower to the old 2-output contract so the
+    # Rust engine's fallback (expert_stats_unavailable) stays reachable
+    cfg = tiny_cfg("dense")
+    b = 2
+    params, mems = setup(cfg, b)
+    stok = jnp.zeros((b, 1), jnp.int32)
+    out = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))(
+        params, mems, stok)
+    assert len(out) == 2
+    _, _, out_spec = aot.lower_fn(
+        api.make_step_fwd(cfg, cfg.mem_len), (params, mems, stok))
+    names = [b_["name"] for b_ in out_spec]
+    assert names == ["0"] + [f"1.{i}" for i in range(cfg.n_layers)]
+
+
+def test_step_fwd_manifest_appends_counts_output():
+    cfg = tiny_cfg()
+    b = 2
+    params, mems = setup(cfg, b)
+    stok = jnp.zeros((b, 1), jnp.int32)
+    _, _, out_spec = aot.lower_fn(
+        api.make_step_fwd(cfg, cfg.mem_len), (params, mems, stok))
+    names = [b_["name"] for b_ in out_spec]
+    assert names == (["0"] + [f"1.{i}" for i in range(cfg.n_layers)]
+                     + ["2"])
+    assert out_spec[-1]["shape"] == [cfg.n_layers, cfg.moe.n_experts]
+    assert out_spec[-1]["dtype"] == "float32"

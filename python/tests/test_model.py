@@ -134,9 +134,11 @@ def test_step_fwd_next_token_logits():
     fwd = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
     args = api.example_args(cfg, tcfg, 2 * cfg.context, serve_batch=3)
     params, smems, stok = args["step_fwd"]
-    logits, new_mems = fwd(params, smems, stok)
+    logits, new_mems, counts = fwd(params, smems, stok)
     assert logits.shape == (3, cfg.vocab_size)
     assert new_mems[0].shape == smems[0].shape
+    # MoE presets append per-layer expert-selection counts
+    assert counts.shape == (cfg.n_layers, cfg.moe.n_experts)
 
 
 # --------------------------------------------------------------- presets

@@ -32,11 +32,14 @@ def setup(cfg, batch):
 
 def feed_single(step, params, mems, prompts):
     """Reference: one step_fwd call per token, all lanes in lockstep
-    (prompts must share a length here)."""
+    (prompts must share a length here).  MoE presets return a trailing
+    expert-counts output — indexed unpacking keeps this helper working
+    for both signatures."""
     logits = None
     for j in range(len(prompts[0])):
         toks = jnp.asarray([[p[j]] for p in prompts], jnp.int32)
-        logits, mems = step(params, mems, toks)
+        out = step(params, mems, toks)
+        logits, mems = out[0], out[1]
     return logits, mems
 
 
@@ -59,8 +62,8 @@ def feed_chunked(pre, params, mems, prompts, chunk):
             off[i] += k
             if k > 0 and off[i] == len(p):
                 finished.append(i)
-        logits, mems = pre(params, mems, jnp.asarray(toks),
-                           jnp.asarray(active))
+        out = pre(params, mems, jnp.asarray(toks), jnp.asarray(active))
+        logits, mems = out[0], out[1]
         for i in finished:
             final_logits[i] = logits[i]
     return final_logits, mems
@@ -102,12 +105,14 @@ def test_decode_lane_rides_prefill_with_active_len_one():
     _, mems = feed_single(step, params, mems, warm)
 
     tok = jnp.asarray([[5], [9]], jnp.int32)
-    ref_logits, ref_mems = step(params, mems, tok)
+    ref = step(params, mems, tok)
+    ref_logits, ref_mems = ref[0], ref[1]
 
     ptoks = np.zeros((b, CHUNK), np.int32)
     ptoks[0, 0], ptoks[1, 0] = 5, 9
-    pre_logits, pre_mems = pre(params, mems, jnp.asarray(ptoks),
-                               jnp.asarray([1, 1], np.int32))
+    out = pre(params, mems, jnp.asarray(ptoks),
+              jnp.asarray([1, 1], np.int32))
+    pre_logits, pre_mems = out[0], out[1]
     np.testing.assert_allclose(np.asarray(pre_logits),
                                np.asarray(ref_logits), rtol=2e-4,
                                atol=2e-5)
@@ -131,8 +136,9 @@ def test_idle_lane_memory_is_bit_for_bit_untouched():
 
     toks = np.zeros((b, CHUNK), np.int32)
     toks[0, :2] = [7, 8]
-    logits, out = pre(params, mems, jnp.asarray(toks),
-                      jnp.asarray([2, 0, 0], np.int32))
+    res = pre(params, mems, jnp.asarray(toks),
+              jnp.asarray([2, 0, 0], np.int32))
+    logits, out = res[0], res[1]
     for l, (before, after) in enumerate(zip(mems, out)):
         # idle healthy lane: identical bits
         np.testing.assert_array_equal(np.asarray(after[1]),
@@ -172,7 +178,13 @@ def test_prefill_manifest_names_match_engine_contract():
     assert act_spec["shape"] == [serve_batch]
     assert act_spec["dtype"] == "int32"
     out_names = [b["name"] for b in out_spec]
-    assert out_names == ["0"] + [f"1.{i}" for i in range(cfg.n_layers)]
+    # MoE presets carry a trailing expert-counts output "2"; the engine
+    # treats it as optional (absent on dense/topk/pkm artifacts)
+    assert out_names == (["0"]
+                         + [f"1.{i}" for i in range(cfg.n_layers)]
+                         + ["2"])
     assert out_spec[0]["shape"] == [serve_batch, cfg.vocab_size]
-    for b_, sm in zip(out_spec[1:], smems):
+    for b_, sm in zip(out_spec[1:-1], smems):
         assert b_["shape"] == list(sm.shape)
+    assert out_spec[-1]["shape"] == [cfg.n_layers, cfg.moe.n_experts]
+    assert out_spec[-1]["dtype"] == "float32"

@@ -276,6 +276,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("readmit-after", "20", "router: consecutive clean pumps before \
                                  a quarantined engine rejoins (0 = \
                                  quarantine is permanent)")
+    .opt("trace-ring", "4096", "HTTP: completed request spans retained \
+                                for GET /v1/trace/<id> (stage \
+                                histograms observe every request \
+                                regardless)")
+    .opt("span-sample", "1000", "HTTP: per-mille of request ids \
+                                 retained in the trace ring (1000 \
+                                 keeps every span)")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -416,6 +423,8 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         } else {
             1
         },
+        trace_ring: p.usize("trace-ring")?.max(1),
+        span_sample_permille: p.u64("span-sample")?.min(1000),
         ..Default::default()
     };
     let checkpoint: Option<Vec<(String, HostTensor)>> =
@@ -661,6 +670,12 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                           Poisson plan, for scaling comparisons")
     .flag("keep-alive", "reuse connections (HTTP keep-alive pool) \
                          instead of one connection per request")
+    .optional("prom-out", "--dry-run: write the validated Prometheus \
+                           text exposition scraped from the mock fleet \
+                           here (next to the BENCH report)")
+    .flag("telemetry-ab", "--dry-run: append an A/B row running the \
+                           same plan with telemetry on and off, \
+                           pricing always-on observability")
     .optional("record", "deterministic device-free run over the mock \
                          fleet on a simulated clock; writes the full \
                          decision trace here (see --replay)")
@@ -730,8 +745,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         timeout: Duration::from_secs(p.u64("timeout-s")?),
         keep_alive: p.flag("keep-alive"),
         prefill_chunk: p.usize("prefill-chunk")?,
+        telemetry: true,
     };
-    let rows: Vec<Json> = if p.flag("dry-run") {
+    let mut ab_row: Option<Json> = None;
+    let mut prom_artifact: Option<String> = None;
+    let mut rows: Vec<Json> = if p.flag("dry-run") {
         let engine_counts: Vec<usize> = p
             .str("engines")?
             .split(',')
@@ -743,15 +761,37 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             .collect::<Result<_>>()?;
         let lanes = p.usize("mock-lanes")?;
         let mut rows = Vec::with_capacity(engine_counts.len());
-        for &engines in &engine_counts {
+        for (i, &engines) in engine_counts.iter().enumerate() {
             eprintln!(
                 "[loadgen] dry run: {engines} in-process mock engine(s) \
                  x {lanes} lanes"
             );
-            rows.push(loadgen::dry_run(&cfg, lanes, engines)?);
+            if i == 0 {
+                let (row, prom) =
+                    loadgen::dry_run_with_prom(&cfg, lanes, engines)?;
+                prom_artifact = Some(prom);
+                rows.push(row);
+            } else {
+                rows.push(loadgen::dry_run(&cfg, lanes, engines)?);
+            }
+        }
+        if p.flag("telemetry-ab") {
+            let engines = engine_counts.first().copied().unwrap_or(1);
+            eprintln!(
+                "[loadgen] telemetry A/B: re-running the plan with \
+                 telemetry off ({engines} engine(s))"
+            );
+            ab_row =
+                Some(loadgen::dry_run_telemetry_ab(&cfg, lanes, engines)?);
         }
         rows
     } else {
+        if p.flag("telemetry-ab") || p.get("prom-out").is_some() {
+            return Err(Error::Config(
+                "--telemetry-ab and --prom-out are --dry-run options"
+                    .into(),
+            ));
+        }
         if p.str("engines")? != "1" {
             return Err(Error::Config(
                 "--engines is a --dry-run option; a live run measures \
@@ -806,6 +846,24 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                 num(row, "engines"),
                 num(row, "tokens_per_sec") / base,
                 num(&rows[0], "engines").max(1.0),
+            );
+        }
+    }
+    if let Some(ab) = ab_row {
+        println!(
+            "telemetry A/B: {:.1} tok/s on vs {:.1} tok/s off -> \
+             {:.2}% overhead",
+            num(&ab, "tokens_per_sec_on"),
+            num(&ab, "tokens_per_sec_off"),
+            100.0 * num(&ab, "telemetry_overhead_frac"),
+        );
+        rows.push(ab);
+    }
+    if let Some(path) = p.get("prom-out") {
+        if let Some(text) = &prom_artifact {
+            std::fs::write(path, text)?;
+            eprintln!(
+                "[loadgen] validated prom exposition written to {path}"
             );
         }
     }

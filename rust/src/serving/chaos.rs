@@ -579,7 +579,29 @@ impl ReplayOutcome {
 
 /// Re-execute a recorded trace from its header alone and diff the
 /// fresh decision stream and metrics against the recording.
+///
+/// Refuses truncated traces outright: a ring-evicted prefix can never
+/// byte-match a fresh run, so diffing one would report a spurious
+/// divergence instead of the real problem (an undersized journal ring
+/// — see `dropped_events` on `/metrics`).
 pub fn replay(trace: &Trace) -> Result<ReplayOutcome> {
+    if trace
+        .header
+        .opt("truncated")
+        .map(|t| t.as_bool().unwrap_or(false))
+        .unwrap_or(false)
+    {
+        let evicted = trace
+            .header
+            .opt("evicted")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        return Err(Error::Serving(format!(
+            "refusing to replay a truncated trace ({evicted} events \
+             ring-evicted before flush); re-record with a larger \
+             journal ring"
+        )));
+    }
     let cfg = ChaosCfg::from_json(trace.header.get("cfg")?)?;
     let report = run(&cfg)?;
     let recorded = trace.events_jsonl();
@@ -705,6 +727,75 @@ mod tests {
         let out = replay(&trace).unwrap();
         assert!(!out.events_match, "a truncated trace must not verify");
         assert!(out.divergence.is_some());
+    }
+
+    #[test]
+    fn replay_refuses_truncated_trace() {
+        let cfg = small(true, 13);
+        let rec = run(&cfg).unwrap();
+        let tampered =
+            rec.trace.replace("\"truncated\":false", "\"truncated\":true");
+        assert_ne!(tampered, rec.trace, "header must carry the flag");
+        let trace = Trace::parse(&tampered).unwrap();
+        let err = replay(&trace).unwrap_err();
+        assert!(
+            err.to_string().contains("truncated"),
+            "error must name the truncation: {err}"
+        );
+    }
+
+    /// Property: over storm and clean runs across seeds, the journal
+    /// event stream always yields well-formed spans — monotone stage
+    /// timestamps, at most one terminal per request (enforced inside
+    /// `spans_from_events`, which errors otherwise), exactly one
+    /// terminal for every accepted request, and a failover storm
+    /// produces at least one span with a second `place` segment.
+    #[test]
+    fn journal_streams_yield_well_formed_spans() {
+        use crate::serving::telemetry::spans_from_events;
+        for (storm, seed) in
+            [(false, 7), (true, 3), (true, 11), (true, 29), (true, 57)]
+        {
+            let cfg = small(storm, seed);
+            let report = run(&cfg).unwrap();
+            assert!(report.ok(), "violations: {:?}", report.violations);
+            let trace = Trace::parse(&report.trace).unwrap();
+            assert!(
+                !trace.header.get("truncated").unwrap().as_bool().unwrap(),
+                "seed {seed}: property needs the full stream"
+            );
+            let lines: Vec<String> = report
+                .events
+                .lines()
+                .map(str::to_string)
+                .collect();
+            let spans = spans_from_events(&lines)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let complete =
+                spans.iter().filter(|s| s.terminal.is_some()).count();
+            assert_eq!(
+                complete, report.accepted,
+                "seed {seed}: every accepted request must reach \
+                 exactly one terminal"
+            );
+            let refused: Vec<u64> = spans
+                .iter()
+                .filter(|s| s.terminal.is_none())
+                .map(|s| s.id)
+                .collect();
+            assert!(
+                refused.is_empty(),
+                "seed {seed}: spans without terminals: {refused:?}"
+            );
+            if report.failovers > 0 {
+                assert!(
+                    spans.iter().any(|s| s.segments.len() > 1),
+                    "seed {seed}: {} failovers but no span shows a \
+                     re-placement segment",
+                    report.failovers
+                );
+            }
+        }
     }
 
     #[test]

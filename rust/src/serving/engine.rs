@@ -122,6 +122,15 @@ pub trait EngineBackend {
     fn pump(&mut self) -> Result<usize>;
     /// Cumulative throughput/perf counters for `/metrics`.
     fn stats(&self) -> BTreeMap<String, f64>;
+    /// Drain the per-layer expert-selection counts accumulated since
+    /// the last call (`counts[layer][expert]` token selections from the
+    /// σ-MoE router's top-K).  `None` means the backend cannot observe
+    /// expert routing — a dense/topk/pkm artifact, or one predating the
+    /// counts output — and the driver bumps the
+    /// `expert_stats_unavailable` fallback counter instead.
+    fn take_expert_counts(&mut self) -> Option<Vec<Vec<u64>>> {
+        None
+    }
 }
 
 #[derive(Debug)]
@@ -235,6 +244,16 @@ pub struct Engine<'a> {
     /// prefill chunk width C (from the program's `[B, C]` token input);
     /// 1 when the program is unavailable
     prefill_chunk: usize,
+    /// `step_fwd` output index of the trailing `[layers, n_experts]`
+    /// expert-count tensor (MoE artifacts only; `None` on the
+    /// two-output signature)
+    counts_idx_step: Option<usize>,
+    /// same for the `prefill` program's outputs
+    counts_idx_prefill: Option<usize>,
+    /// expert selections accumulated since the last
+    /// [`EngineBackend::take_expert_counts`] drain:
+    /// `expert_counts[layer][expert]`
+    expert_counts: Vec<Vec<u64>>,
     lanes: Vec<Option<Lane>>,
     queue: VecDeque<Lane>,
     rng: Rng,
@@ -261,6 +280,9 @@ pub struct Engine<'a> {
     /// requests dropped because their lane produced non-finite logits
     /// (the per-lane poison guard)
     pub lanes_poisoned: u64,
+    /// pumps that could not observe expert routing (artifact without
+    /// the counts output — dense/topk/pkm, or pre-telemetry MoE)
+    pub expert_stats_unavailable: u64,
 }
 
 impl<'a> Engine<'a> {
@@ -311,7 +333,11 @@ impl<'a> Engine<'a> {
         let (reset_inputs, reset_outputs) =
             Self::map_reset_program(bundle, &state, n_lanes, &mem_slots);
         let vocab = spec.outputs[0].shape[1];
-        let (prefill_inputs, prefill_feedback, prefill_chunk) =
+        // MoE artifacts append a trailing [layers, n_experts] f32
+        // expert-count output "2"; older / non-MoE artifacts don't.
+        let counts_idx_step =
+            Self::find_counts_output(&spec.outputs, mem_slots.len());
+        let (prefill_inputs, prefill_feedback, prefill_chunk, counts_idx_prefill) =
             Self::map_prefill_program(
                 bundle, &state, n_lanes, &mem_slots, vocab,
             );
@@ -326,6 +352,9 @@ impl<'a> Engine<'a> {
             prefill_inputs,
             prefill_feedback,
             prefill_chunk,
+            counts_idx_step,
+            counts_idx_prefill,
+            expert_counts: Vec::new(),
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
             rng: Rng::new(seed),
@@ -339,6 +368,7 @@ impl<'a> Engine<'a> {
             prefill_steps_host: 0,
             prefill_tokens: 0,
             lanes_poisoned: 0,
+            expert_stats_unavailable: 0,
         })
     }
 
@@ -410,6 +440,24 @@ impl<'a> Engine<'a> {
         (Some(inputs), outputs)
     }
 
+    /// Find a program's trailing expert-count output: named `2`, f32,
+    /// shaped `[n_layers, n_experts]`.  MoE artifacts append it to both
+    /// `step_fwd` and `prefill`; its absence is not an error (dense /
+    /// topk / pkm presets keep the two-output signature, and the
+    /// drivers count the fallback as `expert_stats_unavailable`).
+    fn find_counts_output(
+        outputs: &[crate::runtime::manifest::BufferSpec],
+        n_layers: usize,
+    ) -> Option<usize> {
+        let (oi, b) = outputs.iter().enumerate().last()?;
+        (b.name == "2"
+            && b.dtype == DType::F32
+            && b.shape.len() == 2
+            && b.shape[0] == n_layers
+            && b.shape[1] > 0)
+            .then_some(oi)
+    }
+
     /// Map the optional AOT'd `prefill` program onto the step_fwd
     /// device state.  Its manifest contract (checked per buffer, with a
     /// silent single-token fallback on any mismatch so old artifacts
@@ -427,9 +475,18 @@ impl<'a> Engine<'a> {
         n_lanes: usize,
         mem_slots: &[usize],
         vocab: usize,
-    ) -> (Option<Vec<PrefillInput>>, Vec<(usize, usize)>, usize) {
-        const NONE: (Option<Vec<PrefillInput>>, Vec<(usize, usize)>, usize) =
-            (None, Vec::new(), 1);
+    ) -> (
+        Option<Vec<PrefillInput>>,
+        Vec<(usize, usize)>,
+        usize,
+        Option<usize>,
+    ) {
+        const NONE: (
+            Option<Vec<PrefillInput>>,
+            Vec<(usize, usize)>,
+            usize,
+            Option<usize>,
+        ) = (None, Vec::new(), 1, None);
         let Ok(prog) = bundle.program("prefill") else {
             return NONE;
         };
@@ -479,7 +536,23 @@ impl<'a> Engine<'a> {
             _ => return NONE,
         }
         let mut feedback = Vec::new();
+        let mut counts_idx = None;
         for (oi, b) in prog.spec.outputs.iter().enumerate().skip(1) {
+            // The trailing expert-count output is named "2", which
+            // collides with step_fwd's *token input* slot "2" in the
+            // state map — match it explicitly before the positional
+            // lookup, or the shape check below would reject the whole
+            // program and silently disable chunked prefill.
+            if counts_idx.is_none()
+                && b.name == "2"
+                && b.dtype == DType::F32
+                && b.shape.len() == 2
+                && b.shape[0] == mem_slots.len()
+                && b.shape[1] > 0
+            {
+                counts_idx = Some(oi);
+                continue;
+            }
             match state.position(&b.name) {
                 Some(i)
                     if state.slot_spec(i).shape == b.shape
@@ -504,7 +577,7 @@ impl<'a> Engine<'a> {
         if covered != need || written != need || need.is_empty() {
             return NONE;
         }
-        (Some(inputs), feedback, chunk)
+        (Some(inputs), feedback, chunk, counts_idx)
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -685,6 +758,9 @@ impl<'a> Engine<'a> {
         };
         self.steps_executed += 1;
         self.tokens_processed += n_active as u64;
+        if self.counts_idx_step.is_none() {
+            self.expert_stats_unavailable += 1;
+        }
         let vocab = fwd.spec.outputs[0].shape[1];
         let logits = self.absorb_outputs(out, false)?;
         self.sample_and_finish(&logits, vocab, &sample);
@@ -713,6 +789,33 @@ impl<'a> Engine<'a> {
                 .take()
                 .ok_or_else(|| Error::other("mem output consumed twice"))?;
             self.state.set_device(ii, buf);
+        }
+        let counts_idx = if prefill {
+            self.counts_idx_prefill
+        } else {
+            self.counts_idx_step
+        };
+        if let Some(ci) = counts_idx {
+            let buf = out[ci]
+                .take()
+                .ok_or_else(|| Error::other("counts output consumed twice"))?;
+            let t = download(&self.bundle.client, &buf)?;
+            let ne = t.shape[1];
+            let vals = t.as_f32()?;
+            if self.expert_counts.len() < t.shape[0] {
+                self.expert_counts.resize(t.shape[0], Vec::new());
+            }
+            for (l, row) in vals.chunks_exact(ne).enumerate() {
+                let acc = &mut self.expert_counts[l];
+                if acc.len() < ne {
+                    acc.resize(ne, 0);
+                }
+                for (e, &v) in row.iter().enumerate() {
+                    // counts are integral by construction; round guards
+                    // against f32 accumulation error in wide layers
+                    acc[e] += v.round().max(0.0) as u64;
+                }
+            }
         }
         Ok(logits)
     }
@@ -782,6 +885,9 @@ impl<'a> Engine<'a> {
         self.steps_executed += 1;
         self.prefill_steps_device += 1;
         self.prefill_tokens += prompt_tokens;
+        if self.counts_idx_prefill.is_none() {
+            self.expert_stats_unavailable += 1;
+        }
         // every consumed token counts: C-chunk prompt lanes, 1-token
         // decode lanes — idle lanes contribute their 0
         self.tokens_processed +=
@@ -941,6 +1047,10 @@ impl<'a> Engine<'a> {
         m.insert("prefill_tokens".into(), self.prefill_tokens as f64);
         m.insert("prefill_chunk".into(), self.prefill_chunk() as f64);
         m.insert("lanes_poisoned".into(), self.lanes_poisoned as f64);
+        m.insert(
+            "expert_stats_unavailable".into(),
+            self.expert_stats_unavailable as f64,
+        );
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
         m.insert("d2h_bytes".into(), xfer.d2h_bytes as f64);
@@ -975,6 +1085,14 @@ impl EngineBackend for Engine<'_> {
 
     fn stats(&self) -> BTreeMap<String, f64> {
         Engine::stats(self)
+    }
+
+    fn take_expert_counts(&mut self) -> Option<Vec<Vec<u64>>> {
+        if self.counts_idx_step.is_none() && self.counts_idx_prefill.is_none()
+        {
+            return None;
+        }
+        Some(std::mem::take(&mut self.expert_counts))
     }
 }
 

@@ -143,6 +143,14 @@ impl Journal {
         inner.seq
     }
 
+    /// Events evicted from the ring (dropped from any future flush).
+    /// Non-zero means a flushed trace is truncated — `/metrics` exposes
+    /// this so an operator can size the ring before relying on a trace,
+    /// and replay refuses truncated traces outright.
+    pub fn dropped_events(&self) -> u64 {
+        self.inner.lock().unwrap().evicted
+    }
+
     /// The event stream alone (no header), one compact JSON object per
     /// line.  This is the byte stream replay diffs.
     pub fn events_jsonl(&self) -> String {
@@ -167,6 +175,7 @@ impl Journal {
         fields.push(("schema".to_string(), json::s(TRACE_SCHEMA)));
         fields.push(("events".to_string(), json::num(inner.lines.len() as f64)));
         fields.push(("evicted".to_string(), json::num(inner.evicted as f64)));
+        fields.push(("truncated".to_string(), Json::Bool(inner.evicted > 0)));
         Json::Obj(fields.into_iter().collect())
     }
 
@@ -289,8 +298,10 @@ mod tests {
         }
         assert_eq!(j.len(), 2);
         assert_eq!(j.total_recorded(), 5);
+        assert_eq!(j.dropped_events(), 3);
         let h = j.header_json();
         assert_eq!(h.get("evicted").unwrap().as_f64().unwrap(), 3.0);
+        assert!(h.get("truncated").unwrap().as_bool().unwrap());
         // the survivors are the two newest
         assert!(j.events_jsonl().contains("\"seq\":4"));
         assert!(!j.events_jsonl().contains("\"seq\":0"));
@@ -313,6 +324,8 @@ mod tests {
             trace.header.get("seed").unwrap().as_f64().unwrap(),
             42.0
         );
+        // a complete (non-evicting) journal flushes an untruncated trace
+        assert!(!trace.header.get("truncated").unwrap().as_bool().unwrap());
         assert_eq!(trace.event_lines.len(), 2);
         assert_eq!(trace.events_jsonl(), j.events_jsonl());
         // wrong schema is refused

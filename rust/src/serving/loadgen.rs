@@ -27,6 +27,7 @@ use crate::serving::mock::{MockBackend, MockFault};
 use crate::serving::router::{self, RouterCfg};
 use crate::serving::scheduler::Histogram;
 use crate::serving::server::{self, ServerConfig};
+use crate::serving::telemetry;
 
 /// Prompt-length distribution of the synthetic plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +97,10 @@ pub struct LoadgenCfg {
     /// the scheduler's prompt-cost unit).  Live runs measure whatever
     /// the server at `--addr` is running.
     pub prefill_chunk: usize,
+    /// Dry-run only: run the mock fleet with request-lifecycle +
+    /// expert telemetry (the production default).  The off position
+    /// exists for the A/B row that prices always-on telemetry.
+    pub telemetry: bool,
 }
 
 impl Default for LoadgenCfg {
@@ -116,6 +121,7 @@ impl Default for LoadgenCfg {
             timeout: Duration::from_secs(120),
             keep_alive: false,
             prefill_chunk: 16,
+            telemetry: true,
         }
     }
 }
@@ -516,6 +522,125 @@ pub fn fetch_metrics(addr: &SocketAddr) -> Result<Json> {
     .map_err(Error::from)
 }
 
+/// Fetch the Prometheus text exposition (`GET /metrics?format=prom`).
+/// Returns the raw body so callers can parse/assert exposition shape
+/// (the CI smoke does) or hand it to an actual scraper.
+pub fn fetch_metrics_prom(addr: &SocketAddr) -> Result<String> {
+    let stream =
+        TcpStream::connect_timeout(addr, Duration::from_secs(5))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(
+        format!(
+            "GET /metrics?format=prom HTTP/1.1\r\nHost: {addr}\r\n\
+             Connection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    )?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    if status != 200 {
+        return Err(Error::Serving(format!(
+            "/metrics?format=prom answered {status}"
+        )));
+    }
+    let ctype = header(&headers, "content-type").unwrap_or("");
+    if !ctype.starts_with("text/plain") {
+        return Err(Error::Serving(format!(
+            "prom exposition content-type {ctype:?}"
+        )));
+    }
+    let len: usize = header(&headers, "content-length")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| Error::Serving("missing content-length".into()))?;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|_| Error::Serving("non-utf8 prom exposition".into()))
+}
+
+/// Plain `GET <path>` returning (status, body) without judging the
+/// status — trace lookups legitimately 404 for evicted ids.
+pub fn fetch_path(
+    addr: &SocketAddr,
+    path: &str,
+) -> Result<(u16, String)> {
+    let stream =
+        TcpStream::connect_timeout(addr, Duration::from_secs(5))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(
+        format!(
+            "GET {path} HTTP/1.1\r\nHost: {addr}\r\n\
+             Connection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    )?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = read_head(&mut r)?;
+    let len: usize = header(&headers, "content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let body = String::from_utf8(buf)
+        .map_err(|_| Error::Serving("non-utf8 response body".into()))?;
+    Ok((status, body))
+}
+
+/// Flatten the server's `experts` / `stages` metrics sections into
+/// top-level bench-row columns, so BENCH_serve.json diffs surface
+/// routing collapse or stage-latency regressions without digging
+/// through the embedded `server_metrics` document.
+fn telemetry_columns(server_metrics: &Json) -> Vec<(&'static str, Json)> {
+    let mut cols = Vec::new();
+    if let Some(layers) = server_metrics
+        .opt("experts")
+        .and_then(|e| e.opt("fleet"))
+        .and_then(|f| f.opt("layers"))
+        .and_then(|l| l.as_arr().ok())
+        .filter(|l| !l.is_empty())
+    {
+        let get = |row: &Json, key: &str| {
+            row.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+        };
+        let selections: f64 =
+            layers.iter().map(|r| get(r, "tokens_k")).sum();
+        let imbalance = layers
+            .iter()
+            .map(|r| get(r, "imbalance"))
+            .fold(0.0f64, f64::max);
+        let entropy = layers
+            .iter()
+            .map(|r| get(r, "entropy"))
+            .fold(f64::INFINITY, f64::min);
+        let dead: f64 = layers.iter().map(|r| get(r, "dead_experts")).sum();
+        cols.push(("expert_selections", json::num(selections)));
+        cols.push(("expert_imbalance_max", json::num(imbalance)));
+        cols.push((
+            "expert_entropy_min",
+            json::num(if entropy.is_finite() { entropy } else { 0.0 }),
+        ));
+        cols.push(("expert_dead", json::num(dead)));
+    }
+    if let Some(stages) = server_metrics.opt("stages") {
+        for (col, section) in [
+            ("server_queue_wait_p99_ms", "queue_wait"),
+            ("server_ttft_p99_ms", "ttft"),
+            ("server_inter_token_p99_ms", "inter_token"),
+        ] {
+            if let Some(v) = stages
+                .opt(section)
+                .and_then(|h| h.opt("p99_ms"))
+                .and_then(|v| v.as_f64().ok())
+            {
+                cols.push((col, json::num(v)));
+            }
+        }
+    }
+    cols
+}
+
 /// Execute the open-loop plan against a live server; returns one
 /// `BENCH_serve.json` result row.
 pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
@@ -598,7 +723,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
             ])
         })
         .collect();
-    Ok(json::obj(vec![
+    let mut fields = vec![
         ("mode", json::s(mode)),
         ("requests", json::num(n as f64)),
         ("target_rps", json::num(cfg.rps)),
@@ -616,8 +741,10 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         ("latency", latency.to_json()),
         ("ttft", ttft.to_json()),
         ("ttft_by_prompt_len", json::arr(ttft_rows)),
-        ("server_metrics", server_metrics),
-    ]))
+    ];
+    fields.extend(telemetry_columns(&server_metrics));
+    fields.push(("server_metrics", server_metrics));
+    Ok(json::obj(fields))
 }
 
 /// Run `f` against an in-process HTTP server over the device-free
@@ -732,20 +859,56 @@ pub fn dry_run(
     lanes: usize,
     engines: usize,
 ) -> Result<Json> {
+    dry_run_with_prom(cfg, lanes, engines).map(|(row, _)| row)
+}
+
+/// [`dry_run`] plus a validated Prometheus scrape of the mock fleet's
+/// `/metrics?format=prom` taken after the plan completes.  The scrape
+/// is checked with [`telemetry::validate_prom`] — when telemetry is on,
+/// the stage and expert families must be present *and populated*, so a
+/// device-free CI run proves the whole exposition path end to end.
+pub fn dry_run_with_prom(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<(Json, String)> {
     let server_cfg = ServerConfig {
         vocab: Some(cfg.vocab),
         prefill_chunk: cfg.prefill_chunk.max(1),
+        telemetry: cfg.telemetry,
         ..Default::default()
     };
     let engines = engines.max(1);
-    let mut row = with_mock_fleet(
+    let (mut row, prom) = with_mock_fleet(
         lanes,
         cfg.vocab,
         DRY_RUN_STEP_DELAY,
         server_cfg,
         RouterCfg { engines, ..Default::default() },
         &[],
-        |addr| run(addr, cfg, "mock-dry-run"),
+        |addr| {
+            let row = run(addr, cfg, "mock-dry-run")?;
+            let require: &[&str] = if cfg.telemetry {
+                &["sigma_moe_stage_", "sigma_moe_experts_"]
+            } else {
+                &[]
+            };
+            // expert counts drain on the drivers' publish cadence, so
+            // the scrape may land just before the final drain — retry
+            // briefly rather than flake
+            let mut prom = fetch_metrics_prom(&addr)?;
+            let mut verdict = telemetry::validate_prom(&prom, require);
+            for _ in 0..40 {
+                if verdict.is_ok() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                prom = fetch_metrics_prom(&addr)?;
+                verdict = telemetry::validate_prom(&prom, require);
+            }
+            verdict?;
+            Ok((row, prom))
+        },
     )?;
     if let Json::Obj(m) = &mut row {
         m.insert("engines".into(), json::num(engines as f64));
@@ -753,8 +916,38 @@ pub fn dry_run(
             "prefill_chunk".into(),
             json::num(cfg.prefill_chunk.max(1) as f64),
         );
+        m.insert("telemetry".into(), Json::Bool(cfg.telemetry));
     }
-    Ok(row)
+    Ok((row, prom))
+}
+
+/// The telemetry A/B pair: the same dry-run plan with telemetry on and
+/// off, plus the relative throughput cost.  Always-on observability is
+/// only "always-on" if this stays small; the row makes the price a
+/// tracked number instead of folklore.
+pub fn dry_run_telemetry_ab(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<Json> {
+    let on = dry_run(&LoadgenCfg { telemetry: true, ..cfg.clone() }, lanes, engines)?;
+    let off = dry_run(&LoadgenCfg { telemetry: false, ..cfg.clone() }, lanes, engines)?;
+    let tps = |row: &Json| {
+        row.opt("tokens_per_sec")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let (t_on, t_off) = (tps(&on), tps(&off));
+    let overhead = if t_off > 0.0 { 1.0 - t_on / t_off } else { 0.0 };
+    Ok(json::obj(vec![
+        ("mode", json::s("mock-dry-run-telemetry-ab")),
+        ("engines", json::num(engines.max(1) as f64)),
+        ("tokens_per_sec_on", json::num(t_on)),
+        ("tokens_per_sec_off", json::num(t_off)),
+        ("telemetry_overhead_frac", json::num(overhead)),
+        ("on", on),
+        ("off", off),
+    ]))
 }
 
 #[cfg(test)]

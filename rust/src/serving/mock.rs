@@ -65,6 +65,31 @@ pub enum MockFault {
 /// router `error_threshold`, so the quarantine/failover path runs).
 pub const RESTART_ERRORS: u64 = 6;
 
+/// σ-MoE layers the mock's synthetic router reports.
+pub const MOCK_EXPERT_LAYERS: usize = 2;
+/// Experts per layer in the synthetic router.
+pub const MOCK_EXPERTS: usize = 8;
+/// Experts selected per token per layer (the mock's top-K).
+pub const MOCK_TOP_K: usize = 2;
+
+/// The mock's synthetic σ-MoE router: token value `t` at layer `l`
+/// selects experts `(t + 7l) % NE` and `(t + 13l + 3) % NE` (distinct
+/// for NE = 8: their difference `6l + 3` is odd).  A pure function of
+/// the token values — not of scheduling — so per-request totals are
+/// identical across chunk widths and lane placements, which is what
+/// lets the chaos harness byte-diff expert metrics across replays.
+fn route_token(counts: &mut [Vec<u64>], t: i32) {
+    for (l, layer) in counts.iter_mut().enumerate() {
+        let ne = layer.len() as i64;
+        if ne == 0 {
+            continue;
+        }
+        let (t, l) = (t as i64, l as i64);
+        layer[(t + 7 * l).rem_euclid(ne) as usize] += 1;
+        layer[(t + 13 * l + 3).rem_euclid(ne) as usize] += 1;
+    }
+}
+
 struct MockLane {
     prompt_left: usize,
     generated: Vec<i32>,
@@ -113,6 +138,10 @@ pub struct MockBackend {
     /// pumps still erroring while a [`MockFault::RestartAfter`]
     /// restart is in progress
     restart_down: u64,
+    /// synthetic per-layer expert selections since the last
+    /// [`EngineBackend::take_expert_counts`] drain:
+    /// `expert_counts[layer][expert]`
+    expert_counts: Vec<Vec<u64>>,
 }
 
 impl MockBackend {
@@ -132,6 +161,10 @@ impl MockBackend {
             prefill_tokens: 0,
             clock: WallClock::shared(),
             restart_down: 0,
+            expert_counts: vec![
+                vec![0; MOCK_EXPERTS];
+                MOCK_EXPERT_LAYERS
+            ],
         }
     }
 
@@ -322,6 +355,10 @@ impl EngineBackend for MockBackend {
                 // prompt phase: consume up to `chunk` tokens, emit
                 // nothing until the prompt drains
                 let k = lane.prompt_left.min(chunk);
+                let start = lane.prompt.len() - lane.prompt_left;
+                for &t in &lane.prompt[start..start + k] {
+                    route_token(&mut self.expert_counts, t);
+                }
                 lane.prompt_left -= k;
                 prompt_tokens += k as u64;
                 if lane.prompt_left > 0 {
@@ -335,6 +372,7 @@ impl EngineBackend for MockBackend {
                 lane.generated.len(),
                 self.vocab as usize,
             );
+            route_token(&mut self.expert_counts, tok);
             lane.generated.push(tok);
             self.tokens_generated += 1;
             let _ = lane.events.send(StreamEvent::Token(tok));
@@ -383,8 +421,20 @@ impl EngineBackend for MockBackend {
         );
         m.insert("prefill_tokens".into(), self.prefill_tokens as f64);
         m.insert("n_lanes".into(), self.lanes.len() as f64);
+        m.insert("expert_layers".into(), MOCK_EXPERT_LAYERS as f64);
+        m.insert("experts_per_layer".into(), MOCK_EXPERTS as f64);
         m.insert("mock".into(), 1.0);
         m
+    }
+
+    fn take_expert_counts(&mut self) -> Option<Vec<Vec<u64>>> {
+        // drain-and-zero (rather than `mem::take`) so the accumulator
+        // keeps its [layers][experts] shape for the next pump
+        let drained = self.expert_counts.clone();
+        for layer in self.expert_counts.iter_mut() {
+            layer.fill(0);
+        }
+        Some(drained)
     }
 }
 
@@ -666,6 +716,36 @@ mod tests {
         // all 10 prompt tokens (lane 0's 1 + lane 1's 9) flowed
         // through the chunked ingest accounting
         assert_eq!(b.prefill_tokens, 10);
+    }
+
+    #[test]
+    fn synthetic_router_counts_every_token_schedule_invariantly() {
+        // counts[layer][expert]: every consumed (prompt) and generated
+        // token selects MOCK_TOP_K experts per layer, and — because the
+        // router is a pure function of token values — the totals are
+        // identical across prefill chunk widths
+        let run = |chunk: usize| -> Vec<Vec<u64>> {
+            let mut b = MockBackend::new(2, 50).with_prefill_chunk(chunk);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(req(vec![3, 4, 5], 4), tx);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(req(vec![9], 2), tx);
+            while b.pump().unwrap() > 0 {}
+            b.take_expert_counts().expect("mock always observes routing")
+        };
+        let counts = run(1);
+        assert_eq!(counts.len(), MOCK_EXPERT_LAYERS);
+        let tokens = 3 + 4 + 1 + 2; // prompts + budgets, both requests
+        for layer in &counts {
+            assert_eq!(layer.len(), MOCK_EXPERTS);
+            let total: u64 = layer.iter().sum();
+            assert_eq!(total, (tokens * MOCK_TOP_K) as u64);
+        }
+        assert_eq!(counts, run(4), "routing must not depend on chunking");
+        // the drain zeroed the accumulator but kept its shape
+        let mut b = MockBackend::new(1, 10);
+        let first = b.take_expert_counts().unwrap();
+        assert_eq!(first, vec![vec![0; MOCK_EXPERTS]; MOCK_EXPERT_LAYERS]);
     }
 
     #[test]

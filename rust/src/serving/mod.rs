@@ -37,6 +37,13 @@
 //! * [`chaos`] — the seeded chaos + record/replay harness: the real
 //!   placer/engine steps, single-threaded on a [`SimClock`] over mock
 //!   fleets with fault storms; replays a recorded trace bit-for-bit.
+//! * [`telemetry`] — request-lifecycle spans (queued → placed →
+//!   prefill → first-token → terminal, with always-on per-stage
+//!   latency histograms and a sampled trace ring behind
+//!   `GET /v1/trace/<id>`), σ-MoE expert-utilization aggregation
+//!   (per-engine per-layer counts, load-imbalance, routing entropy,
+//!   dead experts), and the Prometheus text renderer behind
+//!   `GET /metrics?format=prom`.
 
 pub mod chaos;
 pub mod clock;
@@ -48,6 +55,7 @@ pub mod router;
 pub mod sampler;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 
 pub use chaos::{ChaosCfg, ChaosReport, ReplayOutcome};
 pub use clock::{Clock, SharedClock, SimClock, WallClock};
@@ -60,3 +68,4 @@ pub use router::{Fleet, Placement, RouterCfg};
 pub use sampler::Sampler;
 pub use scheduler::{Histogram, Policy, Rejection, Scheduler};
 pub use server::{Driver, ServerConfig};
+pub use telemetry::Telemetry;

@@ -52,6 +52,7 @@ use crate::serving::engine::{DropReason, EngineBackend, GenRequest, StreamEvent}
 use crate::serving::journal::Journal;
 use crate::serving::scheduler::{Policy, QueuedRequest, Scheduler};
 use crate::serving::server::{self, ServeState, ServerConfig};
+use crate::serving::telemetry::Telemetry;
 
 /// How the placer distributes admitted requests over healthy engines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -243,6 +244,10 @@ pub struct Fleet {
     /// Decision recorder (no-op in production; shared with the
     /// scheduler so the trace interleaves both layers' events).
     journal: Arc<Journal>,
+    /// Request-lifecycle spans + per-stage latency histograms + expert
+    /// utilization (always-on; shared with the scheduler, which records
+    /// the `queued` stage and its own drop terminals).
+    telemetry: Arc<Telemetry>,
     shutdown: Arc<AtomicBool>,
     /// Engines taken out of rotation (failure events).
     failovers: AtomicU64,
@@ -304,12 +309,14 @@ impl Fleet {
         journal: Arc<Journal>,
     ) -> Self {
         let n = cfg.engines.max(1);
+        let telemetry = Telemetry::new(clock.clone()).shared();
         Fleet {
             cfg,
             sched: Scheduler::new(queue_cap, policy)
                 .with_prefill_chunk(prefill_chunk)
                 .with_clock(clock.clone())
-                .with_journal(journal.clone()),
+                .with_journal(journal.clone())
+                .with_telemetry(telemetry.clone()),
             engines: (0..n).map(|_| EngineState::new()).collect(),
             registry: Mutex::new(BTreeMap::new()),
             retry_queue: Mutex::new(VecDeque::new()),
@@ -317,6 +324,7 @@ impl Fleet {
             started: clock.now(),
             clock,
             journal,
+            telemetry,
             shutdown,
             failovers: AtomicU64::new(0),
             requeues: AtomicU64::new(0),
@@ -383,6 +391,20 @@ impl Fleet {
     /// The fleet's decision journal.
     pub fn journal(&self) -> &Arc<Journal> {
         &self.journal
+    }
+
+    /// Replace the fleet's telemetry (ring size / sampling come from
+    /// the server config; the shared scheduler is re-pointed too so
+    /// both layers record into the same span registry).
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> Self {
+        self.sched = self.sched.with_telemetry(telemetry.clone());
+        self.telemetry = telemetry;
+        self
+    }
+
+    /// The fleet's span/stage/expert telemetry.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     fn now_ms(&self) -> u64 {
@@ -503,6 +525,7 @@ impl Fleet {
                 ("engine", json::num(target as f64)),
             ],
         );
+        self.telemetry.placed(id, Some(target));
         e.work.notify_all();
     }
 
@@ -532,6 +555,7 @@ impl Fleet {
                         "drop_deadline_post",
                         vec![("id", json::num(id as f64))],
                     );
+                    self.telemetry.terminal(id, "drop_deadline_post");
                     continue;
                 }
                 e.req.prompt.clone()
@@ -748,6 +772,7 @@ impl Fleet {
                 "retry_exhausted",
                 vec![("id", json::num(*id as f64))],
             );
+            self.telemetry.terminal(*id, "retry_exhausted");
         }
         self.retries_exhausted
             .fetch_add(exhausted.len() as u64, Ordering::Relaxed);
@@ -766,17 +791,23 @@ impl Fleet {
     /// Drop everything queued or in flight (shutdown, or no healthy
     /// engine left).
     fn drain_all(&self, reason: DropReason) {
+        let outcome = match reason {
+            DropReason::Shutdown => "drop_shutdown",
+            _ => "dropped",
+        };
         if matches!(reason, DropReason::Shutdown) {
             self.sched.drain_shutdown();
         } else {
             let now = self.clock.now();
             while let Some(q) = self.sched.take_next(now) {
                 let _ = q.events.send(StreamEvent::Dropped(reason));
+                self.telemetry.terminal(q.id, outcome);
             }
         }
         let drained = std::mem::take(&mut *self.registry.lock().unwrap());
-        for (_, e) in drained {
+        for (id, e) in drained {
             let _ = e.frontend.send(StreamEvent::Dropped(reason));
+            self.telemetry.terminal(id, outcome);
         }
         self.retry_queue.lock().unwrap().clear();
         for e in &self.engines {
@@ -843,10 +874,19 @@ impl Fleet {
         );
     }
 
-    fn publish(&self, id: usize, backend: &dyn EngineBackend) {
+    fn publish(&self, id: usize, backend: &mut dyn EngineBackend) {
         let mut stats = backend.stats();
         stats.insert("free_lanes".into(), backend.free_lanes() as f64);
         *self.engines[id].stats.lock().unwrap() = stats;
+        // drain the backend's per-layer expert-selection accumulator
+        // into the fleet-wide utilization aggregate (None: the backend
+        // cannot observe routing — dense artifact or pre-counts MoE)
+        match backend.take_expert_counts() {
+            Some(counts) => {
+                self.telemetry.record_expert_counts(id, &counts)
+            }
+            None => self.telemetry.note_expert_stats_unavailable(),
+        }
     }
 
     /// Relay one in-flight request's events from the backend channel to
@@ -870,6 +910,10 @@ impl Fleet {
                     }
                     match ev {
                         StreamEvent::Admitted => {
+                            // admission into a lane is where prompt
+                            // ingestion (prefill) begins — every
+                            // attempt marks its own segment
+                            self.telemetry.prefill_started(rid);
                             // only the first attempt's admission is the
                             // client's: a replay's Admitted would emit
                             // a second "admitted" stream event mid-
@@ -885,6 +929,7 @@ impl Fleet {
                                 e.skip_tokens -= 1;
                             } else {
                                 e.sent_tokens += 1;
+                                self.telemetry.token(rid);
                                 let _ =
                                     e.frontend.send(StreamEvent::Token(t));
                             }
@@ -908,6 +953,7 @@ impl Fleet {
                                     ),
                                 ],
                             );
+                            self.telemetry.terminal(rid, "done");
                             let _ =
                                 e.frontend.send(StreamEvent::Done(res));
                             return false;
@@ -921,6 +967,7 @@ impl Fleet {
                                     ("engine", json::num(engine as f64)),
                                 ],
                             );
+                            self.telemetry.terminal(rid, "dropped");
                             let _ =
                                 e.frontend.send(StreamEvent::Dropped(r));
                             return false;
@@ -1177,6 +1224,29 @@ impl Fleet {
         json::obj(vec![
             ("engine", engine_totals),
             ("engines", json::arr(rows)),
+            ("experts", self.telemetry.experts_json()),
+            ("stages", self.telemetry.stages_json()),
+            (
+                "journal",
+                json::obj(vec![
+                    (
+                        "enabled",
+                        Json::Bool(self.journal.is_enabled()),
+                    ),
+                    (
+                        "events_recorded",
+                        json::num(self.journal.total_recorded() as f64),
+                    ),
+                    (
+                        "dropped_events",
+                        json::num(self.journal.dropped_events() as f64),
+                    ),
+                    (
+                        "truncated",
+                        Json::Bool(self.journal.dropped_events() > 0),
+                    ),
+                ]),
+            ),
             (
                 "router",
                 json::obj(vec![
@@ -1275,6 +1345,10 @@ impl ServeState for FleetState {
         self.fleet.clock()
     }
 
+    fn telemetry(&self) -> &Arc<Telemetry> {
+        self.fleet.telemetry()
+    }
+
     fn metrics_json(&self) -> Json {
         let fleet = self.fleet.fleet_json();
         let mut doc: BTreeMap<String, Json> = match fleet {
@@ -1323,13 +1397,22 @@ pub fn serve_fleet<F>(
 where
     F: Fn(usize, &Fleet) -> Result<()> + Send + Sync,
 {
-    let fleet = Arc::new(Fleet::with_prefill_chunk(
+    let fleet = Fleet::with_prefill_chunk(
         rcfg,
         cfg.queue_cap,
         cfg.policy,
         shutdown.clone(),
         cfg.prefill_chunk,
-    ));
+    );
+    let telemetry = if cfg.telemetry {
+        Telemetry::new(fleet.clock().clone())
+            .with_ring_cap(cfg.trace_ring)
+            .with_sample_permille(cfg.span_sample_permille)
+            .shared()
+    } else {
+        Telemetry::disabled(fleet.clock().clone()).shared()
+    };
+    let fleet = Arc::new(fleet.with_telemetry(telemetry));
     let started = fleet.clock().now();
     let state = Arc::new(FleetState {
         cfg,

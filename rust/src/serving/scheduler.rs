@@ -22,6 +22,7 @@ use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, GenRequest, StreamEvent};
 use crate::serving::journal::Journal;
+use crate::serving::telemetry::Telemetry;
 
 /// Admission ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -185,6 +186,7 @@ impl Histogram {
             ("p50_ms", json::num(self.percentile(0.50) * ms)),
             ("p95_ms", json::num(self.percentile(0.95) * ms)),
             ("p99_ms", json::num(self.percentile(0.99) * ms)),
+            ("p999_ms", json::num(self.percentile(0.999) * ms)),
             ("max_ms", json::num(self.max_s * ms)),
         ])
     }
@@ -240,6 +242,11 @@ pub struct Scheduler {
     clock: SharedClock,
     /// Decision recorder (the disabled no-op journal in production).
     journal: Arc<Journal>,
+    /// Request-lifecycle span recorder (always-on in the server/fleet
+    /// paths; a disabled no-op by default).  The scheduler records the
+    /// `queued` stage and its own drop terminals; placement and token
+    /// stages are recorded by the router/driver layers.
+    telemetry: Arc<Telemetry>,
     inner: Mutex<Inner>,
     nonempty: Condvar,
 }
@@ -252,6 +259,7 @@ impl Scheduler {
             policy,
             prefill_chunk: AtomicUsize::new(1),
             journal: Arc::new(Journal::disabled(clock.clone())),
+            telemetry: Arc::new(Telemetry::disabled(clock.clone())),
             clock,
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
@@ -273,6 +281,20 @@ impl Scheduler {
     pub fn with_journal(mut self, journal: Arc<Journal>) -> Self {
         self.journal = journal;
         self
+    }
+
+    /// Attach a request-lifecycle telemetry recorder.  The scheduler
+    /// records span starts (`queued`) and its own drop terminals
+    /// (`drop_deadline`, `drop_dead`, `drop_shutdown`).
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> Self {
+        self.telemetry = telemetry;
+        self
+    }
+
+    /// The attached telemetry recorder (a disabled no-op unless
+    /// [`Scheduler::with_telemetry`] wired one in).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Cost prompts in prefill chunks of `c` tokens (the engine's
@@ -347,6 +369,7 @@ impl Scheduler {
                 ("prompt_len", json::num(prompt_len as f64)),
             ],
         );
+        self.telemetry.queued(id);
         self.nonempty.notify_all();
         Ok(id)
     }
@@ -365,6 +388,7 @@ impl Scheduler {
             inner.metrics.dropped_deadline += 1;
             self.journal
                 .record("drop_deadline", vec![("id", json::num(q.id as f64))]);
+            self.telemetry.terminal(q.id, "drop_deadline");
         }
     }
 
@@ -455,6 +479,7 @@ impl Scheduler {
                 inner.metrics.dropped_dead += 1;
                 self.journal
                     .record("drop_dead", vec![("id", json::num(q.id as f64))]);
+                self.telemetry.terminal(q.id, "drop_dead");
                 continue;
             }
             let wait = now.saturating_duration_since(q.enqueued_at);
@@ -492,6 +517,7 @@ impl Scheduler {
             inner.metrics.dropped_shutdown += 1;
             self.journal
                 .record("drop_shutdown", vec![("id", json::num(q.id as f64))]);
+            self.telemetry.terminal(q.id, "drop_shutdown");
         }
     }
 
@@ -808,15 +834,50 @@ mod tests {
         for ms in 1..=100u64 {
             h.observe(Duration::from_millis(ms));
         }
-        let (p50, p95, p99) =
-            (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
-        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99);
-        assert!(p99 <= h.max_secs() + 1e-9);
+        let (p50, p95, p99, p999) = (
+            h.percentile(0.5),
+            h.percentile(0.95),
+            h.percentile(0.99),
+            h.percentile(0.999),
+        );
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99 && p99 <= p999);
+        assert!(p999 <= h.max_secs() + 1e-9);
         // p50 of 1..=100ms must land within the right order of magnitude
         assert!((0.02..0.13).contains(&p50), "p50 {p50}");
         assert_eq!(h.count(), 100);
         let j = h.to_json();
         assert!(j.get("p95_ms").unwrap().as_f64().unwrap() >= 1.0);
+        // p999 is part of the serialized summary and brackets p99..max
+        let j999 = j.get("p999_ms").unwrap().as_f64().unwrap();
+        assert!(j999 >= j.get("p99_ms").unwrap().as_f64().unwrap());
+        assert!(j999 <= j.get("max_ms").unwrap().as_f64().unwrap() + 1e-6);
+    }
+
+    /// Property sweep: for any adversarial observation set, percentiles
+    /// stay monotone in p and bracketed by [0, max] — including p999.
+    #[test]
+    fn histogram_percentile_monotonicity_property() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![0.000_001],
+            vec![5.0; 17],
+            (1..=1000).map(|i| i as f64 * 1e-4).collect(),
+            (0..200).map(|i| 2f64.powi(i % 20) * 1e-6).collect(),
+            vec![0.0, 0.0, 1e3],
+        ];
+        for (ci, obs) in cases.iter().enumerate() {
+            let mut h = Histogram::new();
+            for &s in obs {
+                h.observe_secs(s);
+            }
+            let ps = [0.0, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0];
+            let vals: Vec<f64> =
+                ps.iter().map(|&p| h.percentile(p)).collect();
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12, "case {ci}: {vals:?}");
+            }
+            assert!(vals[ps.len() - 1] <= h.max_secs() + 1e-9);
+            assert!(vals[0] >= 0.0);
+        }
     }
 
     #[test]

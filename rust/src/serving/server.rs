@@ -39,6 +39,7 @@ use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{EngineBackend, GenRequest, StreamEvent};
 use crate::serving::sampler::Sampler;
 use crate::serving::scheduler::{Policy, Rejection, Scheduler};
+use crate::serving::telemetry::{self, Telemetry};
 
 const MAX_LINE: usize = 8 * 1024;
 const MAX_HEADERS: usize = 64;
@@ -76,6 +77,16 @@ pub struct ServerConfig {
     /// prefill dispatches instead of raw tokens.  1 = single-token
     /// prompt ingestion.
     pub prefill_chunk: usize,
+    /// Completed request spans kept for `GET /v1/trace/<id>` (a bounded
+    /// ring; stage histograms observe every request regardless).
+    pub trace_ring: usize,
+    /// Per-mille of request ids retained in the trace ring.  1000 (the
+    /// default) keeps every span, so `X-Request-Id` always resolves.
+    pub span_sample_permille: u64,
+    /// Request-lifecycle + expert telemetry.  On by default (the whole
+    /// point is always-on observability); the off switch exists so the
+    /// loadgen A/B bench can price it.
+    pub telemetry: bool,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +102,9 @@ impl Default for ServerConfig {
             keepalive_idle: Duration::from_secs(5),
             keepalive_max_requests: 128,
             prefill_chunk: 1,
+            trace_ring: telemetry::DEFAULT_RING_CAP,
+            span_sample_permille: 1000,
+            telemetry: true,
         }
     }
 }
@@ -100,6 +114,9 @@ impl Default for ServerConfig {
 pub struct HttpRequest {
     pub method: String,
     pub path: String,
+    /// Raw query string (after `?`, empty when absent) — `/metrics`
+    /// uses it for `format=prom`.
+    pub query: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -151,7 +168,10 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
             return Err(Error::Serving(format!("bad request line {line:?}")))
         }
     };
-    let path = target.split('?').next().unwrap_or("").to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
     let mut headers = Vec::new();
     loop {
         let Some(line) = read_line(r)? else {
@@ -168,7 +188,8 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
         };
         headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
-    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    let req =
+        HttpRequest { method, path, query, headers, body: Vec::new() };
     if req.header("transfer-encoding").is_some() {
         return Err(Error::Serving(
             "chunked request bodies not supported".into(),
@@ -237,12 +258,27 @@ pub fn http_response(
 
 /// Response head that opens a chunked stream.
 pub fn chunked_response_head(content_type: &str, close: bool) -> Vec<u8> {
-    format!(
+    chunked_response_head_with(content_type, close, &[])
+}
+
+/// [`chunked_response_head`] with extra response headers (e.g. the
+/// completion stream's `X-Request-Id`).
+pub fn chunked_response_head_with(
+    content_type: &str,
+    close: bool,
+    extra_headers: &[(&str, &str)],
+) -> Vec<u8> {
+    let mut out = format!(
         "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\n\
-         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n",
         conn_header(close)
     )
-    .into_bytes()
+    .into_bytes();
+    for (k, v) in extra_headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out
 }
 
 /// One chunk of a chunked transfer: `<hex len>\r\n<data>\r\n`.
@@ -399,6 +435,18 @@ pub(crate) trait ServeState: Send + Sync {
     /// Time source for request latency stamps (wall clock in
     /// production; the fleet's injected clock behind the router).
     fn clock(&self) -> &SharedClock;
+    /// Request-lifecycle span registry (trace lookups, stage
+    /// histograms, expert utilization).
+    fn telemetry(&self) -> &Arc<Telemetry>;
+    /// Whether the connection handlers should derive span stages
+    /// (prefill / tokens / terminal) from the event stream they relay.
+    /// True for the single-engine topology, where stream events flow
+    /// straight from the backend to the connection thread; false
+    /// behind the fleet router, whose relay records the same stages —
+    /// recording in both places would double-count tokens.
+    fn stream_observes_stages(&self) -> bool {
+        false
+    }
 }
 
 /// State shared between the accept loop, connection threads, and the
@@ -411,6 +459,7 @@ struct Shared {
     driver_dead: AtomicBool,
     started: Instant,
     clock: SharedClock,
+    telemetry: Arc<Telemetry>,
 }
 
 impl ServeState for Shared {
@@ -437,6 +486,14 @@ impl ServeState for Shared {
     fn clock(&self) -> &SharedClock {
         &self.clock
     }
+
+    fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    fn stream_observes_stages(&self) -> bool {
+        true
+    }
 }
 
 /// Handle passed to the engine-init closure on the driver thread; call
@@ -448,13 +505,24 @@ pub struct Driver {
 }
 
 impl Driver {
-    fn publish(&self, backend: &dyn EngineBackend) {
+    fn publish(&self, backend: &mut dyn EngineBackend) {
         let mut stats = backend.stats();
         stats.insert(
             "free_lanes".into(),
             backend.free_lanes() as f64,
         );
         *self.shared.engine_stats.lock().unwrap() = stats;
+        // drain the per-layer expert-selection accumulator into the
+        // telemetry aggregate (None: non-MoE / pre-counts artifact)
+        match backend.take_expert_counts() {
+            Some(counts) => self
+                .shared
+                .telemetry
+                .record_expert_counts(0, &counts),
+            None => {
+                self.shared.telemetry.note_expert_stats_unavailable()
+            }
+        }
     }
 
     /// The engine-driver loop: admit per policy while lanes are free,
@@ -475,7 +543,12 @@ impl Driver {
             sh.sched.expire(now);
             while backend.free_lanes() > 0 {
                 match sh.sched.take_next(now) {
-                    Some(q) => backend.submit_streaming(q.req, q.events),
+                    Some(q) => {
+                        // single-engine "placed": handed to the one
+                        // backend (no engine id to attribute)
+                        sh.telemetry.placed(q.id, None);
+                        backend.submit_streaming(q.req, q.events)
+                    }
                     None => break,
                 }
             }
@@ -515,16 +588,26 @@ where
     F: FnOnce(Driver) -> Result<()> + Send,
 {
     let clock = WallClock::shared();
+    let telemetry = if cfg.telemetry {
+        Telemetry::new(clock.clone())
+            .with_ring_cap(cfg.trace_ring)
+            .with_sample_permille(cfg.span_sample_permille)
+            .shared()
+    } else {
+        Telemetry::disabled(clock.clone()).shared()
+    };
     let shared = Arc::new(Shared {
         sched: Scheduler::new(cfg.queue_cap, cfg.policy)
             .with_prefill_chunk(cfg.prefill_chunk)
-            .with_clock(clock.clone()),
+            .with_clock(clock.clone())
+            .with_telemetry(telemetry.clone()),
         cfg,
         engine_stats: Mutex::new(BTreeMap::new()),
         shutdown,
         driver_dead: AtomicBool::new(false),
         started: clock.now(),
         clock,
+        telemetry,
     });
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {
@@ -640,12 +723,41 @@ fn route<S: ServeState>(
             close,
         ),
         ("GET", "/metrics") => {
-            write_json(w, 200, &sh.metrics_json(), &[], close)
+            let doc = sh.metrics_json();
+            // ?format=prom: the same registry rendered as Prometheus
+            // text exposition (JSON stays the default view)
+            if req.query.split('&').any(|kv| kv == "format=prom") {
+                let body = telemetry::render_prom(&doc);
+                w.write_all(&http_response(
+                    200,
+                    telemetry::PROM_CONTENT_TYPE,
+                    body.as_bytes(),
+                    &[("Connection", conn_header(close))],
+                ))
+            } else {
+                write_json(w, 200, &doc, &[], close)
+            }
+        }
+        ("GET", path) if path.starts_with("/v1/trace/") => {
+            let id = path["/v1/trace/".len()..].parse::<u64>().ok();
+            match id.and_then(|id| sh.telemetry().trace_json(id)) {
+                Some(doc) => write_json(w, 200, &doc, &[], close),
+                None => write_json(
+                    w,
+                    404,
+                    &err_json("unknown or evicted trace id"),
+                    &[],
+                    close,
+                ),
+            }
         }
         ("POST", "/v1/completions") => {
             handle_completion(w, &req.body, sh, close)
         }
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/completions") => {
+            write_json(w, 405, &err_json("method not allowed"), &[], close)
+        }
+        (_, path) if path.starts_with("/v1/trace/") => {
             write_json(w, 405, &err_json("method not allowed"), &[], close)
         }
         _ => write_json(w, 404, &err_json("not found"), &[], close),
@@ -663,7 +775,9 @@ fn metrics_document(sh: &Shared) -> Json {
     );
     json::obj(vec![
         ("engine", engine),
+        ("experts", sh.telemetry.experts_json()),
         ("scheduler", sh.sched.metrics_json()),
+        ("stages", sh.telemetry.stages_json()),
         (
             "server",
             json::obj(vec![
@@ -729,6 +843,15 @@ fn handle_completion<S: ServeState>(
     }
 }
 
+/// Record a span stage from the event stream, but only on topologies
+/// whose connection threads see the raw backend events (single-engine;
+/// the fleet's relay records these itself).
+fn observe_stage<S: ServeState>(sh: &S, f: impl FnOnce(&Telemetry)) {
+    if sh.stream_observes_stages() {
+        f(sh.telemetry());
+    }
+}
+
 /// Wait out a request's event stream and answer one JSON document.
 fn unary_completion<S: ServeState>(
     w: &mut TcpStream,
@@ -742,14 +865,20 @@ fn unary_completion<S: ServeState>(
     // queue_time misses the scheduler-queue wait (the engine only sees
     // a request once a lane is about to take it)
     let mut queue_ms: Option<f64> = None;
+    let rid = id.to_string();
+    let rid_hdr: &[(&str, &str)] = &[("X-Request-Id", rid.as_str())];
     loop {
         match rx.recv_timeout(TICK) {
             Ok(StreamEvent::Admitted) => {
+                observe_stage(sh, |t| t.prefill_started(id));
                 let waited = sh.clock().now().duration_since(t0);
                 queue_ms = Some(waited.as_secs_f64() * 1e3);
             }
-            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Token(_)) => {
+                observe_stage(sh, |t| t.token(id));
+            }
             Ok(StreamEvent::Done(res)) => {
+                observe_stage(sh, |t| t.terminal(id, "done"));
                 let e2e = sh.clock().now().duration_since(t0);
                 sh.sched().observe_completion(e2e, res.tokens.len());
                 let tokens =
@@ -766,14 +895,15 @@ fn unary_completion<S: ServeState>(
                     ),
                     ("run_ms", json::num(res.run_time.as_secs_f64() * 1e3)),
                 ]);
-                return write_json(w, 200, &body, &[], close);
+                return write_json(w, 200, &body, rid_hdr, close);
             }
             Ok(StreamEvent::Dropped(reason)) => {
+                observe_stage(sh, |t| t.terminal(id, "dropped"));
                 return write_json(
                     w,
                     503,
                     &err_json(reason.as_str()),
-                    &[],
+                    rid_hdr,
                     close,
                 );
             }
@@ -784,7 +914,7 @@ fn unary_completion<S: ServeState>(
                         w,
                         504,
                         &err_json("request timed out"),
-                        &[],
+                        rid_hdr,
                         close,
                     );
                 }
@@ -794,7 +924,7 @@ fn unary_completion<S: ServeState>(
                     w,
                     500,
                     &err_json("engine driver gone"),
-                    &[],
+                    rid_hdr,
                     close,
                 );
             }
@@ -812,7 +942,12 @@ fn stream_completion<S: ServeState>(
     sh: &S,
     close: bool,
 ) -> std::io::Result<()> {
-    w.write_all(&chunked_response_head("application/x-ndjson", close))?;
+    let rid = id.to_string();
+    w.write_all(&chunked_response_head_with(
+        "application/x-ndjson",
+        close,
+        &[("X-Request-Id", rid.as_str())],
+    ))?;
     let send_line = |w: &mut TcpStream, doc: &Json| -> std::io::Result<()> {
         let mut line = doc.to_string_compact().into_bytes();
         line.push(b'\n');
@@ -824,6 +959,7 @@ fn stream_completion<S: ServeState>(
     loop {
         match rx.recv_timeout(TICK) {
             Ok(StreamEvent::Admitted) => {
+                observe_stage(sh, |t| t.prefill_started(id));
                 let waited = sh.clock().now().duration_since(t0);
                 queue_ms = Some(waited.as_secs_f64() * 1e3);
                 send_line(
@@ -835,18 +971,21 @@ fn stream_completion<S: ServeState>(
                 )?;
             }
             Ok(StreamEvent::Token(t)) => {
+                observe_stage(sh, |tel| tel.token(id));
                 send_line(
                     w,
                     &json::obj(vec![("token", json::num(t as f64))]),
                 )?;
             }
             Ok(StreamEvent::Done(res)) => {
+                observe_stage(sh, |t| t.terminal(id, "done"));
                 let e2e = sh.clock().now().duration_since(t0);
                 sh.sched().observe_completion(e2e, res.tokens.len());
                 send_line(
                     w,
                     &json::obj(vec![
                         ("done", Json::Bool(true)),
+                        ("id", json::num(id as f64)),
                         ("tokens", json::num(res.tokens.len() as f64)),
                         (
                             "queue_ms",
@@ -863,6 +1002,7 @@ fn stream_completion<S: ServeState>(
                 return w.write_all(LAST_CHUNK);
             }
             Ok(StreamEvent::Dropped(reason)) => {
+                observe_stage(sh, |t| t.terminal(id, "dropped"));
                 send_line(
                     w,
                     &json::obj(vec![("error", json::s(reason.as_str()))]),
@@ -921,6 +1061,7 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query, "pretty=1");
         assert!(req.body.is_empty());
     }
 

@@ -1,0 +1,1494 @@
+//! Request-lifecycle spans + σ-MoE expert-utilization telemetry +
+//! Prometheus text exposition.
+//!
+//! Three always-on observability surfaces over the serving stack, all
+//! fed from sites the stack already passes through (no new event
+//! variants, no extra channel hops):
+//!
+//! * **Spans** — every request walks `queued → placed → prefill →
+//!   first_token → … → terminal`.  Stage transitions are recorded by
+//!   the scheduler (enqueue, drop sites), the router (dispatch, relay,
+//!   failover) and the single-engine driver; per-stage latency
+//!   [`Histogram`]s (queue-wait, placement, TTFT, inter-token gap) are
+//!   *always* observed, while full span retention for `GET
+//!   /v1/trace/<id>` is deterministically sampled into a bounded ring.
+//!   A failed-over request gets a second `placed` segment on its new
+//!   engine — never a second terminal.
+//! * **Expert utilization** — MoE artifacts append a per-layer
+//!   expert-selection count output to `step_fwd`/`prefill` (a pure
+//!   reduction of the router's top-K one-hot; logits are bit-for-bit
+//!   untouched).  Engines accumulate those counts here per engine per
+//!   layer; `/metrics` derives load-imbalance (max/mean), routing
+//!   entropy, and dead-expert counts — the signals the paper's
+//!   §6 balance analysis is built on.  Artifacts without the output
+//!   bump `expert_stats_unavailable` instead of failing.
+//! * **Prometheus exposition** — [`render_prom`] renders the whole
+//!   `/metrics` JSON document as `text/plain; version=0.0.4`.  JSON and
+//!   prom are two views of one registry: same numbers, stable
+//!   `sigma_moe_*` names, no duplicates (namespaces are split per
+//!   section and samples dedup through a `BTreeMap`).
+//!
+//! Everything here is deterministic under a [`SimClock`]: timestamps
+//! are `Clock::now_ms` (logical under simulation), maps are `BTreeMap`
+//! ordered, and span sampling hashes the request id rather than
+//! consulting an RNG — so the chaos harness can byte-diff telemetry
+//! the way it byte-diffs the journal.
+//!
+//! [`SimClock`]: super::clock::SimClock
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+use crate::serving::clock::{Clock, SharedClock};
+use crate::serving::scheduler::Histogram;
+
+/// Content-Type for the Prometheus text exposition format.
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Default span-ring capacity (terminal spans retained for
+/// `GET /v1/trace/<id>`).
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+/// Hard bound on concurrently *active* spans — far above any sane
+/// queue+lane population; a leak evicts the oldest instead of growing.
+const MAX_ACTIVE: usize = 1 << 16;
+
+/// Fibonacci-hash multiplier for deterministic span sampling.
+const SAMPLE_HASH: u64 = 0x9E37_79B9_7F4A_7C15;
+
+// ---------------------------------------------------------------- spans
+
+/// One placement of a request onto an engine.  Failover opens a new
+/// segment; a span's segment list is its placement history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanSegment {
+    /// Engine index; `None` in single-engine mode (no fleet placement).
+    pub engine: Option<usize>,
+    pub placed_ms: u64,
+    /// First engine-side activity (lane admission / prefill start).
+    pub prefill_ms: Option<u64>,
+}
+
+/// Terminal outcome of a span: the journal kind that ended it
+/// (`done`, `dropped`, `drop_deadline`, `drop_deadline_post`,
+/// `drop_dead`, `drop_shutdown`, `retry_exhausted`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanTerminal {
+    pub outcome: String,
+    pub t_ms: u64,
+}
+
+/// The lifecycle of one request, from admission to its single terminal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub id: u64,
+    pub queued_ms: u64,
+    pub segments: Vec<SpanSegment>,
+    pub first_token_ms: Option<u64>,
+    pub last_token_ms: Option<u64>,
+    pub tokens: u64,
+    pub terminal: Option<SpanTerminal>,
+}
+
+impl Span {
+    fn new(id: u64, queued_ms: u64) -> Self {
+        Span {
+            id,
+            queued_ms,
+            segments: Vec::new(),
+            first_token_ms: None,
+            last_token_ms: None,
+            tokens: 0,
+            terminal: None,
+        }
+    }
+
+    /// The flat, time-ordered stage list (the "span tree" `/v1/trace`
+    /// serves): queued, then per segment placed/prefill, then
+    /// first_token and the terminal.
+    pub fn to_json(&self) -> Json {
+        let mut stages = vec![json::obj(vec![
+            ("stage", json::s("queued")),
+            ("t_ms", json::num(self.queued_ms as f64)),
+        ])];
+        for seg in &self.segments {
+            let mut f = vec![
+                ("stage", json::s("placed")),
+                ("t_ms", json::num(seg.placed_ms as f64)),
+            ];
+            if let Some(e) = seg.engine {
+                f.push(("engine", json::num(e as f64)));
+            }
+            stages.push(json::obj(f));
+            if let Some(p) = seg.prefill_ms {
+                let mut f = vec![
+                    ("stage", json::s("prefill")),
+                    ("t_ms", json::num(p as f64)),
+                ];
+                if let Some(e) = seg.engine {
+                    f.push(("engine", json::num(e as f64)));
+                }
+                stages.push(json::obj(f));
+            }
+        }
+        if let Some(t) = self.first_token_ms {
+            stages.push(json::obj(vec![
+                ("stage", json::s("first_token")),
+                ("t_ms", json::num(t as f64)),
+            ]));
+        }
+        if let Some(term) = &self.terminal {
+            stages.push(json::obj(vec![
+                ("stage", json::s("terminal")),
+                ("outcome", json::s(&term.outcome)),
+                ("t_ms", json::num(term.t_ms as f64)),
+            ]));
+        }
+        let mut fields = vec![
+            ("id", json::num(self.id as f64)),
+            ("queued_ms", json::num(self.queued_ms as f64)),
+            ("tokens", json::num(self.tokens as f64)),
+            ("placements", json::num(self.segments.len() as f64)),
+            ("complete", Json::Bool(self.terminal.is_some())),
+            ("stages", json::arr(stages)),
+        ];
+        if let Some(t) = self.first_token_ms {
+            fields.push((
+                "ttft_ms",
+                json::num(t.saturating_sub(self.queued_ms) as f64),
+            ));
+        }
+        if let Some(term) = &self.terminal {
+            fields.push((
+                "e2e_ms",
+                json::num(term.t_ms.saturating_sub(self.queued_ms) as f64),
+            ));
+            fields.push(("outcome", json::s(&term.outcome)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Journal kinds that terminate a span.  Exactly one of these per
+/// request; failover re-placement must never synthesize a second one.
+pub const TERMINAL_KINDS: [&str; 7] = [
+    "done",
+    "dropped",
+    "drop_deadline",
+    "drop_deadline_post",
+    "drop_dead",
+    "drop_shutdown",
+    "retry_exhausted",
+];
+
+fn is_terminal_kind(kind: &str) -> bool {
+    TERMINAL_KINDS.contains(&kind)
+}
+
+/// Derive well-formed spans from a journal event stream (the NDJSON
+/// lines of a trace).  Enforces the span invariants — monotone stage
+/// timestamps within a span, at most one terminal per request, no
+/// lifecycle events after the terminal — and errors on any violation,
+/// so replay tooling can refuse a corrupt trace instead of rendering
+/// nonsense.  Events without a request `id` (heartbeats, pumps,
+/// quarantines, failovers) are skipped; `place` after a `retry` opens
+/// a new segment (the failover re-placement).
+pub fn spans_from_events(lines: &[String]) -> Result<Vec<Span>> {
+    let mut spans: BTreeMap<u64, Span> = BTreeMap::new();
+    let mut last_ms: BTreeMap<u64, u64> = BTreeMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let ev = Json::parse(line).map_err(|e| {
+            Error::Serving(format!("bad journal event on line {}: {e}", i + 1))
+        })?;
+        let kind = match ev.opt("kind").and_then(|k| k.as_str().ok()) {
+            Some(k) => k.to_string(),
+            None => continue,
+        };
+        let id = match ev.opt("id").and_then(|v| v.as_f64().ok()) {
+            Some(n) if n >= 0.0 => n as u64,
+            _ => continue, // engine-scoped event (beat/pump/quarantine/…)
+        };
+        let t_ms = ev
+            .opt("t_ms")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0) as u64;
+        // a ring-evicted prefix means a span can first appear mid-life
+        let span = spans
+            .entry(id)
+            .or_insert_with(|| Span::new(id, t_ms));
+        if let Some(term) = &span.terminal {
+            return Err(Error::Serving(format!(
+                "request {id}: event {kind:?} at t={t_ms}ms after \
+                 terminal {:?} at t={}ms",
+                term.outcome, term.t_ms
+            )));
+        }
+        let prev = last_ms.get(&id).copied().unwrap_or(span.queued_ms);
+        if t_ms < prev {
+            return Err(Error::Serving(format!(
+                "request {id}: event {kind:?} at t={t_ms}ms is earlier \
+                 than the previous stage at t={prev}ms"
+            )));
+        }
+        last_ms.insert(id, t_ms);
+        match kind.as_str() {
+            "admit" => span.queued_ms = t_ms,
+            "take" => {
+                // single-engine placement (a fleet journal follows the
+                // take with a "place" carrying the engine id)
+                span.segments.push(SpanSegment {
+                    engine: None,
+                    placed_ms: t_ms,
+                    prefill_ms: None,
+                });
+            }
+            "place" => {
+                let engine = ev
+                    .opt("engine")
+                    .and_then(|v| v.as_f64().ok())
+                    .map(|n| n as usize);
+                match span.segments.last_mut() {
+                    // fill in the engine on the segment the preceding
+                    // "take" opened (same placement, two records)
+                    Some(seg)
+                        if seg.engine.is_none()
+                            && seg.prefill_ms.is_none() =>
+                    {
+                        seg.engine = engine;
+                        seg.placed_ms = t_ms;
+                    }
+                    _ => span.segments.push(SpanSegment {
+                        engine,
+                        placed_ms: t_ms,
+                        prefill_ms: None,
+                    }),
+                }
+            }
+            "retry" => {} // requeued; the next "place" opens a segment
+            k if is_terminal_kind(k) => {
+                if k == "done" {
+                    if let Some(n) =
+                        ev.opt("tokens").and_then(|v| v.as_f64().ok())
+                    {
+                        span.tokens = n as u64;
+                    }
+                }
+                span.terminal = Some(SpanTerminal {
+                    outcome: kind.clone(),
+                    t_ms,
+                });
+            }
+            _ => {}
+        }
+    }
+    Ok(spans.into_values().collect())
+}
+
+// ------------------------------------------------------------ telemetry
+
+struct TelInner {
+    active: BTreeMap<u64, Span>,
+    /// Terminal spans retained for `/v1/trace/<id>` (sampled ring).
+    done: VecDeque<Span>,
+    /// queued → placed (first placement only; failover re-placements
+    /// are router internals, not client-visible queue wait)
+    queue_wait: Histogram,
+    /// placed → prefill start (engine admission latency)
+    placement: Histogram,
+    /// queued → first token (the client-visible TTFT)
+    ttft: Histogram,
+    /// token → next token gap (steady-state decode cadence)
+    inter_token: Histogram,
+    /// spans evicted from the ring (so a missing trace id is
+    /// distinguishable from one that was never recorded)
+    spans_evicted: u64,
+}
+
+/// Always-on request-lifecycle + expert-utilization recorder, shared by
+/// the scheduler, the router/driver threads, and the HTTP frontend.
+///
+/// All recording methods are cheap (one short mutex hold) and total
+/// no-ops on a [`Telemetry::disabled`] instance, mirroring the
+/// [`Journal`](super::journal::Journal) discipline.
+pub struct Telemetry {
+    enabled: bool,
+    clock: SharedClock,
+    ring_cap: usize,
+    /// Per-mille of request ids whose full span is retained in the
+    /// ring (histograms observe every request regardless).  1000 keeps
+    /// everything — the default, so `X-Request-Id` always resolves.
+    sample_permille: u64,
+    inner: Mutex<TelInner>,
+    /// engine id → per-layer per-expert token counts.
+    experts: Mutex<BTreeMap<usize, Vec<Vec<u64>>>>,
+    /// Pumps on artifacts without the expert-counts output (dense /
+    /// topk / pkm presets, or pre-telemetry artifacts).
+    unavailable: AtomicU64,
+}
+
+impl Telemetry {
+    pub fn new(clock: SharedClock) -> Self {
+        Telemetry {
+            enabled: true,
+            clock,
+            ring_cap: DEFAULT_RING_CAP,
+            sample_permille: 1000,
+            inner: Mutex::new(TelInner {
+                active: BTreeMap::new(),
+                done: VecDeque::new(),
+                queue_wait: Histogram::new(),
+                placement: Histogram::new(),
+                ttft: Histogram::new(),
+                inter_token: Histogram::new(),
+                spans_evicted: 0,
+            }),
+            experts: Mutex::new(BTreeMap::new()),
+            unavailable: AtomicU64::new(0),
+        }
+    }
+
+    /// A no-op recorder: every method returns before touching a lock.
+    pub fn disabled(clock: SharedClock) -> Self {
+        let mut t = Telemetry::new(clock);
+        t.enabled = false;
+        t
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Span-ring capacity (terminal spans kept for `/v1/trace/<id>`).
+    pub fn with_ring_cap(mut self, cap: usize) -> Self {
+        self.ring_cap = cap.max(1);
+        self
+    }
+
+    /// Per-mille of request ids retained in the span ring (histograms
+    /// are unaffected).  Clamped to [0, 1000].
+    pub fn with_sample_permille(mut self, pm: u64) -> Self {
+        self.sample_permille = pm.min(1000);
+        self
+    }
+
+    pub fn shared(self) -> Arc<Telemetry> {
+        Arc::new(self)
+    }
+
+    /// Deterministic id-hash sampling: no RNG, so simulated runs that
+    /// assign the same ids retain the same spans.
+    fn sampled(&self, id: u64) -> bool {
+        id.wrapping_mul(SAMPLE_HASH) % 1000 < self.sample_permille
+    }
+
+    // -- span recording ------------------------------------------------
+
+    /// Request admitted by the scheduler.
+    pub fn queued(&self, id: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.active.len() >= MAX_ACTIVE {
+            let oldest = *inner.active.keys().next().unwrap();
+            inner.active.remove(&oldest);
+            inner.spans_evicted += 1;
+        }
+        inner.active.insert(id, Span::new(id, now));
+    }
+
+    /// Request handed to an engine (fleet `dispatch`, or the
+    /// single-engine driver's `take_next → submit`).  Failover
+    /// re-placement calls this again and opens a second segment.
+    pub fn placed(&self, id: u64, engine: Option<usize>) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(span) = inner.active.get_mut(&id) else {
+            return;
+        };
+        let first = span.segments.is_empty();
+        let queued_ms = span.queued_ms;
+        span.segments.push(SpanSegment {
+            engine,
+            placed_ms: now,
+            prefill_ms: None,
+        });
+        if first {
+            let wait = now.saturating_sub(queued_ms) as f64 / 1e3;
+            inner.queue_wait.observe_secs(wait);
+        }
+    }
+
+    /// Engine-side admission observed (the relay's `Admitted`, or the
+    /// lane actually starting prefill).
+    pub fn prefill_started(&self, id: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(span) = inner.active.get_mut(&id) else {
+            return;
+        };
+        let Some(seg) = span.segments.last_mut() else {
+            return;
+        };
+        if seg.prefill_ms.is_some() {
+            return;
+        }
+        seg.prefill_ms = Some(now);
+        let placed = seg.placed_ms;
+        let lat = now.saturating_sub(placed) as f64 / 1e3;
+        inner.placement.observe_secs(lat);
+    }
+
+    /// One generated token relayed to the client.
+    pub fn token(&self, id: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(span) = inner.active.get_mut(&id) else {
+            return;
+        };
+        span.tokens += 1;
+        match span.last_token_ms {
+            None => {
+                span.first_token_ms = Some(now);
+                let ttft =
+                    now.saturating_sub(span.queued_ms) as f64 / 1e3;
+                span.last_token_ms = Some(now);
+                inner.ttft.observe_secs(ttft);
+            }
+            Some(prev) => {
+                span.last_token_ms = Some(now);
+                let gap = now.saturating_sub(prev) as f64 / 1e3;
+                inner.inter_token.observe_secs(gap);
+            }
+        }
+    }
+
+    /// The request's single terminal (`done`, `dropped`,
+    /// `drop_deadline`, …).  Retires the span into the sampled ring.
+    pub fn terminal(&self, id: u64, outcome: &str) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.clock.now_ms();
+        let mut inner = self.inner.lock().unwrap();
+        let Some(mut span) = inner.active.remove(&id) else {
+            return;
+        };
+        span.terminal = Some(SpanTerminal {
+            outcome: outcome.to_string(),
+            t_ms: now,
+        });
+        if !self.sampled(id) {
+            return;
+        }
+        if inner.done.len() >= self.ring_cap {
+            inner.done.pop_front();
+            inner.spans_evicted += 1;
+        }
+        inner.done.push_back(span);
+    }
+
+    /// The span for `/v1/trace/<id>`: in-flight spans first, then the
+    /// retained ring (newest match wins).
+    pub fn trace_json(&self, id: u64) -> Option<Json> {
+        if !self.enabled {
+            return None;
+        }
+        let inner = self.inner.lock().unwrap();
+        if let Some(span) = inner.active.get(&id) {
+            return Some(span.to_json());
+        }
+        inner
+            .done
+            .iter()
+            .rev()
+            .find(|s| s.id == id)
+            .map(Span::to_json)
+    }
+
+    // -- expert utilization --------------------------------------------
+
+    /// Accumulate one pump's per-layer expert-selection counts
+    /// (`counts[layer][expert]` tokens routed) for `engine`.
+    pub fn record_expert_counts(&self, engine: usize, counts: &[Vec<u64>]) {
+        if !self.enabled || counts.is_empty() {
+            return;
+        }
+        let mut map = self.experts.lock().unwrap();
+        let acc = map.entry(engine).or_default();
+        if acc.len() < counts.len() {
+            acc.resize(counts.len(), Vec::new());
+        }
+        for (layer, row) in counts.iter().enumerate() {
+            let dst = &mut acc[layer];
+            if dst.len() < row.len() {
+                dst.resize(row.len(), 0);
+            }
+            for (e, &c) in row.iter().enumerate() {
+                dst[e] += c;
+            }
+        }
+    }
+
+    /// A pump produced no expert counts (non-MoE or pre-telemetry
+    /// artifact): the Rust-side fallback counter.
+    pub fn note_expert_stats_unavailable(&self) {
+        if self.enabled {
+            self.unavailable.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn expert_stats_unavailable(&self) -> u64 {
+        self.unavailable.load(Ordering::Relaxed)
+    }
+
+    // -- metrics documents ---------------------------------------------
+
+    /// The `stages` section of `/metrics`: always-on per-stage latency
+    /// histograms plus span-ring occupancy.
+    pub fn stages_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        json::obj(vec![
+            ("queue_wait", inner.queue_wait.to_json()),
+            ("placement", inner.placement.to_json()),
+            ("ttft", inner.ttft.to_json()),
+            ("inter_token", inner.inter_token.to_json()),
+            ("active_spans", json::num(inner.active.len() as f64)),
+            ("retained_spans", json::num(inner.done.len() as f64)),
+            ("spans_evicted", json::num(inner.spans_evicted as f64)),
+            (
+                "span_sample_permille",
+                json::num(self.sample_permille as f64),
+            ),
+        ])
+    }
+
+    /// The `experts` section of `/metrics`: raw per-engine per-layer
+    /// counts plus the derived balance signals (load-imbalance
+    /// max/mean, routing entropy in nats, dead-expert count), and a
+    /// fleet-level aggregate across engines.
+    pub fn experts_json(&self) -> Json {
+        let map = self.experts.lock().unwrap();
+        let mut engines: Vec<(String, Json)> = Vec::new();
+        let mut fleet: Vec<Vec<u64>> = Vec::new();
+        for (engine, layers) in map.iter() {
+            if fleet.len() < layers.len() {
+                fleet.resize(layers.len(), Vec::new());
+            }
+            for (l, row) in layers.iter().enumerate() {
+                if fleet[l].len() < row.len() {
+                    fleet[l].resize(row.len(), 0);
+                }
+                for (e, &c) in row.iter().enumerate() {
+                    fleet[l][e] += c;
+                }
+            }
+            engines.push((engine.to_string(), layers_json(layers)));
+        }
+        json::obj(vec![
+            (
+                "unavailable",
+                json::num(self.expert_stats_unavailable() as f64),
+            ),
+            (
+                "engines",
+                Json::Obj(engines.into_iter().collect()),
+            ),
+            ("fleet", layers_json(&fleet)),
+        ])
+    }
+}
+
+/// Render one engine's (or the fleet aggregate's) per-layer expert
+/// counts with the derived balance metrics.
+fn layers_json(layers: &[Vec<u64>]) -> Json {
+    let rows: Vec<Json> = layers
+        .iter()
+        .enumerate()
+        .map(|(l, row)| {
+            let d = ExpertBalance::of(row);
+            json::obj(vec![
+                ("layer", json::num(l as f64)),
+                (
+                    "counts",
+                    json::arr(
+                        row.iter().map(|&c| json::num(c as f64)).collect(),
+                    ),
+                ),
+                ("tokens_k", json::num(d.total as f64)),
+                ("imbalance", json::num(d.imbalance)),
+                ("entropy", json::num(d.entropy)),
+                ("dead_experts", json::num(d.dead as f64)),
+            ])
+        })
+        .collect();
+    json::obj(vec![("layers", json::arr(rows))])
+}
+
+/// Derived balance signals for one layer's expert-count row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpertBalance {
+    /// Total expert selections (tokens × K summed into the row).
+    pub total: u64,
+    /// max(count) / mean(count); 1.0 is perfectly balanced, `N_E` is
+    /// full collapse onto one expert.  0 when no tokens routed yet.
+    pub imbalance: f64,
+    /// Shannon entropy of the selection distribution in nats;
+    /// `ln(N_E)` is uniform, 0 is collapse.
+    pub entropy: f64,
+    /// Experts with zero selections.
+    pub dead: usize,
+}
+
+impl ExpertBalance {
+    pub fn of(counts: &[u64]) -> ExpertBalance {
+        let total: u64 = counts.iter().sum();
+        let dead = counts.iter().filter(|&&c| c == 0).count();
+        if total == 0 || counts.is_empty() {
+            return ExpertBalance {
+                total,
+                imbalance: 0.0,
+                entropy: 0.0,
+                dead,
+            };
+        }
+        let mean = total as f64 / counts.len() as f64;
+        let max = counts.iter().copied().max().unwrap_or(0) as f64;
+        let entropy = -counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                p * p.ln()
+            })
+            .sum::<f64>();
+        ExpertBalance {
+            total,
+            imbalance: max / mean,
+            entropy,
+            dead,
+        }
+    }
+}
+
+// ------------------------------------------------- prometheus rendering
+
+/// One metric family in the exposition: a TYPE plus samples keyed by
+/// their label string (the `BTreeMap` dedups and orders them).
+struct Family {
+    mtype: &'static str,
+    samples: BTreeMap<String, f64>,
+}
+
+#[derive(Default)]
+struct Registry {
+    families: BTreeMap<String, Family>,
+}
+
+impl Registry {
+    fn put(&mut self, name: &str, labels: &str, mtype: &'static str, v: f64) {
+        let fam = self
+            .families
+            .entry(sanitize(name))
+            .or_insert_with(|| Family {
+                mtype,
+                samples: BTreeMap::new(),
+            });
+        fam.samples.insert(labels.to_string(), v);
+    }
+
+    fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in &self.families {
+            out.push_str(&format!("# TYPE {name} {}\n", fam.mtype));
+            for (labels, v) in &fam.samples {
+                // `_sum` / `_count` series of a summary carry their
+                // suffix inside the label key (see `put_histogram`)
+                let (suffix, labels) = match labels.strip_prefix('!') {
+                    Some(rest) => {
+                        let (sfx, l) =
+                            rest.split_once('|').unwrap_or((rest, ""));
+                        (format!("_{sfx}"), l.to_string())
+                    }
+                    None => (String::new(), labels.clone()),
+                };
+                out.push_str(&format!("{name}{suffix}{labels} "));
+                out.push_str(&fmt_value(*v));
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }
+        })
+        .collect()
+}
+
+fn label_set(pairs: &[(&str, String)]) -> String {
+    if pairs.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", sanitize(k), v))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Is this JSON object one of our [`Histogram::to_json`] summaries?
+fn is_histogram_obj(v: &Json) -> bool {
+    v.opt("count").is_some()
+        && v.opt("p50_ms").is_some()
+        && v.opt("max_ms").is_some()
+}
+
+/// Emit a [`Histogram::to_json`] object as a prom summary (quantile
+/// values converted ms → seconds, per prom convention).
+fn put_histogram(reg: &mut Registry, name: &str, labels: &[(&str, String)], h: &Json) {
+    let getf = |k: &str| h.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    let count = getf("count");
+    for (q, key) in [
+        ("0.5", "p50_ms"),
+        ("0.95", "p95_ms"),
+        ("0.99", "p99_ms"),
+        ("0.999", "p999_ms"),
+        ("1", "max_ms"),
+    ] {
+        if h.opt(key).is_none() {
+            continue;
+        }
+        let mut l = labels.to_vec();
+        l.push(("quantile", q.to_string()));
+        reg.put(name, &label_set(&l), "summary", getf(key) / 1e3);
+    }
+    let base = label_set(labels);
+    // '!' prefix smuggles the _sum/_count suffix past the label key
+    reg.put(
+        name,
+        &format!("!sum|{base}"),
+        "summary",
+        getf("mean_ms") / 1e3 * count,
+    );
+    reg.put(name, &format!("!count|{base}"), "summary", count);
+}
+
+/// Flatten one level of scalar fields from a JSON object into
+/// `<prefix>_<key>` gauges; histogram-shaped sub-objects become
+/// summaries; strings become `<prefix>_info{<key>="v"} 1`.
+fn put_section(
+    reg: &mut Registry,
+    prefix: &str,
+    labels: &[(&str, String)],
+    obj: &Json,
+) {
+    let Ok(map) = obj.as_obj() else { return };
+    for (k, v) in map {
+        let name = format!("{prefix}_{k}");
+        match v {
+            Json::Num(n) => reg.put(&name, &label_set(labels), "gauge", *n),
+            Json::Bool(b) => reg.put(
+                &name,
+                &label_set(labels),
+                "gauge",
+                if *b { 1.0 } else { 0.0 },
+            ),
+            Json::Str(s) => {
+                let mut l = labels.to_vec();
+                l.push((k.as_str(), s.clone()));
+                reg.put(
+                    &format!("{prefix}_info"),
+                    &label_set(&l),
+                    "gauge",
+                    1.0,
+                );
+            }
+            Json::Obj(_) if is_histogram_obj(v) => {
+                put_histogram(reg, &name, labels, v);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Emit one `layers` expert document (from [`layers_json`]) under
+/// `prefix` with `labels`.
+fn put_expert_layers(
+    reg: &mut Registry,
+    prefix: &str,
+    labels: &[(&str, String)],
+    doc: &Json,
+) {
+    let Some(layers) = doc.opt("layers").and_then(|l| l.as_arr().ok())
+    else {
+        return;
+    };
+    for row in layers {
+        let layer = row
+            .opt("layer")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        let mut l = labels.to_vec();
+        l.push(("layer", fmt_value(layer)));
+        if let Some(counts) = row.opt("counts").and_then(|c| c.as_arr().ok())
+        {
+            for (e, c) in counts.iter().enumerate() {
+                let mut le = l.clone();
+                le.push(("expert", e.to_string()));
+                reg.put(
+                    &format!("{prefix}_tokens_total"),
+                    &label_set(&le),
+                    "counter",
+                    c.as_f64().unwrap_or(0.0),
+                );
+            }
+        }
+        for key in ["imbalance", "entropy", "dead_experts", "tokens_k"] {
+            if let Some(v) = row.opt(key).and_then(|v| v.as_f64().ok()) {
+                reg.put(
+                    &format!("{prefix}_{key}"),
+                    &label_set(&l),
+                    "gauge",
+                    v,
+                );
+            }
+        }
+    }
+}
+
+/// Render a `/metrics` JSON document (single-engine or fleet) in the
+/// Prometheus text exposition format.  Stable names under the
+/// `sigma_moe_` prefix; per-section namespaces guarantee no duplicate
+/// families, and the registry's `BTreeMap`s make the byte stream
+/// deterministic for a given document.
+pub fn render_prom(doc: &Json) -> String {
+    let mut reg = Registry::default();
+    if let Some(v) = doc.opt("engine") {
+        put_section(&mut reg, "sigma_moe_fleet", &[], v);
+    }
+    if let Some(rows) = doc.opt("engines").and_then(|v| v.as_arr().ok()) {
+        for row in rows {
+            let id = row
+                .opt("id")
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(0.0);
+            let labels = vec![("engine", fmt_value(id))];
+            put_section(&mut reg, "sigma_moe_engine", &labels, row);
+            if let Some(stats) = row.opt("stats") {
+                put_section(&mut reg, "sigma_moe_engine", &labels, stats);
+            }
+        }
+    }
+    if let Some(v) = doc.opt("router") {
+        put_section(&mut reg, "sigma_moe_router", &[], v);
+    }
+    if let Some(v) = doc.opt("scheduler") {
+        put_section(&mut reg, "sigma_moe_scheduler", &[], v);
+    }
+    if let Some(v) = doc.opt("server") {
+        put_section(&mut reg, "sigma_moe_server", &[], v);
+    }
+    if let Some(v) = doc.opt("journal") {
+        put_section(&mut reg, "sigma_moe_journal", &[], v);
+    }
+    if let Some(v) = doc.opt("stages") {
+        put_section(&mut reg, "sigma_moe_stage", &[], v);
+    }
+    if let Some(v) = doc.opt("experts") {
+        if let Some(u) = v.opt("unavailable").and_then(|u| u.as_f64().ok())
+        {
+            reg.put(
+                "sigma_moe_experts_unavailable",
+                "",
+                "counter",
+                u,
+            );
+        }
+        if let Some(fleet) = v.opt("fleet") {
+            put_expert_layers(&mut reg, "sigma_moe_experts", &[], fleet);
+        }
+        if let Some(engines) = v.opt("engines").and_then(|e| e.as_obj().ok())
+        {
+            for (engine, layers) in engines {
+                put_expert_layers(
+                    &mut reg,
+                    "sigma_moe_engine_experts",
+                    &[("engine", engine.clone())],
+                    layers,
+                );
+            }
+        }
+    }
+    reg.render()
+}
+
+/// Sanity-check a rendered exposition the way a scraper's parser would
+/// (`promtool check metrics`, approximately): every `# TYPE` line is
+/// well-formed and announced at most once, every sample line carries a
+/// legal metric name belonging to the family announced immediately
+/// above it (modulo summary `_sum`/`_count` suffixes) and a numeric
+/// value.  `require` lists name prefixes at least one *non-empty*
+/// family must match — the CI smoke passes the stage/expert prefixes so
+/// a silently-empty telemetry section fails the build instead of
+/// shipping an empty dashboard.
+pub fn validate_prom(text: &str, require: &[&str]) -> Result<()> {
+    fn legal_name(name: &str) -> bool {
+        !name.is_empty()
+            && !name.starts_with(|c: char| c.is_ascii_digit())
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut families: BTreeMap<String, usize> = BTreeMap::new();
+    let mut current: Option<String> = None;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(mtype)) = (it.next(), it.next()) else {
+                return Err(Error::Serving(format!(
+                    "prom line {lineno}: malformed TYPE line {line:?}"
+                )));
+            };
+            if !matches!(
+                mtype,
+                "counter" | "gauge" | "summary" | "histogram" | "untyped"
+            ) {
+                return Err(Error::Serving(format!(
+                    "prom line {lineno}: unknown metric type {mtype:?}"
+                )));
+            }
+            if !legal_name(name) {
+                return Err(Error::Serving(format!(
+                    "prom line {lineno}: illegal family name {name:?}"
+                )));
+            }
+            if families.insert(name.to_string(), 0).is_some() {
+                return Err(Error::Serving(format!(
+                    "prom line {lineno}: duplicate TYPE for {name:?}"
+                )));
+            }
+            current = Some(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP / comment
+        }
+        let name_end = line
+            .find(|c: char| c == '{' || c == ' ')
+            .ok_or_else(|| {
+                Error::Serving(format!(
+                    "prom line {lineno}: sample without a value: {line:?}"
+                ))
+            })?;
+        let name = &line[..name_end];
+        if !legal_name(name) {
+            return Err(Error::Serving(format!(
+                "prom line {lineno}: illegal metric name {name:?}"
+            )));
+        }
+        let fam = current.as_deref().ok_or_else(|| {
+            Error::Serving(format!(
+                "prom line {lineno}: sample {name:?} before any TYPE line"
+            ))
+        })?;
+        let in_family = name == fam
+            || name
+                .strip_prefix(fam)
+                .is_some_and(|sfx| sfx == "_sum" || sfx == "_count");
+        if !in_family {
+            return Err(Error::Serving(format!(
+                "prom line {lineno}: sample {name:?} outside the \
+                 announced family {fam:?}"
+            )));
+        }
+        let value = line.rsplit(' ').next().unwrap_or("");
+        if value.parse::<f64>().is_err()
+            && !matches!(value, "NaN" | "+Inf" | "-Inf")
+        {
+            return Err(Error::Serving(format!(
+                "prom line {lineno}: non-numeric value {value:?}"
+            )));
+        }
+        *families.get_mut(fam).unwrap() += 1;
+    }
+    for req in require {
+        let hit = families
+            .iter()
+            .any(|(name, &n)| name.starts_with(req) && n > 0);
+        if !hit {
+            return Err(Error::Serving(format!(
+                "prom exposition has no non-empty family matching \
+                 {req:?} (got: {:?})",
+                families.keys().collect::<Vec<_>>()
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::clock::SimClock;
+    use std::time::Duration;
+
+    fn sim() -> (Arc<SimClock>, Telemetry) {
+        let clock = SimClock::shared();
+        let tel = Telemetry::new(clock.clone());
+        (clock, tel)
+    }
+
+    #[test]
+    fn span_walks_all_stages_with_latency_histograms() {
+        let (clock, tel) = sim();
+        tel.queued(1);
+        clock.advance(Duration::from_millis(5));
+        tel.placed(1, Some(0));
+        clock.advance(Duration::from_millis(2));
+        tel.prefill_started(1);
+        clock.advance(Duration::from_millis(10));
+        tel.token(1);
+        clock.advance(Duration::from_millis(3));
+        tel.token(1);
+        tel.token(1);
+        clock.advance(Duration::from_millis(1));
+        tel.terminal(1, "done");
+
+        let t = tel.trace_json(1).expect("span retained");
+        assert_eq!(t.get("id").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(t.get("tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(t.get("ttft_ms").unwrap().as_f64().unwrap(), 17.0);
+        assert_eq!(t.get("e2e_ms").unwrap().as_f64().unwrap(), 21.0);
+        assert_eq!(t.get("outcome").unwrap().as_str().unwrap(), "done");
+        assert!(t.get("complete").unwrap().as_bool().unwrap());
+        let stages = t.get("stages").unwrap().as_arr().unwrap();
+        let kinds: Vec<&str> = stages
+            .iter()
+            .map(|s| s.get("stage").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(
+            kinds,
+            ["queued", "placed", "prefill", "first_token", "terminal"]
+        );
+        // timestamps are monotone along the stage list
+        let ts: Vec<f64> = stages
+            .iter()
+            .map(|s| s.get("t_ms").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+
+        let stages = tel.stages_json();
+        for h in ["queue_wait", "placement", "ttft", "inter_token"] {
+            let c = stages
+                .get(h)
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(c >= 1.0, "{h} unobserved");
+        }
+        // 2 inter-token gaps for 3 tokens
+        assert_eq!(
+            stages
+                .get("inter_token")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            2.0
+        );
+    }
+
+    #[test]
+    fn failover_opens_second_segment_not_second_terminal() {
+        let (clock, tel) = sim();
+        tel.queued(7);
+        clock.advance(Duration::from_millis(1));
+        tel.placed(7, Some(0));
+        tel.prefill_started(7);
+        clock.advance(Duration::from_millis(4));
+        // engine 0 dies; router requeues and re-places on engine 1
+        tel.placed(7, Some(1));
+        clock.advance(Duration::from_millis(1));
+        tel.prefill_started(7);
+        tel.token(7);
+        tel.terminal(7, "done");
+        let t = tel.trace_json(7).unwrap();
+        assert_eq!(t.get("placements").unwrap().as_f64().unwrap(), 2.0);
+        let stages = t.get("stages").unwrap().as_arr().unwrap();
+        let terminals = stages
+            .iter()
+            .filter(|s| {
+                s.get("stage").unwrap().as_str().unwrap() == "terminal"
+            })
+            .count();
+        assert_eq!(terminals, 1);
+        let engines: Vec<f64> = stages
+            .iter()
+            .filter(|s| {
+                s.get("stage").unwrap().as_str().unwrap() == "placed"
+            })
+            .map(|s| s.get("engine").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(engines, [0.0, 1.0]);
+        // queue_wait observed once (first placement only)
+        assert_eq!(
+            tel.stages_json()
+                .get("queue_wait")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let tel = Telemetry::disabled(SimClock::shared());
+        tel.queued(1);
+        tel.placed(1, None);
+        tel.token(1);
+        tel.terminal(1, "done");
+        tel.record_expert_counts(0, &[vec![1, 2]]);
+        tel.note_expert_stats_unavailable();
+        assert!(tel.trace_json(1).is_none());
+        assert_eq!(tel.expert_stats_unavailable(), 0);
+        let e = tel.experts_json();
+        assert!(e.get("engines").unwrap().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn span_ring_is_bounded_and_sampling_is_deterministic() {
+        let clock = SimClock::shared();
+        let tel = Telemetry::new(clock.clone()).with_ring_cap(4);
+        for id in 0..10u64 {
+            tel.queued(id);
+            tel.terminal(id, "done");
+        }
+        let stages = tel.stages_json();
+        assert_eq!(
+            stages.get("retained_spans").unwrap().as_f64().unwrap(),
+            4.0
+        );
+        assert_eq!(
+            stages.get("spans_evicted").unwrap().as_f64().unwrap(),
+            6.0
+        );
+        // newest survive
+        assert!(tel.trace_json(9).is_some());
+        assert!(tel.trace_json(0).is_none());
+
+        // sample_permille=0 retains nothing but still histograms
+        let tel0 = Telemetry::new(SimClock::shared())
+            .with_sample_permille(0);
+        tel0.queued(1);
+        tel0.placed(1, None);
+        tel0.terminal(1, "done");
+        assert!(tel0.trace_json(1).is_none());
+        assert_eq!(
+            tel0.stages_json()
+                .get("queue_wait")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn expert_counts_accumulate_and_derive_balance() {
+        let (_clock, tel) = sim();
+        tel.record_expert_counts(0, &[vec![2, 0, 0, 2], vec![1, 1, 1, 1]]);
+        tel.record_expert_counts(0, &[vec![2, 0, 0, 2], vec![1, 1, 1, 1]]);
+        tel.record_expert_counts(1, &[vec![0, 8, 0, 0], vec![2, 2, 2, 2]]);
+        let doc = tel.experts_json();
+        let fleet = doc.get("fleet").unwrap();
+        let rows = fleet.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // layer 0 fleet counts: [4, 8, 0, 4]
+        let c0: Vec<f64> = rows[0]
+            .get("counts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(c0, [4.0, 8.0, 0.0, 4.0]);
+        assert_eq!(
+            rows[0].get("dead_experts").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        // imbalance: max 8 / mean 4 = 2
+        assert_eq!(
+            rows[0].get("imbalance").unwrap().as_f64().unwrap(),
+            2.0
+        );
+        // layer 1 fleet is uniform [4,4,4,4]: imbalance 1, entropy ln 4
+        assert_eq!(
+            rows[1].get("imbalance").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        let ent = rows[1].get("entropy").unwrap().as_f64().unwrap();
+        assert!((ent - 4f64.ln()).abs() < 1e-12, "{ent}");
+        assert_eq!(
+            rows[1].get("dead_experts").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        // per-engine sections present
+        let engines = doc.get("engines").unwrap().as_obj().unwrap();
+        assert_eq!(engines.len(), 2);
+        assert!(engines.contains_key("0") && engines.contains_key("1"));
+    }
+
+    #[test]
+    fn expert_balance_edge_cases() {
+        let b = ExpertBalance::of(&[]);
+        assert_eq!((b.total, b.dead), (0, 0));
+        let b = ExpertBalance::of(&[0, 0, 0]);
+        assert_eq!((b.total, b.dead), (0, 3));
+        assert_eq!(b.imbalance, 0.0);
+        assert_eq!(b.entropy, 0.0);
+        // full collapse: imbalance = N_E, entropy = 0
+        let b = ExpertBalance::of(&[9, 0, 0]);
+        assert_eq!(b.imbalance, 3.0);
+        assert_eq!(b.entropy, 0.0);
+        assert_eq!(b.dead, 2);
+    }
+
+    fn lines(evs: &[&str]) -> Vec<String> {
+        evs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn spans_from_events_derives_the_lifecycle() {
+        let evs = lines(&[
+            r#"{"id":0,"kind":"admit","prompt_len":4,"seq":0,"t_ms":0}"#,
+            r#"{"id":0,"kind":"take","seq":1,"t_ms":2}"#,
+            r#"{"engine":1,"id":0,"kind":"place","seq":2,"t_ms":2}"#,
+            r#"{"engine":1,"free":3,"kind":"beat","seq":3,"t_ms":5}"#,
+            r#"{"engine":1,"id":0,"kind":"done","seq":4,"t_ms":9,"tokens":6}"#,
+        ]);
+        let spans = spans_from_events(&evs).unwrap();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.id, 0);
+        assert_eq!(s.queued_ms, 0);
+        // take + place collapse into one segment carrying the engine
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.segments[0].engine, Some(1));
+        assert_eq!(s.tokens, 6);
+        assert_eq!(s.terminal.as_ref().unwrap().outcome, "done");
+    }
+
+    #[test]
+    fn spans_from_events_failover_yields_second_segment() {
+        let evs = lines(&[
+            r#"{"id":3,"kind":"admit","seq":0,"t_ms":0}"#,
+            r#"{"id":3,"kind":"take","seq":1,"t_ms":1}"#,
+            r#"{"engine":0,"id":3,"kind":"place","seq":2,"t_ms":1}"#,
+            r#"{"engine":0,"kind":"quarantine","reason":"errors","seq":3,"t_ms":8}"#,
+            r#"{"engine":0,"exhausted":0,"kind":"failover","requeued":1,"seq":4,"t_ms":8}"#,
+            r#"{"id":3,"kind":"retry","seq":5,"t_ms":8}"#,
+            r#"{"id":3,"kind":"take","seq":6,"t_ms":9}"#,
+            r#"{"engine":1,"id":3,"kind":"place","seq":7,"t_ms":9}"#,
+            r#"{"engine":1,"id":3,"kind":"done","seq":8,"t_ms":20,"tokens":2}"#,
+        ]);
+        let spans = spans_from_events(&evs).unwrap();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.segments.len(), 2, "failover must re-place");
+        assert_eq!(s.segments[0].engine, Some(0));
+        assert_eq!(s.segments[1].engine, Some(1));
+        assert_eq!(s.terminal.as_ref().unwrap().outcome, "done");
+    }
+
+    #[test]
+    fn spans_from_events_rejects_double_terminal_and_time_travel() {
+        let double = lines(&[
+            r#"{"id":1,"kind":"admit","seq":0,"t_ms":0}"#,
+            r#"{"id":1,"kind":"drop_deadline","seq":1,"t_ms":4}"#,
+            r#"{"engine":0,"id":1,"kind":"done","seq":2,"t_ms":5,"tokens":1}"#,
+        ]);
+        let err = spans_from_events(&double).unwrap_err().to_string();
+        assert!(err.contains("after terminal"), "{err}");
+
+        let warp = lines(&[
+            r#"{"id":1,"kind":"admit","seq":0,"t_ms":10}"#,
+            r#"{"engine":0,"id":1,"kind":"place","seq":1,"t_ms":3}"#,
+        ]);
+        let err = spans_from_events(&warp).unwrap_err().to_string();
+        assert!(err.contains("earlier"), "{err}");
+    }
+
+    #[test]
+    fn prom_rendering_has_unique_typed_families() {
+        let (clock, tel) = sim();
+        tel.queued(1);
+        clock.advance(Duration::from_millis(2));
+        tel.placed(1, Some(0));
+        tel.prefill_started(1);
+        tel.token(1);
+        tel.terminal(1, "done");
+        tel.record_expert_counts(0, &[vec![3, 1, 0, 4]]);
+        tel.note_expert_stats_unavailable();
+        let doc = json::obj(vec![
+            (
+                "engine",
+                json::obj(vec![
+                    ("tokens_generated", json::num(12.0)),
+                    ("steps_executed", json::num(9.0)),
+                ]),
+            ),
+            (
+                "engines",
+                json::arr(vec![json::obj(vec![
+                    ("id", json::num(0.0)),
+                    ("healthy", Json::Bool(true)),
+                    ("completions", json::num(1.0)),
+                    (
+                        "stats",
+                        json::obj(vec![("n_lanes", json::num(4.0))]),
+                    ),
+                ])]),
+            ),
+            (
+                "router",
+                json::obj(vec![
+                    ("placement", json::s("least_loaded")),
+                    ("failovers", json::num(0.0)),
+                ]),
+            ),
+            (
+                "scheduler",
+                json::obj(vec![
+                    ("enqueued", json::num(1.0)),
+                    (
+                        "queue_wait",
+                        Histogram::new().to_json(),
+                    ),
+                ]),
+            ),
+            ("server", json::obj(vec![("uptime_s", json::num(2.0))])),
+            ("journal", json::obj(vec![("dropped_events", json::num(0.0))])),
+            ("stages", tel.stages_json()),
+            ("experts", tel.experts_json()),
+        ]);
+        let text = render_prom(&doc);
+
+        // every family has exactly one TYPE line and no duplicate names
+        let mut seen = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(seen.insert(name.to_string()), "dup TYPE {name}");
+            }
+        }
+        // every sample line's family has a TYPE line
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let metric = line.split([' ', '{']).next().unwrap();
+            let family = seen.iter().any(|n| {
+                metric == n.as_str()
+                    || metric
+                        .strip_prefix(n.as_str())
+                        .is_some_and(|s| s == "_sum" || s == "_count")
+            });
+            assert!(family, "sample {metric} lacks a TYPE line");
+        }
+        // the load-bearing families are present and populated
+        for needle in [
+            "sigma_moe_fleet_tokens_generated 12",
+            "sigma_moe_engine_completions{engine=\"0\"} 1",
+            "sigma_moe_engine_healthy{engine=\"0\"} 1",
+            "sigma_moe_router_info{placement=\"least_loaded\"} 1",
+            "sigma_moe_stage_ttft{quantile=\"0.5\"}",
+            "sigma_moe_stage_queue_wait_count",
+            "sigma_moe_experts_tokens_total{layer=\"0\",expert=\"3\"} 4",
+            "sigma_moe_experts_unavailable 1",
+            "sigma_moe_experts_imbalance{layer=\"0\"} 2",
+            "sigma_moe_engine_experts_tokens_total{engine=\"0\",layer=\"0\",expert=\"0\"} 3",
+            "sigma_moe_journal_dropped_events 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // rendering is deterministic
+        assert_eq!(text, render_prom(&doc));
+
+        // the scraper-shaped validator accepts what we render, with
+        // the CI smoke's required prefixes satisfied
+        validate_prom(
+            &text,
+            &["sigma_moe_stage_", "sigma_moe_experts_"],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn validate_prom_rejects_malformed_expositions() {
+        // duplicate TYPE
+        let dup = "# TYPE a gauge\na 1\n# TYPE a gauge\na 2\n";
+        assert!(validate_prom(dup, &[]).unwrap_err().to_string().contains("duplicate"));
+        // sample before any TYPE line
+        assert!(validate_prom("a 1\n", &[]).is_err());
+        // sample outside the announced family
+        let stray = "# TYPE a gauge\nb 1\n";
+        assert!(validate_prom(stray, &[]).unwrap_err().to_string().contains("outside"));
+        // non-numeric value
+        let bad = "# TYPE a gauge\na pancake\n";
+        assert!(validate_prom(bad, &[]).is_err());
+        // unknown metric type
+        assert!(validate_prom("# TYPE a widget\n", &[]).is_err());
+        // a required prefix with no populated family
+        let empty = "# TYPE a gauge\na 1\n";
+        assert!(validate_prom(empty, &["sigma_moe_stage_"]).is_err());
+        // summary suffixes stay inside their family
+        let summary = "# TYPE s summary\ns{quantile=\"0.5\"} 1\n\
+                       s_sum 2\ns_count 3\n";
+        validate_prom(summary, &["s"]).unwrap();
+    }
+
+    #[test]
+    fn trace_json_resolves_in_flight_spans() {
+        let (_clock, tel) = sim();
+        tel.queued(42);
+        tel.placed(42, None);
+        let t = tel.trace_json(42).unwrap();
+        assert!(!t.get("complete").unwrap().as_bool().unwrap());
+        assert!(t.opt("e2e_ms").is_none());
+    }
+}

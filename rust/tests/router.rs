@@ -507,6 +507,75 @@ fn metrics_per_engine_rows_sum_to_fleet_totals() {
                     .unwrap(),
                 2.0
             );
+            // lifecycle telemetry rides the same document: every
+            // completed request fed the stage histograms, and the mock
+            // backends' synthetic routers fed per-engine expert counts
+            // that aggregate into the fleet rows
+            let stages = doc.get("stages").unwrap();
+            assert_eq!(
+                stages
+                    .get("queue_wait")
+                    .unwrap()
+                    .get("count")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap(),
+                12.0
+            );
+            assert!(
+                stages
+                    .get("ttft")
+                    .unwrap()
+                    .get("count")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap()
+                    > 0.0
+            );
+            let experts = doc.get("experts").unwrap();
+            let fleet_tokens: f64 = experts
+                .get("fleet")
+                .unwrap()
+                .get("layers")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|l| l.get("tokens_k").unwrap().as_f64().unwrap())
+                .sum();
+            assert!(fleet_tokens > 0.0, "no expert counts aggregated");
+            assert_eq!(
+                experts.get("engines").unwrap().as_obj().unwrap().len(),
+                2,
+                "both engines must report expert counts"
+            );
+            // every served request left a resolvable span in the ring
+            let mut resolved = 0usize;
+            for id in 0..32u64 {
+                let (status, body) =
+                    loadgen::fetch_path(&addr, &format!("/v1/trace/{id}"))?;
+                if status != 200 {
+                    continue;
+                }
+                let span = sigma_moe::json::Json::parse(&body)
+                    .expect("trace json");
+                if span.get("complete").unwrap().as_bool().unwrap() {
+                    resolved += 1;
+                }
+            }
+            assert_eq!(resolved, 12, "all 12 spans must resolve");
+            // and the whole document round-trips through the
+            // Prometheus renderer as a well-formed exposition
+            let prom = loadgen::fetch_metrics_prom(&addr)?;
+            sigma_moe::serving::telemetry::validate_prom(
+                &prom,
+                &[
+                    "sigma_moe_stage_",
+                    "sigma_moe_experts_",
+                    "sigma_moe_engine_experts_",
+                ],
+            )
+            .expect("fleet prom exposition");
             Ok(())
         },
     )

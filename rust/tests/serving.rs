@@ -10,6 +10,7 @@ use std::time::Duration;
 use sigma_moe::json::{self, Json};
 use sigma_moe::serving::loadgen::{self, LoadgenCfg};
 use sigma_moe::serving::server::ServerConfig;
+use sigma_moe::serving::telemetry;
 use sigma_moe::serving::{MockBackend, Policy};
 
 /// Raw-socket POST helper returning (status, headers, body-bytes) with
@@ -435,6 +436,111 @@ fn loadgen_pool_reuses_connections() {
             }
             // sequential sends ride a single pooled connection
             assert_eq!(pool.idle_count(), 1);
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+#[test]
+fn request_id_resolves_via_trace_endpoint_and_prom_scrape() {
+    loadgen::with_mock_server(
+        2,
+        64,
+        Duration::ZERO,
+        ServerConfig::default(),
+        |addr| {
+            let (status, headers, body) = post(
+                &addr,
+                "/v1/completions",
+                r#"{"prompt": [5, 6], "max_tokens": 3}"#,
+            );
+            assert_eq!(status, 200);
+            let rid = header_of(&headers, "x-request-id")
+                .expect("unary X-Request-Id")
+                .to_string();
+            assert_eq!(
+                json_of(&body).get("id").unwrap().as_usize().unwrap(),
+                rid.parse::<usize>().unwrap()
+            );
+
+            // streamed responses carry the header on the chunked head
+            let (status, headers, _) = post(
+                &addr,
+                "/v1/completions",
+                r#"{"prompt": [8], "max_tokens": 2, "stream": true}"#,
+            );
+            assert_eq!(status, 200);
+            assert!(header_of(&headers, "x-request-id").is_some());
+
+            // the id from the response header resolves to a span tree
+            let (status, _, body) =
+                get(&addr, &format!("/v1/trace/{rid}"));
+            assert_eq!(status, 200);
+            let span = json_of(&body);
+            assert!(span.get("complete").unwrap().as_bool().unwrap());
+            assert_eq!(
+                span.get("outcome").unwrap().as_str().unwrap(),
+                "done"
+            );
+            assert_eq!(span.get("tokens").unwrap().as_usize().unwrap(), 3);
+            let stages: Vec<String> = span
+                .get("stages")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| {
+                    s.get("stage").unwrap().as_str().unwrap().to_string()
+                })
+                .collect();
+            for want in
+                ["queued", "placed", "prefill", "first_token", "terminal"]
+            {
+                assert!(
+                    stages.iter().any(|s| s == want),
+                    "missing stage {want} in {stages:?}"
+                );
+            }
+            let (status, _, _) = get(&addr, "/v1/trace/999999");
+            assert_eq!(status, 404);
+
+            // ?format=prom parses as Prometheus text exposition with
+            // the stage and expert families present; raw expert counts
+            // land on the driver's publish cadence, so poll for them
+            let mut fleet_tokens = 0.0;
+            for _ in 0..100 {
+                let (status, headers, body) =
+                    get(&addr, "/metrics?format=prom");
+                assert_eq!(status, 200);
+                assert!(header_of(&headers, "content-type")
+                    .unwrap()
+                    .starts_with("text/plain"));
+                let text = String::from_utf8(body).unwrap();
+                telemetry::validate_prom(
+                    &text,
+                    &["sigma_moe_stage_", "sigma_moe_experts_"],
+                )
+                .expect("prom exposition");
+                let doc = json_of(&get(&addr, "/metrics").2);
+                fleet_tokens = doc
+                    .get("experts")
+                    .unwrap()
+                    .get("fleet")
+                    .unwrap()
+                    .get("layers")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|l| l.get("tokens_k").unwrap().as_f64().unwrap())
+                    .sum();
+                if fleet_tokens > 0.0 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            assert!(fleet_tokens > 0.0, "expert counts never published");
             Ok(())
         },
     )

@@ -160,6 +160,11 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
                            "n_experts": cfg.moe.n_experts,
                            "k": cfg.moe.k}
                           if cfg.ff_variant == "moe" else None),
+        # Adaptive expert sparsity: MoE step_fwd/prefill take a trailing
+        # runtime expert_k int32 scalar in [1, expert_k_max]; the
+        # scheduler degrades it under queue pressure.  None for non-MoE
+        # presets (old signature, no runtime-k input).
+        "expert_k_max": (cfg.moe.k if cfg.ff_variant == "moe" else None),
         "flops": flops.summarize(cfg),
         "functions": {},
     }

@@ -9,6 +9,10 @@ Six entry points per model configuration:
 * ``step_fwd``    (params, mems, tokens)          -> (logits_last, mems')
 * ``prefill``     (params, mems, tokens[B,C], active_len[B])
                   -> (logits_last, mems')  (chunked, validity-masked)
+
+MoE presets append a per-layer expert-counts output to ``step_fwd`` /
+``prefill`` and take a trailing ``expert_k`` int32 scalar — the
+runtime effective top-k (adaptive expert sparsity under load).
 * ``reset_lanes`` (mems, keep)                    -> mems'  (lane-masked)
 
 All inputs/outputs are pytrees; jax.jit flattens them in deterministic
@@ -108,17 +112,33 @@ def make_step_fwd(cfg: ModelConfig, mem_len: int):
     signature (the telemetry test asserts this).  Non-MoE presets keep
     the two-output signature; the Rust engine treats the counts output
     as optional and falls back cleanly (``expert_stats_unavailable``).
+
+    MoE presets additionally take a trailing ``expert_k`` int32 scalar
+    — the runtime effective top-k (clipped to ``[1, K]``).  Gates of
+    selection slots ``>= expert_k`` are zeroed before any renorm
+    (layers/moe.py), so a program compiled for static K serves any
+    ``k <= K``; ``expert_k == K`` is the bit-for-bit identity (the
+    adaptive-k test pins this).  Non-MoE presets keep the old
+    signature.
     """
 
-    def step_fwd(params, mems, tokens):
+    if cfg.ff_variant != "moe":
+        def step_fwd(params, mems, tokens):
+            rng = jax.random.PRNGKey(0)
+            logits, new_mems, _ = M.forward(
+                params, cfg, tokens, mems, rng, deterministic=True,
+                mem_len=mem_len)
+            return (logits[:, -1, :], new_mems)
+        return step_fwd
+
+    def step_fwd(params, mems, tokens, expert_k):
         rng = jax.random.PRNGKey(0)
+        ek = jnp.clip(expert_k.astype(jnp.int32), 1, cfg.moe.k)
         logits, new_mems, aux = M.forward(
             params, cfg, tokens, mems, rng, deterministic=True,
-            mem_len=mem_len)
-        if "tok_usage" in aux:
-            counts = aux["tok_usage"].sum(axis=1)      # [L, NE]
-            return (logits[:, -1, :], new_mems, counts)
-        return (logits[:, -1, :], new_mems)
+            mem_len=mem_len, expert_k=ek)
+        counts = aux["tok_usage"].sum(axis=1)          # [L, NE]
+        return (logits[:, -1, :], new_mems, counts)
 
     return step_fwd
 
@@ -155,31 +175,49 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
     exactly ``sum(active_len) * K`` per layer and NaN in a padded row
     cannot poison the telemetry.  The logits/memory outputs are
     untouched by the extra reduction.
+
+    MoE presets additionally take a trailing ``expert_k`` int32 scalar
+    (runtime effective top-k, clipped to ``[1, K]``) — see
+    ``make_step_fwd``; with it the counts sum to exactly
+    ``sum(active_len) * expert_k`` per layer.  Non-MoE presets keep
+    the old signature.
     """
 
-    def prefill(params, mems, tokens, active_len):
-        b, c = tokens.shape
-        active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
-        rng = jax.random.PRNGKey(0)
-        logits, new_mems, aux = M.forward(
-            params, cfg, tokens, mems, rng, deterministic=True,
-            mem_len=mem_len, active_len=active_len)
+    def _last_valid_rows(logits, active_len, b, c):
         # logits[i, active_len[i] - 1, :] via a flat row gather
         # (take_along_axis lowers to a batched gather the 0.5.1-era
         # HLO converter rejects; see compat.py)
         last = jnp.clip(active_len - 1, 0, c - 1)
         rows = jnp.arange(b, dtype=jnp.int32) * c + last
-        logits_last = jnp.take(
-            logits.reshape(b * c, -1), rows, axis=0)
-        if "tok_usage" in aux:
-            tu = aux["tok_usage"]                      # [L, B*C, NE]
-            nl, _, ne = tu.shape
-            valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
-                     < active_len[:, None])            # [B, C]
-            tu = jnp.where(valid.reshape(1, b * c, 1), tu, 0.0)
-            counts = tu.reshape(nl, b * c, ne).sum(axis=1)  # [L, NE]
-            return (logits_last, new_mems, counts)
-        return (logits_last, new_mems)
+        return jnp.take(logits.reshape(b * c, -1), rows, axis=0)
+
+    if cfg.ff_variant != "moe":
+        def prefill(params, mems, tokens, active_len):
+            b, c = tokens.shape
+            active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
+            rng = jax.random.PRNGKey(0)
+            logits, new_mems, _ = M.forward(
+                params, cfg, tokens, mems, rng, deterministic=True,
+                mem_len=mem_len, active_len=active_len)
+            return (_last_valid_rows(logits, active_len, b, c), new_mems)
+        return prefill
+
+    def prefill(params, mems, tokens, active_len, expert_k):
+        b, c = tokens.shape
+        active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
+        ek = jnp.clip(expert_k.astype(jnp.int32), 1, cfg.moe.k)
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, aux = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len, active_len=active_len, expert_k=ek)
+        logits_last = _last_valid_rows(logits, active_len, b, c)
+        tu = aux["tok_usage"]                          # [L, B*C, NE]
+        nl, _, ne = tu.shape
+        valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                 < active_len[:, None])                # [B, C]
+        tu = jnp.where(valid.reshape(1, b * c, 1), tu, 0.0)
+        counts = tu.reshape(nl, b * c, ne).sum(axis=1)  # [L, NE]
+        return (logits_last, new_mems, counts)
 
     return prefill
 
@@ -223,7 +261,7 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
     keep = jnp.ones((serve_batch,), jnp.float32)
     ptok = jnp.zeros((serve_batch, prefill_chunk), jnp.int32)
     active = jnp.full((serve_batch,), prefill_chunk, jnp.int32)
-    return {
+    out = {
         "init": (seed,),
         "train_step": (params, m, v, mems, tokens, step, seed),
         "eval_step": (params, emems, tokens),
@@ -231,3 +269,10 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
         "reset_lanes": (smems, keep),
         "prefill": (params, smems, ptok, active),
     }
+    if cfg.ff_variant == "moe":
+        # runtime effective top-k scalar (serving-only input); the
+        # example value is the compile-time K = identity behavior
+        ek = jnp.asarray(cfg.moe.k, jnp.int32)
+        out["step_fwd"] = (params, smems, stok, ek)
+        out["prefill"] = (params, smems, ptok, active, ek)
+    return out

@@ -66,12 +66,22 @@ def moe_init(rng: jax.Array, d_model: int, cfg: MoEConfig,
 
 
 def _selection(cfg: MoEConfig, logits: jax.Array, rng: jax.Array,
-               deterministic: bool):
+               deterministic: bool,
+               expert_k: jax.Array | None = None):
     """Compute gate values + top-K expert indices for each token.
 
     logits: [N, NE].  Returns (sel_val [N, K], sel_idx [N, K], probs
     [N, NE]) where probs is the softmax distribution used by the
     regularizers (Eq. 20) regardless of the gating activation.
+
+    ``expert_k`` (int32 scalar, optional — the serving runtime-k path)
+    zeroes the gates of top-K slots ``>= expert_k`` *before* any
+    renormalization, so a dispatch compiled for static K can run any
+    effective k in [1, K] without changing shapes (SEER-MoE-style
+    top-k reduction as a graceful-degradation knob).  ``where``, not
+    multiplication, so a NaN gate in a masked slot cannot leak; with
+    ``expert_k == K`` the all-true mask is the identity and the result
+    is bit-for-bit the fixed-K computation.
     """
     k = cfg.k
     probs = jax.nn.softmax(logits, axis=-1)
@@ -109,7 +119,13 @@ def _selection(cfg: MoEConfig, logits: jax.Array, rng: jax.Array,
     _, sel_idx = compat_top_k(route, k)                  # [N, K]
     sel_val = take_along_last(scores, sel_idx)
 
+    if expert_k is not None:
+        slot = jnp.arange(k, dtype=jnp.int32)[None, :]   # [1, K]
+        sel_val = jnp.where(slot < expert_k, sel_val, 0.0)
+
     if cfg.selection == "softmax_renorm":
+        # with a runtime k the renorm runs over active slots only (the
+        # masked gates are exact zeros and stay zero after division)
         sel_val = sel_val / (sel_val.sum(axis=-1, keepdims=True) + 1e-9)
 
     return sel_val, sel_idx, probs
@@ -176,18 +192,25 @@ def grouped_dispatch(x: jax.Array, sel_idx: jax.Array, sel_val: jax.Array,
 
 
 def moe_ff(p: Params, x: jax.Array, rng: jax.Array, cfg: MoEConfig,
-           deterministic: bool) -> Tuple[jax.Array, dict]:
+           deterministic: bool,
+           expert_k: jax.Array | None = None) -> Tuple[jax.Array, dict]:
     """σ-MoE feedforward (Eq. 11).  x: [N, D] -> [N, D].
 
     aux: reg loss, per-expert usage counts [NE] (Fig. 3/7), mean selection
     probability [NE], and the co-occurrence count matrix [NE, NE] (Fig. 6).
+
+    ``expert_k`` (optional int32 scalar) reduces the effective top-k at
+    runtime by zeroing the gates of trailing selection slots (see
+    ``_selection``); the usage statistics count active slots only, so
+    serving telemetry reflects the degraded k.
     """
     n, d = x.shape
     ne, g, k = cfg.n_experts, cfg.group_size, cfg.k
     r1, r2 = jax.random.split(rng)
 
     logits = x @ p["w3"]                                   # [N, NE]
-    sel_val, sel_idx, probs = _selection(cfg, logits, r1, deterministic)
+    sel_val, sel_idx, probs = _selection(cfg, logits, r1, deterministic,
+                                         expert_k)
     reg = _regularization(cfg, probs, sel_idx)
 
     # Expert execution through the CVMM kernel: replicate each token K
@@ -209,6 +232,11 @@ def moe_ff(p: Params, x: jax.Array, rng: jax.Array, cfg: MoEConfig,
         y = y.reshape(n, k, d).sum(axis=1)
 
     onehot = jax.nn.one_hot(sel_idx, ne, dtype=jnp.float32)  # [N, K, NE]
+    if expert_k is not None:
+        # usage statistics count active slots only, so the expert
+        # telemetry on /metrics reflects the degraded k
+        slot = jnp.arange(k, dtype=jnp.int32)[None, :, None]
+        onehot = jnp.where(slot < expert_k, onehot, 0.0)
     usage = onehot.sum(axis=(0, 1))                        # counts per expert
     sel_weight = (onehot * sel_val[..., None]).sum(axis=(0, 1))
     tok = onehot.sum(axis=1)                               # [N, NE]

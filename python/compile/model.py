@@ -61,14 +61,16 @@ def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
 
 
 def _apply_ff(cfg: ModelConfig, p: Params, x2d: jax.Array, rng: jax.Array,
-              deterministic: bool) -> Tuple[jax.Array, dict]:
+              deterministic: bool,
+              expert_k: jax.Array | None = None) -> Tuple[jax.Array, dict]:
     if cfg.ff_variant == "dense":
         return ffl.dense_ff(p, x2d, rng, cfg.dropout, deterministic)
     if cfg.ff_variant == "topk":
         return ffl.topk_ff(p, x2d, rng, cfg.topk.k, cfg.dropout,
                            deterministic)
     if cfg.ff_variant == "moe":
-        return moel.moe_ff(p, x2d, rng, cfg.moe, deterministic)
+        return moel.moe_ff(p, x2d, rng, cfg.moe, deterministic,
+                           expert_k=expert_k)
     if cfg.ff_variant == "pkm":
         return pkml.pkm_ff(p, x2d, rng, cfg.pkm, deterministic)
     raise ValueError(cfg.ff_variant)
@@ -77,7 +79,8 @@ def _apply_ff(cfg: ModelConfig, p: Params, x2d: jax.Array, rng: jax.Array,
 def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
             mems: List[jax.Array], rng: jax.Array,
             deterministic: bool, mem_len: int,
-            active_len: jax.Array | None = None):
+            active_len: jax.Array | None = None,
+            expert_k: jax.Array | None = None):
     """Run the LM over one segment.
 
     tokens: [B, T] int32; mems: n_layers arrays [B, M, D].
@@ -93,6 +96,9 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
     feeding only its valid tokens.  ``active_len == 0`` leaves a
     lane's memory untouched (decode lanes riding along in a mixed
     prefill batch).
+
+    ``expert_k`` (int32 scalar, optional) reduces the σ-MoE effective
+    top-k at runtime (layers/moe.py); ignored by non-MoE variants.
     """
     b, t = tokens.shape
     x = params["embed"][tokens]                    # [B, T, D]
@@ -124,7 +130,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
         x = x + a
         # pre-LN feedforward block (flattened to [B*T, D])
         h = layer_norm(lp["ln2"], x).reshape(b * t, -1)
-        y, aux = _apply_ff(cfg, lp["ff"], h, r_ff, deterministic)
+        y, aux = _apply_ff(cfg, lp["ff"], h, r_ff, deterministic,
+                           expert_k=expert_k)
         y = dropout(r_ff, y.reshape(b, t, -1), cfg.dropout, deterministic)
         x = x + y
         reg_total = reg_total + aux["reg"]

@@ -1,0 +1,195 @@
+"""Adaptive expert top-k: the runtime ``expert_k`` scalar input on MoE
+``step_fwd``/``prefill`` must be the *bit-for-bit* identity at
+``expert_k == K`` (the all-true slot mask is a no-op ``where``), reduce
+the per-layer selection counts to exactly ``valid_tokens * k`` for any
+``k < K``, clip out-of-range values into ``[1, K]``, and — for the
+softmax_renorm ablation — renormalize over active slots only."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import api
+from compile import model as M
+from compile.configs import MoEConfig, ModelConfig
+from compile.layers import moe as moel
+
+CHUNK = 4
+
+
+def tiny_cfg(selection="sigmoid"):
+    return ModelConfig(
+        name="t-moe", vocab_size=64, d_model=16, d_ff=32, n_layers=3,
+        n_heads=2, head_dim=8, context=8, mem_len=8, ff_variant="moe",
+        moe=MoEConfig(n_experts=4, group_size=8, k=2,
+                      selection=selection))
+
+
+def setup(cfg, batch, seed=0):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    mems = [jnp.asarray(rng.normal(size=(batch, cfg.mem_len,
+                                         cfg.d_model)), jnp.float32)
+            for _ in range(cfg.n_layers)]
+    return params, mems
+
+
+def fixed_k_step_fwd(cfg, mem_len):
+    """Today's fixed-K program, reconstructed inline — the bit-for-bit
+    baseline the expert_k == K runtime path must reproduce."""
+    def step_fwd(params, mems, tokens):
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, aux = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len)
+        counts = aux["tok_usage"].sum(axis=1)
+        return (logits[:, -1, :], new_mems, counts)
+    return step_fwd
+
+
+def fixed_k_prefill(cfg, mem_len):
+    def prefill(params, mems, tokens, active_len):
+        b, c = tokens.shape
+        active_len = jnp.clip(active_len.astype(jnp.int32), 0, c)
+        rng = jax.random.PRNGKey(0)
+        logits, new_mems, aux = M.forward(
+            params, cfg, tokens, mems, rng, deterministic=True,
+            mem_len=mem_len, active_len=active_len)
+        last = jnp.clip(active_len - 1, 0, c - 1)
+        rows = jnp.arange(b, dtype=jnp.int32) * c + last
+        logits_last = jnp.take(logits.reshape(b * c, -1), rows, axis=0)
+        tu = aux["tok_usage"]
+        nl, _, ne = tu.shape
+        valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                 < active_len[:, None])
+        tu = jnp.where(valid.reshape(1, b * c, 1), tu, 0.0)
+        return (logits_last, new_mems, tu.reshape(nl, b * c, ne).sum(axis=1))
+    return prefill
+
+
+def test_step_fwd_expert_k_max_is_bit_identical_to_fixed_k():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=5)
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (b, 1)),
+        jnp.int32)
+    new = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
+    old = jax.jit(fixed_k_step_fwd(cfg, cfg.mem_len))
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    logits_n, mems_n, counts_n = new(params, mems, toks, ek)
+    logits_o, mems_o, counts_o = old(params, mems, toks)
+    np.testing.assert_array_equal(np.asarray(logits_n),
+                                  np.asarray(logits_o))
+    for l, (mn, mo) in enumerate(zip(mems_n, mems_o)):
+        np.testing.assert_array_equal(np.asarray(mn), np.asarray(mo),
+                                      err_msg=f"layer {l} memory")
+    np.testing.assert_array_equal(np.asarray(counts_n),
+                                  np.asarray(counts_o))
+
+
+def test_prefill_expert_k_max_is_bit_identical_to_fixed_k():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=9)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, CHUNK)),
+                       jnp.int32)
+    active = jnp.asarray([CHUNK, 2, 0], jnp.int32)
+    new = jax.jit(api.make_prefill(cfg, cfg.mem_len))
+    old = jax.jit(fixed_k_prefill(cfg, cfg.mem_len))
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    logits_n, mems_n, counts_n = new(params, mems, toks, active, ek)
+    logits_o, mems_o, counts_o = old(params, mems, toks, active)
+    np.testing.assert_array_equal(np.asarray(logits_n),
+                                  np.asarray(logits_o))
+    for l, (mn, mo) in enumerate(zip(mems_n, mems_o)):
+        np.testing.assert_array_equal(np.asarray(mn), np.asarray(mo),
+                                      err_msg=f"layer {l} memory")
+    np.testing.assert_array_equal(np.asarray(counts_n),
+                                  np.asarray(counts_o))
+
+
+def test_degraded_k_masks_counts_and_changes_output():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=7)
+    toks = jnp.asarray(
+        np.random.default_rng(4).integers(0, cfg.vocab_size, (b, 1)),
+        jnp.int32)
+    step = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
+    full, _, counts_full = step(params, mems, toks,
+                                jnp.asarray(cfg.moe.k, jnp.int32))
+    deg, _, counts_deg = step(params, mems, toks,
+                              jnp.asarray(1, jnp.int32))
+    # every token now selects exactly 1 expert per layer
+    c = np.asarray(counts_deg)
+    np.testing.assert_array_equal(c.sum(axis=1), np.full(cfg.n_layers, b))
+    np.testing.assert_array_equal(
+        np.asarray(counts_full).sum(axis=1),
+        np.full(cfg.n_layers, b * cfg.moe.k))
+    # gating through fewer experts is a different (still finite) function
+    assert np.all(np.isfinite(np.asarray(deg)))
+    assert not np.array_equal(np.asarray(deg), np.asarray(full))
+
+
+def test_degraded_k_prefill_counts_scale_with_valid_tokens():
+    cfg = tiny_cfg()
+    b = 3
+    params, mems = setup(cfg, b, seed=11)
+    toks = jnp.asarray(
+        np.random.default_rng(6).integers(0, cfg.vocab_size, (b, CHUNK)),
+        jnp.int32)
+    active = jnp.asarray([CHUNK, 2, 0], jnp.int32)
+    pre = jax.jit(api.make_prefill(cfg, cfg.mem_len))
+    logits, _, counts = pre(params, mems, toks, active,
+                            jnp.asarray(1, jnp.int32))
+    valid = int(np.asarray(active).sum())
+    np.testing.assert_array_equal(
+        np.asarray(counts).sum(axis=1), np.full(cfg.n_layers, valid))
+    assert np.all(np.isfinite(np.asarray(logits)[:2]))
+
+
+def test_out_of_range_expert_k_is_clipped():
+    # the engine validates at the HTTP boundary; the program itself
+    # clips defensively so a stray scalar can never select <1 or >K
+    cfg = tiny_cfg()
+    b = 2
+    params, mems = setup(cfg, b, seed=13)
+    toks = jnp.zeros((b, 1), jnp.int32)
+    step = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
+    lo, _, counts_lo = step(params, mems, toks, jnp.asarray(0, jnp.int32))
+    one, _, counts_one = step(params, mems, toks,
+                              jnp.asarray(1, jnp.int32))
+    hi, _, counts_hi = step(params, mems, toks,
+                            jnp.asarray(99, jnp.int32))
+    full, _, counts_full = step(params, mems, toks,
+                                jnp.asarray(cfg.moe.k, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(one))
+    np.testing.assert_array_equal(np.asarray(counts_lo),
+                                  np.asarray(counts_one))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(full))
+    np.testing.assert_array_equal(np.asarray(counts_hi),
+                                  np.asarray(counts_full))
+
+
+def test_softmax_renorm_renormalizes_over_active_slots():
+    # with k degraded to 1 the surviving gate must renormalize to ~1,
+    # and the masked slots stay exact zeros
+    cfg = tiny_cfg(selection="softmax_renorm").moe
+    rng = np.random.default_rng(17)
+    logits = jnp.asarray(rng.normal(size=(8, cfg.n_experts)), jnp.float32)
+    sel_val, sel_idx, _ = moel._selection(
+        cfg, logits, jax.random.PRNGKey(0), deterministic=True,
+        expert_k=jnp.asarray(1, jnp.int32))
+    v = np.asarray(sel_val)
+    np.testing.assert_allclose(v[:, 0], 1.0, rtol=1e-4)
+    np.testing.assert_array_equal(v[:, 1:], 0.0)
+    # identity at expert_k == K: bitwise equal to the unmasked path
+    sel_full, _, _ = moel._selection(
+        cfg, logits, jax.random.PRNGKey(0), deterministic=True,
+        expert_k=jnp.asarray(cfg.k, jnp.int32))
+    sel_none, _, _ = moel._selection(
+        cfg, logits, jax.random.PRNGKey(0), deterministic=True)
+    np.testing.assert_array_equal(np.asarray(sel_full),
+                                  np.asarray(sel_none))

@@ -70,7 +70,8 @@ def test_step_fwd_logits_bit_identical_to_old_signature():
         jnp.int32)
     new = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
     old = jax.jit(old_step_fwd(cfg, cfg.mem_len))
-    logits_n, mems_n, counts = new(params, mems, toks)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    logits_n, mems_n, counts = new(params, mems, toks, ek)
     logits_o, mems_o = old(params, mems, toks)
     np.testing.assert_array_equal(np.asarray(logits_n),
                                   np.asarray(logits_o))
@@ -95,7 +96,8 @@ def test_prefill_logits_bit_identical_and_counts_mask_padding():
     active = jnp.asarray([CHUNK, 2, 0], jnp.int32)
     new = jax.jit(api.make_prefill(cfg, cfg.mem_len))
     old = jax.jit(old_prefill(cfg, cfg.mem_len))
-    logits_n, mems_n, counts = new(params, mems, toks, active)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    logits_n, mems_n, counts = new(params, mems, toks, active, ek)
     logits_o, mems_o = old(params, mems, toks, active)
     np.testing.assert_array_equal(np.asarray(logits_n),
                                   np.asarray(logits_o))
@@ -121,7 +123,8 @@ def test_prefill_counts_survive_nan_poisoned_idle_lane():
     toks = jnp.zeros((b, CHUNK), jnp.int32)
     active = jnp.asarray([CHUNK, 0], jnp.int32)
     pre = jax.jit(api.make_prefill(cfg, cfg.mem_len))
-    _, _, counts = pre(params, mems, toks, active)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    _, _, counts = pre(params, mems, toks, active, ek)
     c = np.asarray(counts)
     assert np.all(np.isfinite(c))
     np.testing.assert_array_equal(
@@ -149,10 +152,15 @@ def test_step_fwd_manifest_appends_counts_output():
     b = 2
     params, mems = setup(cfg, b)
     stok = jnp.zeros((b, 1), jnp.int32)
-    _, _, out_spec = aot.lower_fn(
-        api.make_step_fwd(cfg, cfg.mem_len), (params, mems, stok))
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_step_fwd(cfg, cfg.mem_len), (params, mems, stok, ek))
     names = [b_["name"] for b_ in out_spec]
     assert names == (["0"] + [f"1.{i}" for i in range(cfg.n_layers)]
                      + ["2"])
     assert out_spec[-1]["shape"] == [cfg.n_layers, cfg.moe.n_experts]
     assert out_spec[-1]["dtype"] == "float32"
+    # ...and the trailing runtime expert_k scalar input "3"
+    assert in_spec[-1]["name"] == "3"
+    assert in_spec[-1]["shape"] == []
+    assert in_spec[-1]["dtype"] == "int32"

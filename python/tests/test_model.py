@@ -133,8 +133,9 @@ def test_step_fwd_next_token_logits():
     tcfg = TrainConfig(batch_size=2)
     fwd = jax.jit(api.make_step_fwd(cfg, cfg.mem_len))
     args = api.example_args(cfg, tcfg, 2 * cfg.context, serve_batch=3)
-    params, smems, stok = args["step_fwd"]
-    logits, new_mems, counts = fwd(params, smems, stok)
+    # MoE presets take a trailing runtime expert_k scalar
+    params, smems, stok, ek = args["step_fwd"]
+    logits, new_mems, counts = fwd(params, smems, stok, ek)
     assert logits.shape == (3, cfg.vocab_size)
     assert new_mems[0].shape == smems[0].shape
     # MoE presets append per-layer expert-selection counts

@@ -25,9 +25,14 @@ def setup(cfg, batch):
     params = api.M.init_params(jax.random.PRNGKey(0), cfg)
     mems = [jnp.zeros((batch, cfg.mem_len, cfg.d_model), jnp.float32)
             for _ in range(cfg.n_layers)]
-    step = api.make_step_fwd(cfg, cfg.mem_len)
-    pre = api.make_prefill(cfg, cfg.mem_len)
-    return params, mems, jax.jit(step), jax.jit(pre)
+    step_fn = api.make_step_fwd(cfg, cfg.mem_len)
+    pre_fn = api.make_prefill(cfg, cfg.mem_len)
+    # bind the runtime expert_k scalar to its identity value K so the
+    # helpers keep the pre-adaptive-k call shape
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    step = jax.jit(lambda p, m, t: step_fn(p, m, t, ek))
+    pre = jax.jit(lambda p, m, t, a: pre_fn(p, m, t, a, ek))
+    return params, mems, step, pre
 
 
 def feed_single(step, params, mems, prompts):
@@ -152,31 +157,36 @@ def test_idle_lane_memory_is_bit_for_bit_untouched():
 
 def test_prefill_manifest_names_match_engine_contract():
     """The Rust engine maps prefill inputs ``0.*``/``1.*`` onto the
-    step_fwd device state, uploads ``2`` (tokens [B, C]) and ``3``
-    (active_len [B]), reads output ``0`` (logits_last) and feeds
-    outputs ``1.*`` back buffer-to-buffer."""
+    step_fwd device state, uploads ``2`` (tokens [B, C]), ``3``
+    (active_len [B]) and — MoE presets — ``4`` (expert_k scalar),
+    reads output ``0`` (logits_last) and feeds outputs ``1.*`` back
+    buffer-to-buffer."""
     cfg = tiny_cfg()
     serve_batch = 2
     smems = [jnp.zeros((serve_batch, cfg.mem_len, cfg.d_model),
                        jnp.float32) for _ in range(cfg.n_layers)]
     ptok = jnp.zeros((serve_batch, CHUNK), jnp.int32)
     active = jnp.full((serve_batch,), CHUNK, jnp.int32)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
     params = api.M.init_params(jax.random.PRNGKey(0), cfg)
     _, in_spec, out_spec = aot.lower_fn(
         api.make_prefill(cfg, cfg.mem_len),
-        (params, smems, ptok, active))
+        (params, smems, ptok, active, ek))
     in_names = [b["name"] for b in in_spec]
-    assert in_names[-2:] == ["2", "3"]
-    assert all(n.startswith(("0.", "1.")) for n in in_names[:-2])
+    assert in_names[-3:] == ["2", "3", "4"]
+    assert all(n.startswith(("0.", "1.")) for n in in_names[:-3])
     mem_inputs = [b for b in in_spec if b["name"].startswith("1.")]
     assert [b["name"] for b in mem_inputs] == [
         f"1.{i}" for i in range(cfg.n_layers)]
-    tok_spec = in_spec[-2]
+    tok_spec = in_spec[-3]
     assert tok_spec["shape"] == [serve_batch, CHUNK]
     assert tok_spec["dtype"] == "int32"
-    act_spec = in_spec[-1]
+    act_spec = in_spec[-2]
     assert act_spec["shape"] == [serve_batch]
     assert act_spec["dtype"] == "int32"
+    ek_spec = in_spec[-1]
+    assert ek_spec["shape"] == []
+    assert ek_spec["dtype"] == "int32"
     out_names = [b["name"] for b in out_spec]
     # MoE presets carry a trailing expert-counts output "2"; the engine
     # treats it as optional (absent on dense/topk/pkm artifacts)

@@ -48,6 +48,7 @@ fn bench_decode_loop() {
             prompt: corpus.take_vec(8),
             max_new_tokens: 24,
             sampler: Sampler::greedy(),
+            ..Default::default()
         }));
     }
     let xfer0 = engine.transfer_stats();
@@ -90,6 +91,7 @@ fn bench_prefill_mock() -> Vec<Json> {
                     prompt: vec![(i % 100) as i32; PROMPT_LEN],
                     max_new_tokens: GEN,
                     sampler: Sampler::greedy(),
+                    ..Default::default()
                 },
                 tx.clone(),
             );
@@ -204,6 +206,7 @@ fn bench_prefill_device(rows: &mut Vec<Json>) {
                 prompt: corpus.take_vec(PROMPT_LEN),
                 max_new_tokens: GEN,
                 sampler: Sampler::greedy(),
+                ..Default::default()
             }));
         }
         let xfer0 = engine.transfer_stats();

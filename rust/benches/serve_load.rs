@@ -24,6 +24,7 @@ fn bench_scheduler() {
             prompt: vec![1; 16],
             max_new_tokens: 32,
             sampler: Sampler::greedy(),
+            ..Default::default()
         };
         let n = 1024;
         let s = bench(

@@ -27,8 +27,8 @@ use sigma_moe::data;
 use sigma_moe::json::Json;
 use sigma_moe::runtime::{Client, Manifest, ModelBundle};
 use sigma_moe::serving::{
-    chaos, loadgen, router, server, Engine, GenRequest, Placement,
-    Policy, RouterCfg, Sampler, ServerConfig,
+    chaos, loadgen, router, server, DegradeCfg, Engine, GenRequest,
+    Placement, Policy, RouterCfg, Sampler, ServerConfig,
 };
 use sigma_moe::tensor::HostTensor;
 use sigma_moe::{flops, Error, Result};
@@ -283,6 +283,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("span-sample", "1000", "HTTP: per-mille of request ids \
                                  retained in the trace ring (1000 \
                                  keeps every span)")
+    .optional("degrade-k", "HTTP: adaptive expert top-k under load, \
+                            as min_k:hi_wm:lo_wm — degrade expert_k \
+                            to min_k when queue depth reaches hi_wm \
+                            (or deadlines drop), restore the full k \
+                            once depth falls to lo_wm (MoE artifacts \
+                            with runtime-k support only)")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -323,6 +329,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 top_k: 50,
                 greedy: false,
             },
+            ..Default::default()
         }));
     }
     let results = engine.run_to_completion(rxs)?;
@@ -411,6 +418,20 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
     let dir = sigma_moe::artifacts_root().join(&preset);
     // cheap JSON-only manifest read for vocab / lane-count reporting
     let manifest = Manifest::load(&dir)?;
+    let degrade_k = match p.get("degrade-k") {
+        None => None,
+        Some(spec) => {
+            let cfg = DegradeCfg::parse(spec)?;
+            if manifest.expert_k_max.is_none() {
+                return Err(Error::Config(format!(
+                    "--degrade-k: preset {preset} has no runtime \
+                     expert-k input (dense artifact, or a MoE artifact \
+                     predating adaptive-k — rebuild it)"
+                )));
+            }
+            Some(cfg)
+        }
+    };
     let cfg = ServerConfig {
         queue_cap: p.usize("queue-cap")?,
         policy: Policy::parse(p.str("policy")?)?,
@@ -425,6 +446,8 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         },
         trace_ring: p.usize("trace-ring")?.max(1),
         span_sample_permille: p.u64("span-sample")?.min(1000),
+        expert_k_max: manifest.expert_k_max,
+        degrade_k,
         ..Default::default()
     };
     let checkpoint: Option<Vec<(String, HostTensor)>> =
@@ -446,6 +469,13 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         cfg.policy.as_str(),
         cfg.queue_cap,
     );
+    if let (Some(d), Some(k)) = (cfg.degrade_k, cfg.expert_k_max) {
+        eprintln!(
+            "[serve] adaptive expert-k: ceiling {k} | floor {} | \
+             degrade at depth >= {} | restore at depth <= {}",
+            d.min_k, d.hi_wm, d.lo_wm,
+        );
+    }
     let shutdown = Arc::new(AtomicBool::new(false));
     if engines > 1 {
         let rcfg = RouterCfg {
@@ -541,6 +571,10 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
                          verifies the decision stream + final metrics \
                          bit-for-bit")
     .flag("no-storm", "disable fault injection (clean load run)")
+    .optional("degrade-k", "adaptive expert top-k under load, as \
+                            min_k:hi_wm:lo_wm — the storm then also \
+                            exercises (and journals) the scheduler's \
+                            k-degrade/restore hysteresis")
     .parse_from(argv)?;
 
     if let Some(path) = p.get("replay") {
@@ -554,6 +588,10 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
         pumps: p.u64("pumps")?.max(2),
         seed: p.u64("seed")?,
         storm: !p.flag("no-storm"),
+        degrade: match p.get("degrade-k") {
+            Some(spec) => Some(DegradeCfg::parse(spec)?),
+            None => None,
+        },
     };
     eprintln!(
         "[chaos] seed {} | {} engine(s) x {} lanes | {} requests over \
@@ -676,6 +714,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .flag("telemetry-ab", "--dry-run: append an A/B row running the \
                            same plan with telemetry on and off, \
                            pricing always-on observability")
+    .flag("degrade-ab", "--dry-run: append an A/B row running the same \
+                         plan over an overloaded mock fleet with \
+                         adaptive expert-k off vs on (--degrade-k \
+                         1:4:1), pricing the p99 the degraded k buys \
+                         back under queue pressure")
     .optional("record", "deterministic device-free run over the mock \
                          fleet on a simulated clock; writes the full \
                          decision trace here (see --replay)")
@@ -704,6 +747,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             pumps: p.u64("pumps")?.max(2),
             seed: p.u64("seed")?,
             storm: false,
+            degrade: None,
         };
         eprintln!(
             "[loadgen] recording a deterministic run: seed {} | {} \
@@ -748,6 +792,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         telemetry: true,
     };
     let mut ab_row: Option<Json> = None;
+    let mut degrade_row: Option<Json> = None;
     let mut prom_artifact: Option<String> = None;
     let mut rows: Vec<Json> = if p.flag("dry-run") {
         let engine_counts: Vec<usize> = p
@@ -784,11 +829,25 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             ab_row =
                 Some(loadgen::dry_run_telemetry_ab(&cfg, lanes, engines)?);
         }
+        if p.flag("degrade-ab") {
+            let engines = engine_counts.first().copied().unwrap_or(1);
+            eprintln!(
+                "[loadgen] degrade A/B: re-running the plan over an \
+                 overloaded mock fleet, fixed expert-k vs adaptive \
+                 ({engines} engine(s))"
+            );
+            degrade_row =
+                Some(loadgen::dry_run_degrade_ab(&cfg, lanes, engines)?);
+        }
         rows
     } else {
-        if p.flag("telemetry-ab") || p.get("prom-out").is_some() {
+        if p.flag("telemetry-ab")
+            || p.flag("degrade-ab")
+            || p.get("prom-out").is_some()
+        {
             return Err(Error::Config(
-                "--telemetry-ab and --prom-out are --dry-run options"
+                "--telemetry-ab, --degrade-ab and --prom-out are \
+                 --dry-run options"
                     .into(),
             ));
         }
@@ -858,6 +917,20 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             100.0 * num(&ab, "telemetry_overhead_frac"),
         );
         rows.push(ab);
+    }
+    if let Some(d) = degrade_row {
+        println!(
+            "degrade A/B: p99 {:.1} ms at full k vs {:.1} ms degraded \
+             -> {:.2}x under overload | {} degrade(s), {} restore(s), \
+             final k {}",
+            num(&d, "p99_ms_full_k"),
+            num(&d, "p99_ms_degraded"),
+            num(&d, "p99_speedup"),
+            num(&d, "k_degrades"),
+            num(&d, "k_restores"),
+            num(&d, "expert_k_final"),
+        );
+        rows.push(d);
     }
     if let Some(path) = p.get("prom-out") {
         if let Some(text) = &prom_artifact {

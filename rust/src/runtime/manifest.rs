@@ -134,6 +134,11 @@ pub struct Manifest {
     /// Serving prefill chunk width C (tokens per `prefill` dispatch per
     /// lane); 1 for artifacts that predate the `prefill` program.
     pub prefill_chunk: usize,
+    /// Compile-time expert top-k ceiling for the runtime `expert_k`
+    /// scalar input on MoE `step_fwd`/`prefill` (adaptive expert
+    /// sparsity).  `None` on non-MoE presets and on MoE artifacts that
+    /// predate the runtime-k input (fixed-k serving then).
+    pub expert_k_max: Option<usize>,
     pub functions: BTreeMap<String, FunctionSpec>,
     pub flops: BTreeMap<String, f64>,
     pub raw: Json,
@@ -191,6 +196,10 @@ impl Manifest {
                 .and_then(|v| v.as_usize().ok())
                 .unwrap_or(1)
                 .max(1),
+            expert_k_max: raw
+                .opt("expert_k_max")
+                .and_then(|v| v.as_usize().ok())
+                .filter(|&k| k > 0),
             model,
             functions,
             flops,

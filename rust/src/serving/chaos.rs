@@ -54,10 +54,10 @@ use crate::rng::Rng;
 use crate::serving::clock::{Clock, SharedClock, SimClock};
 use crate::serving::engine::{GenRequest, StreamEvent};
 use crate::serving::journal::{Journal, Trace};
-use crate::serving::mock::{MockBackend, MockFault};
+use crate::serving::mock::{MockBackend, MockFault, MOCK_TOP_K};
 use crate::serving::router::{Fleet, Placement, RouterCfg};
 use crate::serving::sampler::Sampler;
-use crate::serving::scheduler::Policy;
+use crate::serving::scheduler::{DegradeCfg, Policy};
 
 /// Simulated time per harness round (placer step + one step per
 /// live engine).  Matches the production placer tick.
@@ -98,6 +98,10 @@ pub struct ChaosCfg {
     /// Inject the fault storm.  Off = a clean deterministic load run
     /// (the `loadgen --record` path).
     pub storm: bool,
+    /// Adaptive expert-k policy on the shared scheduler (ceiling
+    /// [`MOCK_TOP_K`]).  `None` = fixed k, the pre-adaptive behavior;
+    /// traces recorded before this field parse as `None`.
+    pub degrade: Option<DegradeCfg>,
 }
 
 impl Default for ChaosCfg {
@@ -110,13 +114,14 @@ impl Default for ChaosCfg {
             pumps: 600,
             seed: 1,
             storm: true,
+            degrade: None,
         }
     }
 }
 
 impl ChaosCfg {
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("engines", json::num(self.engines as f64)),
             ("lanes", json::num(self.lanes as f64)),
             ("vocab", json::num(self.vocab as f64)),
@@ -124,7 +129,11 @@ impl ChaosCfg {
             ("pumps", json::num(self.pumps as f64)),
             ("seed", json::num(self.seed as f64)),
             ("storm", Json::Bool(self.storm)),
-        ])
+        ];
+        if let Some(d) = self.degrade {
+            fields.push(("degrade", json::s(&d.to_flag())));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<ChaosCfg> {
@@ -136,6 +145,11 @@ impl ChaosCfg {
             pumps: j.get("pumps")?.as_f64()? as u64,
             seed: j.get("seed")?.as_f64()? as u64,
             storm: j.get("storm")?.as_bool()?,
+            // absent on traces recorded before adaptive-k: fixed k
+            degrade: j
+                .opt("degrade")
+                .map(|v| DegradeCfg::parse(v.as_str()?))
+                .transpose()?,
         })
     }
 }
@@ -327,6 +341,10 @@ pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
         clock.clone(),
         journal.clone(),
     );
+    let fleet = match cfg.degrade {
+        Some(d) => fleet.with_degrade_k(d, MOCK_TOP_K),
+        None => fleet,
+    };
 
     let mut rng = Rng::new(cfg.seed);
     let (reqs, trouble) = build_schedule(cfg, &mut rng);
@@ -391,6 +409,7 @@ pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
                     prompt: c.prompt.clone(),
                     max_new_tokens: c.budget,
                     sampler: Sampler::greedy(),
+                    ..Default::default()
                 };
                 match fleet.sched().enqueue(req, c.deadline, tx) {
                     Ok(_) => {
@@ -660,6 +679,7 @@ mod tests {
             pumps: 400,
             seed,
             storm,
+            degrade: None,
         }
     }
 
@@ -806,5 +826,65 @@ mod tests {
         assert_eq!(back.engines, cfg.engines);
         assert_eq!(back.pumps, cfg.pumps);
         assert_eq!(back.storm, cfg.storm);
+        // pre-adaptive-k traces carry no "degrade" key: fixed k
+        assert_eq!(back.degrade, None);
+        let d = DegradeCfg { min_k: 1, hi_wm: 4, lo_wm: 1 };
+        let with = ChaosCfg { degrade: Some(d), ..ChaosCfg::default() };
+        let back = ChaosCfg::from_json(&with.to_json()).unwrap();
+        assert_eq!(back.degrade, Some(d));
+    }
+
+    /// Property: under a fault storm with adaptive expert-k enabled,
+    /// the serving invariants still hold (exactly-once terminals,
+    /// well-formed spans), the journal carries the k-transition
+    /// events, the scheduler gauges surface the hysteresis, and a
+    /// recorded trace replays the transitions byte-for-byte.
+    #[test]
+    fn degrade_k_storms_replay_transitions_byte_for_byte() {
+        use crate::serving::telemetry::spans_from_events;
+        let degrade = DegradeCfg { min_k: 1, hi_wm: 1, lo_wm: 0 };
+        for seed in [3, 11, 29] {
+            let cfg = ChaosCfg {
+                degrade: Some(degrade),
+                ..small(true, seed)
+            };
+            let a = run(&cfg).unwrap();
+            assert!(a.ok(), "seed {seed}: violations: {:?}", a.violations);
+            assert_eq!(a.dones + a.drops + a.rejected, cfg.requests);
+            assert!(
+                a.events.contains("k_degrade"),
+                "seed {seed}: the storm never tripped the watermark"
+            );
+            // the id-less k-transition events must not disturb span
+            // assembly: every accepted request still reaches exactly
+            // one terminal
+            let lines: Vec<String> =
+                a.events.lines().map(str::to_string).collect();
+            let spans = spans_from_events(&lines)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let complete =
+                spans.iter().filter(|s| s.terminal.is_some()).count();
+            assert_eq!(complete, a.accepted, "seed {seed}");
+            let sched = a.metrics.get("scheduler").unwrap();
+            let g = |k: &str| sched.get(k).unwrap().as_f64().unwrap();
+            assert!(g("expert_k_degrades") >= 1.0, "seed {seed}");
+            assert_eq!(g("expert_k_max"), MOCK_TOP_K as f64);
+            let b = run(&cfg).unwrap();
+            assert_eq!(
+                a.events, b.events,
+                "seed {seed}: decision streams diverged"
+            );
+            let path = tmp(&format!("degrade-{seed}.jsonl"));
+            let rec = record(&cfg, &path).unwrap();
+            assert!(rec.ok(), "violations: {:?}", rec.violations);
+            let out = replay_path(&path).unwrap();
+            assert!(
+                out.events_match,
+                "seed {seed}: divergence: {:?}",
+                out.divergence
+            );
+            assert!(out.metrics_match, "seed {seed}: metrics diverged");
+            std::fs::remove_file(&path).ok();
+        }
     }
 }

@@ -40,11 +40,17 @@ use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
 
 /// A generation request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct GenRequest {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampler: Sampler,
+    /// Per-request ceiling on the σ-MoE runtime expert top-k, already
+    /// validated against `[1, expert_k_max]` at the HTTP boundary.
+    /// The engine feeds one scalar per dispatch, so the effective k of
+    /// a pump is the minimum over the scheduler's degrade target and
+    /// every active lane's ceiling.  `None` = no request preference.
+    pub expert_k: Option<usize>,
 }
 
 /// A finished generation.
@@ -131,6 +137,19 @@ pub trait EngineBackend {
     fn take_expert_counts(&mut self) -> Option<Vec<Vec<u64>>> {
         None
     }
+    /// Compile-time expert top-k ceiling of the runtime `expert_k`
+    /// scalar input (adaptive expert sparsity).  `None` means the
+    /// backend has no runtime-k knob — a dense/topk/pkm artifact, or a
+    /// MoE artifact predating the scalar input — and degrade-k policy
+    /// decisions are no-ops against it.
+    fn expert_k_max(&self) -> Option<usize> {
+        None
+    }
+    /// Set the scheduler's expert top-k target for subsequent pumps
+    /// (clamped into `[1, expert_k_max]`; no-op without a runtime-k
+    /// knob).  Called by the serving driver before pumping whenever
+    /// the degrade-k policy transitions.
+    fn set_expert_k(&mut self, _k: usize) {}
 }
 
 #[derive(Debug)]
@@ -210,19 +229,22 @@ enum ResetInput {
 
 /// One input of the AOT'd `prefill` program, mapped onto the engine's
 /// `step_fwd` device state: a shared param/memory slot, the `[B, C]`
-/// token chunk, or the `[B]` active-length vector.
+/// token chunk, the `[B]` active-length vector, or the runtime
+/// expert-k scalar (MoE adaptive-sparsity artifacts only).
 #[derive(Debug, Clone, Copy)]
 enum PrefillInput {
     State(usize),
     Tokens,
     ActiveLen,
+    ExpertK,
 }
 
 /// Continuous-batching engine: `serve_batch` lanes step together in one
 /// `step_fwd` call per token.
 pub struct Engine<'a> {
     bundle: &'a ModelBundle,
-    /// device-resident step_fwd inputs: "0.*" params, "1.*" mems, "2" toks
+    /// device-resident step_fwd inputs: "0.*" params, "1.*" mems,
+    /// "2" toks, "3" the runtime expert-k scalar (adaptive-k MoE only)
     state: DeviceState,
     /// indices of the per-layer memory inputs within the input vector
     mem_slots: Vec<usize>,
@@ -250,6 +272,16 @@ pub struct Engine<'a> {
     counts_idx_step: Option<usize>,
     /// same for the `prefill` program's outputs
     counts_idx_prefill: Option<usize>,
+    /// `step_fwd` input slot of the runtime expert-k scalar ("3";
+    /// adaptive-sparsity MoE artifacts only — `None` disables the knob)
+    expert_k_idx_step: Option<usize>,
+    /// compile-time top-k ceiling of the runtime scalar (manifest
+    /// `expert_k_max`); present iff the artifact takes the input
+    expert_k_max: Option<usize>,
+    /// scheduler degrade target, applied as a ceiling on every pump
+    sched_expert_k: usize,
+    /// effective expert-k fed on the most recent dispatch
+    expert_k_current: usize,
     /// expert selections accumulated since the last
     /// [`EngineBackend::take_expert_counts`] drain:
     /// `expert_counts[layer][expert]`
@@ -337,6 +369,32 @@ impl<'a> Engine<'a> {
         // expert-count output "2"; older / non-MoE artifacts don't.
         let counts_idx_step =
             Self::find_counts_output(&spec.outputs, mem_slots.len());
+        // Adaptive-sparsity MoE artifacts take a trailing runtime
+        // expert-k i32 scalar input "3"; older / non-MoE artifacts
+        // don't, and the knob stays disabled (fixed-k serving).
+        let mut expert_k_idx_step = state.position("3").filter(|&i| {
+            state.slot_spec(i).dtype == DType::I32
+                && state.slot_spec(i).shape.is_empty()
+        });
+        // expert_k_max lands in the manifest alongside the input; the
+        // ablation-config k is an equivalent fallback.  Both absent
+        // (or 0) means no usable ceiling — disable the knob entirely
+        // rather than feed an unset input.
+        let expert_k_max = match expert_k_idx_step {
+            Some(_) => bundle
+                .manifest
+                .expert_k_max
+                .or(Some(bundle.manifest.model.expert_k))
+                .filter(|&k| k > 0),
+            None => None,
+        };
+        match (expert_k_idx_step, expert_k_max) {
+            (Some(idx), Some(mx)) => {
+                state.set_host(idx, HostTensor::from_i32(&[], &[mx as i32])?)?;
+            }
+            _ => expert_k_idx_step = None,
+        }
+        let k0 = expert_k_max.unwrap_or(0);
         let (prefill_inputs, prefill_feedback, prefill_chunk, counts_idx_prefill) =
             Self::map_prefill_program(
                 bundle, &state, n_lanes, &mem_slots, vocab,
@@ -354,6 +412,10 @@ impl<'a> Engine<'a> {
             prefill_chunk,
             counts_idx_step,
             counts_idx_prefill,
+            expert_k_idx_step,
+            expert_k_max,
+            sched_expert_k: k0.max(1),
+            expert_k_current: k0,
             expert_counts: Vec::new(),
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
@@ -463,7 +525,8 @@ impl<'a> Engine<'a> {
     /// silent single-token fallback on any mismatch so old artifacts
     /// keep working): inputs `0.*`/`1.*` are the params/memories shared
     /// with step_fwd, input `2` the `[B, C]` i32 token chunk, input `3`
-    /// the `[B]` i32 active-length vector; output `0` is the
+    /// the `[B]` i32 active-length vector, input `4` (adaptive-k MoE
+    /// artifacts) the runtime expert-k i32 scalar; output `0` is the
     /// last-valid-position logits `[B, vocab]` and outputs `1.*` the
     /// updated memories in layer order.  Like `reset_lanes`, the
     /// program must read *and* write every memory slot — a
@@ -508,6 +571,13 @@ impl<'a> Engine<'a> {
                     return NONE;
                 }
                 inputs.push(PrefillInput::ActiveLen);
+            } else if b.name == "4" {
+                // runtime expert-k scalar (adaptive-sparsity MoE
+                // artifacts; uploaded fresh per dispatch)
+                if b.dtype != DType::I32 || !b.shape.is_empty() {
+                    return NONE;
+                }
+                inputs.push(PrefillInput::ExpertK);
             } else {
                 match state.position(&b.name) {
                     Some(i)
@@ -694,6 +764,38 @@ impl<'a> Engine<'a> {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
+    /// Effective expert top-k for the next dispatch: the scheduler's
+    /// degrade target capped by every active lane's per-request
+    /// ceiling, clamped into `[1, expert_k_max]`.  `None` when the
+    /// artifact has no runtime-k knob.
+    fn effective_expert_k(&self) -> Option<usize> {
+        let max = self.expert_k_max?;
+        let mut k = self.sched_expert_k.min(max);
+        for lane in self.lanes.iter().flatten() {
+            if let Some(rk) = lane.request.expert_k {
+                k = k.min(rk);
+            }
+        }
+        Some(k.max(1))
+    }
+
+    /// Refresh the device-resident expert-k scalar for `step_fwd` if
+    /// the effective k changed since the last dispatch (a 4-byte
+    /// upload, and only on transitions).
+    fn sync_expert_k(&mut self) -> Result<()> {
+        let (Some(idx), Some(k)) =
+            (self.expert_k_idx_step, self.effective_expert_k())
+        else {
+            return Ok(());
+        };
+        if k != self.expert_k_current {
+            self.state
+                .set_host(idx, HostTensor::from_i32(&[], &[k as i32])?)?;
+            self.expert_k_current = k;
+        }
+        Ok(())
+    }
+
     /// Run one engine iteration: admit, then either one chunked
     /// `prefill` dispatch (some lane still has pending prompt tokens —
     /// decode lanes ride along as 1-active chunks) or one single-token
@@ -752,6 +854,7 @@ impl<'a> Engine<'a> {
         }
         self.state
             .set_host(self.tok_idx, HostTensor::from_i32(&[b, 1], &toks)?)?;
+        self.sync_expert_k()?;
         let out = {
             let bufs = self.state.buffers()?;
             fwd.run_buffers(&bufs)?
@@ -867,6 +970,26 @@ impl<'a> Engine<'a> {
             &self.bundle.client,
             &HostTensor::from_i32(&[b], &active)?,
         )?;
+        // runtime expert-k scalar (adaptive-k MoE artifacts): a fresh
+        // 4-byte upload per dispatch, mirroring the step_fwd slot
+        let needs_ek = self
+            .prefill_inputs
+            .as_ref()
+            .is_some_and(|ins| {
+                ins.iter().any(|pi| matches!(pi, PrefillInput::ExpertK))
+            });
+        let ek_buf = if needs_ek {
+            let k = self
+                .effective_expert_k()
+                .unwrap_or_else(|| self.expert_k_max.unwrap_or(1));
+            self.expert_k_current = k;
+            Some(upload(
+                &self.bundle.client,
+                &HostTensor::from_i32(&[], &[k as i32])?,
+            )?)
+        } else {
+            None
+        };
         let out = {
             let inputs = self
                 .prefill_inputs
@@ -878,6 +1001,9 @@ impl<'a> Engine<'a> {
                     PrefillInput::State(s) => self.state.buffer(*s),
                     PrefillInput::Tokens => Ok(&tok_buf),
                     PrefillInput::ActiveLen => Ok(&act_buf),
+                    PrefillInput::ExpertK => ek_buf.as_ref().ok_or_else(
+                        || Error::other("expert_k buffer unmapped"),
+                    ),
                 })
                 .collect::<Result<_>>()?;
             prog.run_buffers(&bufs)?
@@ -926,15 +1052,24 @@ impl<'a> Engine<'a> {
                     if row.iter().any(|v| !v.is_finite()) {
                         poisoned = true;
                     } else {
-                        let tok =
-                            lane.sampler.sample(row, &mut self.rng) as i32;
-                        lane.generated.push(tok);
-                        self.tokens_generated += 1;
-                        if let Some(tx) = &lane.events {
-                            let _ = tx.send(StreamEvent::Token(tok));
-                        }
-                        if lane.generated.len() >= lane.budget {
-                            finished = true;
+                        match lane.sampler.sample(row, &mut self.rng) {
+                            Some(tok) => {
+                                let tok = tok as i32;
+                                lane.generated.push(tok);
+                                self.tokens_generated += 1;
+                                if let Some(tx) = &lane.events {
+                                    let _ =
+                                        tx.send(StreamEvent::Token(tok));
+                                }
+                                if lane.generated.len() >= lane.budget {
+                                    finished = true;
+                                }
+                            }
+                            // second line of defense: the sampler saw
+                            // nothing finite (unreachable behind the
+                            // row guard above, but the contract is
+                            // poisoned-lane, never token 0)
+                            None => poisoned = true,
                         }
                     }
                 }
@@ -1051,6 +1186,13 @@ impl<'a> Engine<'a> {
             "expert_stats_unavailable".into(),
             self.expert_stats_unavailable as f64,
         );
+        if let Some(mx) = self.expert_k_max {
+            m.insert("expert_k_max".into(), mx as f64);
+            m.insert(
+                "expert_k_current".into(),
+                self.expert_k_current as f64,
+            );
+        }
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
         m.insert("d2h_bytes".into(), xfer.d2h_bytes as f64);
@@ -1094,6 +1236,14 @@ impl EngineBackend for Engine<'_> {
         }
         Some(std::mem::take(&mut self.expert_counts))
     }
+
+    fn expert_k_max(&self) -> Option<usize> {
+        self.expert_k_max
+    }
+
+    fn set_expert_k(&mut self, k: usize) {
+        self.sched_expert_k = k.max(1);
+    }
 }
 
 #[cfg(test)]
@@ -1107,6 +1257,7 @@ mod tests {
                 prompt: vec![tag],
                 max_new_tokens: 1,
                 sampler: Sampler::greedy(),
+                ..Default::default()
             },
             Some(tx),
             None,
@@ -1154,6 +1305,7 @@ mod tests {
                 prompt: vec![3, 1, 4],
                 max_new_tokens: 5,
                 sampler: Sampler::greedy(),
+                ..Default::default()
             },
             None,
             Some(tx),

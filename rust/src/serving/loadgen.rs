@@ -23,9 +23,9 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::json::{self, Json};
 use crate::rng::Rng;
-use crate::serving::mock::{MockBackend, MockFault};
+use crate::serving::mock::{MockBackend, MockFault, MOCK_TOP_K};
 use crate::serving::router::{self, RouterCfg};
-use crate::serving::scheduler::Histogram;
+use crate::serving::scheduler::{DegradeCfg, Histogram};
 use crate::serving::server::{self, ServerConfig};
 use crate::serving::telemetry;
 
@@ -947,6 +947,115 @@ pub fn dry_run_telemetry_ab(
         ("telemetry_overhead_frac", json::num(overhead)),
         ("on", on),
         ("off", off),
+    ]))
+}
+
+/// Per-pump latency of the degrade-A/B mock engines at full expert-k:
+/// 4x the normal dry-run delay, so the same Poisson plan that the
+/// normal rows absorb becomes an *overload* here — the queue builds,
+/// the degrade watermark trips, and the k-vs-p99 comparison measures
+/// the policy under the pressure it exists for.  The mock scales its
+/// step delay by `k_eff / MOCK_TOP_K`, mirroring the real engine's
+/// expert-FLOPs reduction at lower k.
+pub const DEGRADE_AB_STEP_DELAY: Duration = Duration::from_micros(800);
+
+/// One overloaded dry-run leg of the degrade A/B (`degrade = None` is
+/// the fixed-k baseline).
+fn dry_run_overloaded(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+    degrade: Option<DegradeCfg>,
+    mode: &str,
+) -> Result<Json> {
+    let server_cfg = ServerConfig {
+        vocab: Some(cfg.vocab),
+        prefill_chunk: cfg.prefill_chunk.max(1),
+        telemetry: cfg.telemetry,
+        expert_k_max: Some(MOCK_TOP_K),
+        degrade_k: degrade,
+        ..Default::default()
+    };
+    let engines = engines.max(1);
+    let mut row = with_mock_fleet(
+        lanes,
+        cfg.vocab,
+        DEGRADE_AB_STEP_DELAY,
+        server_cfg,
+        RouterCfg { engines, ..Default::default() },
+        &[],
+        |addr| run(addr, cfg, mode),
+    )?;
+    if let Json::Obj(m) = &mut row {
+        m.insert("engines".into(), json::num(engines as f64));
+    }
+    Ok(row)
+}
+
+/// The adaptive expert-k A/B pair: the same overloaded dry-run plan
+/// with expert top-k pinned at the ceiling vs degraded under queue
+/// pressure (`min_k = 1`, watermarks 4:1), plus the p99 comparison and
+/// the degraded leg's k-transition counters pulled from the scheduler
+/// metrics.  The row makes the quality-for-latency trade a tracked
+/// number: how much tail latency the floor k buys back when the queue
+/// is shedding work.
+pub fn dry_run_degrade_ab(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<Json> {
+    let degrade = DegradeCfg { min_k: 1, hi_wm: 4, lo_wm: 1 };
+    let full = dry_run_overloaded(
+        cfg,
+        lanes,
+        engines,
+        None,
+        "mock-dry-run-degrade-off",
+    )?;
+    let degraded = dry_run_overloaded(
+        cfg,
+        lanes,
+        engines,
+        Some(degrade),
+        "mock-dry-run-degrade-on",
+    )?;
+    let p99 = |row: &Json| {
+        row.opt("latency")
+            .and_then(|l| l.opt("p99_ms"))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let sched_gauge = |row: &Json, key: &str| {
+        row.opt("server_metrics")
+            .and_then(|m| m.opt("scheduler"))
+            .and_then(|s| s.opt(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let (p_full, p_deg) = (p99(&full), p99(&degraded));
+    let speedup = if p_deg > 0.0 { p_full / p_deg } else { 0.0 };
+    Ok(json::obj(vec![
+        ("mode", json::s("mock-dry-run-degrade-ab")),
+        ("engines", json::num(engines.max(1) as f64)),
+        ("expert_k_max", json::num(MOCK_TOP_K as f64)),
+        ("min_k", json::num(degrade.min_k as f64)),
+        ("p99_ms_full_k", json::num(p_full)),
+        ("p99_ms_degraded", json::num(p_deg)),
+        ("p99_speedup", json::num(speedup)),
+        (
+            "k_degrades",
+            json::num(sched_gauge(&degraded, "expert_k_degrades")),
+        ),
+        (
+            "k_restores",
+            json::num(sched_gauge(&degraded, "expert_k_restores")),
+        ),
+        (
+            "expert_k_final",
+            json::num(sched_gauge(&degraded, "expert_k_current")),
+        ),
+        ("full_k", full),
+        ("degraded", degraded),
     ]))
 }
 

@@ -74,11 +74,13 @@ pub const MOCK_TOP_K: usize = 2;
 
 /// The mock's synthetic σ-MoE router: token value `t` at layer `l`
 /// selects experts `(t + 7l) % NE` and `(t + 13l + 3) % NE` (distinct
-/// for NE = 8: their difference `6l + 3` is odd).  A pure function of
-/// the token values — not of scheduling — so per-request totals are
-/// identical across chunk widths and lane placements, which is what
-/// lets the chaos harness byte-diff expert metrics across replays.
-fn route_token(counts: &mut [Vec<u64>], t: i32) {
+/// for NE = 8: their difference `6l + 3` is odd), truncated to the
+/// first `k` selections under a degraded runtime expert top-k.  A pure
+/// function of the token values and k — not of scheduling — so
+/// per-request totals are identical across chunk widths and lane
+/// placements, which is what lets the chaos harness byte-diff expert
+/// metrics across replays.
+fn route_token(counts: &mut [Vec<u64>], t: i32, k: usize) {
     for (l, layer) in counts.iter_mut().enumerate() {
         let ne = layer.len() as i64;
         if ne == 0 {
@@ -86,7 +88,9 @@ fn route_token(counts: &mut [Vec<u64>], t: i32) {
         }
         let (t, l) = (t as i64, l as i64);
         layer[(t + 7 * l).rem_euclid(ne) as usize] += 1;
-        layer[(t + 13 * l + 3).rem_euclid(ne) as usize] += 1;
+        if k > 1 {
+            layer[(t + 13 * l + 3).rem_euclid(ne) as usize] += 1;
+        }
     }
 }
 
@@ -98,6 +102,8 @@ struct MockLane {
     events: mpsc::Sender<StreamEvent>,
     queued_at: Instant,
     admitted_at: Instant,
+    /// per-request expert top-k ceiling carried from the [`GenRequest`]
+    req_expert_k: Option<usize>,
 }
 
 struct QueuedMock {
@@ -142,6 +148,10 @@ pub struct MockBackend {
     /// [`EngineBackend::take_expert_counts`] drain:
     /// `expert_counts[layer][expert]`
     expert_counts: Vec<Vec<u64>>,
+    /// scheduler-set expert top-k target ([`MOCK_TOP_K`] = full
+    /// quality); the effective k of a pump further folds in per-request
+    /// ceilings, mirroring the real engine
+    expert_k: usize,
 }
 
 impl MockBackend {
@@ -165,6 +175,7 @@ impl MockBackend {
                 vec![0; MOCK_EXPERTS];
                 MOCK_EXPERT_LAYERS
             ],
+            expert_k: MOCK_TOP_K,
         }
     }
 
@@ -280,6 +291,19 @@ impl MockBackend {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
+    /// Effective expert top-k of the next pump: the scheduler target
+    /// folded with every active lane's per-request ceiling (same rule
+    /// as the real engine's per-dispatch scalar).
+    fn effective_expert_k(&self) -> usize {
+        let mut k = self.expert_k;
+        for lane in self.lanes.iter().flatten() {
+            if let Some(rk) = lane.req_expert_k {
+                k = k.min(rk);
+            }
+        }
+        k.clamp(1, MOCK_TOP_K)
+    }
+
     fn admit(&mut self) {
         for slot in self.lanes.iter_mut() {
             if slot.is_none() {
@@ -295,6 +319,7 @@ impl MockBackend {
                     events: q.events,
                     queued_at: q.queued_at,
                     admitted_at: self.clock.now(),
+                    req_expert_k: q.req.expert_k,
                 });
             }
         }
@@ -343,8 +368,15 @@ impl EngineBackend for MockBackend {
             return Ok(self.queue.len());
         }
         self.check_fault()?;
+        let k_eff = self.effective_expert_k();
         if !self.step_delay.is_zero() {
-            self.clock.sleep(self.step_delay);
+            // a degraded expert top-k proportionally cuts device step
+            // time (k/K of the expert FLOPs) — this is the mechanism
+            // the --degrade-ab overload A/B measures as a p99 win
+            let delay = self
+                .step_delay
+                .mul_f64(k_eff as f64 / MOCK_TOP_K as f64);
+            self.clock.sleep(delay);
         }
         self.steps_executed += 1;
         let chunk = self.prefill_chunk;
@@ -357,7 +389,7 @@ impl EngineBackend for MockBackend {
                 let k = lane.prompt_left.min(chunk);
                 let start = lane.prompt.len() - lane.prompt_left;
                 for &t in &lane.prompt[start..start + k] {
-                    route_token(&mut self.expert_counts, t);
+                    route_token(&mut self.expert_counts, t, k_eff);
                 }
                 lane.prompt_left -= k;
                 prompt_tokens += k as u64;
@@ -372,7 +404,7 @@ impl EngineBackend for MockBackend {
                 lane.generated.len(),
                 self.vocab as usize,
             );
-            route_token(&mut self.expert_counts, tok);
+            route_token(&mut self.expert_counts, tok, k_eff);
             lane.generated.push(tok);
             self.tokens_generated += 1;
             let _ = lane.events.send(StreamEvent::Token(tok));
@@ -406,6 +438,14 @@ impl EngineBackend for MockBackend {
         self.prefill_chunk
     }
 
+    fn expert_k_max(&self) -> Option<usize> {
+        Some(MOCK_TOP_K)
+    }
+
+    fn set_expert_k(&mut self, k: usize) {
+        self.expert_k = k.clamp(1, MOCK_TOP_K);
+    }
+
     fn stats(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
         m.insert("steps_executed".into(), self.steps_executed as f64);
@@ -423,6 +463,8 @@ impl EngineBackend for MockBackend {
         m.insert("n_lanes".into(), self.lanes.len() as f64);
         m.insert("expert_layers".into(), MOCK_EXPERT_LAYERS as f64);
         m.insert("experts_per_layer".into(), MOCK_EXPERTS as f64);
+        m.insert("expert_k_max".into(), MOCK_TOP_K as f64);
+        m.insert("expert_k_current".into(), self.expert_k as f64);
         m.insert("mock".into(), 1.0);
         m
     }
@@ -448,6 +490,7 @@ mod tests {
             prompt,
             max_new_tokens: max_new,
             sampler: Sampler::greedy(),
+            ..Default::default()
         }
     }
 
@@ -746,6 +789,34 @@ mod tests {
         let mut b = MockBackend::new(1, 10);
         let first = b.take_expert_counts().unwrap();
         assert_eq!(first, vec![vec![0; MOCK_EXPERTS]; MOCK_EXPERT_LAYERS]);
+    }
+
+    #[test]
+    fn degraded_expert_k_truncates_routing_and_respects_request_ceiling() {
+        let mut b = MockBackend::new(1, 50);
+        assert_eq!(b.expert_k_max(), Some(MOCK_TOP_K));
+        b.set_expert_k(1);
+        let (tx, _rx) = mpsc::channel();
+        b.submit_streaming(req(vec![3, 4], 2), tx);
+        while b.pump().unwrap() > 0 {}
+        // 2 prompt + 2 generated tokens, each selecting 1 expert/layer
+        for layer in b.take_expert_counts().unwrap() {
+            assert_eq!(layer.iter().sum::<u64>(), 4);
+        }
+        // restore (clamped down to the mock ceiling); a per-request
+        // ceiling then degrades only the pumps that lane is active in
+        b.set_expert_k(99);
+        let (tx, _rx) = mpsc::channel();
+        let mut r = req(vec![5], 1);
+        r.expert_k = Some(1);
+        b.submit_streaming(r, tx);
+        while b.pump().unwrap() > 0 {}
+        for layer in b.take_expert_counts().unwrap() {
+            assert_eq!(layer.iter().sum::<u64>(), 2);
+        }
+        let m = b.stats();
+        assert_eq!(m["expert_k_current"], MOCK_TOP_K as f64);
+        assert_eq!(m["expert_k_max"], MOCK_TOP_K as f64);
     }
 
     #[test]

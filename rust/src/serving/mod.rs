@@ -66,6 +66,8 @@ pub use journal::{Journal, Trace};
 pub use mock::{MockBackend, MockFault};
 pub use router::{Fleet, Placement, RouterCfg};
 pub use sampler::Sampler;
-pub use scheduler::{Histogram, Policy, Rejection, Scheduler};
+pub use scheduler::{
+    DegradeCfg, Histogram, KTransition, Policy, Rejection, Scheduler,
+};
 pub use server::{Driver, ServerConfig};
 pub use telemetry::Telemetry;

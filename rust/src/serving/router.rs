@@ -50,7 +50,7 @@ use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, EngineBackend, GenRequest, StreamEvent};
 use crate::serving::journal::Journal;
-use crate::serving::scheduler::{Policy, QueuedRequest, Scheduler};
+use crate::serving::scheduler::{DegradeCfg, Policy, QueuedRequest, Scheduler};
 use crate::serving::server::{self, ServeState, ServerConfig};
 use crate::serving::telemetry::Telemetry;
 
@@ -391,6 +391,15 @@ impl Fleet {
     /// The fleet's decision journal.
     pub fn journal(&self) -> &Arc<Journal> {
         &self.journal
+    }
+
+    /// Enable adaptive expert-k degradation on the shared scheduler
+    /// (see [`Scheduler::with_degrade_k`]).  Every engine driver applies
+    /// the scheduler's current target each iteration, so the whole
+    /// fleet degrades and restores together.
+    pub fn with_degrade_k(mut self, cfg: DegradeCfg, k_max: usize) -> Self {
+        self.sched = self.sched.with_degrade_k(cfg, k_max);
+        self
     }
 
     /// Replace the fleet's telemetry (ring size / sampling come from
@@ -823,6 +832,12 @@ impl Fleet {
     /// an exact function of the schedule.
     pub fn placer_step(&self, now: Instant) -> bool {
         self.sched.expire(now);
+        // re-evaluate the adaptive expert-k hysteresis exactly once per
+        // placer iteration (the single sequencing point shared by all
+        // engines), so k-transitions are journaled in one total order
+        // and replay deterministically; drivers pick the target up on
+        // their next step
+        self.sched.eval_degrade();
         self.health_check(now);
         if self.healthy_count() == 0 {
             // nothing can ever run; fail pending work fast (new
@@ -1006,6 +1021,14 @@ impl Fleet {
     ) -> usize {
         let me = &self.engines[id];
         self.beat(id, backend);
+        // apply the scheduler's current adaptive expert-k target (set
+        // by the placer's hysteresis pass).  Applying the *target*
+        // rather than reacting to transitions keeps late-started or
+        // re-admitted drivers consistent with the fleet; the backend
+        // only re-uploads on change, so this is idempotent and cheap.
+        if let Some(k) = self.sched.target_expert_k() {
+            backend.set_expert_k(k);
+        }
         // submit placed work (ownership re-checked under the
         // registry lock: a request re-placed since its mailbox
         // entry was written must not run here too)
@@ -1117,6 +1140,12 @@ impl Fleet {
         // clamp the shared scheduler's prompt costing down to this
         // engine's real chunk width (1 after a prefill fallback)
         self.sched.observe_prefill_chunk(backend.prefill_chunk());
+        // a heterogeneous fleet degrades to the *tightest* ceiling:
+        // the scheduler min-clamps across engines, so a target k is
+        // always dispatchable everywhere
+        if let Some(k) = backend.expert_k_max() {
+            self.sched.observe_expert_k_max(k);
+        }
         self.publish(id, backend);
         let mut result = Ok(());
         loop {
@@ -1404,6 +1433,10 @@ where
         shutdown.clone(),
         cfg.prefill_chunk,
     );
+    let fleet = match (cfg.degrade_k, cfg.expert_k_max) {
+        (Some(d), Some(k)) => fleet.with_degrade_k(d, k),
+        _ => fleet,
+    };
     let telemetry = if cfg.telemetry {
         Telemetry::new(fleet.clock().clone())
             .with_ring_cap(cfg.trace_ring)

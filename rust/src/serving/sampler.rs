@@ -23,24 +23,33 @@ impl Sampler {
     }
 
     /// Sample a token id from raw logits.
-    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+    ///
+    /// Returns `None` when *every* logit is non-finite — a fully
+    /// poisoned lane.  Silently falling back to an argmax over NaNs
+    /// used to stream token 0 as if healthy; the caller (the engine's
+    /// NaN-containment path) must treat `None` as a poisoned lane and
+    /// fail the request instead of emitting garbage.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> Option<usize> {
         if self.greedy {
-            return argmax(logits);
+            // argmax over *finite* entries only: the raw `>` scan never
+            // displaced a NaN at index 0, so a poisoned lane under
+            // greedy=true deterministically emitted token 0
+            return argmax_finite(logits);
         }
         let t = self.temperature.max(1e-4);
         // softmax with temperature over the (optionally top-k-filtered)
         // set.  Sampler settings come from the network
         // (/v1/completions) and logits from possibly-poisoned lanes, so
-        // non-finite logits are excluded up front on every stochastic
-        // path: in the weights they would turn the categorical total
-        // NaN (deterministically emitting the last candidate), and in a
+        // non-finite logits are excluded up front on every path: in the
+        // weights they would turn the categorical total NaN
+        // (deterministically emitting the last candidate), and in a
         // top-k sort NaN ranks above +inf and crowds out real tokens
         // (total_cmp, not partial_cmp().unwrap() — no panics on the
         // single engine-driver thread behind the whole server).
         let mut idx: Vec<usize> =
             (0..logits.len()).filter(|&i| logits[i].is_finite()).collect();
         if idx.is_empty() {
-            return argmax(logits);
+            return None;
         }
         if self.top_k > 0 && self.top_k < idx.len() {
             idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
@@ -54,18 +63,19 @@ impl Sampler {
             .iter()
             .map(|&i| (((logits[i] - maxl) / t) as f64).exp())
             .collect();
-        idx[rng.categorical(&weights)]
+        Some(idx[rng.categorical(&weights)])
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
+/// NaN-safe argmax: the maximum over *finite* entries (total_cmp, ties
+/// to the lowest index, matching the old `>` scan on clean input), or
+/// `None` when nothing is finite.
+fn argmax_finite(xs: &[f32]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| v.is_finite())
+        .max_by(|(ia, a), (ib, b)| a.total_cmp(b).then(ib.cmp(ia)))
+        .map(|(i, _)| i)
 }
 
 #[cfg(test)]
@@ -76,7 +86,45 @@ mod tests {
     fn greedy_picks_argmax() {
         let s = Sampler::greedy();
         let mut rng = Rng::new(0);
-        assert_eq!(s.sample(&[0.1, 2.0, -1.0], &mut rng), 1);
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0], &mut rng), Some(1));
+        // exact ties resolve to the lowest index, like the old `>` scan
+        assert_eq!(s.sample(&[2.0, 2.0, -1.0], &mut rng), Some(0));
+    }
+
+    #[test]
+    fn greedy_skips_non_finite_logits() {
+        // a NaN at index 0 used to win every comparison by default:
+        // `x > xs[best]` is false for NaN on either side, so a poisoned
+        // lane under greedy deterministically emitted token 0
+        let s = Sampler::greedy();
+        let mut rng = Rng::new(4);
+        assert_eq!(s.sample(&[f32::NAN, 1.0, 0.5], &mut rng), Some(1));
+        assert_eq!(
+            s.sample(&[f32::INFINITY, 1.0, f32::NAN, 3.0], &mut rng),
+            Some(3)
+        );
+        assert_eq!(
+            s.sample(&[f32::NEG_INFINITY, -2.0, -1.0], &mut rng),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn all_non_finite_signals_poisoned_lane() {
+        // every strategy must report the poisoned lane instead of
+        // streaming token 0 as if healthy
+        let mut rng = Rng::new(5);
+        let rows: [&[f32]; 3] = [
+            &[f32::NAN, f32::NAN],
+            &[f32::INFINITY, f32::NEG_INFINITY, f32::NAN],
+            &[],
+        ];
+        for greedy in [true, false] {
+            let s = Sampler { temperature: 1.0, top_k: 2, greedy };
+            for row in rows {
+                assert_eq!(s.sample(row, &mut rng), None);
+            }
+        }
     }
 
     #[test]
@@ -84,7 +132,7 @@ mod tests {
         let s = Sampler { temperature: 0.01, top_k: 0, greedy: false };
         let mut rng = Rng::new(1);
         for _ in 0..50 {
-            assert_eq!(s.sample(&[0.0, 5.0, 1.0], &mut rng), 1);
+            assert_eq!(s.sample(&[0.0, 5.0, 1.0], &mut rng), Some(1));
         }
     }
 
@@ -94,7 +142,7 @@ mod tests {
         let mut rng = Rng::new(2);
         for _ in 0..100 {
             let t = s.sample(&[5.0, 4.0, -100.0, -100.0], &mut rng);
-            assert!(t < 2);
+            assert!(t.unwrap() < 2);
         }
     }
 
@@ -105,19 +153,18 @@ mod tests {
         for _ in 0..50 {
             // NaNs sort above every finite logit in the total order, so
             // without filtering they would fill the whole top-2 set
-            let t = s.sample(&[f32::NAN, 1.0, f32::NAN, 0.5], &mut rng);
+            let t = s
+                .sample(&[f32::NAN, 1.0, f32::NAN, 0.5], &mut rng)
+                .unwrap();
             assert!(t == 1 || t == 3, "sampled NaN-logit token {t}");
         }
         // top_k disabled (the server default) takes a different path
         // and must also exclude the NaN entry from the weights
         let s0 = Sampler { temperature: 1.0, top_k: 0, greedy: false };
         for _ in 0..50 {
-            let t = s0.sample(&[1.0, f32::NAN, 0.5], &mut rng);
+            let t = s0.sample(&[1.0, f32::NAN, 0.5], &mut rng).unwrap();
             assert!(t != 1, "sampled NaN-logit token");
         }
-        // fully-poisoned row: still no panic
-        let t = s.sample(&[f32::NAN, f32::NAN], &mut rng);
-        assert!(t < 2);
     }
 
     #[test]

@@ -66,6 +66,71 @@ impl Policy {
     }
 }
 
+/// Adaptive expert top-k degradation policy (`--degrade-k
+/// min_k:hi_wm:lo_wm`): under queue pressure the scheduler lowers the
+/// fleet's expert top-k from the artifact's compile-time ceiling
+/// `expert_k_max` down to `min_k`, trading model quality for per-step
+/// latency, and restores the full k once the queue drains.
+///
+/// The two watermarks make the policy hysteretic: degrade when queue
+/// depth reaches `hi_wm` (or a deadline drop occurred since the last
+/// evaluation — the queue is shedding promised work), restore only once
+/// depth has fallen to `lo_wm` *and* no new deadline drops arrived, so
+/// a queue oscillating between the watermarks never flaps k every
+/// driver iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradeCfg {
+    /// Floor the scheduler may degrade expert top-k to (≥ 1).
+    pub min_k: usize,
+    /// Queue depth at or above which k degrades to `min_k`.
+    pub hi_wm: usize,
+    /// Queue depth at or below which k restores to `expert_k_max`.
+    pub lo_wm: usize,
+}
+
+impl DegradeCfg {
+    /// Parse the `min_k:hi_wm:lo_wm` CLI form.
+    pub fn parse(s: &str) -> Result<DegradeCfg> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let err = || {
+            Error::Config(format!(
+                "bad --degrade-k {s:?} (expected min_k:hi_wm:lo_wm \
+                 with min_k >= 1 and hi_wm > lo_wm)"
+            ))
+        };
+        if parts.len() != 3 {
+            return Err(err());
+        }
+        let nums: Vec<usize> = parts
+            .iter()
+            .map(|p| p.parse::<usize>().map_err(|_| err()))
+            .collect::<Result<_>>()?;
+        let (min_k, hi_wm, lo_wm) = (nums[0], nums[1], nums[2]);
+        if min_k < 1 || hi_wm <= lo_wm {
+            return Err(err());
+        }
+        Ok(DegradeCfg { min_k, hi_wm, lo_wm })
+    }
+
+    /// The `min_k:hi_wm:lo_wm` CLI form (journal/config echo).
+    pub fn to_flag(self) -> String {
+        format!("{}:{}:{}", self.min_k, self.hi_wm, self.lo_wm)
+    }
+}
+
+/// One expert top-k transition decided by [`Scheduler::eval_degrade`].
+/// The driver applies `to` to its engine backend; the journal already
+/// recorded the decision (id-less event — not a request span).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KTransition {
+    pub from: usize,
+    pub to: usize,
+    /// Queue depth at decision time.
+    pub depth: usize,
+    /// Deadline drops since the previous evaluation.
+    pub drop_delta: u64,
+}
+
 /// Why an enqueue was refused (the HTTP layer maps this to a status).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Rejection {
@@ -213,11 +278,24 @@ pub struct SchedMetrics {
     pub e2e_latency: Histogram,
 }
 
+/// Mutable adaptive-k state (behind the scheduler lock).
+#[derive(Debug)]
+struct DegradeState {
+    /// Current expert top-k target the drivers should run at.
+    target: usize,
+    degrades: u64,
+    restores: u64,
+    /// `dropped_deadline` as of the previous [`Scheduler::eval_degrade`]
+    /// — the delta is the drop *rate* signal.
+    last_deadline_drops: u64,
+}
+
 #[derive(Debug)]
 struct Inner {
     queue: VecDeque<QueuedRequest>,
     next_id: u64,
     metrics: SchedMetrics,
+    degrade: DegradeState,
     /// set by [`Scheduler::drain_shutdown`]; enqueues after it would
     /// never be consumed, so they are rejected under the same lock
     draining: bool,
@@ -240,6 +318,12 @@ pub struct Scheduler {
     /// freshness clamp (wall clock in production, simulated under the
     /// record/replay harness).
     clock: SharedClock,
+    /// Adaptive expert top-k policy; `None` leaves k pinned at the
+    /// artifact ceiling (fixed-k serving, and every non-MoE preset).
+    degrade: Option<DegradeCfg>,
+    /// Compile-time expert top-k ceiling from the artifact manifest
+    /// (0 = unknown / non-MoE: adaptive k disabled, no k gauges).
+    expert_k_max: AtomicUsize,
     /// Decision recorder (the disabled no-op journal in production).
     journal: Arc<Journal>,
     /// Request-lifecycle span recorder (always-on in the server/fleet
@@ -258,6 +342,8 @@ impl Scheduler {
             capacity: capacity.max(1),
             policy,
             prefill_chunk: AtomicUsize::new(1),
+            degrade: None,
+            expert_k_max: AtomicUsize::new(0),
             journal: Arc::new(Journal::disabled(clock.clone())),
             telemetry: Arc::new(Telemetry::disabled(clock.clone())),
             clock,
@@ -265,6 +351,12 @@ impl Scheduler {
                 queue: VecDeque::new(),
                 next_id: 0,
                 metrics: SchedMetrics::default(),
+                degrade: DegradeState {
+                    target: 0,
+                    degrades: 0,
+                    restores: 0,
+                    last_deadline_drops: 0,
+                },
                 draining: false,
             }),
             nonempty: Condvar::new(),
@@ -310,6 +402,106 @@ impl Scheduler {
     /// common denominator.
     pub fn observe_prefill_chunk(&self, c: usize) {
         self.prefill_chunk.fetch_min(c.max(1), Ordering::Relaxed);
+    }
+
+    /// Enable adaptive expert top-k under load.  `k_max` is the
+    /// artifact's compile-time ceiling (`expert_k_max` in the
+    /// manifest); the policy degrades the fleet target to
+    /// `cfg.min_k.min(k_max)` under pressure and restores it to `k_max`
+    /// once drained.
+    pub fn with_degrade_k(mut self, cfg: DegradeCfg, k_max: usize) -> Self {
+        self.degrade = Some(cfg);
+        self.observe_expert_k_max(k_max);
+        self
+    }
+
+    /// A driver reporting its artifact's expert top-k ceiling.  Seeds
+    /// the current target (full quality) and turns on the k gauges in
+    /// [`Scheduler::metrics_json`]; heterogeneous fleets clamp to the
+    /// smallest reported ceiling so one target fits every engine.
+    pub fn observe_expert_k_max(&self, k_max: usize) {
+        if k_max == 0 {
+            return;
+        }
+        let prev = self.expert_k_max.load(Ordering::Relaxed);
+        let k_max = if prev == 0 { k_max } else { prev.min(k_max) };
+        self.expert_k_max.store(k_max, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.degrade.target == 0 || inner.degrade.target > k_max {
+            inner.degrade.target = k_max;
+        }
+    }
+
+    /// The adaptive-k policy, if one was configured.
+    pub fn degrade_cfg(&self) -> Option<DegradeCfg> {
+        self.degrade
+    }
+
+    /// Current expert top-k target drivers should run at (`None` until
+    /// a ceiling is known — non-MoE presets never get one).
+    pub fn target_expert_k(&self) -> Option<usize> {
+        match self.inner.lock().unwrap().degrade.target {
+            0 => None,
+            k => Some(k),
+        }
+    }
+
+    /// Evaluate the adaptive-k hysteresis once (the engine driver calls
+    /// this every loop iteration).  Returns the transition when the
+    /// target changed — the caller applies `t.to` to its backend; the
+    /// decision is already journaled (`k_degrade` / `k_restore`,
+    /// id-less events that replay byte-identically but never join
+    /// request spans).
+    pub fn eval_degrade(&self) -> Option<KTransition> {
+        let cfg = self.degrade?;
+        let k_max = self.expert_k_max.load(Ordering::Relaxed);
+        let min_k = cfg.min_k.min(k_max);
+        if k_max == 0 || min_k == k_max {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let depth = inner.queue.len();
+        let drops = inner.metrics.dropped_deadline;
+        let drop_delta = drops - inner.degrade.last_deadline_drops;
+        inner.degrade.last_deadline_drops = drops;
+        let from = inner.degrade.target;
+        let to = if from > min_k {
+            // full (or partial) quality: degrade on pressure
+            if depth >= cfg.hi_wm || drop_delta > 0 {
+                min_k
+            } else {
+                from
+            }
+        } else {
+            // degraded: restore only once genuinely drained
+            if depth <= cfg.lo_wm && drop_delta == 0 {
+                k_max
+            } else {
+                from
+            }
+        };
+        if to == from {
+            return None;
+        }
+        inner.degrade.target = to;
+        let event = if to < from {
+            inner.degrade.degrades += 1;
+            "k_degrade"
+        } else {
+            inner.degrade.restores += 1;
+            "k_restore"
+        };
+        drop(inner);
+        self.journal.record(
+            event,
+            vec![
+                ("from", json::num(from as f64)),
+                ("to", json::num(to as f64)),
+                ("depth", json::num(depth as f64)),
+                ("drop_delta", json::num(drop_delta as f64)),
+            ],
+        );
+        Some(KTransition { from, to, depth, drop_delta })
     }
 
     pub fn policy(&self) -> Policy {
@@ -538,7 +730,7 @@ impl Scheduler {
     pub fn metrics_json(&self) -> Json {
         let inner = self.inner.lock().unwrap();
         let m = &inner.metrics;
-        json::obj(vec![
+        let mut fields = vec![
             ("policy", json::s(self.policy.as_str())),
             ("capacity", json::num(self.capacity as f64)),
             ("prefill_chunk", json::num(self.prefill_chunk() as f64)),
@@ -554,7 +746,20 @@ impl Scheduler {
             ("tokens_streamed", json::num(m.tokens_streamed as f64)),
             ("queue_wait", m.queue_wait.to_json()),
             ("e2e_latency", m.e2e_latency.to_json()),
-        ])
+        ];
+        // adaptive expert top-k gauges: only once a MoE ceiling is
+        // known, so non-MoE fleets don't grow meaningless zero gauges
+        // (scalar fields here render on /metrics as
+        // `sigma_moe_scheduler_expert_k_*` Prometheus families)
+        let k_max = self.expert_k_max.load(Ordering::Relaxed);
+        if k_max > 0 {
+            let d = &inner.degrade;
+            fields.push(("expert_k_max", json::num(k_max as f64)));
+            fields.push(("expert_k_current", json::num(d.target as f64)));
+            fields.push(("expert_k_degrades", json::num(d.degrades as f64)));
+            fields.push(("expert_k_restores", json::num(d.restores as f64)));
+        }
+        json::obj(fields)
     }
 }
 
@@ -568,6 +773,7 @@ mod tests {
             prompt: vec![1; prompt_len.max(1)],
             max_new_tokens: 4,
             sampler: Sampler::greedy(),
+            ..Default::default()
         }
     }
 
@@ -893,6 +1099,93 @@ mod tests {
             assert_eq!(Policy::parse(p.as_str()).unwrap(), p);
         }
         assert!(Policy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn degrade_cfg_parse_roundtrip_and_rejects_malformed() {
+        let c = DegradeCfg::parse("1:8:2").unwrap();
+        assert_eq!(c, DegradeCfg { min_k: 1, hi_wm: 8, lo_wm: 2 });
+        assert_eq!(c.to_flag(), "1:8:2");
+        for bad in ["", "1:2", "0:8:2", "1:2:2", "1:2:4", "a:8:2", "1:8:2:9"]
+        {
+            assert!(DegradeCfg::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn degrade_hysteresis_on_queue_depth() {
+        let s = Scheduler::new(16, Policy::Fifo)
+            .with_degrade_k(DegradeCfg::parse("1:3:1").unwrap(), 4);
+        assert_eq!(s.target_expert_k(), Some(4));
+        assert!(s.eval_degrade().is_none());
+        let mut held = Vec::new();
+        for _ in 0..3 {
+            enq(&s, 1, None, &mut held);
+        }
+        let t = s.eval_degrade().unwrap();
+        assert_eq!((t.from, t.to, t.depth), (4, 1, 3));
+        assert_eq!(s.target_expert_k(), Some(1));
+        // between the watermarks the degraded state holds — no flapping
+        let now = Instant::now();
+        s.take_next(now).unwrap();
+        assert_eq!(s.depth(), 2);
+        assert!(s.eval_degrade().is_none());
+        assert_eq!(s.target_expert_k(), Some(1));
+        // drained to lo_wm -> full quality restored
+        s.take_next(now).unwrap();
+        let t = s.eval_degrade().unwrap();
+        assert_eq!((t.from, t.to), (1, 4));
+        let m = s.metrics_json();
+        for (key, want) in [
+            ("expert_k_max", 4.0),
+            ("expert_k_current", 4.0),
+            ("expert_k_degrades", 1.0),
+            ("expert_k_restores", 1.0),
+        ] {
+            assert_eq!(
+                m.get(key).unwrap().as_f64().unwrap(),
+                want,
+                "{key}"
+            );
+        }
+    }
+
+    #[test]
+    fn degrade_triggers_on_deadline_drops_then_restores_when_clean() {
+        // hi_wm unreachable: only the deadline-drop delta can degrade
+        let s = Scheduler::new(16, Policy::Deadline)
+            .with_degrade_k(DegradeCfg::parse("2:100:0").unwrap(), 4);
+        let (tx, _rx) = chan();
+        s.enqueue(req(1), Some(Duration::ZERO), tx).unwrap();
+        s.expire(Instant::now() + Duration::from_millis(1));
+        let t = s.eval_degrade().unwrap();
+        assert_eq!((t.from, t.to, t.drop_delta), (4, 2, 1));
+        // queue empty and no new drops since: restore on the next eval
+        let t = s.eval_degrade().unwrap();
+        assert_eq!((t.from, t.to, t.drop_delta), (2, 4, 0));
+    }
+
+    #[test]
+    fn no_adaptive_k_without_a_moe_ceiling() {
+        // non-MoE preset: no ceiling reported, no k gauges, no policy
+        let s = Scheduler::new(4, Policy::Fifo)
+            .with_degrade_k(DegradeCfg::parse("1:2:0").unwrap(), 0);
+        assert!(s.target_expert_k().is_none());
+        assert!(s.eval_degrade().is_none());
+        assert!(s.metrics_json().opt("expert_k_max").is_none());
+        // a fleet ceiling clamps to the smallest engine's ceiling, and
+        // a fixed-k scheduler still reports the gauges once known
+        let f = Scheduler::new(4, Policy::Fifo);
+        f.observe_expert_k_max(4);
+        f.observe_expert_k_max(2);
+        f.observe_expert_k_max(8);
+        assert_eq!(f.target_expert_k(), Some(2));
+        assert!(f.eval_degrade().is_none());
+        let m = f.metrics_json();
+        assert_eq!(
+            m.get("expert_k_current").unwrap().as_f64().unwrap(),
+            2.0
+        );
     }
 
     #[test]

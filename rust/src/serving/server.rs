@@ -38,7 +38,7 @@ use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{EngineBackend, GenRequest, StreamEvent};
 use crate::serving::sampler::Sampler;
-use crate::serving::scheduler::{Policy, Rejection, Scheduler};
+use crate::serving::scheduler::{DegradeCfg, Policy, Rejection, Scheduler};
 use crate::serving::telemetry::{self, Telemetry};
 
 const MAX_LINE: usize = 8 * 1024;
@@ -87,6 +87,14 @@ pub struct ServerConfig {
     /// point is always-on observability); the off switch exists so the
     /// loadgen A/B bench can price it.
     pub telemetry: bool,
+    /// Compile-time expert top-k ceiling from the artifact manifest.
+    /// Bounds the per-request `expert_k` override (validated at the
+    /// HTTP boundary — out-of-range answers 400, never a silent clamp);
+    /// `None` on non-MoE artifacts, where the override is rejected.
+    pub expert_k_max: Option<usize>,
+    /// Adaptive expert top-k under load (`--degrade-k
+    /// min_k:hi_wm:lo_wm`); `None` pins k at `expert_k_max`.
+    pub degrade_k: Option<DegradeCfg>,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +113,8 @@ impl Default for ServerConfig {
             trace_ring: telemetry::DEFAULT_RING_CAP,
             span_sample_permille: 1000,
             telemetry: true,
+            expert_k_max: None,
+            degrade_k: None,
         }
     }
 }
@@ -387,6 +397,32 @@ pub fn parse_completion(
             .as_usize()
             .map_err(|_| "\"top_k\" must be a non-negative integer")?,
     };
+    // a top_k past the vocabulary is a client bug (it silently meant
+    // "no filtering"); refuse it rather than guess intent
+    if let Some(vocab) = cfg.vocab {
+        if top_k > vocab {
+            return Err(format!("\"top_k\" {top_k} > vocab_size {vocab}"));
+        }
+    }
+    let expert_k = match doc.opt("expert_k") {
+        None => None,
+        Some(v) => {
+            let k = v
+                .as_usize()
+                .map_err(|_| "\"expert_k\" must be a positive integer")?;
+            let Some(k_max) = cfg.expert_k_max else {
+                return Err("\"expert_k\" is not supported by this \
+                            artifact (not a MoE model)"
+                    .into());
+            };
+            if k < 1 || k > k_max {
+                return Err(format!(
+                    "\"expert_k\" {k} outside [1, {k_max}]"
+                ));
+            }
+            Some(k)
+        }
+    };
     let greedy = match doc.opt("greedy") {
         None => false,
         Some(v) => v.as_bool().map_err(|_| "\"greedy\" must be a bool")?,
@@ -409,6 +445,7 @@ pub fn parse_completion(
             prompt,
             max_new_tokens: max_tokens,
             sampler: Sampler { temperature, top_k, greedy },
+            expert_k,
         },
         stream,
         deadline,
@@ -534,6 +571,11 @@ impl Driver {
         // it actually mapped (1 after a prefill-signature fallback) so
         // spf keeps costing prompts in real dispatch units
         sh.sched.observe_prefill_chunk(backend.prefill_chunk());
+        // ...and its expert top-k ceiling, which seeds the scheduler's
+        // adaptive-k target (and the /metrics k gauges) on MoE backends
+        if let Some(k) = backend.expert_k_max() {
+            sh.sched.observe_expert_k_max(k);
+        }
         self.publish(backend);
         let mut last_publish = sh.clock.now();
         while !sh.shutdown.load(Ordering::Relaxed) {
@@ -541,6 +583,15 @@ impl Driver {
             // expire first, even with zero free lanes: dead requests
             // must not hold queue slots or keep their clients waiting
             sh.sched.expire(now);
+            // adaptive expert top-k: evaluate the hysteresis once per
+            // iteration (journals k_degrade/k_restore), then run the
+            // engine at the current fleet target — applying the target
+            // rather than the transition keeps late-started drivers
+            // consistent, and the engine re-uploads only on change
+            sh.sched.eval_degrade();
+            if let Some(k) = sh.sched.target_expert_k() {
+                backend.set_expert_k(k);
+            }
             while backend.free_lanes() > 0 {
                 match sh.sched.take_next(now) {
                     Some(q) => {
@@ -596,11 +647,16 @@ where
     } else {
         Telemetry::disabled(clock.clone()).shared()
     };
+    let sched = Scheduler::new(cfg.queue_cap, cfg.policy)
+        .with_prefill_chunk(cfg.prefill_chunk)
+        .with_clock(clock.clone())
+        .with_telemetry(telemetry.clone());
+    let sched = match (cfg.degrade_k, cfg.expert_k_max) {
+        (Some(d), Some(k)) => sched.with_degrade_k(d, k),
+        _ => sched,
+    };
     let shared = Arc::new(Shared {
-        sched: Scheduler::new(cfg.queue_cap, cfg.policy)
-            .with_prefill_chunk(cfg.prefill_chunk)
-            .with_clock(clock.clone())
-            .with_telemetry(telemetry.clone()),
+        sched,
         cfg,
         engine_stats: Mutex::new(BTreeMap::new()),
         shutdown,
@@ -1144,6 +1200,50 @@ mod tests {
                 String::from_utf8_lossy(body)
             );
         }
+    }
+
+    #[test]
+    fn completion_parsing_validates_overrides_at_the_boundary() {
+        let cfg = ServerConfig {
+            vocab: Some(100),
+            expert_k_max: Some(4),
+            ..Default::default()
+        };
+        // in-range overrides thread through untouched
+        let c = parse_completion(br#"{"prompt": [1], "expert_k": 2}"#, &cfg)
+            .unwrap();
+        assert_eq!(c.gen.expert_k, Some(2));
+        let c = parse_completion(br#"{"prompt": [1], "top_k": 100}"#, &cfg)
+            .unwrap();
+        assert_eq!(c.gen.sampler.top_k, 100);
+        assert_eq!(c.gen.expert_k, None);
+        // out-of-range answers 400 — never a silent clamp
+        for body in [
+            &br#"{"prompt": [1], "top_k": 101}"#[..],
+            br#"{"prompt": [1], "expert_k": 0}"#,
+            br#"{"prompt": [1], "expert_k": 5}"#,
+            br#"{"prompt": [1], "expert_k": "two"}"#,
+        ] {
+            assert!(
+                parse_completion(body, &cfg).is_err(),
+                "{}",
+                String::from_utf8_lossy(body)
+            );
+        }
+        // non-MoE artifact: the expert_k override itself is unsupported
+        let dense = ServerConfig { vocab: Some(100), ..Default::default() };
+        assert!(parse_completion(
+            br#"{"prompt": [1], "expert_k": 1}"#,
+            &dense
+        )
+        .is_err());
+        // without a known vocab, top_k has no bound to check against
+        let novocab = ServerConfig::default();
+        assert!(parse_completion(
+            br#"{"prompt": [1], "top_k": 9999}"#,
+            &novocab
+        )
+        .is_ok());
     }
 
     #[test]

@@ -1459,6 +1459,32 @@ mod tests {
     }
 
     #[test]
+    fn prom_rendering_exposes_adaptive_expert_k_gauges() {
+        use crate::serving::scheduler::{DegradeCfg, Policy, Scheduler};
+        let sched = Scheduler::new(8, Policy::Fifo).with_degrade_k(
+            DegradeCfg { min_k: 1, hi_wm: 2, lo_wm: 1 },
+            4,
+        );
+        let doc = json::obj(vec![("scheduler", sched.metrics_json())]);
+        let text = render_prom(&doc);
+        for needle in [
+            "sigma_moe_scheduler_expert_k_max 4",
+            "sigma_moe_scheduler_expert_k_current 4",
+            "sigma_moe_scheduler_expert_k_degrades 0",
+            "sigma_moe_scheduler_expert_k_restores 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        validate_prom(&text, &["sigma_moe_scheduler_expert_k_"]).unwrap();
+        // a dense scheduler (no MoE ceiling) exposes none of them —
+        // absent, not zero, so dashboards don't chart a fake k
+        let dense = Scheduler::new(8, Policy::Fifo);
+        let text =
+            render_prom(&json::obj(vec![("scheduler", dense.metrics_json())]));
+        assert!(!text.contains("expert_k"), "dense must omit k gauges");
+    }
+
+    #[test]
     fn validate_prom_rejects_malformed_expositions() {
         // duplicate TYPE
         let dup = "# TYPE a gauge\na 1\n# TYPE a gauge\na 2\n";

@@ -30,6 +30,7 @@ fn storm_cfg(seed: u64) -> ChaosCfg {
         pumps: 500,
         seed,
         storm: true,
+        degrade: None,
     }
 }
 
@@ -126,6 +127,7 @@ fn sim_deadline_run() -> (String, Vec<u64>, Vec<&'static str>) {
                     prompt: vec![i as i32 + 1],
                     max_new_tokens: 4,
                     sampler: Sampler::greedy(),
+                    ..Default::default()
                 },
                 Some(deadline),
                 tx,

@@ -121,6 +121,7 @@ fn engine_generates_and_batches() {
             prompt: vec![1 + i as i32, 2, 3],
             max_new_tokens: 4 + (i % 3),
             sampler: Sampler::greedy(),
+            ..Default::default()
         }));
     }
     let results = engine.run_to_completion(rxs).expect("generate");
@@ -136,11 +137,13 @@ fn engine_generates_and_batches() {
         prompt: vec![5, 6, 7],
         max_new_tokens: 6,
         sampler: Sampler::greedy(),
+        ..Default::default()
     });
     let rx_b = engine.submit(GenRequest {
         prompt: vec![5, 6, 7],
         max_new_tokens: 6,
         sampler: Sampler::greedy(),
+        ..Default::default()
     });
     let pair = engine.run_to_completion(vec![rx_a, rx_b]).unwrap();
     assert_eq!(pair[0].tokens, pair[1].tokens,
@@ -175,6 +178,7 @@ fn engine_admission_is_fifo_and_resets_lane_memory() {
             prompt: vec![1 + i as i32, 2, 3],
             max_new_tokens: 4,
             sampler: Sampler::greedy(),
+            ..Default::default()
         }));
     }
     let waves = engine.run_to_completion(rxs).unwrap();
@@ -199,6 +203,7 @@ fn engine_admission_is_fifo_and_resets_lane_memory() {
         prompt: vec![5, 6, 7],
         max_new_tokens: 6,
         sampler: Sampler::greedy(),
+        ..Default::default()
     });
     let first_wave = engine.run_to_completion(vec![reference]).unwrap();
 
@@ -212,6 +217,7 @@ fn engine_admission_is_fifo_and_resets_lane_memory() {
             prompt: vec![9 + i as i32, 1, 4],
             max_new_tokens: 5,
             sampler: Sampler::greedy(),
+            ..Default::default()
         }));
     }
     engine.run_to_completion(noise).unwrap();
@@ -219,6 +225,7 @@ fn engine_admission_is_fifo_and_resets_lane_memory() {
         prompt: vec![5, 6, 7],
         max_new_tokens: 6,
         sampler: Sampler::greedy(),
+        ..Default::default()
     });
     let second = engine.run_to_completion(vec![again]).unwrap();
     assert_eq!(
@@ -287,6 +294,7 @@ fn chunked_prefill_matches_single_token_on_device() {
                     .collect(),
                 max_new_tokens: 6,
                 sampler: Sampler::greedy(),
+                ..Default::default()
             }));
         }
         let results = engine.run_to_completion(rxs).expect("generate");

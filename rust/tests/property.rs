@@ -173,7 +173,7 @@ fn prop_sampler_greedy_always_argmax() {
             .unwrap()
             .0;
         let mut r2 = rng.fork(7);
-        assert_eq!(s.sample(&logits, &mut r2), best);
+        assert_eq!(s.sample(&logits, &mut r2), Some(best));
     }
 }
 
@@ -231,6 +231,7 @@ fn greq(prompt_len: usize) -> GenRequest {
         prompt: vec![1; prompt_len.max(1)],
         max_new_tokens: 2,
         sampler: Sampler::greedy(),
+        ..Default::default()
     }
 }
 
@@ -343,6 +344,7 @@ fn prop_chunked_prefill_stream_equivalence_under_mixed_pumps() {
                                 prompt: prompt.clone(),
                                 max_new_tokens: *budget,
                                 sampler: Sampler::greedy(),
+                                ..Default::default()
                             },
                             tx,
                         );

@@ -95,7 +95,12 @@ fn wait_ready(fleet: &Fleet, engines: usize) {
 }
 
 fn greq(prompt: Vec<i32>, max_new: usize) -> GenRequest {
-    GenRequest { prompt, max_new_tokens: max_new, sampler: Sampler::greedy() }
+    GenRequest {
+        prompt,
+        max_new_tokens: max_new,
+        sampler: Sampler::greedy(),
+        ..Default::default()
+    }
 }
 
 /// Drain a request's event stream: wait for the first terminal event

@@ -282,6 +282,12 @@ pub struct Engine<'a> {
     sched_expert_k: usize,
     /// effective expert-k fed on the most recent dispatch
     expert_k_current: usize,
+    /// value resident in the `step_fwd` expert-k device slot.  Tracked
+    /// separately from `expert_k_current` because `pump_prefill`
+    /// uploads a transient per-dispatch buffer that never touches the
+    /// step slot — conflating the two would make [`Self::sync_expert_k`]
+    /// skip the upload after a prefill and run decode at a stale k.
+    expert_k_step_resident: usize,
     /// expert selections accumulated since the last
     /// [`EngineBackend::take_expert_counts`] drain:
     /// `expert_counts[layer][expert]`
@@ -416,6 +422,7 @@ impl<'a> Engine<'a> {
             expert_k_max,
             sched_expert_k: k0.max(1),
             expert_k_current: k0,
+            expert_k_step_resident: k0,
             expert_counts: Vec::new(),
             lanes: (0..n_lanes).map(|_| None).collect(),
             queue: VecDeque::new(),
@@ -788,11 +795,12 @@ impl<'a> Engine<'a> {
         else {
             return Ok(());
         };
-        if k != self.expert_k_current {
+        if k != self.expert_k_step_resident {
             self.state
                 .set_host(idx, HostTensor::from_i32(&[], &[k as i32])?)?;
-            self.expert_k_current = k;
+            self.expert_k_step_resident = k;
         }
+        self.expert_k_current = k;
         Ok(())
     }
 
@@ -979,9 +987,17 @@ impl<'a> Engine<'a> {
                 ins.iter().any(|pi| matches!(pi, PrefillInput::ExpertK))
             });
         let ek_buf = if needs_ek {
-            let k = self
-                .effective_expert_k()
-                .unwrap_or_else(|| self.expert_k_max.unwrap_or(1));
+            // step-side knob disabled (no step input or no usable
+            // ceiling) but the prefill program still takes the scalar:
+            // feed the compile-time K so prefill quality matches the
+            // fixed-k step path rather than degrading to top-1
+            let k = self.effective_expert_k().unwrap_or_else(|| {
+                self.bundle
+                    .manifest
+                    .expert_k_max
+                    .unwrap_or(self.bundle.manifest.model.expert_k)
+                    .max(1)
+            });
             self.expert_k_current = k;
             Some(upload(
                 &self.bundle.client,

@@ -423,9 +423,20 @@ impl Scheduler {
         if k_max == 0 {
             return;
         }
-        let prev = self.expert_k_max.load(Ordering::Relaxed);
-        let k_max = if prev == 0 { k_max } else { prev.min(k_max) };
-        self.expert_k_max.store(k_max, Ordering::Relaxed);
+        // CAS min-clamp: two drivers reporting concurrently must both
+        // land (a plain load/min/store can lose the smaller ceiling)
+        let _ = self.expert_k_max.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |prev| {
+                if prev == 0 || k_max < prev {
+                    Some(k_max)
+                } else {
+                    None
+                }
+            },
+        );
+        let k_max = self.expert_k_max.load(Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
         if inner.degrade.target == 0 || inner.degrade.target > k_max {
             inner.degrade.target = k_max;

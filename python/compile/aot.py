@@ -135,13 +135,19 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
     print(f"[aot] building {name} (batch={tcfg.batch_size}) ...")
     args = api.example_args(cfg, tcfg, eval_mem_len, serve_batch,
                             prefill_chunk)
+    # MoE presets emit prefill logits at all C positions ([B, C, V])
+    # so the serving engine can verify speculative drafts through the
+    # same dispatch; dense/topk/pkm keep the last-position [B, V]
+    # signature (and old artifacts parse as verify_logits=False).
+    verify_logits = cfg.ff_variant == "moe"
     fns = {
         "init": api.make_init(cfg),
         "train_step": api.make_train_step(cfg, tcfg),
         "eval_step": api.make_eval_step(cfg, eval_mem_len),
         "step_fwd": api.make_step_fwd(cfg, cfg.mem_len),
         # chunked prompt ingestion for serving (validity-masked)
-        "prefill": api.make_prefill(cfg, cfg.mem_len),
+        "prefill": api.make_prefill(cfg, cfg.mem_len,
+                                    verify_logits=verify_logits),
         # on-device per-lane memory zeroing for serving admission
         "reset_lanes": api.make_reset_lanes(cfg),
     }
@@ -165,6 +171,10 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
         # scheduler degrades it under queue pressure.  None for non-MoE
         # presets (old signature, no runtime-k input).
         "expert_k_max": (cfg.moe.k if cfg.ff_variant == "moe" else None),
+        # Speculative decode: when true, prefill output "0" is the full
+        # per-position logits [B, C, V] (verifier for drafted tokens);
+        # when false/absent the old last-valid gather [B, V] applies.
+        "verify_logits": verify_logits,
         "flops": flops.summarize(cfg),
         "functions": {},
     }

@@ -143,7 +143,8 @@ def make_step_fwd(cfg: ModelConfig, mem_len: int):
     return step_fwd
 
 
-def make_prefill(cfg: ModelConfig, mem_len: int):
+def make_prefill(cfg: ModelConfig, mem_len: int,
+                 verify_logits: bool = False):
     """Chunked prompt ingestion for serving: feed up to ``C`` tokens per
     lane in one dispatch instead of one ``step_fwd`` call per token.
 
@@ -181,6 +182,22 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
     ``make_step_fwd``; with it the counts sum to exactly
     ``sum(active_len) * expert_k`` per layer.  Non-MoE presets keep
     the old signature.
+
+    ``verify_logits=True`` changes output ``0`` from the last-valid
+    gather ``[B, V]`` to the *full* per-position logits ``[B, C, V]``
+    — the verifier a speculative decoder needs: K drafted tokens per
+    lane ride one prefill-shaped dispatch and position ``j``'s row is
+    the model's true next-token distribution after the first ``j + 1``
+    fed tokens, so the engine can accept the longest matching draft
+    prefix host-side.  Rows at positions ``>= active_len[i]`` are the
+    padded positions' (meaningless, possibly non-finite) rows and are
+    the caller's to ignore — the same per-lane containment contract as
+    the last-position gather.  The forward pass is untouched:
+    ``logits[i, active_len[i]-1]`` is bit-for-bit the row the
+    ``verify_logits=False`` gather returns (pinned in
+    ``test_prefill.py``), so a verify-capable artifact serves ordinary
+    chunked prefill by gathering host-side.  Old artifacts and dense
+    presets keep the ``[B, V]`` signature.
     """
 
     def _last_valid_rows(logits, active_len, b, c):
@@ -199,6 +216,8 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
             logits, new_mems, _ = M.forward(
                 params, cfg, tokens, mems, rng, deterministic=True,
                 mem_len=mem_len, active_len=active_len)
+            if verify_logits:
+                return (logits, new_mems)
             return (_last_valid_rows(logits, active_len, b, c), new_mems)
         return prefill
 
@@ -210,7 +229,8 @@ def make_prefill(cfg: ModelConfig, mem_len: int):
         logits, new_mems, aux = M.forward(
             params, cfg, tokens, mems, rng, deterministic=True,
             mem_len=mem_len, active_len=active_len, expert_k=ek)
-        logits_last = _last_valid_rows(logits, active_len, b, c)
+        logits_last = (logits if verify_logits
+                       else _last_valid_rows(logits, active_len, b, c))
         tu = aux["tok_usage"]                          # [L, B*C, NE]
         nl, _, ne = tu.shape
         valid = (jnp.arange(c, dtype=jnp.int32)[None, :]

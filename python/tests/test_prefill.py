@@ -198,3 +198,101 @@ def test_prefill_manifest_names_match_engine_contract():
         assert b_["shape"] == list(sm.shape)
     assert out_spec[-1]["shape"] == [cfg.n_layers, cfg.moe.n_experts]
     assert out_spec[-1]["dtype"] == "float32"
+
+
+def setup_verify(cfg, batch):
+    """Like ``setup`` but the prefill variant returns logits at all C
+    positions (``verify_logits=True``) — the speculative verifier."""
+    params = api.M.init_params(jax.random.PRNGKey(0), cfg)
+    mems = [jnp.zeros((batch, cfg.mem_len, cfg.d_model), jnp.float32)
+            for _ in range(cfg.n_layers)]
+    step_fn = api.make_step_fwd(cfg, cfg.mem_len)
+    ver_fn = api.make_prefill(cfg, cfg.mem_len, verify_logits=True)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    step = jax.jit(lambda p, m, t: step_fn(p, m, t, ek))
+    ver = jax.jit(lambda p, m, t, a: ver_fn(p, m, t, a, ek))
+    return params, mems, step, ver
+
+
+def test_verify_logits_every_position_matches_token_by_token():
+    # speculative acceptance reads row j as "the next-token distribution
+    # after fed token j" — each valid row must match what step_fwd would
+    # have produced feeding the same tokens one at a time
+    cfg = tiny_cfg()
+    b = 2
+    params, mems, step, ver = setup_verify(cfg, b)
+    rng = np.random.default_rng(11)
+    prompts = [list(rng.integers(0, cfg.vocab_size, CHUNK))
+               for _ in range(b)]
+
+    toks = jnp.asarray(prompts, jnp.int32)
+    active = jnp.full((b,), CHUNK, jnp.int32)
+    out = ver(params, mems, toks, active)
+    all_logits, ver_mems = np.asarray(out[0]), out[1]
+    assert all_logits.shape == (b, CHUNK, cfg.vocab_size)
+
+    ref_mems = mems
+    for j in range(CHUNK):
+        tok = jnp.asarray([[p[j]] for p in prompts], jnp.int32)
+        r = step(params, ref_mems, tok)
+        ref_logits, ref_mems = r[0], r[1]
+        np.testing.assert_allclose(
+            all_logits[:, j], np.asarray(ref_logits),
+            rtol=2e-4, atol=2e-5, err_msg=f"position {j} diverges")
+    for l, (mv, mr) in enumerate(zip(ver_mems, ref_mems)):
+        np.testing.assert_allclose(
+            np.asarray(mv), np.asarray(mr), rtol=2e-4, atol=2e-5,
+            err_msg=f"layer {l} memory diverges")
+
+
+def test_verify_logits_last_valid_row_is_bitwise_the_legacy_gather():
+    # rollback correctness hinges on the verify program being the same
+    # computation as legacy prefill: the row at active_len-1 and the
+    # memory feedback must be bit-for-bit identical, ragged included
+    cfg = tiny_cfg()
+    lens = [CHUNK, CHUNK - 1, 1]
+    b = len(lens)
+    params, mems, _, pre = setup(cfg, b)
+    _, _, _, ver = setup_verify(cfg, b)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, CHUNK)),
+                       jnp.int32)
+    active = jnp.asarray(lens, jnp.int32)
+
+    legacy = pre(params, mems, toks, active)
+    full = ver(params, mems, toks, active)
+    for i, n in enumerate(lens):
+        np.testing.assert_array_equal(
+            np.asarray(full[0])[i, n - 1], np.asarray(legacy[0])[i],
+            err_msg=f"lane {i} (active {n}) last-valid row differs")
+    for l, (mv, ml) in enumerate(zip(full[1], legacy[1])):
+        np.testing.assert_array_equal(
+            np.asarray(mv), np.asarray(ml),
+            err_msg=f"layer {l} memory feedback differs")
+    # expert-count accounting is unchanged by the wider logits output
+    np.testing.assert_array_equal(np.asarray(full[2]),
+                                  np.asarray(legacy[2]))
+
+
+def test_verify_prefill_manifest_keeps_contract_with_wider_logits():
+    # same input contract as legacy prefill; output "0" widens to
+    # [B, C, V] — the shape the engine sniffs to enable speculation
+    cfg = tiny_cfg()
+    serve_batch = 2
+    smems = [jnp.zeros((serve_batch, cfg.mem_len, cfg.d_model),
+                       jnp.float32) for _ in range(cfg.n_layers)]
+    ptok = jnp.zeros((serve_batch, CHUNK), jnp.int32)
+    active = jnp.full((serve_batch,), CHUNK, jnp.int32)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    params = api.M.init_params(jax.random.PRNGKey(0), cfg)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_prefill(cfg, cfg.mem_len, verify_logits=True),
+        (params, smems, ptok, active, ek))
+    in_names = [b["name"] for b in in_spec]
+    assert in_names[-3:] == ["2", "3", "4"]
+    out_names = [b["name"] for b in out_spec]
+    assert out_names == (["0"]
+                         + [f"1.{i}" for i in range(cfg.n_layers)]
+                         + ["2"])
+    assert out_spec[0]["shape"] == [serve_batch, CHUNK, cfg.vocab_size]
+    assert out_spec[0]["dtype"] == "float32"

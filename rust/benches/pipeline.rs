@@ -151,6 +151,94 @@ fn bench_prefill_mock() -> Vec<Json> {
     rows
 }
 
+/// Speculative decode A/B over the device-free mock at batch 1: the
+/// same decode-heavy request with drafting off vs K=3, on two
+/// workloads.  "repetitive" uses a tiny vocabulary, which makes the
+/// mock's deterministic stream periodic (step 7 mod vocab) — the
+/// regime n-gram prompt-lookup drafting exists for, where accepted
+/// drafts collapse several decode pumps into one verify dispatch.
+/// "random" uses a vocabulary wide enough that no n-gram ever repeats
+/// within the budget, so the drafter stays cold and the engine must
+/// fall back to the plain single-token path at identical dispatch
+/// count — the "a cold drafter costs nothing" half of the claim.  One
+/// BENCH_serve.json row per (workload, K), speculating rows carrying
+/// the accepted-length histogram.
+fn bench_speculate_mock(rows: &mut Vec<Json>) {
+    const GEN: usize = 192;
+    const CHUNK: usize = 8;
+    const K: usize = 3;
+    const STEP_DELAY: Duration = Duration::from_micros(200);
+    for (workload, vocab) in [("repetitive", 10usize), ("random", 512)] {
+        let mut tps = Vec::new();
+        let mut pumps = Vec::new();
+        for &k in &[0usize, K] {
+            let mut b = MockBackend::new(1, vocab)
+                .with_prefill_chunk(CHUNK)
+                .with_step_delay(STEP_DELAY)
+                .with_speculate(k);
+            let (tx, rx) = mpsc::channel();
+            b.submit_streaming(
+                GenRequest {
+                    prompt: vec![1, 2, 3],
+                    max_new_tokens: GEN,
+                    sampler: Sampler::greedy(),
+                    ..Default::default()
+                },
+                tx,
+            );
+            let t0 = Instant::now();
+            while b.pump().expect("mock pump") > 0 {}
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let toks = rx
+                .try_iter()
+                .filter(|ev| matches!(ev, StreamEvent::Token(_)))
+                .count();
+            assert_eq!(toks, GEN, "speculation must not change the stream");
+            tps.push(GEN as f64 / wall);
+            pumps.push(b.steps_executed);
+            let stats = b.stats();
+            let g = |key: &str| stats.get(key).copied().unwrap_or(0.0);
+            let hist: Vec<Json> = (0..=k)
+                .map(|n| json::num(g(&format!("spec_hist_{n}"))))
+                .collect();
+            println!(
+                "speculate mock [{workload}] K={k}: {} pumps for {GEN} \
+                 tokens | {:.0} tok/s | {} rounds | accept rate {:.2} \
+                 | {} rollbacks",
+                b.steps_executed,
+                GEN as f64 / wall,
+                b.spec_rounds,
+                g("spec_accept_rate"),
+                b.spec_rollbacks,
+            );
+            rows.push(json::obj(vec![
+                ("mode", json::s("mock-speculate-ab")),
+                ("workload", json::s(workload)),
+                ("speculate", json::num(k as f64)),
+                ("vocab", json::num(vocab as f64)),
+                ("max_new", json::num(GEN as f64)),
+                ("lanes", json::num(1.0)),
+                ("pumps", json::num(b.steps_executed as f64)),
+                ("tokens_per_sec", json::num(GEN as f64 / wall)),
+                ("spec_rounds", json::num(b.spec_rounds as f64)),
+                ("spec_drafted", json::num(b.spec_drafted as f64)),
+                ("spec_accepted", json::num(b.spec_accepted as f64)),
+                ("spec_accept_rate", json::num(g("spec_accept_rate"))),
+                ("spec_rollbacks", json::num(b.spec_rollbacks as f64)),
+                ("spec_accept_hist", json::arr(hist)),
+                ("wall_s", json::num(wall)),
+            ]));
+        }
+        println!(
+            "speculate mock [{workload}]: K={K} -> {:.2}x decode tok/s \
+             vs K=0 ({} vs {} pumps)",
+            tps[1] / tps[0].max(1e-9),
+            pumps[1],
+            pumps[0],
+        );
+    }
+}
+
 /// Chunked vs single-token prompt ingestion on the real device-resident
 /// engine: the same bundle/params with and without the `prefill`
 /// program (the subset load without it exercises the fallback path).
@@ -305,6 +393,8 @@ fn main() {
 
     println!("== chunked prefill A/B ==");
     let mut rows = bench_prefill_mock();
+    println!("== speculative decode A/B ==");
+    bench_speculate_mock(&mut rows);
     bench_prefill_device(&mut rows);
     if let Err(e) =
         write_bench_json("BENCH_serve.json", "sigma-moe/serve/v1", rows)

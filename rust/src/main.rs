@@ -289,6 +289,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                             (or deadlines drop), restore the full k \
                             once depth falls to lo_wm (MoE artifacts \
                             with runtime-k support only)")
+    .opt("speculate", "0", "draft up to K tokens per lane via host \
+                            n-gram lookup and verify them in one \
+                            chunked-prefill dispatch (capped at \
+                            prefill_chunk - 1; artifacts built with \
+                            verify_logits only; 0 = plain decode)")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -313,7 +318,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 .collect()
         }
     };
-    let mut engine = Engine::new(&bundle, &params, p.u64("seed")?)?;
+    let speculate = p.usize("speculate")?;
+    if speculate > 0 && !m.verify_logits {
+        return Err(Error::Config(format!(
+            "--speculate: preset {preset} was not built with \
+             all-position verify logits (dense artifact, or a MoE \
+             artifact predating speculative decode — rebuild it)"
+        )));
+    }
+    let mut engine = Engine::new(&bundle, &params, p.u64("seed")?)?
+        .with_speculate(speculate);
     let mut corpus = data::by_name(
         corpus_default(&m.model.unit), m.model.vocab_size, p.u64("seed")?)?;
     let n_req = p.usize("requests")?;
@@ -365,6 +379,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         engine.transfer_stats().report_per_step(engine.steps_executed),
         engine.steps_executed,
     );
+    if engine.speculate() > 0 {
+        println!(
+            "speculative: K={} | {} verify rounds | accept rate {:.2} \
+             | {} rollbacks",
+            engine.speculate(),
+            stats["spec_rounds"],
+            stats["spec_accept_rate"],
+            stats["spec_rollbacks"],
+        );
+    }
     Ok(())
 }
 
@@ -432,6 +456,17 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             Some(cfg)
         }
     };
+    let speculate = p.usize("speculate")?;
+    if speculate > 0
+        && !(manifest.verify_logits
+            && manifest.functions.contains_key("prefill"))
+    {
+        return Err(Error::Config(format!(
+            "--speculate: preset {preset} was not built with \
+             all-position verify logits (dense artifact, or a MoE \
+             artifact predating speculative decode — rebuild it)"
+        )));
+    }
     let cfg = ServerConfig {
         queue_cap: p.usize("queue-cap")?,
         policy: Policy::parse(p.str("policy")?)?,
@@ -448,6 +483,7 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         span_sample_permille: p.u64("span-sample")?.min(1000),
         expert_k_max: manifest.expert_k_max,
         degrade_k,
+        speculate,
         ..Default::default()
     };
     let checkpoint: Option<Vec<(String, HostTensor)>> =
@@ -474,6 +510,13 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             "[serve] adaptive expert-k: ceiling {k} | floor {} | \
              degrade at depth >= {} | restore at depth <= {}",
             d.min_k, d.hi_wm, d.lo_wm,
+        );
+    }
+    if cfg.speculate > 0 {
+        eprintln!(
+            "[serve] speculative decode: drafting up to {} token(s) \
+             per lane per verify round (n-gram prompt lookup)",
+            cfg.speculate.min(cfg.prefill_chunk.saturating_sub(1)),
         );
     }
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -511,7 +554,8 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
                     &bundle,
                     &params,
                     seed ^ ((id as u64) << 32),
-                )?;
+                )?
+                .with_speculate(speculate);
                 eprintln!(
                     "[serve] engine {id} ready: {} lanes | prefill \
                      chunk {} | lane reset: {}",
@@ -530,7 +574,8 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
     server::serve(listener, cfg, shutdown, move |driver| {
         let (bundle, params, device_reset) =
             load_serving_engine(&dir, &checkpoint, seed)?;
-        let mut engine = Engine::new(&bundle, &params, seed)?;
+        let mut engine =
+            Engine::new(&bundle, &params, seed)?.with_speculate(speculate);
         eprintln!(
             "[serve] engine ready: {} lanes | prefill chunk {} | \
              lane reset: {}",
@@ -575,6 +620,10 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
                             min_k:hi_wm:lo_wm — the storm then also \
                             exercises (and journals) the scheduler's \
                             k-degrade/restore hysteresis")
+    .opt("speculate", "0", "draft K tokens per verify round on the \
+                            mock engines — the storm then also \
+                            exercises speculative verify/rollback \
+                            accounting under faults (0 = plain decode)")
     .parse_from(argv)?;
 
     if let Some(path) = p.get("replay") {
@@ -592,16 +641,18 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
             Some(spec) => Some(DegradeCfg::parse(spec)?),
             None => None,
         },
+        speculate: p.usize("speculate")?,
     };
     eprintln!(
         "[chaos] seed {} | {} engine(s) x {} lanes | {} requests over \
-         {} rounds | storm {}",
+         {} rounds | storm {} | speculate {}",
         cfg.seed,
         cfg.engines,
         cfg.lanes,
         cfg.requests,
         cfg.pumps,
         if cfg.storm { "on" } else { "off" },
+        cfg.speculate,
     );
     let report = chaos::run(&cfg)?;
     println!("{}", report.summary_json().to_string_compact());
@@ -719,6 +770,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                          adaptive expert-k off vs on (--degrade-k \
                          1:4:1), pricing the p99 the degraded k buys \
                          back under queue pressure")
+    .opt("speculate", "0", "--dry-run: draft K tokens per verify round \
+                            on the mock engines, and append a \
+                            speculation off-vs-on A/B row on a \
+                            repetitive decode-heavy workload with the \
+                            accept-rate histogram (0 = plain decode)")
     .optional("record", "deterministic device-free run over the mock \
                          fleet on a simulated clock; writes the full \
                          decision trace here (see --replay)")
@@ -748,6 +804,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             seed: p.u64("seed")?,
             storm: false,
             degrade: None,
+            speculate: p.usize("speculate")?,
         };
         eprintln!(
             "[loadgen] recording a deterministic run: seed {} | {} \
@@ -790,9 +847,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         keep_alive: p.flag("keep-alive"),
         prefill_chunk: p.usize("prefill-chunk")?,
         telemetry: true,
+        speculate: p.usize("speculate")?,
     };
     let mut ab_row: Option<Json> = None;
     let mut degrade_row: Option<Json> = None;
+    let mut speculate_row: Option<Json> = None;
     let mut prom_artifact: Option<String> = None;
     let mut rows: Vec<Json> = if p.flag("dry-run") {
         let engine_counts: Vec<usize> = p
@@ -839,15 +898,27 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             degrade_row =
                 Some(loadgen::dry_run_degrade_ab(&cfg, lanes, engines)?);
         }
+        if cfg.speculate > 0 {
+            let engines = engine_counts.first().copied().unwrap_or(1);
+            eprintln!(
+                "[loadgen] speculate A/B: re-running a repetitive \
+                 decode-heavy plan with drafting off vs K={} \
+                 ({engines} engine(s))",
+                cfg.speculate,
+            );
+            speculate_row =
+                Some(loadgen::dry_run_speculate_ab(&cfg, lanes, engines)?);
+        }
         rows
     } else {
         if p.flag("telemetry-ab")
             || p.flag("degrade-ab")
+            || p.usize("speculate")? > 0
             || p.get("prom-out").is_some()
         {
             return Err(Error::Config(
-                "--telemetry-ab, --degrade-ab and --prom-out are \
-                 --dry-run options"
+                "--telemetry-ab, --degrade-ab, --speculate and \
+                 --prom-out are --dry-run options"
                     .into(),
             ));
         }
@@ -931,6 +1002,19 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             num(&d, "expert_k_final"),
         );
         rows.push(d);
+    }
+    if let Some(s) = speculate_row {
+        println!(
+            "speculate A/B: {:.1} tok/s off vs {:.1} tok/s at K={} -> \
+             {:.2}x | accept rate {:.2} | {} rollback(s)",
+            num(&s, "tokens_per_sec_off"),
+            num(&s, "tokens_per_sec_on"),
+            num(&s, "speculate"),
+            num(&s, "speculate_speedup"),
+            num(&s, "spec_accept_rate"),
+            num(&s, "spec_rollbacks"),
+        );
+        rows.push(s);
     }
     if let Some(path) = p.get("prom-out") {
         if let Some(text) = &prom_artifact {

@@ -139,6 +139,12 @@ pub struct Manifest {
     /// sparsity).  `None` on non-MoE presets and on MoE artifacts that
     /// predate the runtime-k input (fixed-k serving then).
     pub expert_k_max: Option<usize>,
+    /// Whether the `prefill` program emits logits at *all* C positions
+    /// (`[B, C, V]` output `0`) instead of the last-valid gather
+    /// (`[B, V]`) — the verifier a speculative decoder needs.  False
+    /// for artifacts that predate the flag (old last-position
+    /// signature; speculation is disabled against them).
+    pub verify_logits: bool,
     pub functions: BTreeMap<String, FunctionSpec>,
     pub flops: BTreeMap<String, f64>,
     pub raw: Json,
@@ -200,6 +206,10 @@ impl Manifest {
                 .opt("expert_k_max")
                 .and_then(|v| v.as_usize().ok())
                 .filter(|&k| k > 0),
+            verify_logits: raw
+                .opt("verify_logits")
+                .and_then(|v| v.as_bool().ok())
+                .unwrap_or(false),
             model,
             functions,
             flops,

@@ -102,6 +102,10 @@ pub struct ChaosCfg {
     /// [`MOCK_TOP_K`]).  `None` = fixed k, the pre-adaptive behavior;
     /// traces recorded before this field parse as `None`.
     pub degrade: Option<DegradeCfg>,
+    /// Speculative draft length per lane per verify round on the mock
+    /// engines (`0` = plain single-token decode).  Traces recorded
+    /// before speculation carry no field and parse as `0`.
+    pub speculate: usize,
 }
 
 impl Default for ChaosCfg {
@@ -115,6 +119,7 @@ impl Default for ChaosCfg {
             seed: 1,
             storm: true,
             degrade: None,
+            speculate: 0,
         }
     }
 }
@@ -133,6 +138,9 @@ impl ChaosCfg {
         if let Some(d) = self.degrade {
             fields.push(("degrade", json::s(&d.to_flag())));
         }
+        if self.speculate > 0 {
+            fields.push(("speculate", json::num(self.speculate as f64)));
+        }
         json::obj(fields)
     }
 
@@ -150,6 +158,12 @@ impl ChaosCfg {
                 .opt("degrade")
                 .map(|v| DegradeCfg::parse(v.as_str()?))
                 .transpose()?,
+            // absent on traces recorded before speculative decode
+            speculate: j
+                .opt("speculate")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
         })
     }
 }
@@ -354,6 +368,13 @@ pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
     for t in &trouble {
         let mut b = MockBackend::new(cfg.lanes, cfg.vocab)
             .with_clock(clock.clone());
+        if cfg.speculate > 0 {
+            // the mock verifies drafts through its chunked-prefill
+            // path, so the chunk must leave room for 1 + K tokens
+            b = b
+                .with_prefill_chunk(cfg.speculate + 1)
+                .with_speculate(cfg.speculate);
+        }
         let mut window = None;
         match t {
             Trouble::None => {}
@@ -680,6 +701,7 @@ mod tests {
             seed,
             storm,
             degrade: None,
+            speculate: 0,
         }
     }
 
@@ -832,6 +854,49 @@ mod tests {
         let with = ChaosCfg { degrade: Some(d), ..ChaosCfg::default() };
         let back = ChaosCfg::from_json(&with.to_json()).unwrap();
         assert_eq!(back.degrade, Some(d));
+        // pre-speculation traces carry no "speculate" key: plain decode
+        assert_eq!(back.speculate, 0);
+        assert!(!with.to_json().to_string_compact().contains("speculate"));
+        let spec = ChaosCfg { speculate: 3, ..ChaosCfg::default() };
+        let back = ChaosCfg::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.speculate, 3);
+    }
+
+    /// Property: a fault storm over a *speculating* fleet still holds
+    /// every serving invariant — in particular never-double-send, which
+    /// pins each completed stream to the exact greedy continuation, so
+    /// a wrong draft accepted past verification would be caught here —
+    /// and a recorded speculative trace replays byte-for-byte.
+    #[test]
+    fn speculative_storms_hold_invariants_and_replay() {
+        for seed in [3, 11] {
+            let cfg = ChaosCfg { speculate: 3, ..small(true, seed) };
+            let a = run(&cfg).unwrap();
+            assert!(a.ok(), "seed {seed}: violations: {:?}", a.violations);
+            assert_eq!(a.dones + a.drops + a.rejected, cfg.requests);
+            // the snapshot must show the engines actually speculated
+            let doc = a.metrics.to_string_compact();
+            assert!(
+                doc.contains("spec_rounds"),
+                "seed {seed}: no speculative counters in metrics: {doc}"
+            );
+            let b = run(&cfg).unwrap();
+            assert_eq!(
+                a.events, b.events,
+                "seed {seed}: decision streams diverged"
+            );
+            let path = tmp(&format!("speculate-{seed}.jsonl"));
+            let rec = record(&cfg, &path).unwrap();
+            assert!(rec.ok(), "violations: {:?}", rec.violations);
+            let out = replay_path(&path).unwrap();
+            assert!(
+                out.events_match,
+                "seed {seed}: divergence: {:?}",
+                out.divergence
+            );
+            assert!(out.metrics_match, "seed {seed}: metrics diverged");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     /// Property: under a fault storm with adaptive expert-k enabled,

@@ -1,0 +1,203 @@
+//! Host-side draft-token sources for speculative decode.
+//!
+//! A [`Drafter`] proposes likely continuations of a lane's token stream
+//! so the engine can verify several tokens through one prefill-shaped
+//! dispatch instead of one `step_fwd` per token.  The trait is
+//! deliberately model-free: the built-in [`NgramDrafter`] is a per-lane
+//! n-gram/prefix cache over the tokens already streamed (prompt-lookup
+//! decoding — no second model, no extra artifacts), but a small draft
+//! preset can slot in behind the same trait later.
+//!
+//! Drafting is strictly advisory: a wrong draft costs one wasted verify
+//! position, never a wrong output token, because the engine accepts
+//! only the prefix the full model agrees with and rolls back the rest.
+
+use std::collections::HashMap;
+
+/// Maximum n-gram order [`NgramDrafter`] matches on (longest suffix
+/// tried first; longer matches are better predictors).
+pub const NGRAM_MAX: usize = 3;
+
+/// A source of speculative continuation tokens, keyed by engine lane.
+pub trait Drafter: Send {
+    /// Forget everything about `lane` (a new request occupies it).
+    fn reset(&mut self, lane: usize);
+    /// Record `token` as the next token of `lane`'s stream — prompt
+    /// tokens at admission, then every emitted continuation token, in
+    /// order.
+    fn observe(&mut self, lane: usize, token: i32);
+    /// Propose up to `max` continuation tokens for `lane`.  Empty means
+    /// the drafter is cold (no basis to speculate) and the caller must
+    /// fall back to plain single-token decode for this lane.
+    fn draft(&self, lane: usize, max: usize) -> Vec<i32>;
+}
+
+/// Per-lane history plus a bigram → positions index (the "prefix
+/// cache"), maintained incrementally by [`Drafter::observe`].
+#[derive(Debug, Default)]
+struct LaneHistory {
+    toks: Vec<i32>,
+    /// positions `p` such that `toks[p-1..=p]` is the keyed bigram —
+    /// most recent last, so suffix lookup is O(1) amortized
+    bigrams: HashMap<(i32, i32), Vec<usize>>,
+}
+
+impl LaneHistory {
+    fn push(&mut self, token: i32) {
+        if let Some(&prev) = self.toks.last() {
+            self.bigrams
+                .entry((prev, token))
+                .or_default()
+                .push(self.toks.len());
+        }
+        self.toks.push(token);
+    }
+
+    /// Prompt-lookup: find the most recent earlier occurrence of the
+    /// longest (≤ [`NGRAM_MAX`]) suffix of the history and propose the
+    /// tokens that followed it.  Candidate positions come from the
+    /// bigram index; longer suffixes only re-rank among those, so the
+    /// scan stays proportional to the match count, not the history.
+    fn draft(&self, max: usize) -> Vec<i32> {
+        let n = self.toks.len();
+        if n < 2 || max == 0 {
+            return Vec::new();
+        }
+        let key = (self.toks[n - 2], self.toks[n - 1]);
+        let Some(positions) = self.bigrams.get(&key) else {
+            return Vec::new();
+        };
+        // candidates are end positions `p < n-1` of earlier occurrences
+        // (the last entry is the history suffix itself); prefer the
+        // longest suffix agreement, then recency
+        let mut best: Option<(usize, usize)> = None; // (match_len, pos)
+        for &p in positions.iter().rev() {
+            if p + 1 >= n {
+                continue;
+            }
+            let mut len = 2;
+            while len < NGRAM_MAX
+                && len <= p
+                && n >= len + 1
+                && self.toks[p - len] == self.toks[n - 2 - len + 1]
+            {
+                len += 1;
+            }
+            match best {
+                Some((bl, _)) if bl >= len => {}
+                _ => best = Some((len, p)),
+            }
+            if best.is_some_and(|(bl, _)| bl >= NGRAM_MAX) {
+                break;
+            }
+        }
+        let Some((_, p)) = best else {
+            return Vec::new();
+        };
+        let start = p + 1;
+        let end = (start + max).min(n);
+        self.toks[start..end].to_vec()
+    }
+}
+
+/// The built-in prompt-lookup drafter: proposes the continuation that
+/// followed the most recent earlier occurrence of the stream's current
+/// suffix.  Cold (returns no draft) until the suffix has repeated —
+/// exactly when speculation can't pay for itself anyway.
+#[derive(Debug, Default)]
+pub struct NgramDrafter {
+    lanes: HashMap<usize, LaneHistory>,
+}
+
+impl NgramDrafter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Drafter for NgramDrafter {
+    fn reset(&mut self, lane: usize) {
+        self.lanes.remove(&lane);
+    }
+
+    fn observe(&mut self, lane: usize, token: i32) {
+        self.lanes.entry(lane).or_default().push(token);
+    }
+
+    fn draft(&self, lane: usize, max: usize) -> Vec<i32> {
+        self.lanes
+            .get(&lane)
+            .map(|h| h.draft(max))
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded(tokens: &[i32]) -> NgramDrafter {
+        let mut d = NgramDrafter::new();
+        for &t in tokens {
+            d.observe(0, t);
+        }
+        d
+    }
+
+    #[test]
+    fn cold_lane_or_unseen_suffix_drafts_nothing() {
+        let d = NgramDrafter::new();
+        assert!(d.draft(0, 4).is_empty());
+        // too short for a bigram
+        assert!(seeded(&[7]).draft(0, 4).is_empty());
+        // bigram (3, 4) never occurred before the suffix itself
+        assert!(seeded(&[1, 2, 3, 4]).draft(0, 4).is_empty());
+    }
+
+    #[test]
+    fn repeated_suffix_proposes_its_continuation() {
+        // ... 1 2 [5 9 7] ... 1 2 → expect 5 9 7
+        let d = seeded(&[1, 2, 5, 9, 7, 8, 1, 2]);
+        assert_eq!(d.draft(0, 3), vec![5, 9, 7]);
+        // max truncates the proposal
+        assert_eq!(d.draft(0, 2), vec![5, 9]);
+        assert_eq!(d.draft(0, 0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn prefers_most_recent_match_at_equal_suffix_length() {
+        // bigram 1 2 occurs twice with different continuations; the
+        // later one (→ 6) wins
+        let d = seeded(&[1, 2, 5, 0, 1, 2, 6, 3, 1, 2]);
+        assert_eq!(d.draft(0, 1), vec![6]);
+    }
+
+    #[test]
+    fn longer_suffix_agreement_outranks_recency() {
+        // suffix ... 9 1 2: the early occurrence matches 3 tokens
+        // (9 1 2 → 4), the late one only 2 (0 1 2 → 8)
+        let d = seeded(&[9, 1, 2, 4, 7, 0, 1, 2, 8, 5, 9, 1, 2]);
+        assert_eq!(d.draft(0, 1), vec![4]);
+    }
+
+    #[test]
+    fn periodic_stream_is_drafted_near_perfectly() {
+        // the repetitive-workload shape the bench leans on: once the
+        // period has been seen, every draft is correct
+        let stream: Vec<i32> = (0..40).map(|i| i % 8).collect();
+        let d = seeded(&stream);
+        assert_eq!(d.draft(0, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reset_isolates_lanes_and_forgets_history() {
+        let mut d = seeded(&[1, 2, 3, 1, 2]);
+        d.observe(1, 1);
+        d.observe(1, 2);
+        // lane 1 never saw the bigram repeat
+        assert!(d.draft(1, 2).is_empty());
+        assert_eq!(d.draft(0, 1), vec![3]);
+        d.reset(0);
+        assert!(d.draft(0, 1).is_empty());
+    }
+}

@@ -20,6 +20,19 @@
 //! the only upload); older artifacts fall back to the host zero-row
 //! path, counted separately in [`Engine::stats`].
 //!
+//! Speculative multi-token decode ([`Engine::with_speculate`]) rides
+//! the same `prefill` program when the artifact emits logits at *all*
+//! C positions (manifest `verify_logits`): on a pure-decode pump each
+//! lane's unfed last token plus up to K tokens proposed by a host-side
+//! [`Drafter`] (n-gram prompt lookup — no second model) go through one
+//! verify dispatch, the longest prefix the model itself agrees with is
+//! accepted plus one correction/bonus token, and on any rejection the
+//! lane memories are rolled back by discarding the verify outputs
+//! (inputs are never donated) and re-feeding exactly the accepted
+//! prefixes through one ragged commit dispatch.  A cold drafter — or
+//! `--speculate 0`, or an artifact without `verify_logits` — falls
+//! back bit-for-bit to the single-token `step_fwd` path.
+//!
 //! Two submission surfaces: [`Engine::submit`] returns a one-shot
 //! completion channel (the in-process demo path), and
 //! [`Engine::submit_streaming`] delivers per-token [`StreamEvent`]s —
@@ -34,8 +47,9 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use crate::runtime::device::{download, upload};
-use crate::runtime::{DeviceState, ModelBundle, TransferSnapshot};
+use crate::runtime::{DeviceState, ModelBundle, Program, TransferSnapshot};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
+use crate::serving::drafter::{Drafter, NgramDrafter};
 use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
 
@@ -266,6 +280,20 @@ pub struct Engine<'a> {
     /// prefill chunk width C (from the program's `[B, C]` token input);
     /// 1 when the program is unavailable
     prefill_chunk: usize,
+    /// whether the `prefill` program emits logits at all C positions
+    /// (`[B, C, V]` output `0`, manifest `verify_logits`) — the
+    /// speculative verifier.  False on the legacy `[B, V]` signature,
+    /// which also disables speculation.
+    prefill_verify_all: bool,
+    /// vocab size V (from the step_fwd logits output) — the prefill
+    /// output's trailing dim can no longer be read as `shape[1]` once
+    /// verify artifacts widen it to `[B, C, V]`
+    vocab: usize,
+    /// max drafted tokens per lane per verify round (0 = speculation
+    /// off; the bit-for-bit single-token path)
+    speculate: usize,
+    /// host-side draft source for speculative decode
+    drafter: Box<dyn Drafter>,
     /// `step_fwd` output index of the trailing `[layers, n_experts]`
     /// expert-count tensor (MoE artifacts only; `None` on the
     /// two-output signature)
@@ -321,6 +349,23 @@ pub struct Engine<'a> {
     /// pumps that could not observe expert routing (artifact without
     /// the counts output — dense/topk/pkm, or pre-telemetry MoE)
     pub expert_stats_unavailable: u64,
+    /// speculative verify rounds executed (each is one prefill-shaped
+    /// dispatch over the drafted tokens)
+    pub spec_rounds: u64,
+    /// tokens drafted into verify dispatches
+    pub spec_drafted: u64,
+    /// drafted tokens the model confirmed (emitted without their own
+    /// dispatch — the speculation win)
+    pub spec_accepted: u64,
+    /// verify rounds where some lane rejected part of its draft and
+    /// lane memories were rolled back via a commit dispatch
+    pub spec_rollbacks: u64,
+    /// ragged commit dispatches issued for those rollbacks
+    pub spec_commit_steps: u64,
+    /// rounds by per-lane accepted-prefix length: `spec_accept_hist[n]`
+    /// = speculating lanes whose round accepted exactly n drafts
+    /// (len `speculate + 1`)
+    pub spec_accept_hist: Vec<u64>,
 }
 
 impl<'a> Engine<'a> {
@@ -401,10 +446,15 @@ impl<'a> Engine<'a> {
             _ => expert_k_idx_step = None,
         }
         let k0 = expert_k_max.unwrap_or(0);
-        let (prefill_inputs, prefill_feedback, prefill_chunk, counts_idx_prefill) =
-            Self::map_prefill_program(
-                bundle, &state, n_lanes, &mem_slots, vocab,
-            );
+        let (
+            prefill_inputs,
+            prefill_feedback,
+            prefill_chunk,
+            counts_idx_prefill,
+            prefill_verify_all,
+        ) = Self::map_prefill_program(
+            bundle, &state, n_lanes, &mem_slots, vocab,
+        );
         Ok(Engine {
             bundle,
             state,
@@ -416,6 +466,10 @@ impl<'a> Engine<'a> {
             prefill_inputs,
             prefill_feedback,
             prefill_chunk,
+            prefill_verify_all,
+            vocab,
+            speculate: 0,
+            drafter: Box::new(NgramDrafter::new()),
             counts_idx_step,
             counts_idx_prefill,
             expert_k_idx_step,
@@ -438,6 +492,12 @@ impl<'a> Engine<'a> {
             prefill_tokens: 0,
             lanes_poisoned: 0,
             expert_stats_unavailable: 0,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_rollbacks: 0,
+            spec_commit_steps: 0,
+            spec_accept_hist: Vec::new(),
         })
     }
 
@@ -446,6 +506,29 @@ impl<'a> Engine<'a> {
     pub fn with_clock(mut self, clock: SharedClock) -> Self {
         self.clock = clock;
         self
+    }
+
+    /// Enable speculative decode: up to `k` drafted tokens verified per
+    /// lane per pure-decode pump.  Silently stays off (`speculate = 0`,
+    /// the bit-for-bit single-token path) when the artifact's `prefill`
+    /// program is unavailable or lacks the all-position `verify_logits`
+    /// output; the CLI surfaces that as a config error instead.  `k` is
+    /// capped at C−1 so the lane's unfed last token plus the draft fit
+    /// one chunk.
+    pub fn with_speculate(mut self, k: usize) -> Self {
+        self.speculate =
+            if self.prefill_verify_all && self.prefill_inputs.is_some() {
+                k.min(self.prefill_chunk.saturating_sub(1))
+            } else {
+                0
+            };
+        self.spec_accept_hist = vec![0; self.speculate + 1];
+        self
+    }
+
+    /// Whether speculative decode is armed (drafting may still be cold).
+    pub fn speculate(&self) -> usize {
+        self.speculate
     }
 
     /// Map the optional AOT'd `reset_lanes` program onto the step_fwd
@@ -534,11 +617,13 @@ impl<'a> Engine<'a> {
     /// with step_fwd, input `2` the `[B, C]` i32 token chunk, input `3`
     /// the `[B]` i32 active-length vector, input `4` (adaptive-k MoE
     /// artifacts) the runtime expert-k i32 scalar; output `0` is the
-    /// last-valid-position logits `[B, vocab]` and outputs `1.*` the
-    /// updated memories in layer order.  Like `reset_lanes`, the
-    /// program must read *and* write every memory slot — a
-    /// subset-coverage program would advance some layers' memories and
-    /// leave others stale, silently corrupting every lane.
+    /// last-valid-position logits `[B, vocab]` — or, on
+    /// `verify_logits` artifacts, the all-position logits
+    /// `[B, C, vocab]` (the final tuple element reports which) — and
+    /// outputs `1.*` the updated memories in layer order.  Like
+    /// `reset_lanes`, the program must read *and* write every memory
+    /// slot — a subset-coverage program would advance some layers'
+    /// memories and leave others stale, silently corrupting every lane.
     fn map_prefill_program(
         bundle: &ModelBundle,
         state: &DeviceState,
@@ -550,13 +635,15 @@ impl<'a> Engine<'a> {
         Vec<(usize, usize)>,
         usize,
         Option<usize>,
+        bool,
     ) {
         const NONE: (
             Option<Vec<PrefillInput>>,
             Vec<(usize, usize)>,
             usize,
             Option<usize>,
-        ) = (None, Vec::new(), 1, None);
+            bool,
+        ) = (None, Vec::new(), 1, None, false);
         let Ok(prog) = bundle.program("prefill") else {
             return NONE;
         };
@@ -604,14 +691,27 @@ impl<'a> Engine<'a> {
         {
             return NONE;
         }
-        // output 0: logits_last [B, vocab]; outputs 1.*: memories
-        match prog.spec.outputs.first() {
+        // output 0: logits — the legacy last-valid gather [B, vocab],
+        // or the all-position [B, C, vocab] that `verify_logits`
+        // artifacts emit (the speculative verifier); outputs 1.*:
+        // memories
+        let verify_all = match prog.spec.outputs.first() {
             Some(b)
                 if b.name == "0"
                     && b.shape == [n_lanes, vocab]
-                    && b.dtype == DType::F32 => {}
+                    && b.dtype == DType::F32 =>
+            {
+                false
+            }
+            Some(b)
+                if b.name == "0"
+                    && b.shape == [n_lanes, chunk, vocab]
+                    && b.dtype == DType::F32 =>
+            {
+                true
+            }
             _ => return NONE,
-        }
+        };
         let mut feedback = Vec::new();
         let mut counts_idx = None;
         for (oi, b) in prog.spec.outputs.iter().enumerate().skip(1) {
@@ -654,7 +754,7 @@ impl<'a> Engine<'a> {
         if covered != need || written != need || need.is_empty() {
             return NONE;
         }
-        (Some(inputs), feedback, chunk, counts_idx)
+        (Some(inputs), feedback, chunk, counts_idx, verify_all)
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -764,6 +864,19 @@ impl<'a> Engine<'a> {
             }
             self.lane_resets_host += admitted.len() as u64;
         }
+        if self.speculate > 0 {
+            // seed the drafter with the new occupant's prompt (prompt
+            // lookup draws continuations from it from the first decode
+            // pump) and drop the previous occupant's history
+            for &i in &admitted {
+                self.drafter.reset(i);
+                if let Some(lane) = &self.lanes[i] {
+                    for &t in &lane.request.prompt {
+                        self.drafter.observe(i, t);
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -824,6 +937,10 @@ impl<'a> Engine<'a> {
             .any(|l| !l.pending.is_empty());
         if in_prompt && self.prefill_inputs.is_some() {
             self.pump_prefill()?;
+        } else if !in_prompt && self.speculate > 0 && self.pump_speculate()? {
+            // speculative verify round ran (pump_speculate returns
+            // false — before touching the device — when every drafter
+            // is cold, so the fallback below stays bit-for-bit)
         } else {
             if in_prompt {
                 // single-token fallback is about to consume prompt
@@ -872,7 +989,7 @@ impl<'a> Engine<'a> {
         if self.counts_idx_step.is_none() {
             self.expert_stats_unavailable += 1;
         }
-        let vocab = fwd.spec.outputs[0].shape[1];
+        let vocab = self.vocab;
         let logits = self.absorb_outputs(out, false)?;
         self.sample_and_finish(&logits, vocab, &sample);
         Ok(())
@@ -888,6 +1005,18 @@ impl<'a> Engine<'a> {
         prefill: bool,
     ) -> Result<Vec<f32>> {
         let logits = download(&self.bundle.client, &out[0])?.as_f32()?;
+        self.absorb_feedback(out, prefill)?;
+        Ok(logits)
+    }
+
+    /// The memory/counts half of [`Self::absorb_outputs`], without the
+    /// logits download — the speculative paths download (or, for a
+    /// rollback commit, discard) the logits themselves.
+    fn absorb_feedback(
+        &mut self,
+        out: Vec<xla::PjRtBuffer>,
+        prefill: bool,
+    ) -> Result<()> {
         let mut out: Vec<Option<xla::PjRtBuffer>> =
             out.into_iter().map(Some).collect();
         let feedback = if prefill {
@@ -928,7 +1057,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        Ok(logits)
+        Ok(())
     }
 
     /// One chunked `prefill` dispatch: up to C pending prompt tokens
@@ -978,52 +1107,9 @@ impl<'a> Engine<'a> {
             &self.bundle.client,
             &HostTensor::from_i32(&[b], &active)?,
         )?;
-        // runtime expert-k scalar (adaptive-k MoE artifacts): a fresh
-        // 4-byte upload per dispatch, mirroring the step_fwd slot
-        let needs_ek = self
-            .prefill_inputs
-            .as_ref()
-            .is_some_and(|ins| {
-                ins.iter().any(|pi| matches!(pi, PrefillInput::ExpertK))
-            });
-        let ek_buf = if needs_ek {
-            // step-side knob disabled (no step input or no usable
-            // ceiling) but the prefill program still takes the scalar:
-            // feed the compile-time K so prefill quality matches the
-            // fixed-k step path rather than degrading to top-1
-            let k = self.effective_expert_k().unwrap_or_else(|| {
-                self.bundle
-                    .manifest
-                    .expert_k_max
-                    .unwrap_or(self.bundle.manifest.model.expert_k)
-                    .max(1)
-            });
-            self.expert_k_current = k;
-            Some(upload(
-                &self.bundle.client,
-                &HostTensor::from_i32(&[], &[k as i32])?,
-            )?)
-        } else {
-            None
-        };
-        let out = {
-            let inputs = self
-                .prefill_inputs
-                .as_ref()
-                .ok_or_else(|| Error::other("prefill program unmapped"))?;
-            let bufs: Vec<&xla::PjRtBuffer> = inputs
-                .iter()
-                .map(|pi| match pi {
-                    PrefillInput::State(s) => self.state.buffer(*s),
-                    PrefillInput::Tokens => Ok(&tok_buf),
-                    PrefillInput::ActiveLen => Ok(&act_buf),
-                    PrefillInput::ExpertK => ek_buf.as_ref().ok_or_else(
-                        || Error::other("expert_k buffer unmapped"),
-                    ),
-                })
-                .collect::<Result<_>>()?;
-            prog.run_buffers(&bufs)?
-        };
+        let ek_buf = self.prefill_expert_k_buf()?;
+        let out =
+            self.run_prefill_dispatch(prog, &tok_buf, &act_buf, ek_buf.as_ref())?;
         self.steps_executed += 1;
         self.prefill_steps_device += 1;
         self.prefill_tokens += prompt_tokens;
@@ -1034,10 +1120,315 @@ impl<'a> Engine<'a> {
         // decode lanes — idle lanes contribute their 0
         self.tokens_processed +=
             active.iter().map(|&a| a as u64).sum::<u64>();
-        let vocab = prog.spec.outputs[0].shape[1];
+        let vocab = self.vocab;
         let logits = self.absorb_outputs(out, true)?;
+        let logits = if self.prefill_verify_all {
+            // all-position output [B, C, V]: gather each lane's
+            // last-valid row host-side so the epilogue sees the legacy
+            // last-position layout (bit-for-bit the on-device gather —
+            // pinned in python/tests/test_prefill.py)
+            let mut rows = vec![0f32; b * vocab];
+            for i in 0..b {
+                let j = (active[i].max(1) as usize) - 1;
+                let src = (i * c + j) * vocab;
+                rows[i * vocab..(i + 1) * vocab]
+                    .copy_from_slice(&logits[src..src + vocab]);
+            }
+            rows
+        } else {
+            logits
+        };
         self.sample_and_finish(&logits, vocab, &sample);
         Ok(())
+    }
+
+    /// Upload the runtime expert-k scalar for a prefill-shaped dispatch
+    /// when the mapped program takes it (`None` otherwise): a fresh
+    /// 4-byte upload per dispatch, mirroring the step_fwd slot.
+    fn prefill_expert_k_buf(&mut self) -> Result<Option<xla::PjRtBuffer>> {
+        let needs_ek = self
+            .prefill_inputs
+            .as_ref()
+            .is_some_and(|ins| {
+                ins.iter().any(|pi| matches!(pi, PrefillInput::ExpertK))
+            });
+        if !needs_ek {
+            return Ok(None);
+        }
+        // step-side knob disabled (no step input or no usable
+        // ceiling) but the prefill program still takes the scalar:
+        // feed the compile-time K so prefill quality matches the
+        // fixed-k step path rather than degrading to top-1
+        let k = self.effective_expert_k().unwrap_or_else(|| {
+            self.bundle
+                .manifest
+                .expert_k_max
+                .unwrap_or(self.bundle.manifest.model.expert_k)
+                .max(1)
+        });
+        self.expert_k_current = k;
+        Ok(Some(upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[], &[k as i32])?,
+        )?))
+    }
+
+    /// Run one prefill-shaped dispatch over the mapped program inputs
+    /// (shared by chunked prompt ingestion, speculative verify, and the
+    /// rollback commit — they differ only in what the token/active
+    /// tensors carry).
+    fn run_prefill_dispatch(
+        &self,
+        prog: &Program,
+        tok_buf: &xla::PjRtBuffer,
+        act_buf: &xla::PjRtBuffer,
+        ek_buf: Option<&xla::PjRtBuffer>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let inputs = self
+            .prefill_inputs
+            .as_ref()
+            .ok_or_else(|| Error::other("prefill program unmapped"))?;
+        let bufs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|pi| match pi {
+                PrefillInput::State(s) => self.state.buffer(*s),
+                PrefillInput::Tokens => Ok(tok_buf),
+                PrefillInput::ActiveLen => Ok(act_buf),
+                PrefillInput::ExpertK => ek_buf
+                    .ok_or_else(|| Error::other("expert_k buffer unmapped")),
+            })
+            .collect::<Result<_>>()?;
+        prog.run_buffers(&bufs)
+    }
+
+    /// One speculative verify round over a pure-decode batch: each
+    /// lane's unfed last token plus up to K drafted continuation tokens
+    /// go through one prefill-shaped dispatch, whose all-position
+    /// logits score every draft in parallel.  Per lane the longest
+    /// prefix where the sampled token equals the draft is accepted, and
+    /// the sample after it is emitted as the correction/bonus token
+    /// (greedy sampling consumes no RNG, so acceptance is exact
+    /// argmax agreement; temperature sampling accepts a draft exactly
+    /// when the sampler would have drawn it).  If every lane accepts
+    /// its whole draft the verify outputs are adopted as-is (one
+    /// dispatch emitted up to K+1 tokens per lane); any rejection
+    /// rolls lane memories back by *discarding* the verify outputs —
+    /// dispatch inputs are never donated, so the pre-round memory
+    /// buffers are still the live device state — and re-feeding exactly
+    /// the accepted per-lane prefixes through one ragged commit
+    /// dispatch.
+    ///
+    /// Returns `Ok(false)` — before touching the device — when no lane
+    /// produced a draft (drafters cold, budgets nearly exhausted), so
+    /// the caller's single-token fallback stays bit-for-bit identical
+    /// to a non-speculating engine.
+    fn pump_speculate(&mut self) -> Result<bool> {
+        let b = self.lanes.len();
+        let c = self.prefill_chunk;
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut any = false;
+        for (i, slot) in self.lanes.iter().enumerate() {
+            let Some(lane) = slot else { continue };
+            // the round emits at least one token; drafting past the
+            // budget would only feed tokens we'd have to throw away
+            let room = lane.budget.saturating_sub(lane.generated.len());
+            if room <= 1 {
+                continue;
+            }
+            let cap = self.speculate.min(c - 1).min(room - 1);
+            let d = self.drafter.draft(i, cap);
+            if !d.is_empty() {
+                any = true;
+            }
+            drafts[i] = d;
+        }
+        if !any {
+            return Ok(false);
+        }
+        let prog = self.bundle.program("prefill")?;
+        // verify chunk per lane: [t0, d1..dm], t0 the sampled-but-unfed
+        // last token (exactly what single-token decode would feed)
+        let mut toks = vec![0i32; b * c];
+        let mut active = vec![0i32; b];
+        for (i, slot) in self.lanes.iter().enumerate() {
+            let Some(lane) = slot else { continue };
+            toks[i * c] = lane.generated.last().copied().unwrap_or(0);
+            for (j, &d) in drafts[i].iter().enumerate() {
+                toks[i * c + 1 + j] = d;
+            }
+            active[i] = 1 + drafts[i].len() as i32;
+        }
+        self.state.upload_dirty()?;
+        let tok_buf = upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[b, c], &toks)?,
+        )?;
+        let act_buf = upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[b], &active)?,
+        )?;
+        let ek_buf = self.prefill_expert_k_buf()?;
+        let out =
+            self.run_prefill_dispatch(prog, &tok_buf, &act_buf, ek_buf.as_ref())?;
+        self.steps_executed += 1;
+        self.spec_rounds += 1;
+        self.spec_drafted +=
+            drafts.iter().map(|d| d.len() as u64).sum::<u64>();
+        if self.counts_idx_prefill.is_none() {
+            self.expert_stats_unavailable += 1;
+        }
+        // score the drafts before deciding what to do with the memory
+        // outputs: row j of lane i is the next-token distribution after
+        // feeding toks[i*c + j]
+        let v = self.vocab;
+        let logits = download(&self.bundle.client, &out[0])?.as_f32()?;
+        let mut accepted = vec![0usize; b];
+        let mut emitted: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut poisoned = vec![false; b];
+        for i in 0..b {
+            let Some(lane) = &mut self.lanes[i] else { continue };
+            let m = drafts[i].len();
+            for j in 0..=m {
+                let row = &logits[(i * c + j) * v..(i * c + j + 1) * v];
+                // same per-lane poison containment as the plain paths
+                if row.iter().any(|x| !x.is_finite()) {
+                    poisoned[i] = true;
+                    break;
+                }
+                match lane.sampler.sample(row, &mut self.rng) {
+                    None => {
+                        poisoned[i] = true;
+                        break;
+                    }
+                    Some(tok) => {
+                        let tok = tok as i32;
+                        emitted[i].push(tok);
+                        if j < m && tok == drafts[i][j] {
+                            accepted[i] += 1;
+                        } else {
+                            // first disagreement: `tok` is the
+                            // correction; nothing after it is valid
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if self.spec_accept_hist.len() <= self.speculate {
+            self.spec_accept_hist.resize(self.speculate + 1, 0);
+        }
+        for i in 0..b {
+            if self.lanes[i].is_some() && !drafts[i].is_empty() && !poisoned[i]
+            {
+                self.spec_accepted += accepted[i] as u64;
+                self.spec_accept_hist[accepted[i]] += 1;
+            }
+        }
+        // poisoned lanes don't force a rollback: they are dropped below
+        // and their memory rows are reset at the lane's next admission
+        let all_accept = (0..b).all(|i| match &self.lanes[i] {
+            Some(_) => poisoned[i] || accepted[i] == drafts[i].len(),
+            None => true,
+        });
+        if all_accept {
+            // every fed token is committed; adopt the verify outputs
+            self.tokens_processed +=
+                active.iter().map(|&a| a as u64).sum::<u64>();
+            self.absorb_feedback(out, true)?;
+        } else {
+            // roll back: drop the verify outputs (pre-round memories
+            // are still live) and re-commit only the accepted prefixes
+            drop(out);
+            self.spec_rollbacks += 1;
+            let mut ctoks = vec![0i32; b * c];
+            let mut cactive = vec![0i32; b];
+            for i in 0..b {
+                if self.lanes[i].is_none() || poisoned[i] {
+                    continue;
+                }
+                let n = 1 + accepted[i];
+                ctoks[i * c..i * c + n]
+                    .copy_from_slice(&toks[i * c..i * c + n]);
+                cactive[i] = n as i32;
+            }
+            let ctok_buf = upload(
+                &self.bundle.client,
+                &HostTensor::from_i32(&[b, c], &ctoks)?,
+            )?;
+            let cact_buf = upload(
+                &self.bundle.client,
+                &HostTensor::from_i32(&[b], &cactive)?,
+            )?;
+            // ek_buf is reusable: dispatch inputs are never donated
+            let cout = self.run_prefill_dispatch(
+                prog,
+                &ctok_buf,
+                &cact_buf,
+                ek_buf.as_ref(),
+            )?;
+            self.steps_executed += 1;
+            self.spec_commit_steps += 1;
+            if self.counts_idx_prefill.is_none() {
+                self.expert_stats_unavailable += 1;
+            }
+            self.tokens_processed +=
+                cactive.iter().map(|&a| a as u64).sum::<u64>();
+            // logits (output 0) of the commit are discarded — the
+            // correction token was already sampled from the verify pass
+            self.absorb_feedback(cout, true)?;
+        }
+        // emission + retirement (the speculative sibling of
+        // sample_and_finish: a round can emit several tokens per lane)
+        for i in 0..b {
+            if self.lanes[i].is_none() {
+                continue;
+            }
+            if poisoned[i] {
+                let lane = self.lanes[i].take().unwrap();
+                self.lanes_poisoned += 1;
+                if let Some(tx) = lane.events {
+                    let _ = tx
+                        .send(StreamEvent::Dropped(DropReason::EngineFailure));
+                }
+                continue;
+            }
+            let mut finished = false;
+            {
+                let lane = self.lanes[i].as_mut().unwrap();
+                for &tok in &emitted[i] {
+                    lane.generated.push(tok);
+                    self.tokens_generated += 1;
+                    self.drafter.observe(i, tok);
+                    if let Some(tx) = &lane.events {
+                        let _ = tx.send(StreamEvent::Token(tok));
+                    }
+                    if lane.generated.len() >= lane.budget {
+                        finished = true;
+                        break;
+                    }
+                }
+            }
+            if finished {
+                let lane = self.lanes[i].take().unwrap();
+                let res = GenResult {
+                    prompt: lane.request.prompt.clone(),
+                    tokens: lane.generated,
+                    queue_time: lane.admitted_at - lane.queued_at,
+                    run_time: self
+                        .clock
+                        .now()
+                        .duration_since(lane.admitted_at),
+                    prompt_len: lane.request.prompt.len(),
+                };
+                if let Some(tx) = lane.done_tx {
+                    let _ = tx.send(res.clone());
+                }
+                if let Some(tx) = lane.events {
+                    let _ = tx.send(StreamEvent::Done(res));
+                }
+            }
+        }
+        Ok(true)
     }
 
     /// Post-dispatch bookkeeping shared by both pump paths: for each
@@ -1073,6 +1464,9 @@ impl<'a> Engine<'a> {
                                 let tok = tok as i32;
                                 lane.generated.push(tok);
                                 self.tokens_generated += 1;
+                                if self.speculate > 0 {
+                                    self.drafter.observe(i, tok);
+                                }
                                 if let Some(tx) = &lane.events {
                                     let _ =
                                         tx.send(StreamEvent::Token(tok));
@@ -1208,6 +1602,31 @@ impl<'a> Engine<'a> {
                 "expert_k_current".into(),
                 self.expert_k_current as f64,
             );
+        }
+        // speculative-decode families appear only on speculating
+        // engines, mirroring the expert-k gauges above — a fleet with
+        // `--speculate 0` exports no spec_* series at all
+        if self.speculate > 0 {
+            m.insert("speculate".into(), self.speculate as f64);
+            m.insert("spec_rounds".into(), self.spec_rounds as f64);
+            m.insert("spec_drafted".into(), self.spec_drafted as f64);
+            m.insert("spec_accepted".into(), self.spec_accepted as f64);
+            m.insert(
+                "spec_accept_rate".into(),
+                if self.spec_drafted > 0 {
+                    self.spec_accepted as f64 / self.spec_drafted as f64
+                } else {
+                    0.0
+                },
+            );
+            m.insert("spec_rollbacks".into(), self.spec_rollbacks as f64);
+            m.insert(
+                "spec_commit_steps".into(),
+                self.spec_commit_steps as f64,
+            );
+            for (n, &count) in self.spec_accept_hist.iter().enumerate() {
+                m.insert(format!("spec_hist_{n}"), count as f64);
+            }
         }
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);

@@ -101,6 +101,11 @@ pub struct LoadgenCfg {
     /// expert telemetry (the production default).  The off position
     /// exists for the A/B row that prices always-on telemetry.
     pub telemetry: bool,
+    /// Dry-run only: speculative draft length K per lane per verify
+    /// round on the mock engines (`0` = plain single-token decode).
+    /// Live runs speculate with whatever the server at `--addr` was
+    /// started with.
+    pub speculate: usize,
 }
 
 impl Default for LoadgenCfg {
@@ -122,6 +127,7 @@ impl Default for LoadgenCfg {
             keep_alive: false,
             prefill_chunk: 16,
             telemetry: true,
+            speculate: 0,
         }
     }
 }
@@ -766,11 +772,13 @@ pub fn with_mock_server<T>(
     let shutdown = Arc::new(AtomicBool::new(false));
     let server_shutdown = shutdown.clone();
     let chunk = cfg.prefill_chunk;
+    let speculate = cfg.speculate;
     let handle = std::thread::spawn(move || {
         server::serve(listener, cfg, server_shutdown, move |driver| {
             let mut backend = MockBackend::new(lanes, vocab)
                 .with_step_delay(step_delay)
-                .with_prefill_chunk(chunk);
+                .with_prefill_chunk(chunk)
+                .with_speculate(speculate);
             driver.drive(&mut backend)
         })
     });
@@ -813,6 +821,7 @@ pub fn with_mock_fleet<T>(
         .collect();
     let release = stall_release.clone();
     let chunk = cfg.prefill_chunk;
+    let speculate = cfg.speculate;
     let handle = std::thread::spawn(move || {
         router::serve_fleet(
             listener,
@@ -823,6 +832,7 @@ pub fn with_mock_fleet<T>(
                 let mut backend = MockBackend::new(lanes, vocab)
                     .with_step_delay(step_delay)
                     .with_prefill_chunk(chunk)
+                    .with_speculate(speculate)
                     .with_stall_release(release.clone());
                 if let Some(fault) = faults[id].clone() {
                     backend = backend.with_fault(fault);
@@ -876,6 +886,7 @@ pub fn dry_run_with_prom(
         vocab: Some(cfg.vocab),
         prefill_chunk: cfg.prefill_chunk.max(1),
         telemetry: cfg.telemetry,
+        speculate: cfg.speculate,
         ..Default::default()
     };
     let engines = engines.max(1);
@@ -888,7 +899,19 @@ pub fn dry_run_with_prom(
         &[],
         |addr| {
             let row = run(addr, cfg, "mock-dry-run")?;
-            let require: &[&str] = if cfg.telemetry {
+            // speculation only counts once a decode round actually
+            // verifies drafts (chunk 1 silently disables it), so the
+            // exposition check requires the spec_* families exactly
+            // when the mock fleet can speculate
+            let speculating =
+                cfg.speculate > 0 && cfg.prefill_chunk.max(1) > 1;
+            let require: &[&str] = if cfg.telemetry && speculating {
+                &[
+                    "sigma_moe_stage_",
+                    "sigma_moe_experts_",
+                    "sigma_moe_engine_spec_",
+                ]
+            } else if cfg.telemetry {
                 &["sigma_moe_stage_", "sigma_moe_experts_"]
             } else {
                 &[]
@@ -917,6 +940,7 @@ pub fn dry_run_with_prom(
             json::num(cfg.prefill_chunk.max(1) as f64),
         );
         m.insert("telemetry".into(), Json::Bool(cfg.telemetry));
+        m.insert("speculate".into(), json::num(cfg.speculate as f64));
     }
     Ok((row, prom))
 }
@@ -1056,6 +1080,75 @@ pub fn dry_run_degrade_ab(
         ),
         ("full_k", full),
         ("degraded", degraded),
+    ]))
+}
+
+/// The speculative-decode A/B pair: the same dry-run plan with
+/// speculation off vs drafting K tokens per verify round, on the
+/// repetitive workload the drafter exists for — a tiny vocabulary
+/// makes the mock's deterministic stream periodic (step 7 mod vocab),
+/// so prompt-lookup drafting locks on once a lane has seen one period.
+/// The row carries the throughput ratio plus the speculative counters
+/// (accept rate, rollbacks, and the accepted-length histogram) pulled
+/// from the fleet's summed engine stats, making the speedup-vs-accept
+/// trade a tracked number.
+pub fn dry_run_speculate_ab(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<Json> {
+    let k = cfg.speculate.max(1);
+    // repetitive decode-heavy mix: short prompts, long generations,
+    // vocab 10 (period 10), chunk wide enough for 1 + K verify rows
+    let leg = |speculate: usize| LoadgenCfg {
+        vocab: 10,
+        prompt_len: (3, 6),
+        max_new: (48, 64),
+        prefill_chunk: cfg.prefill_chunk.max(k + 1),
+        speculate,
+        ..cfg.clone()
+    };
+    let off = dry_run(&leg(0), lanes, engines)?;
+    let on = dry_run(&leg(k), lanes, engines)?;
+    let tps = |row: &Json| {
+        row.opt("tokens_per_sec")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let engine_total = |row: &Json, key: &str| {
+        row.opt("server_metrics")
+            .and_then(|m| m.opt("engine"))
+            .and_then(|e| e.opt(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let (t_off, t_on) = (tps(&off), tps(&on));
+    let speedup = if t_off > 0.0 { t_on / t_off } else { 0.0 };
+    let drafted = engine_total(&on, "spec_drafted");
+    let accepted = engine_total(&on, "spec_accepted");
+    let accept_rate = if drafted > 0.0 { accepted / drafted } else { 0.0 };
+    let accept_hist: Vec<Json> = (0..=k)
+        .map(|n| engine_total(&on, &format!("spec_hist_{n}")))
+        .map(json::num)
+        .collect();
+    Ok(json::obj(vec![
+        ("mode", json::s("mock-dry-run-speculate-ab")),
+        ("engines", json::num(engines.max(1) as f64)),
+        ("speculate", json::num(k as f64)),
+        ("tokens_per_sec_off", json::num(t_off)),
+        ("tokens_per_sec_on", json::num(t_on)),
+        ("speculate_speedup", json::num(speedup)),
+        ("spec_rounds", json::num(engine_total(&on, "spec_rounds"))),
+        ("spec_drafted", json::num(drafted)),
+        ("spec_accepted", json::num(accepted)),
+        ("spec_accept_rate", json::num(accept_rate)),
+        (
+            "spec_rollbacks",
+            json::num(engine_total(&on, "spec_rollbacks")),
+        ),
+        ("spec_accept_hist", json::arr(accept_hist)),
+        ("off", off),
+        ("on", on),
     ]))
 }
 

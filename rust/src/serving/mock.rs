@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
+use crate::serving::drafter::{Drafter, NgramDrafter};
 use crate::serving::engine::{
     EngineBackend, GenRequest, GenResult, StreamEvent,
 };
@@ -152,6 +153,20 @@ pub struct MockBackend {
     /// quality); the effective k of a pump further folds in per-request
     /// ceilings, mirroring the real engine
     expert_k: usize,
+    /// requested max drafted tokens per lane per verify round (0 = off);
+    /// the effective K of a pump is additionally capped at C−1, exactly
+    /// like the real engine's verify chunk — with chunk 1 speculation
+    /// stays silently off, mirroring an artifact without `verify_logits`
+    speculate: usize,
+    /// host-side draft source, mirroring the engine's prompt lookup
+    drafter: NgramDrafter,
+    pub spec_rounds: u64,
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    pub spec_rollbacks: u64,
+    pub spec_commit_steps: u64,
+    /// speculating lanes per round by accepted-prefix length
+    spec_accept_hist: Vec<u64>,
 }
 
 impl MockBackend {
@@ -176,7 +191,31 @@ impl MockBackend {
                 MOCK_EXPERT_LAYERS
             ],
             expert_k: MOCK_TOP_K,
+            speculate: 0,
+            drafter: NgramDrafter::new(),
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            spec_rollbacks: 0,
+            spec_commit_steps: 0,
+            spec_accept_hist: Vec::new(),
         }
+    }
+
+    /// Enable speculative decode: up to `k` drafted tokens verified per
+    /// lane per pure-decode pump, with the same dispatch accounting as
+    /// the real engine (one verify pump per round, plus one commit pump
+    /// when any lane rejects part of its draft).  The effective K is
+    /// capped at `prefill_chunk - 1` at pump time, so builder order
+    /// doesn't matter; with chunk 1 speculation stays off.
+    pub fn with_speculate(mut self, k: usize) -> Self {
+        self.speculate = k;
+        self
+    }
+
+    /// The effective per-lane draft cap of a pump (0 = speculation off).
+    fn spec_k(&self) -> usize {
+        self.speculate.min(self.prefill_chunk.saturating_sub(1))
     }
 
     pub fn with_step_delay(mut self, d: Duration) -> Self {
@@ -304,13 +343,145 @@ impl MockBackend {
         k.clamp(1, MOCK_TOP_K)
     }
 
+    /// Simulated device step time for one dispatch: a degraded expert
+    /// top-k proportionally cuts it (k/K of the expert FLOPs) — this is
+    /// the mechanism the --degrade-ab overload A/B measures as a p99
+    /// win.
+    fn step_sleep(&mut self, k_eff: usize) {
+        if !self.step_delay.is_zero() {
+            let delay = self
+                .step_delay
+                .mul_f64(k_eff as f64 / MOCK_TOP_K as f64);
+            self.clock.sleep(delay);
+        }
+    }
+
+    /// One speculative verify round over a pure-decode batch, mirroring
+    /// the real engine's dispatch accounting device-free: all lanes
+    /// share one verify pump (each lane's drafted tokens scored against
+    /// the deterministic [`Self::expected_token`] stream, longest
+    /// matching prefix accepted plus the correction/bonus token), and
+    /// one extra commit pump is charged when any lane rejects part of
+    /// its draft (the engine's memory rollback).  Emitted tokens are
+    /// always the true stream — a wrong draft costs a pump, never a
+    /// wrong token — and every emitted token routes through the
+    /// synthetic expert router exactly once, so per-request expert
+    /// totals stay schedule-invariant across speculation settings.
+    ///
+    /// Returns `None` — charging nothing — when speculation is off or
+    /// every drafter is cold, so the caller's plain path stays
+    /// bit-for-bit identical to a non-speculating backend.
+    fn pump_speculate(&mut self, k_eff: usize) -> Option<usize> {
+        let spec_k = self.spec_k();
+        if spec_k == 0 {
+            return None;
+        }
+        let b = self.lanes.len();
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        let mut any = false;
+        for (i, slot) in self.lanes.iter().enumerate() {
+            let Some(lane) = slot else { continue };
+            let room = lane.budget.saturating_sub(lane.generated.len());
+            if room <= 1 {
+                continue;
+            }
+            let d = self.drafter.draft(i, spec_k.min(room - 1));
+            if !d.is_empty() {
+                any = true;
+            }
+            drafts[i] = d;
+        }
+        if !any {
+            return None;
+        }
+        // the verify dispatch
+        self.step_sleep(k_eff);
+        self.steps_executed += 1;
+        self.spec_rounds += 1;
+        if self.spec_accept_hist.len() <= spec_k {
+            self.spec_accept_hist.resize(spec_k + 1, 0);
+        }
+        let vocab = self.vocab as usize;
+        let mut rollback = false;
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
+            let Some(lane) = slot else { continue };
+            let m = drafts[i].len();
+            let mut accepted = 0;
+            while accepted < m
+                && drafts[i][accepted]
+                    == Self::expected_token(
+                        &lane.prompt,
+                        lane.generated.len() + accepted,
+                        vocab,
+                    )
+            {
+                accepted += 1;
+            }
+            if m > 0 {
+                self.spec_drafted += m as u64;
+                self.spec_accepted += accepted as u64;
+                self.spec_accept_hist[accepted] += 1;
+                if accepted < m {
+                    rollback = true;
+                }
+            }
+            // accepted drafts + the correction/bonus token, all from
+            // the true stream (lanes that drafted nothing ride the
+            // dispatch 1-active, exactly step semantics)
+            for _ in 0..=accepted {
+                let tok = Self::expected_token(
+                    &lane.prompt,
+                    lane.generated.len(),
+                    vocab,
+                );
+                route_token(&mut self.expert_counts, tok, k_eff);
+                lane.generated.push(tok);
+                self.tokens_generated += 1;
+                self.drafter.observe(i, tok);
+                let _ = lane.events.send(StreamEvent::Token(tok));
+                if lane.generated.len() >= lane.budget {
+                    break;
+                }
+            }
+            if lane.generated.len() >= lane.budget {
+                let lane = slot.take().unwrap();
+                let res = GenResult {
+                    prompt_len: lane.prompt.len(),
+                    prompt: lane.prompt,
+                    tokens: lane.generated,
+                    queue_time: lane.admitted_at - lane.queued_at,
+                    run_time: self
+                        .clock
+                        .now()
+                        .duration_since(lane.admitted_at),
+                };
+                let _ = lane.events.send(StreamEvent::Done(res));
+            }
+        }
+        if rollback {
+            // the ragged commit dispatch that rolls memories back
+            self.step_sleep(k_eff);
+            self.steps_executed += 1;
+            self.spec_commit_steps += 1;
+            self.spec_rollbacks += 1;
+        }
+        Some(self.active() + self.queue.len())
+    }
+
     fn admit(&mut self) {
-        for slot in self.lanes.iter_mut() {
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
             if slot.is_none() {
                 let Some(q) = self.queue.pop_front() else {
                     break;
                 };
                 let _ = q.events.send(StreamEvent::Admitted);
+                if self.speculate > 0 {
+                    // seed prompt lookup with the new occupant's prompt
+                    self.drafter.reset(i);
+                    for &t in &q.req.prompt {
+                        self.drafter.observe(i, t);
+                    }
+                }
                 *slot = Some(MockLane {
                     prompt_left: q.req.prompt.len(),
                     generated: Vec::new(),
@@ -369,19 +540,21 @@ impl EngineBackend for MockBackend {
         }
         self.check_fault()?;
         let k_eff = self.effective_expert_k();
-        if !self.step_delay.is_zero() {
-            // a degraded expert top-k proportionally cuts device step
-            // time (k/K of the expert FLOPs) — this is the mechanism
-            // the --degrade-ab overload A/B measures as a p99 win
-            let delay = self
-                .step_delay
-                .mul_f64(k_eff as f64 / MOCK_TOP_K as f64);
-            self.clock.sleep(delay);
+        let in_prompt = self
+            .lanes
+            .iter()
+            .flatten()
+            .any(|l| l.prompt_left > 0);
+        if !in_prompt {
+            if let Some(n) = self.pump_speculate(k_eff) {
+                return Ok(n);
+            }
         }
+        self.step_sleep(k_eff);
         self.steps_executed += 1;
         let chunk = self.prefill_chunk;
         let mut prompt_tokens = 0u64;
-        for slot in self.lanes.iter_mut() {
+        for (i, slot) in self.lanes.iter_mut().enumerate() {
             let Some(lane) = slot else { continue };
             if lane.prompt_left > 0 {
                 // prompt phase: consume up to `chunk` tokens, emit
@@ -407,6 +580,9 @@ impl EngineBackend for MockBackend {
             route_token(&mut self.expert_counts, tok, k_eff);
             lane.generated.push(tok);
             self.tokens_generated += 1;
+            if self.speculate > 0 {
+                self.drafter.observe(i, tok);
+            }
             let _ = lane.events.send(StreamEvent::Token(tok));
             if lane.generated.len() >= lane.budget {
                 let lane = slot.take().unwrap();
@@ -465,6 +641,33 @@ impl EngineBackend for MockBackend {
         m.insert("experts_per_layer".into(), MOCK_EXPERTS as f64);
         m.insert("expert_k_max".into(), MOCK_TOP_K as f64);
         m.insert("expert_k_current".into(), self.expert_k as f64);
+        // speculative families only on speculating backends, mirroring
+        // the real engine's conditional export
+        let spec_k = self.spec_k();
+        if spec_k > 0 {
+            m.insert("speculate".into(), spec_k as f64);
+            m.insert("spec_rounds".into(), self.spec_rounds as f64);
+            m.insert("spec_drafted".into(), self.spec_drafted as f64);
+            m.insert("spec_accepted".into(), self.spec_accepted as f64);
+            m.insert(
+                "spec_accept_rate".into(),
+                if self.spec_drafted > 0 {
+                    self.spec_accepted as f64 / self.spec_drafted as f64
+                } else {
+                    0.0
+                },
+            );
+            m.insert("spec_rollbacks".into(), self.spec_rollbacks as f64);
+            m.insert(
+                "spec_commit_steps".into(),
+                self.spec_commit_steps as f64,
+            );
+            for n in 0..=spec_k {
+                let count =
+                    self.spec_accept_hist.get(n).copied().unwrap_or(0);
+                m.insert(format!("spec_hist_{n}"), count as f64);
+            }
+        }
         m.insert("mock".into(), 1.0);
         m
     }
@@ -817,6 +1020,113 @@ mod tests {
         let m = b.stats();
         assert_eq!(m["expert_k_current"], MOCK_TOP_K as f64);
         assert_eq!(m["expert_k_max"], MOCK_TOP_K as f64);
+    }
+
+    #[test]
+    fn speculative_decode_matches_plain_streams_with_fewer_pumps() {
+        // vocab 10 makes the generated stream periodic (step 7 mod 10),
+        // so prompt lookup goes near-perfect once one period has been
+        // seen — the repetitive workload speculation targets
+        let budget = 60;
+        let run = |k: usize| -> (Vec<i32>, u64, BTreeMap<String, f64>) {
+            let mut b = MockBackend::new(1, 10)
+                .with_prefill_chunk(8)
+                .with_speculate(k);
+            let (tx, rx) = mpsc::channel();
+            b.submit_streaming(req(vec![1, 2, 3], budget), tx);
+            let (toks, dones) = drain(&mut b, &rx);
+            assert_eq!(dones.len(), 1);
+            assert_eq!(dones[0].tokens, toks);
+            (toks, b.steps_executed, b.stats())
+        };
+        let (plain, plain_steps, plain_stats) = run(0);
+        let (spec, spec_steps, spec_stats) = run(3);
+        assert_eq!(spec, plain, "speculation must never change tokens");
+        assert!(
+            spec_steps * 2 < plain_steps,
+            "speculation must cut pumps >2x on a periodic stream: \
+             {spec_steps} vs {plain_steps}"
+        );
+        assert!(
+            plain_stats.get("spec_rounds").is_none(),
+            "non-speculating backends export no spec_* families"
+        );
+        assert_eq!(spec_stats["speculate"], 3.0);
+        assert!(spec_stats["spec_rounds"] > 0.0);
+        assert!(spec_stats["spec_accept_rate"] > 0.5);
+        assert_eq!(spec_stats["spec_rollbacks"], 0.0);
+        // the histogram covers 0..=K and its rounds sum to spec_rounds
+        let hist: f64 = (0..=3)
+            .map(|n| spec_stats[&format!("spec_hist_{n}")])
+            .sum();
+        assert_eq!(hist, spec_stats["spec_rounds"]);
+    }
+
+    #[test]
+    fn rejected_draft_rolls_back_for_exactly_one_extra_pump() {
+        // prompt [5, 2, 5]: after the first generated token (2) the
+        // history suffix (5, 2) repeats a prompt bigram whose
+        // continuation (5) disagrees with the true stream (9) — the
+        // draft is rejected wholesale and charged one commit pump
+        let run = |k: usize| -> (Vec<i32>, u64, MockBackend) {
+            let mut b = MockBackend::new(1, 10)
+                .with_prefill_chunk(8)
+                .with_speculate(k);
+            let (tx, rx) = mpsc::channel();
+            b.submit_streaming(req(vec![5, 2, 5], 4), tx);
+            let (toks, _) = drain(&mut b, &rx);
+            let steps = b.steps_executed;
+            (toks, steps, b)
+        };
+        let (plain, plain_steps, _) = run(0);
+        let (spec, spec_steps, b) = run(3);
+        assert_eq!(spec, plain, "a wrong draft must never change tokens");
+        assert_eq!(
+            spec_steps,
+            plain_steps + 1,
+            "one rejected round = its verify pump emits the correction \
+             (free) but the rollback commit costs one extra pump"
+        );
+        assert_eq!(b.spec_rounds, 1);
+        assert_eq!(b.spec_accepted, 0);
+        assert_eq!(b.spec_rollbacks, 1);
+        assert_eq!(b.spec_commit_steps, 1);
+        assert!(b.spec_drafted > 0);
+    }
+
+    #[test]
+    fn speculative_routing_totals_stay_schedule_invariant() {
+        // the synthetic router is a pure function of token values, so
+        // per-request expert totals must not depend on whether tokens
+        // were emitted one-per-pump or in accepted speculative runs
+        let run = |k: usize| -> Vec<Vec<u64>> {
+            let mut b = MockBackend::new(2, 10)
+                .with_prefill_chunk(4)
+                .with_speculate(k);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(req(vec![3, 4, 5], 24), tx);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(req(vec![9], 12), tx);
+            while b.pump().unwrap() > 0 {}
+            b.take_expert_counts().unwrap()
+        };
+        assert_eq!(run(0), run(3));
+    }
+
+    #[test]
+    fn chunk_one_disables_speculation_silently() {
+        // mirrors the engine against an artifact without verify_logits:
+        // armed speculation stays off, streams and counters untouched
+        let mut b = MockBackend::new(1, 10).with_speculate(4);
+        let (tx, rx) = mpsc::channel();
+        b.submit_streaming(req(vec![1, 2, 1, 2], 8), tx);
+        let (toks, _) = drain(&mut b, &rx);
+        let expect: Vec<i32> = (0..8)
+            .map(|i| MockBackend::expected_token(&[1, 2, 1, 2], i, 10))
+            .collect();
+        assert_eq!(toks, expect);
+        assert_eq!(b.spec_rounds, 0);
+        assert!(b.stats().get("speculate").is_none());
     }
 
     #[test]

@@ -47,6 +47,7 @@
 
 pub mod chaos;
 pub mod clock;
+pub mod drafter;
 pub mod engine;
 pub mod journal;
 pub mod loadgen;
@@ -59,6 +60,7 @@ pub mod telemetry;
 
 pub use chaos::{ChaosCfg, ChaosReport, ReplayOutcome};
 pub use clock::{Clock, SharedClock, SimClock, WallClock};
+pub use drafter::{Drafter, NgramDrafter};
 pub use engine::{
     DropReason, Engine, EngineBackend, GenRequest, GenResult, StreamEvent,
 };

@@ -314,6 +314,12 @@ pub struct Scheduler {
     /// to C = 1, and the scheduler must not keep costing prompts in
     /// chunks the engine doesn't have.
     prefill_chunk: AtomicUsize,
+    /// Speculative-decode draft length K the fleet serves with (0 =
+    /// off).  The shortest-prompt policy folds it into
+    /// [`Scheduler::request_cost`]: a speculating engine spends verify
+    /// (and worst-case rollback-commit) dispatches on decode, so a
+    /// request's cost is no longer its prefill chunks alone.
+    speculate: AtomicUsize,
     /// Time source for enqueue stamps, deadline arithmetic, and the
     /// freshness clamp (wall clock in production, simulated under the
     /// record/replay harness).
@@ -342,6 +348,7 @@ impl Scheduler {
             capacity: capacity.max(1),
             policy,
             prefill_chunk: AtomicUsize::new(1),
+            speculate: AtomicUsize::new(0),
             degrade: None,
             expert_k_max: AtomicUsize::new(0),
             journal: Arc::new(Journal::disabled(clock.clone())),
@@ -402,6 +409,19 @@ impl Scheduler {
     /// common denominator.
     pub fn observe_prefill_chunk(&self, c: usize) {
         self.prefill_chunk.fetch_min(c.max(1), Ordering::Relaxed);
+    }
+
+    /// Cost decode budgets as speculative verify rounds of up to `k`
+    /// drafted tokens (the fleet's `--speculate K`; 0 leaves the
+    /// shortest-prompt policy costing prompts only, the pre-speculation
+    /// behavior).
+    pub fn with_speculate(self, k: usize) -> Self {
+        self.speculate.store(k, Ordering::Relaxed);
+        self
+    }
+
+    pub fn speculate(&self) -> usize {
+        self.speculate.load(Ordering::Relaxed)
     }
 
     /// Enable adaptive expert top-k under load.  `k_max` is the
@@ -533,6 +553,24 @@ impl Scheduler {
         prompt_len.div_ceil(self.prefill_chunk())
     }
 
+    /// Dispatch cost of a whole request under the shortest-prompt
+    /// policy.  Prefill chunks as in [`Scheduler::prompt_cost`]; on a
+    /// speculating fleet (`--speculate K`) the decode budget adds its
+    /// verify dispatches too — `max_new` tokens arrive in rounds of up
+    /// to K+1, each charged a verify dispatch plus the worst-case
+    /// rollback commit, so two requests with equal prompts but very
+    /// different budgets no longer tie.  With speculation off the cost
+    /// is the prompt alone, exactly the pre-speculation ordering.
+    pub fn request_cost(&self, prompt_len: usize, max_new: usize) -> usize {
+        let spec = self.speculate();
+        let decode = if spec > 0 {
+            2 * max_new.div_ceil(spec + 1)
+        } else {
+            0
+        };
+        self.prompt_cost(prompt_len) + decode
+    }
+
     /// Enqueue a request, or reject it synchronously when the queue is
     /// at capacity (the caller answers 429 — requests already running on
     /// lanes don't count against the queue bound).
@@ -654,7 +692,10 @@ impl Scheduler {
                 Policy::ShortestPrompt => {
                     let mut best: Option<(usize, usize)> = None;
                     for (i, q) in inner.queue.iter().enumerate() {
-                        let cost = self.prompt_cost(q.req.prompt.len());
+                        let cost = self.request_cost(
+                            q.req.prompt.len(),
+                            q.req.max_new_tokens,
+                        );
                         if best.is_none_or(|(_, b)| cost < b) {
                             best = Some((i, cost));
                         }
@@ -762,6 +803,12 @@ impl Scheduler {
         // known, so non-MoE fleets don't grow meaningless zero gauges
         // (scalar fields here render on /metrics as
         // `sigma_moe_scheduler_expert_k_*` Prometheus families)
+        // speculation gauge: only on speculating fleets, mirroring the
+        // engine's conditional spec_* export
+        let spec = self.speculate();
+        if spec > 0 {
+            fields.push(("speculate", json::num(spec as f64)));
+        }
         let k_max = self.expert_k_max.load(Ordering::Relaxed);
         if k_max > 0 {
             let d = &inner.degrade;
@@ -867,6 +914,47 @@ mod tests {
         assert_eq!(s.prompt_cost(17), 17);
         s.observe_prefill_chunk(8);
         assert_eq!(s.prompt_cost(17), 17);
+    }
+
+    #[test]
+    fn shortest_prompt_costs_speculative_verify_dispatches() {
+        // C=8, K=3: decode budgets are charged 2·⌈max_new/(K+1)⌉ verify
+        // + worst-case commit dispatches, so a one-chunk prompt with a
+        // huge budget loses to a two-chunk prompt with a tiny one
+        let s = Scheduler::new(8, Policy::ShortestPrompt)
+            .with_prefill_chunk(8)
+            .with_speculate(3);
+        assert_eq!(s.speculate(), 3);
+        // prompt 8 (1 chunk) + 40 tokens → 1 + 2·10 = 21
+        assert_eq!(s.request_cost(8, 40), 21);
+        // prompt 9 (2 chunks) + 4 tokens → 2 + 2·1 = 4
+        assert_eq!(s.request_cost(9, 4), 4);
+        let mut held = Vec::new();
+        let mk = |prompt_len: usize, max_new: usize| {
+            let mut r = req(prompt_len);
+            r.max_new_tokens = max_new;
+            r
+        };
+        let (tx, rx) = chan();
+        held.push(rx);
+        let big_budget = s.enqueue(mk(8, 40), None, tx).unwrap();
+        let (tx, rx) = chan();
+        held.push(rx);
+        let small_budget = s.enqueue(mk(9, 4), None, tx).unwrap();
+        let now = Instant::now();
+        assert_eq!(s.take_next(now).unwrap().id, small_budget);
+        assert_eq!(s.take_next(now).unwrap().id, big_budget);
+        // the gauge appears on /metrics only when speculating
+        assert_eq!(
+            s.metrics_json().get("speculate").unwrap().as_f64().unwrap(),
+            3.0
+        );
+        let off = Scheduler::new(8, Policy::ShortestPrompt)
+            .with_prefill_chunk(8);
+        // speculation off: decode budgets cost nothing (pre-speculation
+        // ordering preserved) and no gauge is exported
+        assert_eq!(off.request_cost(8, 40), 1);
+        assert!(off.metrics_json().opt("speculate").is_none());
     }
 
     #[test]

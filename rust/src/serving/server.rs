@@ -95,6 +95,11 @@ pub struct ServerConfig {
     /// Adaptive expert top-k under load (`--degrade-k
     /// min_k:hi_wm:lo_wm`); `None` pins k at `expert_k_max`.
     pub degrade_k: Option<DegradeCfg>,
+    /// Speculative decode draft length K (`--speculate K`; 0 = off).
+    /// Validated against the artifact's `verify_logits` flag at CLI
+    /// config time; flows into the scheduler's shortest-prompt cost
+    /// model, and the engine backend is armed by the caller.
+    pub speculate: usize,
 }
 
 impl Default for ServerConfig {
@@ -115,6 +120,7 @@ impl Default for ServerConfig {
             telemetry: true,
             expert_k_max: None,
             degrade_k: None,
+            speculate: 0,
         }
     }
 }
@@ -649,6 +655,7 @@ where
     };
     let sched = Scheduler::new(cfg.queue_cap, cfg.policy)
         .with_prefill_chunk(cfg.prefill_chunk)
+        .with_speculate(cfg.speculate)
         .with_clock(clock.clone())
         .with_telemetry(telemetry.clone());
     let sched = match (cfg.degrade_k, cfg.expert_k_max) {

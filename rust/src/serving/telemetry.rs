@@ -1485,6 +1485,73 @@ mod tests {
     }
 
     #[test]
+    fn prom_rendering_exposes_speculative_decode_gauges() {
+        // a speculating engine's stats surface as the
+        // `sigma_moe_engine_spec_*` families through the fleet
+        // exposition, and the CI smoke's required-prefix check can
+        // gate on them; a non-speculating fleet exposes none of them —
+        // absent, not zero, so dashboards don't chart a dead
+        // accept-rate
+        use crate::serving::{
+            EngineBackend, GenRequest, MockBackend, Sampler,
+        };
+        use std::sync::mpsc;
+        let run = |speculate: usize| {
+            let mut b = MockBackend::new(1, 10)
+                .with_prefill_chunk(4)
+                .with_speculate(speculate);
+            let (tx, _rx) = mpsc::channel();
+            b.submit_streaming(
+                GenRequest {
+                    prompt: vec![1, 2, 3],
+                    max_new_tokens: 32,
+                    sampler: Sampler::greedy(),
+                    ..Default::default()
+                },
+                tx,
+            );
+            while b.pump().unwrap() > 0 {}
+            let stats = b.stats();
+            let row = json::obj(vec![
+                ("id", json::num(0.0)),
+                (
+                    "stats",
+                    Json::Obj(
+                        stats
+                            .iter()
+                            .map(|(k, v)| (k.clone(), json::num(*v)))
+                            .collect(),
+                    ),
+                ),
+            ]);
+            render_prom(&json::obj(vec![(
+                "engines",
+                json::arr(vec![row]),
+            )]))
+        };
+        let text = run(3);
+        for needle in [
+            "sigma_moe_engine_speculate{engine=\"0\"} 3",
+            "sigma_moe_engine_spec_rounds{engine=\"0\"}",
+            "sigma_moe_engine_spec_accept_rate{engine=\"0\"}",
+            "sigma_moe_engine_spec_hist_3{engine=\"0\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // the CI smoke gates on this prefix being present AND populated
+        validate_prom(&text, &["sigma_moe_engine_spec_"]).unwrap();
+        let plain = run(0);
+        assert!(
+            !plain.contains("spec_"),
+            "non-speculating fleet must omit the spec families"
+        );
+        assert!(
+            validate_prom(&plain, &["sigma_moe_engine_spec_"]).is_err(),
+            "the required-prefix gate must fail closed without speculation"
+        );
+    }
+
+    #[test]
     fn validate_prom_rejects_malformed_expositions() {
         // duplicate TYPE
         let dup = "# TYPE a gauge\na 1\n# TYPE a gauge\na 2\n";

@@ -8,6 +8,7 @@
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use sigma_moe::json::Json;
 use sigma_moe::serving::chaos::{self, ChaosCfg};
 use sigma_moe::serving::{
     Clock, GenRequest, Journal, Policy, Sampler, Scheduler,
@@ -31,6 +32,7 @@ fn storm_cfg(seed: u64) -> ChaosCfg {
         seed,
         storm: true,
         degrade: None,
+        speculate: 0,
     }
 }
 
@@ -182,6 +184,55 @@ fn sim_clock_scheduler_expires_deadlines_identically() {
     assert_eq!(j1.matches("\"kind\":\"admit\"").count(), 6);
     assert_eq!(j1.matches("\"kind\":\"drop_deadline\"").count(), 3);
     assert_eq!(j1.matches("\"kind\":\"take\"").count(), 3);
+}
+
+/// Pinned regression fixture: a speculative fault storm configured
+/// from a checked-in document records cleanly, carries the speculative
+/// counters in its fleet metrics, and replays byte-for-byte. Also pins
+/// back-compat: the same document minus the `speculate` key (a trace
+/// recorded before speculative decode existed) parses as 0.
+#[test]
+fn pinned_speculative_storm_fixture_records_and_replays() {
+    let text = include_str!("fixtures/chaos_spec_storm.json");
+    let cfg = ChaosCfg::from_json(&Json::parse(text).unwrap()).unwrap();
+    assert_eq!(
+        cfg.speculate, 3,
+        "fixture must exercise speculative decode"
+    );
+    assert!(cfg.storm, "fixture must run a fault storm");
+
+    let path = tmp("spec-fixture.jsonl");
+    let rec = chaos::record(&cfg, &path).unwrap();
+    assert!(
+        rec.ok(),
+        "speculative storm violated invariants: {:?}",
+        rec.violations
+    );
+    assert_eq!(
+        rec.dones + rec.drops + rec.rejected,
+        cfg.requests,
+        "terminal accounting is incomplete under speculation"
+    );
+    // the fleet snapshot carries the speculative counters end to end
+    let metrics = rec.metrics.to_string_compact();
+    assert!(
+        metrics.contains("spec_rounds"),
+        "speculative counters missing from fleet metrics"
+    );
+
+    let rep = chaos::replay_path(&path).unwrap();
+    assert!(
+        rep.events_match && rep.metrics_match,
+        "speculative trace diverged on replay: {:?}",
+        rep.divergence
+    );
+    std::fs::remove_file(&path).ok();
+
+    // back-compat: a cfg document predating the `speculate` key
+    let legacy = text.replace(",\"speculate\":3", "");
+    assert_ne!(legacy, text, "fixture edit broke the back-compat probe");
+    let old = ChaosCfg::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+    assert_eq!(old.speculate, 0, "absent key must parse as no speculation");
 }
 
 /// A tampered trace must fail replay verification with a pointed

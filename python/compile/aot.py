@@ -15,6 +15,8 @@ Per preset this writes::
     artifacts/<preset>/step_fwd.hlo.txt
     artifacts/<preset>/prefill.hlo.txt
     artifacts/<preset>/reset_lanes.hlo.txt
+    artifacts/<preset>/snapshot_lanes.hlo.txt
+    artifacts/<preset>/restore_lanes.hlo.txt
     artifacts/<preset>/manifest.json
 
 manifest.json describes every function's flattened input/output buffers
@@ -150,6 +152,10 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
                                     verify_logits=verify_logits),
         # on-device per-lane memory zeroing for serving admission
         "reset_lanes": api.make_reset_lanes(cfg),
+        # prefix cache: per-lane post-prefill memory gather + the
+        # masked scatter seeding a cache-hit lane (serving only)
+        "snapshot_lanes": api.make_snapshot_lanes(cfg),
+        "restore_lanes": api.make_restore_lanes(cfg),
     }
     manifest: Dict[str, Any] = {
         "preset": name,
@@ -175,6 +181,11 @@ def build_preset(name: str, out_dir: str, batch_size: int | None = None,
         # per-position logits [B, C, V] (verifier for drafted tokens);
         # when false/absent the old last-valid gather [B, V] applies.
         "verify_logits": verify_logits,
+        # Prefix cache: when true, snapshot_lanes/restore_lanes are
+        # present and the serving engine may snapshot post-prefill lane
+        # memory and seed cache-hit lanes from it.  False/absent on old
+        # artifacts — the engine falls back bit-for-bit to cold prefill.
+        "prefix_cache": True,
         "flops": flops.summarize(cfg),
         "functions": {},
     }

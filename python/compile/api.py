@@ -13,7 +13,10 @@ Six entry points per model configuration:
 MoE presets append a per-layer expert-counts output to ``step_fwd`` /
 ``prefill`` and take a trailing ``expert_k`` int32 scalar — the
 runtime effective top-k (adaptive expert sparsity under load).
-* ``reset_lanes`` (mems, keep)                    -> mems'  (lane-masked)
+* ``reset_lanes``    (mems, keep)          -> mems'  (lane-masked)
+* ``snapshot_lanes`` (mems, src)           -> payload  (prefix-cache
+                  ragged per-lane memory gather, [L, B, M, D])
+* ``restore_lanes``  (mems, payload, keep) -> mems'  (cache-hit seed)
 
 All inputs/outputs are pytrees; jax.jit flattens them in deterministic
 pytree order, which aot.py records (names, shapes, dtypes) in
@@ -263,6 +266,58 @@ def make_reset_lanes(cfg: ModelConfig):
     return reset_lanes
 
 
+def make_snapshot_lanes(cfg: ModelConfig):
+    """Per-lane ragged gather of post-prefill XL memory for the serving
+    prefix cache: lane slot ``i`` of the output holds the memory rows of
+    lane ``src[i]`` (``src`` is ``[B]`` int32; a snapshotting lane
+    passes its own index), or literal zeros when ``src[i] < 0`` (lane
+    not snapshotted in this dispatch).
+
+    The output is one stacked ``[n_layers, B, mem_len, d_model]``
+    buffer — the cache-entry payload the engine downloads once per
+    snapshot and re-uploads on a cache-hit admission
+    (``restore_lanes``).  The same ragged gather is the paging
+    primitive for prompts longer than ``mem_len``: any lane's banded
+    attention window can be lifted out and re-seeded chunk-by-chunk.
+
+    ``where`` rather than multiplication: a NaN-poisoned lane that is
+    *not* selected must contribute literal zeros to the payload
+    (NaN * 0 is NaN), so one corrupt lane cannot poison a cache entry
+    gathered from a healthy one.
+    """
+
+    def snapshot_lanes(mems, src):
+        idx = jnp.maximum(src, 0)
+        sel = (src >= 0)[:, None, None]
+        rows = [jnp.where(sel, jnp.take(m, idx, axis=0), 0.0)
+                for m in mems]
+        return (jnp.stack(rows, axis=0),)
+
+    return snapshot_lanes
+
+
+def make_restore_lanes(cfg: ModelConfig):
+    """Masked scatter of a cached payload back into lane memory — the
+    cache-hit admission path: ``payload`` is the
+    ``[n_layers, B, mem_len, d_model]`` buffer a ``snapshot_lanes``
+    dispatch produced (each restored lane's rows staged at its own
+    batch slot), ``keep`` a ``[B]`` float mask: 1.0 preserves the
+    lane's existing memory, 0.0 adopts the payload rows.
+
+    ``where`` rather than multiplication, exactly like ``reset_lanes``:
+    a restored lane must come back as the payload's literal bits even
+    when its previous occupant left NaN/Inf behind, and an untouched
+    lane's (possibly non-finite) state must pass through bit-for-bit.
+    """
+
+    def restore_lanes(mems, payload, keep):
+        mask = keep[:, None, None] > 0
+        return [jnp.where(mask, m, payload[l])
+                for l, m in enumerate(mems)]
+
+    return restore_lanes
+
+
 def example_args(cfg: ModelConfig, tcfg: TrainConfig,
                  eval_mem_len: int, serve_batch: int = 1,
                  prefill_chunk: int = 16):
@@ -281,6 +336,9 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
     keep = jnp.ones((serve_batch,), jnp.float32)
     ptok = jnp.zeros((serve_batch, prefill_chunk), jnp.int32)
     active = jnp.full((serve_batch,), prefill_chunk, jnp.int32)
+    src = jnp.zeros((serve_batch,), jnp.int32)
+    payload = jnp.zeros(
+        (cfg.n_layers, serve_batch, cfg.mem_len, cfg.d_model), jnp.float32)
     out = {
         "init": (seed,),
         "train_step": (params, m, v, mems, tokens, step, seed),
@@ -288,6 +346,8 @@ def example_args(cfg: ModelConfig, tcfg: TrainConfig,
         "step_fwd": (params, smems, stok),
         "reset_lanes": (smems, keep),
         "prefill": (params, smems, ptok, active),
+        "snapshot_lanes": (smems, src),
+        "restore_lanes": (smems, payload, keep),
     }
     if cfg.ff_variant == "moe":
         # runtime effective top-k scalar (serving-only input); the

@@ -1,0 +1,190 @@
+"""Prefix-cache snapshot/restore: lifting a lane's post-prefill XL
+memory out through ``snapshot_lanes`` and seeding a fresh lane with it
+through ``restore_lanes`` must be *bitwise* equivalent to having
+prefilled the whole prompt continuously — the invariant the Rust
+engine's cache-hit path pins end to end — plus the masking/containment
+semantics and the flattened buffer-name contract the engine addresses
+the programs by."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, api
+from compile.configs import MoEConfig, ModelConfig
+
+CHUNK = 4
+
+
+def tiny_cfg():
+    return ModelConfig(
+        name="t-moe", vocab_size=64, d_model=16, d_ff=32, n_layers=3,
+        n_heads=2, head_dim=8, context=8, mem_len=8, ff_variant="moe",
+        moe=MoEConfig(n_experts=4, group_size=8, k=2))
+
+
+def setup(cfg, batch):
+    params = api.M.init_params(jax.random.PRNGKey(0), cfg)
+    mems = [jnp.zeros((batch, cfg.mem_len, cfg.d_model), jnp.float32)
+            for _ in range(cfg.n_layers)]
+    pre_fn = api.make_prefill(cfg, cfg.mem_len)
+    ek = jnp.asarray(cfg.moe.k, jnp.int32)
+    pre = jax.jit(lambda p, m, t, a: pre_fn(p, m, t, a, ek))
+    snap = jax.jit(api.make_snapshot_lanes(cfg))
+    rest = jax.jit(api.make_restore_lanes(cfg))
+    return params, mems, pre, snap, rest
+
+
+def feed_chunked(pre, params, mems, prompts, chunk):
+    """Drain ragged prompts through [B, chunk] prefill dispatches,
+    returning each lane's last-dispatch logits row and the memories."""
+    b = len(prompts)
+    off = [0] * b
+    final_logits = [None] * b
+    while any(off[i] < len(prompts[i]) for i in range(b)):
+        toks = np.zeros((b, chunk), np.int32)
+        active = np.zeros((b,), np.int32)
+        finished = []
+        for i, p in enumerate(prompts):
+            k = min(chunk, len(p) - off[i])
+            toks[i, :k] = p[off[i]:off[i] + k]
+            active[i] = k
+            off[i] += k
+            if k > 0 and off[i] == len(p):
+                finished.append(i)
+        out = pre(params, mems, jnp.asarray(toks), jnp.asarray(active))
+        logits, mems = out[0], out[1]
+        for i in finished:
+            final_logits[i] = logits[i]
+    return final_logits, mems
+
+
+def test_snapshot_gathers_selected_lanes_and_zeroes_the_rest():
+    cfg = tiny_cfg()
+    b = 4
+    key = jax.random.PRNGKey(2)
+    mems = [jax.random.normal(jax.random.fold_in(key, l),
+                              (b, cfg.mem_len, cfg.d_model))
+            for l in range(cfg.n_layers)]
+    # NaN-poison lane 3; it is not selected, so the payload must stay
+    # finite (where-select, never multiplication)
+    mems = [m.at[3].set(jnp.nan) for m in mems]
+    src = jnp.asarray([0, -1, 2, -1], jnp.int32)
+    (payload,) = api.make_snapshot_lanes(cfg)(mems, src)
+    assert payload.shape == (cfg.n_layers, b, cfg.mem_len, cfg.d_model)
+    for l in range(cfg.n_layers):
+        np.testing.assert_array_equal(np.asarray(payload[l, 0]),
+                                      np.asarray(mems[l][0]))
+        np.testing.assert_array_equal(np.asarray(payload[l, 2]),
+                                      np.asarray(mems[l][2]))
+        assert np.all(np.asarray(payload[l, 1]) == 0.0)
+        assert np.all(np.asarray(payload[l, 3]) == 0.0)
+    assert np.all(np.isfinite(np.asarray(payload)))
+
+
+def test_restore_adopts_payload_rows_and_keeps_the_rest():
+    cfg = tiny_cfg()
+    b = 3
+    key = jax.random.PRNGKey(4)
+    mems = [jax.random.normal(jax.random.fold_in(key, l),
+                              (b, cfg.mem_len, cfg.d_model))
+            for l in range(cfg.n_layers)]
+    payload = jax.random.normal(
+        key, (cfg.n_layers, b, cfg.mem_len, cfg.d_model))
+    # lane 1's previous occupant diverged — restore must adopt the
+    # payload's literal bits over the NaNs, not blend them
+    mems = [m.at[1].set(jnp.nan) for m in mems]
+    keep = jnp.asarray([1.0, 0.0, 0.0], jnp.float32)
+    out = api.make_restore_lanes(cfg)(mems, payload, keep)
+    for l in range(cfg.n_layers):
+        np.testing.assert_array_equal(np.asarray(out[l][0]),
+                                      np.asarray(mems[l][0]))
+        np.testing.assert_array_equal(np.asarray(out[l][1]),
+                                      np.asarray(payload[l, 1]))
+        np.testing.assert_array_equal(np.asarray(out[l][2]),
+                                      np.asarray(payload[l, 2]))
+
+
+def test_snapshot_restore_tail_prefill_is_bitwise_continuous_prefill():
+    # the serving cache-hit invariant: prefill(prefix) -> snapshot ->
+    # fresh lane -> restore -> prefill(tail) must equal one continuous
+    # chunked prefill of prefix+tail, bit for bit (logits and memory),
+    # for tails straddling the chunk boundary
+    cfg = tiny_cfg()
+    b = 2
+    rng = np.random.default_rng(9)
+    prefix = list(rng.integers(0, cfg.vocab_size, 2 * CHUNK))
+    for tail_len in [1, CHUNK - 1, CHUNK, CHUNK + 1]:
+        tail = list(rng.integers(0, cfg.vocab_size, tail_len))
+        rider = list(rng.integers(0, cfg.vocab_size, 3))
+        params, mems0, pre, snap, rest = setup(cfg, b)
+
+        # cold reference: lane 0 prefills prefix+tail continuously
+        # (lane 1 rides along with an unrelated prompt both times)
+        cold_logits, cold_mems = feed_chunked(
+            pre, params, mems0, [prefix + tail, rider], CHUNK)
+
+        # warm path: prefill the prefix alone, snapshot lane 0...
+        _, warm_mems = feed_chunked(
+            pre, params, mems0, [prefix, rider], CHUNK)
+        (payload,) = snap(warm_mems, jnp.asarray([0, -1], jnp.int32))
+        # ...host round-trip (the cache stores the payload bytes)...
+        payload = jnp.asarray(np.asarray(payload))
+        # ...then seed a fresh engine's lane 0 from the cache and
+        # prefill only the tail.  Lane 1 re-prefills its rider prompt
+        # so both runs issue identically-shaped dispatches.
+        _, fresh_mems = feed_chunked(
+            pre, params, mems0, [rider[:1], rider], CHUNK)
+        seeded = rest(fresh_mems, payload,
+                      jnp.asarray([0.0, 1.0], jnp.float32))
+        # the restore replaced lane 0 wholesale; lane 1 untouched
+        for l in range(cfg.n_layers):
+            np.testing.assert_array_equal(
+                np.asarray(seeded[l][1]), np.asarray(fresh_mems[l][1]))
+        warm_logits, warm_out = feed_chunked(
+            pre, params, seeded, [tail, rider], CHUNK)
+
+        np.testing.assert_array_equal(
+            np.asarray(warm_logits[0]), np.asarray(cold_logits[0]),
+            err_msg=f"tail {tail_len}: cache-hit logits diverge")
+        for l, (mw, mc) in enumerate(zip(warm_out, cold_mems)):
+            np.testing.assert_array_equal(
+                np.asarray(mw[0]), np.asarray(mc[0]),
+                err_msg=f"tail {tail_len} layer {l} memory diverges")
+
+
+def test_prefix_cache_manifest_names_match_engine_contract():
+    """The Rust engine maps snapshot inputs ``0.<layer>`` onto the
+    step_fwd memory state ``1.<layer>``, uploads ``1`` (src [B] int32),
+    downloads output ``0`` ([L, B, M, D] payload); restore additionally
+    uploads ``1`` (payload) + ``2`` (keep [B] f32) and feeds the
+    per-layer outputs back buffer-to-buffer like reset_lanes."""
+    cfg = tiny_cfg()
+    serve_batch = 2
+    smems = [jnp.zeros((serve_batch, cfg.mem_len, cfg.d_model),
+                       jnp.float32) for _ in range(cfg.n_layers)]
+    src = jnp.zeros((serve_batch,), jnp.int32)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_snapshot_lanes(cfg), (smems, src))
+    assert [b["name"] for b in in_spec] == (
+        [f"0.{i}" for i in range(cfg.n_layers)] + ["1"])
+    assert in_spec[-1]["shape"] == [serve_batch]
+    assert in_spec[-1]["dtype"] == "int32"
+    assert [b["name"] for b in out_spec] == ["0"]
+    payload_shape = [cfg.n_layers, serve_batch, cfg.mem_len, cfg.d_model]
+    assert out_spec[0]["shape"] == payload_shape
+    assert out_spec[0]["dtype"] == "float32"
+
+    payload = jnp.zeros(payload_shape, jnp.float32)
+    keep = jnp.ones((serve_batch,), jnp.float32)
+    _, in_spec, out_spec = aot.lower_fn(
+        api.make_restore_lanes(cfg), (smems, payload, keep))
+    assert [b["name"] for b in in_spec] == (
+        [f"0.{i}" for i in range(cfg.n_layers)] + ["1", "2"])
+    assert in_spec[-2]["shape"] == payload_shape
+    assert in_spec[-1]["shape"] == [serve_batch]
+    assert in_spec[-1]["dtype"] == "float32"
+    assert [b["name"] for b in out_spec] == [
+        str(i) for i in range(cfg.n_layers)]
+    for b_ in out_spec:
+        assert b_["shape"] == [serve_batch, cfg.mem_len, cfg.d_model]

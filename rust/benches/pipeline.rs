@@ -239,6 +239,106 @@ fn bench_speculate_mock(rows: &mut Vec<Json>) {
     }
 }
 
+/// Prefix-cache A/B over the device-free mock at batch 1: two requests
+/// sharing a long prompt head, served cold (no cache) vs warm (the
+/// first request's chunk-boundary snapshots seed the second).  The
+/// warm second request must finish prefill in ⌈tail/C⌉ dispatches
+/// instead of ⌈len/C⌉ — the acceptance bound the cache exists for —
+/// while emitting the bitwise-identical token stream.  One
+/// BENCH_serve.json row per (leg, request).
+fn bench_prefix_mock(rows: &mut Vec<Json>) {
+    use sigma_moe::serving::PrefixCache;
+    use std::sync::Arc;
+    const CHUNK: usize = 8;
+    const GEN: usize = 16;
+    const HEAD: usize = 64;
+    const STEP_DELAY: Duration = Duration::from_micros(200);
+    let head: Vec<i32> = (0..HEAD as i32).collect();
+    let prompt = |tail: i32| {
+        let mut p = head.clone();
+        p.extend([100 + tail, 101 + tail, 102 + tail]);
+        p
+    };
+    let mut streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    for leg in ["cold", "warm"] {
+        let cache = Arc::new(PrefixCache::new(1 << 20));
+        let mut b = MockBackend::new(1, 512)
+            .with_prefill_chunk(CHUNK)
+            .with_step_delay(STEP_DELAY);
+        if leg == "warm" {
+            b = b.with_prefix_cache(cache.clone());
+        }
+        let mut leg_streams = Vec::new();
+        for (i, tail) in [0i32, 7].into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let before = b.steps_executed;
+            b.submit_streaming(
+                GenRequest {
+                    prompt: prompt(tail),
+                    max_new_tokens: GEN,
+                    sampler: Sampler::greedy(),
+                    ..Default::default()
+                },
+                tx,
+            );
+            let t0 = Instant::now();
+            while b.pump().expect("mock pump") > 0 {}
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let pumps = b.steps_executed - before;
+            let toks: Vec<i32> = rx
+                .try_iter()
+                .filter_map(|ev| match ev {
+                    StreamEvent::Token(t) => Some(t),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(toks.len(), GEN, "{leg} request {i} stream length");
+            leg_streams.push(toks);
+            let (hits, misses) = cache.hit_miss();
+            println!(
+                "prefix mock [{leg}] request {i}: {pumps} pumps for \
+                 {GEN} tokens | {:.0} tok/s | cache {hits} hit(s) / \
+                 {misses} miss(es)",
+                GEN as f64 / wall,
+            );
+            rows.push(json::obj(vec![
+                ("mode", json::s("mock-prefix-ab")),
+                ("leg", json::s(leg)),
+                ("request", json::num(i as f64)),
+                ("prompt_len", json::num(prompt(tail).len() as f64)),
+                ("prefill_chunk", json::num(CHUNK as f64)),
+                ("max_new", json::num(GEN as f64)),
+                ("pumps", json::num(pumps as f64)),
+                ("tokens_per_sec", json::num(GEN as f64 / wall)),
+                ("prefix_cache_hits", json::num(hits as f64)),
+                ("prefix_cache_misses", json::num(misses as f64)),
+                ("wall_s", json::num(wall)),
+            ]));
+        }
+        streams.push(leg_streams);
+    }
+    assert_eq!(
+        streams[0], streams[1],
+        "warm streams must be bitwise identical to cold"
+    );
+    // cold: ⌈67/8⌉ = 9 prefill dispatches inside the pump count;
+    // warm request 1 restores the 64-token boundary and pays only the
+    // 3-token tail: ⌈3/8⌉ = 1 — assert the ≤ ⌈tail/C⌉ + 1 bound
+    let pumps_of = |row: &Json| {
+        row.get("pumps").unwrap().as_f64().unwrap() as u64
+    };
+    let cold = pumps_of(&rows[rows.len() - 3]);
+    let warm = pumps_of(&rows[rows.len() - 1]);
+    assert!(
+        warm + 8 <= cold,
+        "warm request saved no prefill work: {warm} vs {cold} pumps"
+    );
+    println!(
+        "prefix mock: warm hit {warm} pumps vs {cold} cold \
+         (8 prefill dispatches saved)"
+    );
+}
+
 /// Chunked vs single-token prompt ingestion on the real device-resident
 /// engine: the same bundle/params with and without the `prefill`
 /// program (the subset load without it exercises the fallback path).
@@ -395,6 +495,8 @@ fn main() {
     let mut rows = bench_prefill_mock();
     println!("== speculative decode A/B ==");
     bench_speculate_mock(&mut rows);
+    println!("== prefix cache A/B ==");
+    bench_prefix_mock(&mut rows);
     bench_prefill_device(&mut rows);
     if let Err(e) =
         write_bench_json("BENCH_serve.json", "sigma-moe/serve/v1", rows)

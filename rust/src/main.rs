@@ -294,6 +294,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                             chunked-prefill dispatch (capped at \
                             prefill_chunk - 1; artifacts built with \
                             verify_logits only; 0 = plain decode)")
+    .optional("prefix-cache", "HTTP: snapshot post-prefill lane state \
+                               keyed by the prompt's content hash and \
+                               seed later prompts sharing a prefix \
+                               from it, within this LRU byte budget \
+                               (artifacts without snapshot/restore \
+                               programs fall back to cold prefill, \
+                               counted in prefix_cache_unavailable)")
     .parse_from(argv)?;
     if let Some(addr) = p.get("http") {
         let addr = addr.to_string();
@@ -416,6 +423,13 @@ fn load_serving_engine(
     if manifest.functions.contains_key("prefill") {
         names.push("prefill");
     }
+    // prefix-cache snapshot/restore ride along when the artifact has
+    // them; engines without them serve unchanged (cold prefill)
+    for name in ["snapshot_lanes", "restore_lanes"] {
+        if manifest.functions.contains_key(name) {
+            names.push(name);
+        }
+    }
     let bundle = ModelBundle::load_subset(&client, dir, &names)?;
     let params = match checkpoint {
         Some(params) => params.clone(),
@@ -484,6 +498,7 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
         expert_k_max: manifest.expert_k_max,
         degrade_k,
         speculate,
+        prefix_cache: p.opt_u64("prefix-cache")?,
         ..Default::default()
     };
     let checkpoint: Option<Vec<(String, HostTensor)>> =
@@ -517,6 +532,19 @@ fn cmd_serve_http(p: &Parsed, addr: &str) -> Result<()> {
             "[serve] speculative decode: drafting up to {} token(s) \
              per lane per verify round (n-gram prompt lookup)",
             cfg.speculate.min(cfg.prefill_chunk.saturating_sub(1)),
+        );
+    }
+    if let Some(budget) = cfg.prefix_cache {
+        eprintln!(
+            "[serve] prefix cache: {budget} byte LRU budget{}",
+            if manifest.prefix_cache {
+                ""
+            } else {
+                // validated fallback: the flag is accepted so a mixed
+                // fleet config works, but this artifact prefills cold
+                " (preset has no snapshot/restore programs — cold \
+                 prefill, probes counted in prefix_cache_unavailable)"
+            },
         );
     }
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -624,6 +652,10 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
                             mock engines — the storm then also \
                             exercises speculative verify/rollback \
                             accounting under faults (0 = plain decode)")
+    .optional("prefix-cache", "arm the fleet-shared prefix cache with \
+                               this LRU byte budget — the storm then \
+                               also exercises snapshot/restore and \
+                               eviction under faults, deterministically")
     .parse_from(argv)?;
 
     if let Some(path) = p.get("replay") {
@@ -642,10 +674,11 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
             None => None,
         },
         speculate: p.usize("speculate")?,
+        prefix_cache: p.opt_u64("prefix-cache")?,
     };
     eprintln!(
         "[chaos] seed {} | {} engine(s) x {} lanes | {} requests over \
-         {} rounds | storm {} | speculate {}",
+         {} rounds | storm {} | speculate {} | prefix cache {}",
         cfg.seed,
         cfg.engines,
         cfg.lanes,
@@ -653,6 +686,10 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
         cfg.pumps,
         if cfg.storm { "on" } else { "off" },
         cfg.speculate,
+        match cfg.prefix_cache {
+            Some(b) => format!("{b} bytes"),
+            None => "off".into(),
+        },
     );
     let report = chaos::run(&cfg)?;
     println!("{}", report.summary_json().to_string_compact());
@@ -737,7 +774,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .opt("prompt-max", "16", "max prompt length")
     .opt("prompt-dist", "uniform", "prompt-length distribution over \
                                     [prompt-min, prompt-max]: fixed | \
-                                    uniform | lognormal (heavy tail)")
+                                    uniform | lognormal (heavy tail) | \
+                                    shared-prefix (one common prefix + \
+                                    per-request random tails — the \
+                                    prefix-cache workload)")
+    .opt("shared-prefix-overlap", "0.5", "--prompt-dist shared-prefix: \
+                                          fraction of prompt-max \
+                                          covered by the common prefix")
     .opt("max-new-min", "8", "min tokens to generate")
     .opt("max-new-max", "32", "max tokens to generate")
     .opt("vocab", "2048", "prompt token ids drawn from [0, vocab)")
@@ -775,6 +818,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                             speculation off-vs-on A/B row on a \
                             repetitive decode-heavy workload with the \
                             accept-rate histogram (0 = plain decode)")
+    .optional("prefix-cache", "--dry-run: arm the mock fleet's prefix \
+                               cache with this LRU byte budget — rows \
+                               gain hit-rate and TTFT hit-vs-miss \
+                               columns, and a cold-vs-warm A/B row is \
+                               appended on a shared-prefix workload")
     .optional("record", "deterministic device-free run over the mock \
                          fleet on a simulated clock; writes the full \
                          decision trace here (see --replay)")
@@ -805,6 +853,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             storm: false,
             degrade: None,
             speculate: p.usize("speculate")?,
+            prefix_cache: p.opt_u64("prefix-cache")?,
         };
         eprintln!(
             "[loadgen] recording a deterministic run: seed {} | {} \
@@ -848,10 +897,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         prefill_chunk: p.usize("prefill-chunk")?,
         telemetry: true,
         speculate: p.usize("speculate")?,
+        shared_prefix_overlap: p.f64("shared-prefix-overlap")?,
+        prefix_cache: p.opt_u64("prefix-cache")?,
     };
     let mut ab_row: Option<Json> = None;
     let mut degrade_row: Option<Json> = None;
     let mut speculate_row: Option<Json> = None;
+    let mut prefix_row: Option<Json> = None;
     let mut prom_artifact: Option<String> = None;
     let mut rows: Vec<Json> = if p.flag("dry-run") {
         let engine_counts: Vec<usize> = p
@@ -909,16 +961,28 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             speculate_row =
                 Some(loadgen::dry_run_speculate_ab(&cfg, lanes, engines)?);
         }
+        if cfg.prefix_cache.is_some() {
+            let engines = engine_counts.first().copied().unwrap_or(1);
+            eprintln!(
+                "[loadgen] prefix A/B: re-running a shared-prefix \
+                 plan with the cache disarmed vs armed \
+                 ({engines} engine(s))"
+            );
+            prefix_row =
+                Some(loadgen::dry_run_prefix_ab(&cfg, lanes, engines)?);
+        }
         rows
     } else {
         if p.flag("telemetry-ab")
             || p.flag("degrade-ab")
             || p.usize("speculate")? > 0
+            || p.get("prefix-cache").is_some()
             || p.get("prom-out").is_some()
         {
             return Err(Error::Config(
-                "--telemetry-ab, --degrade-ab, --speculate and \
-                 --prom-out are --dry-run options"
+                "--telemetry-ab, --degrade-ab, --speculate, \
+                 --prefix-cache and --prom-out are --dry-run options \
+                 (a live server arms its cache via serve --prefix-cache)"
                     .into(),
             ));
         }
@@ -1015,6 +1079,21 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             num(&s, "spec_rollbacks"),
         );
         rows.push(s);
+    }
+    if let Some(pr) = prefix_row {
+        println!(
+            "prefix A/B: {:.1} tok/s cold vs {:.1} tok/s warm -> \
+             {:.2}x | hit rate {:.2} | TTFT p50 {:.1} ms hit vs \
+             {:.1} ms miss | {} prompt token(s) saved",
+            num(&pr, "tokens_per_sec_cold"),
+            num(&pr, "tokens_per_sec_warm"),
+            num(&pr, "prefix_cache_speedup"),
+            num(&pr, "prefix_cache_hit_rate"),
+            num(&pr, "ttft_p50_ms_hit"),
+            num(&pr, "ttft_p50_ms_miss"),
+            num(&pr, "prefix_cache_tokens_saved"),
+        );
+        rows.push(pr);
     }
     if let Some(path) = p.get("prom-out") {
         if let Some(text) = &prom_artifact {

@@ -145,6 +145,12 @@ pub struct Manifest {
     /// for artifacts that predate the flag (old last-position
     /// signature; speculation is disabled against them).
     pub verify_logits: bool,
+    /// Whether `snapshot_lanes`/`restore_lanes` are present so the
+    /// serving engine may snapshot post-prefill lane memory into the
+    /// prefix cache and seed cache-hit lanes from it.  False on
+    /// artifacts that predate the programs — the engine then serves
+    /// every prompt through cold prefill, bit-for-bit unchanged.
+    pub prefix_cache: bool,
     pub functions: BTreeMap<String, FunctionSpec>,
     pub flops: BTreeMap<String, f64>,
     pub raw: Json,
@@ -208,6 +214,10 @@ impl Manifest {
                 .filter(|&k| k > 0),
             verify_logits: raw
                 .opt("verify_logits")
+                .and_then(|v| v.as_bool().ok())
+                .unwrap_or(false),
+            prefix_cache: raw
+                .opt("prefix_cache")
                 .and_then(|v| v.as_bool().ok())
                 .unwrap_or(false),
             model,

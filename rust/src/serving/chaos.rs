@@ -55,6 +55,7 @@ use crate::serving::clock::{Clock, SharedClock, SimClock};
 use crate::serving::engine::{GenRequest, StreamEvent};
 use crate::serving::journal::{Journal, Trace};
 use crate::serving::mock::{MockBackend, MockFault, MOCK_TOP_K};
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::router::{Fleet, Placement, RouterCfg};
 use crate::serving::sampler::Sampler;
 use crate::serving::scheduler::{DegradeCfg, Policy};
@@ -106,6 +107,10 @@ pub struct ChaosCfg {
     /// engines (`0` = plain single-token decode).  Traces recorded
     /// before speculation carry no field and parse as `0`.
     pub speculate: usize,
+    /// Fleet-wide prefix-cache byte budget (`None` = off).  Traces
+    /// recorded before the cache carry no field and parse as `None`,
+    /// so they replay against the cold-prefill path unchanged.
+    pub prefix_cache: Option<u64>,
 }
 
 impl Default for ChaosCfg {
@@ -120,6 +125,7 @@ impl Default for ChaosCfg {
             storm: true,
             degrade: None,
             speculate: 0,
+            prefix_cache: None,
         }
     }
 }
@@ -140,6 +146,9 @@ impl ChaosCfg {
         }
         if self.speculate > 0 {
             fields.push(("speculate", json::num(self.speculate as f64)));
+        }
+        if let Some(b) = self.prefix_cache {
+            fields.push(("prefix_cache", json::num(b as f64)));
         }
         json::obj(fields)
     }
@@ -164,6 +173,12 @@ impl ChaosCfg {
                 .map(|v| v.as_usize())
                 .transpose()?
                 .unwrap_or(0),
+            // absent on traces recorded before the prefix cache: cold
+            // prefill, so old traces replay bit-for-bit
+            prefix_cache: j
+                .opt("prefix_cache")
+                .map(|v| v.as_f64().map(|b| b as u64))
+                .transpose()?,
         })
     }
 }
@@ -359,6 +374,19 @@ pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
         Some(d) => fleet.with_degrade_k(d, MOCK_TOP_K),
         None => fleet,
     };
+    let fleet = if cfg.speculate > 0 {
+        // arms the shared scheduler's spec-K autotune: the hysteresis
+        // transitions journal deterministically and replay byte-for-byte
+        fleet.with_speculate(cfg.speculate)
+    } else {
+        fleet
+    };
+    let fleet = match cfg.prefix_cache {
+        Some(budget) => {
+            fleet.with_prefix_cache(PrefixCache::shared(budget))
+        }
+        None => fleet,
+    };
 
     let mut rng = Rng::new(cfg.seed);
     let (reqs, trouble) = build_schedule(cfg, &mut rng);
@@ -374,6 +402,11 @@ pub fn run(cfg: &ChaosCfg) -> Result<ChaosReport> {
             b = b
                 .with_prefill_chunk(cfg.speculate + 1)
                 .with_speculate(cfg.speculate);
+        }
+        // the harness calls engine_step directly (never run_engine),
+        // so backends are armed here rather than by the fleet
+        if let Some(cache) = fleet.prefix_cache() {
+            b = b.with_prefix_cache(cache.clone());
         }
         let mut window = None;
         match t {
@@ -702,6 +735,7 @@ mod tests {
             storm,
             degrade: None,
             speculate: 0,
+            prefix_cache: None,
         }
     }
 
@@ -860,6 +894,62 @@ mod tests {
         let spec = ChaosCfg { speculate: 3, ..ChaosCfg::default() };
         let back = ChaosCfg::from_json(&spec.to_json()).unwrap();
         assert_eq!(back.speculate, 3);
+        // pre-prefix-cache traces carry no key: cold prefill on replay
+        assert_eq!(back.prefix_cache, None);
+        assert!(
+            !spec.to_json().to_string_compact().contains("prefix_cache")
+        );
+        let cached = ChaosCfg {
+            prefix_cache: Some(1 << 20),
+            ..ChaosCfg::default()
+        };
+        let back = ChaosCfg::from_json(&cached.to_json()).unwrap();
+        assert_eq!(back.prefix_cache, Some(1 << 20));
+    }
+
+    /// Property: a fault storm over a *cache-armed* fleet still holds
+    /// every serving invariant — never-double-send pins each completed
+    /// stream to the exact greedy continuation, so a lane seeded from
+    /// a stale or wrong snapshot would surface here — the metrics
+    /// snapshot carries the cache section, and a recorded cache-armed
+    /// trace replays byte-for-byte.
+    #[test]
+    fn prefix_cache_storms_hold_invariants_and_replay() {
+        for seed in [3, 11] {
+            let cfg = ChaosCfg {
+                prefix_cache: Some(1 << 20),
+                ..small(true, seed)
+            };
+            let a = run(&cfg).unwrap();
+            assert!(a.ok(), "seed {seed}: violations: {:?}", a.violations);
+            assert_eq!(a.dones + a.drops + a.rejected, cfg.requests);
+            let doc = a.metrics.to_string_compact();
+            assert!(
+                doc.contains("prefix_cache"),
+                "seed {seed}: no cache section in metrics: {doc}"
+            );
+            let b = run(&cfg).unwrap();
+            assert_eq!(
+                a.events, b.events,
+                "seed {seed}: decision streams diverged"
+            );
+            assert_eq!(
+                a.metrics.to_string_compact(),
+                b.metrics.to_string_compact(),
+                "seed {seed}: metrics snapshots diverged"
+            );
+            let path = tmp(&format!("prefix-cache-{seed}.jsonl"));
+            let rec = record(&cfg, &path).unwrap();
+            assert!(rec.ok(), "violations: {:?}", rec.violations);
+            let out = replay_path(&path).unwrap();
+            assert!(
+                out.events_match,
+                "seed {seed}: divergence: {:?}",
+                out.divergence
+            );
+            assert!(out.metrics_match, "seed {seed}: metrics diverged");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     /// Property: a fault storm over a *speculating* fleet still holds

@@ -42,6 +42,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -50,6 +51,7 @@ use crate::runtime::device::{download, upload};
 use crate::runtime::{DeviceState, ModelBundle, Program, TransferSnapshot};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::drafter::{Drafter, NgramDrafter};
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::sampler::Sampler;
 use crate::tensor::{DType, HostTensor};
 
@@ -164,6 +166,23 @@ pub trait EngineBackend {
     /// knob).  Called by the serving driver before pumping whenever
     /// the degrade-k policy transitions.
     fn set_expert_k(&mut self, _k: usize) {}
+    /// Arm the fleet-shared prefix cache: subsequent admissions probe
+    /// it and seed cache-hit lanes from the matching snapshot, and
+    /// prefill pumps snapshot lanes crossing chunk boundaries into it.
+    /// Default no-op for backends without snapshot/restore machinery.
+    fn set_prefix_cache(&mut self, _cache: Arc<PrefixCache>) {}
+    /// Set the effective speculative draft length for subsequent
+    /// pumps (clamped into the backend's own `[0, C−1]` ceiling; no-op
+    /// on backends without a verifier).  Called by the serving driver
+    /// whenever the spec-K autotune controller transitions.
+    fn set_speculate(&mut self, _k: usize) {}
+    /// Drain the (drafted, accepted) speculative-token deltas since
+    /// the last call — the live accept-rate feed the scheduler's
+    /// spec-K autotune controller integrates.  `(0, 0)` from backends
+    /// that are not speculating.
+    fn take_spec_feedback(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 #[derive(Debug)]
@@ -251,6 +270,27 @@ enum PrefillInput {
     Tokens,
     ActiveLen,
     ExpertK,
+}
+
+/// One input of the AOT'd `snapshot_lanes` program, mapped onto the
+/// engine's `step_fwd` device state: a per-layer memory slot or the
+/// `[B]` i32 source-lane vector (lane index to gather, −1 to emit
+/// zeros).
+#[derive(Debug, Clone, Copy)]
+enum SnapshotInput {
+    Mem(usize),
+    Src,
+}
+
+/// One input of the AOT'd `restore_lanes` program: a per-layer memory
+/// slot, the `[n_layers, B, mem_len, d_model]` cached payload, or the
+/// `[B]` f32 keep-mask (1.0 preserves the lane's memory, 0.0 adopts
+/// the payload rows).
+#[derive(Debug, Clone, Copy)]
+enum RestoreInput {
+    Mem(usize),
+    Payload,
+    Keep,
 }
 
 /// Continuous-batching engine: `serve_batch` lanes step together in one
@@ -366,6 +406,42 @@ pub struct Engine<'a> {
     /// = speculating lanes whose round accepted exactly n drafts
     /// (len `speculate + 1`)
     pub spec_accept_hist: Vec<u64>,
+    /// (drafted, accepted) totals already drained through
+    /// [`EngineBackend::take_spec_feedback`] — the high-water marks the
+    /// next drain subtracts
+    spec_fb_drained: (u64, u64),
+    /// fleet-shared post-prefill snapshot store (`None` = cache off,
+    /// the bit-for-bit cold-prefill path)
+    prefix_cache: Option<Arc<PrefixCache>>,
+    /// `snapshot_lanes` program inputs in program order (`None` when
+    /// the artifact predates the program or its signature doesn't line
+    /// up — admissions then cold-prefill, counter-visible)
+    snapshot_inputs: Option<Vec<SnapshotInput>>,
+    /// `restore_lanes` program inputs in program order (same fallback)
+    restore_inputs: Option<Vec<RestoreInput>>,
+    /// `restore_lanes` program outputs in program order -> `state` slots
+    restore_outputs: Vec<usize>,
+    /// elements of one lane's one-layer memory row (`mem_len * d_model`)
+    /// — the payload stride snapshots are sliced with
+    mem_row_elems: usize,
+    /// admissions whose probe matched and seeded the lane from a
+    /// snapshot
+    pub prefix_cache_hits: u64,
+    /// admissions that probed and found no covering snapshot
+    pub prefix_cache_misses: u64,
+    /// prompt tokens skipped by cache-hit admissions (the dispatches
+    /// they would have cost are the TTFT win)
+    pub prefix_cache_tokens_saved: u64,
+    /// boundary snapshots inserted into the cache
+    pub prefix_cache_snapshots: u64,
+    /// restore dispatches run on device
+    pub prefix_cache_restores_device: u64,
+    /// restores written through the host memory mirror (memories not
+    /// yet device-resident)
+    pub prefix_cache_restores_host: u64,
+    /// admissions while the cache was armed but the artifact lacks the
+    /// snapshot/restore programs — the validated cold-prefill fallback
+    pub prefix_cache_unavailable: u64,
 }
 
 impl<'a> Engine<'a> {
@@ -455,6 +531,17 @@ impl<'a> Engine<'a> {
         ) = Self::map_prefill_program(
             bundle, &state, n_lanes, &mem_slots, vocab,
         );
+        let snapshot_inputs =
+            Self::map_snapshot_program(bundle, &state, n_lanes, &mem_slots);
+        let (restore_inputs, restore_outputs) =
+            Self::map_restore_program(bundle, &state, n_lanes, &mem_slots);
+        let mem_row_elems = mem_slots
+            .first()
+            .map(|&s| {
+                let shape = &state.slot_spec(s).shape;
+                shape.iter().skip(1).product()
+            })
+            .unwrap_or(0);
         Ok(Engine {
             bundle,
             state,
@@ -498,6 +585,19 @@ impl<'a> Engine<'a> {
             spec_rollbacks: 0,
             spec_commit_steps: 0,
             spec_accept_hist: Vec::new(),
+            spec_fb_drained: (0, 0),
+            prefix_cache: None,
+            snapshot_inputs,
+            restore_inputs,
+            restore_outputs,
+            mem_row_elems,
+            prefix_cache_hits: 0,
+            prefix_cache_misses: 0,
+            prefix_cache_tokens_saved: 0,
+            prefix_cache_snapshots: 0,
+            prefix_cache_restores_device: 0,
+            prefix_cache_restores_host: 0,
+            prefix_cache_unavailable: 0,
         })
     }
 
@@ -529,6 +629,15 @@ impl<'a> Engine<'a> {
     /// Whether speculative decode is armed (drafting may still be cold).
     pub fn speculate(&self) -> usize {
         self.speculate
+    }
+
+    /// Arm the fleet-shared prefix cache.  With an artifact that lacks
+    /// the snapshot/restore programs the engine keeps serving through
+    /// cold prefill, bit-for-bit unchanged, counting each skipped
+    /// probe in `prefix_cache_unavailable`.
+    pub fn with_prefix_cache(mut self, cache: Arc<PrefixCache>) -> Self {
+        self.prefix_cache = Some(cache);
+        self
     }
 
     /// Map the optional AOT'd `reset_lanes` program onto the step_fwd
@@ -757,6 +866,142 @@ impl<'a> Engine<'a> {
         (Some(inputs), feedback, chunk, counts_idx, verify_all)
     }
 
+    /// Map the optional AOT'd `snapshot_lanes` program onto the
+    /// step_fwd device state.  Its manifest contract (checked per
+    /// buffer, with a silent cold-prefill fallback on any mismatch so
+    /// old artifacts keep serving unchanged): inputs `0.<layer>` are
+    /// the per-layer memories matching step_fwd input `1.<layer>`,
+    /// input `1` the `[B]` i32 source-lane vector; the single output
+    /// `0` is the gathered `[n_layers, B, mem_len, d_model]` payload.
+    /// The program must read *every* memory slot — a subset snapshot
+    /// would seed future lanes with some layers' state missing.
+    fn map_snapshot_program(
+        bundle: &ModelBundle,
+        state: &DeviceState,
+        n_lanes: usize,
+        mem_slots: &[usize],
+    ) -> Option<Vec<SnapshotInput>> {
+        if !bundle.manifest.prefix_cache {
+            return None;
+        }
+        let prog = bundle.program("snapshot_lanes").ok()?;
+        let mut inputs = Vec::with_capacity(prog.spec.inputs.len());
+        for b in &prog.spec.inputs {
+            if b.name == "1" {
+                if b.dtype != DType::I32 || b.shape != [n_lanes] {
+                    return None;
+                }
+                inputs.push(SnapshotInput::Src);
+            } else if let Some(layer) = b.name.strip_prefix("0.") {
+                match state.position(&format!("1.{layer}")) {
+                    Some(i)
+                        if state.slot_spec(i).shape == b.shape
+                            && state.slot_spec(i).dtype == DType::F32 =>
+                    {
+                        inputs.push(SnapshotInput::Mem(i))
+                    }
+                    _ => return None,
+                }
+            } else {
+                return None;
+            }
+        }
+        let need: std::collections::BTreeSet<usize> =
+            mem_slots.iter().copied().collect();
+        let covered: std::collections::BTreeSet<usize> = inputs
+            .iter()
+            .filter_map(|si| match si {
+                SnapshotInput::Mem(i) => Some(*i),
+                SnapshotInput::Src => None,
+            })
+            .collect();
+        if covered != need || need.is_empty() {
+            return None;
+        }
+        let [out] = prog.spec.outputs.as_slice() else {
+            return None;
+        };
+        let mem_shape = &state.slot_spec(mem_slots[0]).shape;
+        let mut want = vec![mem_slots.len()];
+        want.extend_from_slice(mem_shape);
+        if out.name != "0" || out.dtype != DType::F32 || out.shape != want {
+            return None;
+        }
+        Some(inputs)
+    }
+
+    /// Map the optional AOT'd `restore_lanes` program — the
+    /// cache-hit admission path.  Contract (same silent fallback):
+    /// inputs `0.<layer>` the per-layer memories, `1` the
+    /// `[n_layers, B, mem_len, d_model]` payload, `2` the `[B]` f32
+    /// keep-mask; outputs `<layer>` the merged memories in layer
+    /// order, covering every memory slot on both sides (a partial
+    /// restore would splice two different requests' state together).
+    fn map_restore_program(
+        bundle: &ModelBundle,
+        state: &DeviceState,
+        n_lanes: usize,
+        mem_slots: &[usize],
+    ) -> (Option<Vec<RestoreInput>>, Vec<usize>) {
+        if !bundle.manifest.prefix_cache || mem_slots.is_empty() {
+            return (None, Vec::new());
+        }
+        let Ok(prog) = bundle.program("restore_lanes") else {
+            return (None, Vec::new());
+        };
+        let mem_shape = &state.slot_spec(mem_slots[0]).shape;
+        let mut payload_shape = vec![mem_slots.len()];
+        payload_shape.extend_from_slice(mem_shape);
+        let mut inputs = Vec::with_capacity(prog.spec.inputs.len());
+        for b in &prog.spec.inputs {
+            if b.name == "1" {
+                if b.dtype != DType::F32 || b.shape != payload_shape {
+                    return (None, Vec::new());
+                }
+                inputs.push(RestoreInput::Payload);
+            } else if b.name == "2" {
+                if b.dtype != DType::F32 || b.shape != [n_lanes] {
+                    return (None, Vec::new());
+                }
+                inputs.push(RestoreInput::Keep);
+            } else if let Some(layer) = b.name.strip_prefix("0.") {
+                match state.position(&format!("1.{layer}")) {
+                    Some(i)
+                        if state.slot_spec(i).shape == b.shape
+                            && state.slot_spec(i).dtype == DType::F32 =>
+                    {
+                        inputs.push(RestoreInput::Mem(i))
+                    }
+                    _ => return (None, Vec::new()),
+                }
+            } else {
+                return (None, Vec::new());
+            }
+        }
+        let mut outputs = Vec::with_capacity(prog.spec.outputs.len());
+        for b in &prog.spec.outputs {
+            match state.position(&format!("1.{}", b.name)) {
+                Some(i) => outputs.push(i),
+                None => return (None, Vec::new()),
+            }
+        }
+        let need: std::collections::BTreeSet<usize> =
+            mem_slots.iter().copied().collect();
+        let covered: std::collections::BTreeSet<usize> = inputs
+            .iter()
+            .filter_map(|ri| match ri {
+                RestoreInput::Mem(i) => Some(*i),
+                _ => None,
+            })
+            .collect();
+        let written: std::collections::BTreeSet<usize> =
+            outputs.iter().copied().collect();
+        if covered != need || written != need {
+            return (None, Vec::new());
+        }
+        (Some(inputs), outputs)
+    }
+
     pub fn n_lanes(&self) -> usize {
         self.lanes.len()
     }
@@ -875,6 +1120,189 @@ impl<'a> Engine<'a> {
                         self.drafter.observe(i, t);
                     }
                 }
+            }
+        }
+        self.restore_from_cache(&admitted)?;
+        Ok(())
+    }
+
+    /// Probe the prefix cache for each freshly-admitted lane and seed
+    /// hit lanes from the longest covering snapshot — the cached
+    /// prompt prefix is then dropped from `pending` so prefill starts
+    /// at the tail.  One batched `restore_lanes` dispatch covers every
+    /// hit lane when the memories are device-resident; otherwise the
+    /// payload is written through the host mirrors (identical bits —
+    /// the restore select with keep = 0 adopts the payload wholesale).
+    /// With the cache armed but the artifact predating the programs,
+    /// every admission cold-prefills unchanged and bumps
+    /// `prefix_cache_unavailable`.
+    fn restore_from_cache(&mut self, admitted: &[usize]) -> Result<()> {
+        let Some(cache) = self.prefix_cache.clone() else {
+            return Ok(());
+        };
+        if self.restore_inputs.is_none() {
+            self.prefix_cache_unavailable += admitted.len() as u64;
+            return Ok(());
+        }
+        let chunk = self.prefill_chunk();
+        let n_layers = self.mem_slots.len();
+        let row = self.mem_row_elems;
+        let expect = n_layers * row;
+        let mut hits: Vec<(usize, crate::serving::PrefixHit)> = Vec::new();
+        for &i in admitted {
+            let Some(lane) = &self.lanes[i] else { continue };
+            match cache.probe(&lane.request.prompt, chunk) {
+                // a snapshot from a different model geometry (or a
+                // device-free mirror) cannot seed this engine's lanes
+                Some(hit) if hit.payload.len() == expect => {
+                    self.prefix_cache_hits += 1;
+                    self.prefix_cache_tokens_saved += hit.len as u64;
+                    hits.push((i, hit));
+                }
+                Some(_) | None => self.prefix_cache_misses += 1,
+            }
+        }
+        if hits.is_empty() {
+            return Ok(());
+        }
+        let b = self.lanes.len();
+        if self.mem_slots.iter().all(|&s| self.state.device_ready(s)) {
+            let mut payload = vec![0f32; n_layers * b * row];
+            let mut keep = vec![1.0f32; b];
+            for (lane, hit) in &hits {
+                keep[*lane] = 0.0;
+                for l in 0..n_layers {
+                    let dst = (l * b + lane) * row;
+                    payload[dst..dst + row].copy_from_slice(
+                        &hit.payload[l * row..(l + 1) * row],
+                    );
+                }
+            }
+            let mut shape = vec![n_layers];
+            shape.extend_from_slice(
+                &self.state.slot_spec(self.mem_slots[0]).shape,
+            );
+            let prog = self.bundle.program("restore_lanes")?;
+            let pay_buf = upload(
+                &self.bundle.client,
+                &HostTensor::from_f32(&shape, &payload)?,
+            )?;
+            let keep_buf = upload(
+                &self.bundle.client,
+                &HostTensor::from_f32(&[b], &keep)?,
+            )?;
+            let out = {
+                let inputs = self.restore_inputs.as_ref().unwrap();
+                let bufs: Vec<&xla::PjRtBuffer> = inputs
+                    .iter()
+                    .map(|ri| match ri {
+                        RestoreInput::Mem(s) => self.state.buffer(*s),
+                        RestoreInput::Payload => Ok(&pay_buf),
+                        RestoreInput::Keep => Ok(&keep_buf),
+                    })
+                    .collect::<Result<_>>()?;
+                prog.run_buffers(&bufs)?
+            };
+            for (buf, &slot) in
+                out.into_iter().zip(self.restore_outputs.iter())
+            {
+                self.state.set_device(slot, buf);
+            }
+            self.prefix_cache_restores_device += 1;
+        } else {
+            let mem_slots = self.mem_slots.clone();
+            for (lane, hit) in &hits {
+                for (l, &slot) in mem_slots.iter().enumerate() {
+                    let t = self.state.host_mut(slot)?;
+                    let row_bytes = t.data.len() / t.shape[0];
+                    let start = lane * row_bytes;
+                    for (j, v) in
+                        hit.payload[l * row..(l + 1) * row].iter().enumerate()
+                    {
+                        t.data[start + j * 4..start + j * 4 + 4]
+                            .copy_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            self.prefix_cache_restores_host += hits.len() as u64;
+        }
+        // the snapshot already carries these tokens' effect on the
+        // lane memory: drop them from pending so prefill starts at the
+        // uncached tail (at least one tail token always remains)
+        for (lane_idx, hit) in &hits {
+            let lane = self.lanes[*lane_idx].as_mut().unwrap();
+            for _ in 0..hit.len {
+                lane.pending.pop_front();
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot every lane that crossed a prefill chunk boundary this
+    /// pump into the prefix cache: one batched `snapshot_lanes`
+    /// dispatch gathers the selected lanes' memory rows (source index
+    /// per snapshotting lane, −1 emits zeros for the rest), the
+    /// payload is downloaded once, and each lane's block is inserted
+    /// keyed by its consumed prompt prefix.  Boundaries whose prefix
+    /// is already cached are deduped before spending the dispatch.
+    fn snapshot_to_cache(&mut self, fed_prompt: &[bool]) -> Result<()> {
+        let Some(cache) = self.prefix_cache.clone() else {
+            return Ok(());
+        };
+        let Some(snap_inputs) = self.snapshot_inputs.clone() else {
+            return Ok(()); // fallback counted at admission
+        };
+        let b = self.lanes.len();
+        let chunk = self.prefill_chunk;
+        let mut src = vec![-1i32; b];
+        let mut targets: Vec<(usize, usize)> = Vec::new();
+        for (i, slot) in self.lanes.iter().enumerate() {
+            if !fed_prompt[i] {
+                continue; // decode/idle lane: memory is not a prompt
+                          // prefix (or didn't advance this pump)
+            }
+            let Some(lane) = slot else { continue };
+            let consumed =
+                lane.request.prompt.len() - lane.pending.len();
+            if consumed == 0 || consumed % chunk != 0 {
+                continue; // mid-chunk tail: not a probe-able boundary
+            }
+            if !cache.wants(&lane.request.prompt[..consumed]) {
+                continue;
+            }
+            src[i] = i as i32;
+            targets.push((i, consumed));
+        }
+        if targets.is_empty() {
+            return Ok(());
+        }
+        let prog = self.bundle.program("snapshot_lanes")?;
+        let src_buf = upload(
+            &self.bundle.client,
+            &HostTensor::from_i32(&[b], &src)?,
+        )?;
+        let out = {
+            let bufs: Vec<&xla::PjRtBuffer> = snap_inputs
+                .iter()
+                .map(|si| match si {
+                    SnapshotInput::Mem(s) => self.state.buffer(*s),
+                    SnapshotInput::Src => Ok(&src_buf),
+                })
+                .collect::<Result<_>>()?;
+            prog.run_buffers(&bufs)?
+        };
+        let payload = download(&self.bundle.client, &out[0])?.as_f32()?;
+        let n_layers = self.mem_slots.len();
+        let row = self.mem_row_elems;
+        for (lane_idx, prefix_len) in targets {
+            let lane = self.lanes[lane_idx].as_ref().unwrap();
+            let mut entry = Vec::with_capacity(n_layers * row);
+            for l in 0..n_layers {
+                let start = (l * b + lane_idx) * row;
+                entry.extend_from_slice(&payload[start..start + row]);
+            }
+            if cache.insert(&lane.request.prompt[..prefix_len], entry) {
+                self.prefix_cache_snapshots += 1;
             }
         }
         Ok(())
@@ -1075,6 +1503,9 @@ impl<'a> Engine<'a> {
         // lanes whose last fed token completes their context get a
         // continuation sampled from logits_last
         let mut sample = vec![false; b];
+        // lanes that ingested prompt tokens this pump — the only ones
+        // whose post-dispatch memory is a snapshot-able prompt prefix
+        let mut fed_prompt = vec![false; b];
         let mut prompt_tokens = 0u64;
         for (i, slot) in self.lanes.iter_mut().enumerate() {
             let Some(lane) = slot else { continue };
@@ -1094,6 +1525,7 @@ impl<'a> Engine<'a> {
             }
             active[i] = k as i32;
             prompt_tokens += k as u64;
+            fed_prompt[i] = true;
             // drained this pump: logits_last is the distribution after
             // the final prompt token — sample the first continuation
             sample[i] = lane.pending.is_empty();
@@ -1122,6 +1554,10 @@ impl<'a> Engine<'a> {
             active.iter().map(|&a| a as u64).sum::<u64>();
         let vocab = self.vocab;
         let logits = self.absorb_outputs(out, true)?;
+        // memories are device-resident here; snapshot dispatches are
+        // not counted in steps_executed (they are cache maintenance,
+        // not token progress)
+        self.snapshot_to_cache(&fed_prompt)?;
         let logits = if self.prefill_verify_all {
             // all-position output [B, C, V]: gather each lane's
             // last-valid row host-side so the epilogue sees the legacy
@@ -1628,6 +2064,41 @@ impl<'a> Engine<'a> {
                 m.insert(format!("spec_hist_{n}"), count as f64);
             }
         }
+        // prefix-cache families appear only on cache-armed engines,
+        // mirroring the spec_* gauges above — an un-armed fleet
+        // exports no prefix_cache_* series at all.  These are the
+        // engine-local counters; the shared cache's global state
+        // (entries/bytes/evictions) is exported once per document.
+        if self.prefix_cache.is_some() {
+            m.insert(
+                "prefix_cache_hits".into(),
+                self.prefix_cache_hits as f64,
+            );
+            m.insert(
+                "prefix_cache_misses".into(),
+                self.prefix_cache_misses as f64,
+            );
+            m.insert(
+                "prefix_cache_tokens_saved".into(),
+                self.prefix_cache_tokens_saved as f64,
+            );
+            m.insert(
+                "prefix_cache_snapshots".into(),
+                self.prefix_cache_snapshots as f64,
+            );
+            m.insert(
+                "prefix_cache_restores_device".into(),
+                self.prefix_cache_restores_device as f64,
+            );
+            m.insert(
+                "prefix_cache_restores_host".into(),
+                self.prefix_cache_restores_host as f64,
+            );
+            m.insert(
+                "prefix_cache_unavailable".into(),
+                self.prefix_cache_unavailable as f64,
+            );
+        }
         let xfer = self.state.transfers();
         m.insert("h2d_bytes".into(), xfer.h2d_bytes as f64);
         m.insert("d2h_bytes".into(), xfer.d2h_bytes as f64);
@@ -1678,6 +2149,29 @@ impl EngineBackend for Engine<'_> {
 
     fn set_expert_k(&mut self, k: usize) {
         self.sched_expert_k = k.max(1);
+    }
+
+    fn set_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix_cache = Some(cache);
+    }
+
+    fn set_speculate(&mut self, k: usize) {
+        // speculation needs the all-position verifier; without it the
+        // knob stays pinned at whatever new() resolved (0)
+        if !self.prefill_verify_all || self.prefill_inputs.is_none() {
+            return;
+        }
+        self.speculate = k.min(self.prefill_chunk.saturating_sub(1));
+        if self.spec_accept_hist.len() < self.speculate + 1 {
+            self.spec_accept_hist.resize(self.speculate + 1, 0);
+        }
+    }
+
+    fn take_spec_feedback(&mut self) -> (u64, u64) {
+        let d = self.spec_drafted - self.spec_fb_drained.0;
+        let a = self.spec_accepted - self.spec_fb_drained.1;
+        self.spec_fb_drained = (self.spec_drafted, self.spec_accepted);
+        (d, a)
     }
 }
 

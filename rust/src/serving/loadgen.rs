@@ -42,6 +42,11 @@ pub enum PromptDist {
     /// geometric mean of the range is the median and ±2σ spans the
     /// range; samples clamp into it.
     Lognormal,
+    /// One seed-fixed common prefix (`shared_prefix_overlap` of the
+    /// range maximum) followed by a per-request random tail — the
+    /// workload a prefix cache exists for.  Lengths stay uniform over
+    /// the range and every prompt keeps at least one unique-tail slot.
+    SharedPrefix,
 }
 
 impl PromptDist {
@@ -50,9 +55,10 @@ impl PromptDist {
             "fixed" => Ok(PromptDist::Fixed),
             "uniform" => Ok(PromptDist::Uniform),
             "lognormal" => Ok(PromptDist::Lognormal),
+            "shared-prefix" => Ok(PromptDist::SharedPrefix),
             other => Err(Error::Config(format!(
                 "unknown prompt distribution {other:?} \
-                 (expected fixed | uniform | lognormal)"
+                 (expected fixed | uniform | lognormal | shared-prefix)"
             ))),
         }
     }
@@ -62,6 +68,7 @@ impl PromptDist {
             PromptDist::Fixed => "fixed",
             PromptDist::Uniform => "uniform",
             PromptDist::Lognormal => "lognormal",
+            PromptDist::SharedPrefix => "shared-prefix",
         }
     }
 }
@@ -106,6 +113,13 @@ pub struct LoadgenCfg {
     /// Live runs speculate with whatever the server at `--addr` was
     /// started with.
     pub speculate: usize,
+    /// `shared-prefix` workload: fraction of the prompt-length maximum
+    /// covered by the common prefix.
+    pub shared_prefix_overlap: f64,
+    /// Arm the (dry-run) mock fleet's prefix cache with this byte
+    /// budget (`None` = cold prefill) — and switch the report row to
+    /// carry cache hit-rate and TTFT hit-vs-miss columns.
+    pub prefix_cache: Option<u64>,
 }
 
 impl Default for LoadgenCfg {
@@ -128,6 +142,8 @@ impl Default for LoadgenCfg {
             prefill_chunk: 16,
             telemetry: true,
             speculate: 0,
+            shared_prefix_overlap: 0.5,
+            prefix_cache: None,
         }
     }
 }
@@ -158,7 +174,9 @@ fn sample_prompt_len(
     let hi = range.1.max(lo);
     match dist {
         PromptDist::Fixed => hi,
-        PromptDist::Uniform => uniform_incl(rng, range),
+        PromptDist::Uniform | PromptDist::SharedPrefix => {
+            uniform_incl(rng, range)
+        }
         PromptDist::Lognormal => {
             let (ln_lo, ln_hi) = ((lo as f64).ln(), (hi as f64).ln());
             let mu = 0.5 * (ln_lo + ln_hi);
@@ -175,6 +193,19 @@ fn sample_prompt_len(
 pub fn plan(cfg: &LoadgenCfg) -> Vec<Planned> {
     let mut rng = Rng::new(cfg.seed);
     let rate = cfg.rps.max(1e-9);
+    // `shared-prefix` draws its one common prefix up front so every
+    // request agrees on it; the other distributions draw nothing here,
+    // keeping their per-request RNG streams unchanged.
+    let shared: Vec<i32> = if cfg.prompt_dist == PromptDist::SharedPrefix {
+        let hi = cfg.prompt_len.1.max(cfg.prompt_len.0.max(1));
+        let want = ((hi as f64) * cfg.shared_prefix_overlap.clamp(0.0, 1.0))
+            .round() as usize;
+        (0..want.min(hi.saturating_sub(1)))
+            .map(|_| rng.below(cfg.vocab.max(2)) as i32)
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut t = 0.0f64;
     (0..cfg.requests)
         .map(|_| {
@@ -182,14 +213,57 @@ pub fn plan(cfg: &LoadgenCfg) -> Vec<Planned> {
             t += -(1.0 - rng.next_f64()).ln() / rate;
             let plen =
                 sample_prompt_len(&mut rng, cfg.prompt_dist, cfg.prompt_len);
+            let prompt: Vec<i32> = if cfg.prompt_dist
+                == PromptDist::SharedPrefix
+            {
+                // common head, ≥ 1 random-tail token
+                let keep = shared.len().min(plen.saturating_sub(1));
+                shared[..keep]
+                    .iter()
+                    .copied()
+                    .chain(
+                        (0..plen - keep)
+                            .map(|_| rng.below(cfg.vocab.max(2)) as i32),
+                    )
+                    .collect()
+            } else {
+                (0..plen)
+                    .map(|_| rng.below(cfg.vocab.max(2)) as i32)
+                    .collect()
+            };
             Planned {
                 at: Duration::from_secs_f64(t),
-                prompt: (0..plen)
-                    .map(|_| rng.below(cfg.vocab.max(2)) as i32)
-                    .collect(),
+                prompt,
                 max_new: uniform_incl(&mut rng, cfg.max_new),
                 stream: rng.coin(cfg.stream_fraction),
             }
+        })
+        .collect()
+}
+
+/// Arrival-order mirror of the server's chunk-boundary cache probe:
+/// request *i* is predicted to hit iff some chunk-aligned prefix of its
+/// prompt already appeared (as a chunk-aligned prefix) in requests
+/// `0..i`.  Used to split client-side TTFT into hit/miss histograms —
+/// the authoritative rate still comes from the server's cache section.
+fn predict_cache_hits(planned: &[Planned], chunk: usize) -> Vec<bool> {
+    let chunk = chunk.max(1);
+    let mut seen: std::collections::HashSet<&[i32]> =
+        std::collections::HashSet::new();
+    planned
+        .iter()
+        .map(|p| {
+            let len = p.prompt.len();
+            // longest snapshot boundary strictly below the prompt end
+            let top = if len > 1 { (len - 1) / chunk * chunk } else { 0 };
+            let mut hit = false;
+            let mut b = top;
+            while b >= chunk {
+                hit |= seen.contains(&p.prompt[..b]);
+                seen.insert(&p.prompt[..b]);
+                b -= chunk;
+            }
+            hit
         })
         .collect()
 }
@@ -652,6 +726,11 @@ fn telemetry_columns(server_metrics: &Json) -> Vec<(&'static str, Json)> {
 pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
     let planned = plan(cfg);
     let n = planned.len();
+    let predicted = if cfg.prefix_cache.is_some() {
+        predict_cache_hits(&planned, cfg.prefill_chunk)
+    } else {
+        vec![false; n]
+    };
     let (tx, rx) = mpsc::channel();
     let pool = cfg.keep_alive.then(|| Arc::new(ConnPool::new(addr)));
     let t0 = Instant::now();
@@ -660,7 +739,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
     // request's thread at its arrival instant keeps live threads
     // bounded by in-flight requests — a 10k-request run must not stand
     // up a 10k-thread fleet at t=0 and perturb the latencies it measures
-    for p in planned {
+    for (p, hit) in planned.into_iter().zip(predicted) {
         let elapsed = t0.elapsed();
         if p.at > elapsed {
             std::thread::sleep(p.at - elapsed);
@@ -675,7 +754,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
                 Some(pool) => pool.send(&body, timeout),
                 None => send_completion(&addr, &body, timeout),
             };
-            let _ = tx.send((plen, res));
+            let _ = tx.send((plen, hit, res));
         }));
     }
     drop(tx);
@@ -685,9 +764,14 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
     // shows up (long prompts), instead of hiding in the aggregate p95
     let mut bucket_ttft: Vec<Histogram> =
         (0..PROMPT_BUCKETS.len()).map(|_| Histogram::new()).collect();
+    // cache-armed runs additionally split TTFT by the client-side hit
+    // prediction, so the BENCH row shows the warm-vs-cold gap directly
+    let (mut hit_ttft, mut miss_ttft) = (Histogram::new(), Histogram::new());
+    let mut predicted_hits = 0u64;
     let (mut ok, mut rejected, mut dropped, mut errors) = (0u64, 0u64, 0u64, 0u64);
     let mut tokens = 0usize;
-    for (plen, outcome) in rx {
+    for (plen, hit, outcome) in rx {
+        predicted_hits += hit as u64;
         match outcome {
             Ok(o) => {
                 tokens += o.tokens;
@@ -705,6 +789,11 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
                     if let Some(t) = o.ttft {
                         ttft.observe(t);
                         bucket_ttft[prompt_bucket_idx(plen)].observe(t);
+                        if hit {
+                            hit_ttft.observe(t);
+                        } else {
+                            miss_ttft.observe(t);
+                        }
                     }
                 } else {
                     errors += 1;
@@ -748,6 +837,27 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg, mode: &str) -> Result<Json> {
         ("ttft", ttft.to_json()),
         ("ttft_by_prompt_len", json::arr(ttft_rows)),
     ];
+    if let Some(budget) = cfg.prefix_cache {
+        fields.push(("prefix_cache_budget_bytes", json::num(budget as f64)));
+        fields.push((
+            "prefix_cache_predicted_hit_rate",
+            json::num(predicted_hits as f64 / (n as f64).max(1.0)),
+        ));
+        // authoritative rate + per-prompt-length buckets come from the
+        // server's shared cache, not the client-side prediction
+        let cache = server_metrics.opt("prefix_cache");
+        let rate = cache
+            .and_then(|c| c.opt("hit_rate"))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        fields.push(("prefix_cache_hit_rate", json::num(rate)));
+        if let Some(buckets) = cache.and_then(|c| c.opt("buckets")) {
+            fields
+                .push(("prefix_cache_by_prompt_len", buckets.clone()));
+        }
+        fields.push(("ttft_cache_hit", hit_ttft.to_json()));
+        fields.push(("ttft_cache_miss", miss_ttft.to_json()));
+    }
     fields.extend(telemetry_columns(&server_metrics));
     fields.push(("server_metrics", server_metrics));
     Ok(json::obj(fields))
@@ -887,6 +997,7 @@ pub fn dry_run_with_prom(
         prefill_chunk: cfg.prefill_chunk.max(1),
         telemetry: cfg.telemetry,
         speculate: cfg.speculate,
+        prefix_cache: cfg.prefix_cache,
         ..Default::default()
     };
     let engines = engines.max(1);
@@ -905,17 +1016,21 @@ pub fn dry_run_with_prom(
             // when the mock fleet can speculate
             let speculating =
                 cfg.speculate > 0 && cfg.prefill_chunk.max(1) > 1;
-            let require: &[&str] = if cfg.telemetry && speculating {
-                &[
-                    "sigma_moe_stage_",
-                    "sigma_moe_experts_",
-                    "sigma_moe_engine_spec_",
-                ]
-            } else if cfg.telemetry {
-                &["sigma_moe_stage_", "sigma_moe_experts_"]
-            } else {
-                &[]
-            };
+            let mut require: Vec<&str> = Vec::new();
+            if cfg.telemetry {
+                require.push("sigma_moe_stage_");
+                require.push("sigma_moe_experts_");
+                if speculating {
+                    require.push("sigma_moe_engine_spec_");
+                }
+            }
+            if cfg.prefix_cache.is_some() {
+                // armed runs must expose both the per-engine counters
+                // and the shared-cache document section
+                require.push("sigma_moe_engine_prefix_cache_");
+                require.push("sigma_moe_prefix_cache_");
+            }
+            let require = require.as_slice();
             // expert counts drain on the drivers' publish cadence, so
             // the scrape may land just before the final drain — retry
             // briefly rather than flake
@@ -941,6 +1056,10 @@ pub fn dry_run_with_prom(
         );
         m.insert("telemetry".into(), Json::Bool(cfg.telemetry));
         m.insert("speculate".into(), json::num(cfg.speculate as f64));
+        m.insert(
+            "prefix_cache".into(),
+            json::num(cfg.prefix_cache.unwrap_or(0) as f64),
+        );
     }
     Ok((row, prom))
 }
@@ -1152,6 +1271,91 @@ pub fn dry_run_speculate_ab(
     ]))
 }
 
+/// The prefix-cache A/B pair: the same `shared-prefix` dry-run plan
+/// with the cache disarmed (cold prefill for every request) vs armed
+/// with `cfg.prefix_cache` bytes.  The workload is prompt-heavy —
+/// long shared prefixes, short generations — so the warm leg's saved
+/// prefill dispatches show up in tokens/sec and the TTFT hit/miss
+/// split, and the row carries the server-side hit rate and
+/// tokens-saved counters that make the win a tracked number.
+pub fn dry_run_prefix_ab(
+    cfg: &LoadgenCfg,
+    lanes: usize,
+    engines: usize,
+) -> Result<Json> {
+    let budget = cfg.prefix_cache.unwrap_or(8 << 20);
+    // prompt-heavy shared-prefix mix: prompts long enough that several
+    // chunk boundaries fall inside the common prefix, generations short
+    // enough that prefill dominates the wall clock
+    let leg = |prefix_cache: Option<u64>| LoadgenCfg {
+        prompt_dist: PromptDist::SharedPrefix,
+        prompt_len: (cfg.prompt_len.0.max(24), cfg.prompt_len.1.max(48)),
+        max_new: (4, 8),
+        prefill_chunk: cfg.prefill_chunk.clamp(4, 8),
+        prefix_cache,
+        ..cfg.clone()
+    };
+    let cold = dry_run(&leg(None), lanes, engines)?;
+    let warm = dry_run(&leg(Some(budget)), lanes, engines)?;
+    let tps = |row: &Json| {
+        row.opt("tokens_per_sec")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let engine_total = |row: &Json, key: &str| {
+        row.opt("server_metrics")
+            .and_then(|m| m.opt("engine"))
+            .and_then(|e| e.opt(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let col = |row: &Json, key: &str| {
+        row.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+    };
+    let ttft_p50 = |row: &Json, key: &str| {
+        row.opt(key)
+            .and_then(|h| h.opt("p50_ms"))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0)
+    };
+    let (t_cold, t_warm) = (tps(&cold), tps(&warm));
+    let speedup = if t_cold > 0.0 { t_warm / t_cold } else { 0.0 };
+    Ok(json::obj(vec![
+        ("mode", json::s("mock-dry-run-prefix-ab")),
+        ("engines", json::num(engines.max(1) as f64)),
+        ("prefix_cache_budget_bytes", json::num(budget as f64)),
+        ("tokens_per_sec_cold", json::num(t_cold)),
+        ("tokens_per_sec_warm", json::num(t_warm)),
+        ("prefix_cache_speedup", json::num(speedup)),
+        (
+            "prefix_cache_hit_rate",
+            json::num(col(&warm, "prefix_cache_hit_rate")),
+        ),
+        (
+            "prefix_cache_hits",
+            json::num(engine_total(&warm, "prefix_cache_hits")),
+        ),
+        (
+            "prefix_cache_misses",
+            json::num(engine_total(&warm, "prefix_cache_misses")),
+        ),
+        (
+            "prefix_cache_tokens_saved",
+            json::num(engine_total(&warm, "prefix_cache_tokens_saved")),
+        ),
+        (
+            "ttft_p50_ms_hit",
+            json::num(ttft_p50(&warm, "ttft_cache_hit")),
+        ),
+        (
+            "ttft_p50_ms_miss",
+            json::num(ttft_p50(&warm, "ttft_cache_miss")),
+        ),
+        ("cold", cold),
+        ("warm", warm),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1248,10 +1452,87 @@ mod tests {
             PromptDist::Fixed,
             PromptDist::Uniform,
             PromptDist::Lognormal,
+            PromptDist::SharedPrefix,
         ] {
             assert_eq!(PromptDist::parse(d.as_str()).unwrap(), d);
         }
         assert!(PromptDist::parse("zipf").is_err());
+    }
+
+    #[test]
+    fn shared_prefix_plan_shares_head_and_keeps_unique_tail() {
+        let cfg = LoadgenCfg {
+            requests: 64,
+            prompt_len: (8, 32),
+            prompt_dist: PromptDist::SharedPrefix,
+            shared_prefix_overlap: 0.5,
+            seed: 13,
+            ..Default::default()
+        };
+        let p = plan(&cfg);
+        // overlap 0.5 of hi=32 → a 16-token common prefix
+        let longest = p.iter().max_by_key(|r| r.prompt.len()).unwrap();
+        let shared_len = 16.min(longest.prompt.len() - 1);
+        let shared = &longest.prompt[..shared_len];
+        for r in &p {
+            assert!((8..=32).contains(&r.prompt.len()));
+            let keep = shared_len.min(r.prompt.len() - 1);
+            assert_eq!(&r.prompt[..keep], &shared[..keep]);
+            // at least one slot past the shared head is always drawn
+            assert!(r.prompt.len() > keep);
+        }
+        // tails genuinely differ across requests of equal length
+        let same_len: Vec<_> = p
+            .iter()
+            .filter(|r| r.prompt.len() == longest.prompt.len())
+            .collect();
+        if same_len.len() >= 2 {
+            assert!(same_len.iter().any(
+                |r| r.prompt[shared_len..] != same_len[0].prompt[shared_len..]
+            ));
+        }
+        // other dists' RNG streams are untouched by the feature
+        let uniform = plan(&LoadgenCfg {
+            prompt_dist: PromptDist::Uniform,
+            shared_prefix_overlap: 0.9,
+            ..cfg.clone()
+        });
+        let uniform2 = plan(&LoadgenCfg {
+            prompt_dist: PromptDist::Uniform,
+            shared_prefix_overlap: 0.1,
+            ..cfg
+        });
+        for (a, b) in uniform.iter().zip(&uniform2) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+    }
+
+    #[test]
+    fn predicted_hits_mirror_chunk_boundary_probes() {
+        let mk = |prompt: Vec<i32>| Planned {
+            at: Duration::ZERO,
+            prompt,
+            max_new: 1,
+            stream: false,
+        };
+        // 12-token shared head, chunk 4: first toucher seeds the
+        // boundaries (miss), later requests sharing ≥ one boundary hit
+        let head: Vec<i32> = (0..12).collect();
+        let planned = vec![
+            mk(head.iter().copied().chain([90]).collect()),
+            mk(head.iter().copied().chain([91, 92]).collect()),
+            mk(head[..4].iter().copied().chain([93]).collect()),
+            mk(vec![70, 71, 72]), // too short for any boundary
+        ];
+        assert_eq!(
+            predict_cache_hits(&planned, 4),
+            vec![false, true, true, false]
+        );
+        // a shared prefix shorter than one chunk can never hit
+        assert_eq!(
+            predict_cache_hits(&planned, 64),
+            vec![false, false, false, false]
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::serving::drafter::{Drafter, NgramDrafter};
 use crate::serving::engine::{
     EngineBackend, GenRequest, GenResult, StreamEvent,
 };
+use crate::serving::prefix_cache::PrefixCache;
 
 /// Deterministic, device-free ways to break a [`MockBackend`] — the
 /// test fleet's stand-ins for a wedged device, a crashing runtime, and
@@ -72,6 +73,13 @@ pub const MOCK_EXPERT_LAYERS: usize = 2;
 pub const MOCK_EXPERTS: usize = 8;
 /// Experts selected per token per layer (the mock's top-K).
 pub const MOCK_TOP_K: usize = 2;
+
+/// Synthetic bytes one cached prompt token "occupies" in the mock's
+/// prefix-cache mirror (the mock stores no payload — its stream is a
+/// pure function of the prompt — but charges the budget what a real
+/// per-layer memory snapshot would weigh, so eviction behaves
+/// identically device-free).
+pub const MOCK_SNAPSHOT_TOKEN_BYTES: u64 = 1024;
 
 /// The mock's synthetic σ-MoE router: token value `t` at layer `l`
 /// selects experts `(t + 7l) % NE` and `(t + 13l + 3) % NE` (distinct
@@ -167,6 +175,20 @@ pub struct MockBackend {
     pub spec_commit_steps: u64,
     /// speculating lanes per round by accepted-prefix length
     spec_accept_hist: Vec<u64>,
+    /// (drafted, accepted) totals already drained through
+    /// [`EngineBackend::take_spec_feedback`]
+    spec_fb_drained: (u64, u64),
+    /// fleet-shared prefix-cache mirror: admissions probe it (a hit
+    /// skips the cached prompt prefix) and prompt pumps record chunk
+    /// boundaries into it — entries carry no payload, only the
+    /// synthetic byte weight, since the mock's stream is a pure
+    /// function of the full prompt either way
+    prefix_cache: Option<Arc<PrefixCache>>,
+    pub prefix_cache_hits: u64,
+    pub prefix_cache_misses: u64,
+    pub prefix_cache_tokens_saved: u64,
+    pub prefix_cache_snapshots: u64,
+    pub prefix_cache_restores_host: u64,
 }
 
 impl MockBackend {
@@ -199,7 +221,21 @@ impl MockBackend {
             spec_rollbacks: 0,
             spec_commit_steps: 0,
             spec_accept_hist: Vec::new(),
+            spec_fb_drained: (0, 0),
+            prefix_cache: None,
+            prefix_cache_hits: 0,
+            prefix_cache_misses: 0,
+            prefix_cache_tokens_saved: 0,
+            prefix_cache_snapshots: 0,
+            prefix_cache_restores_host: 0,
         }
+    }
+
+    /// Arm the prefix-cache mirror (builder form of
+    /// [`EngineBackend::set_prefix_cache`]).
+    pub fn with_prefix_cache(mut self, cache: Arc<PrefixCache>) -> Self {
+        self.prefix_cache = Some(cache);
+        self
     }
 
     /// Enable speculative decode: up to `k` drafted tokens verified per
@@ -469,6 +505,7 @@ impl MockBackend {
     }
 
     fn admit(&mut self) {
+        let cache = self.prefix_cache.clone();
         for (i, slot) in self.lanes.iter_mut().enumerate() {
             if slot.is_none() {
                 let Some(q) = self.queue.pop_front() else {
@@ -482,8 +519,32 @@ impl MockBackend {
                         self.drafter.observe(i, t);
                     }
                 }
+                let mut prompt_left = q.req.prompt.len();
+                if let Some(c) = &cache {
+                    match c.probe(&q.req.prompt, self.prefill_chunk) {
+                        Some(hit) => {
+                            self.prefix_cache_hits += 1;
+                            self.prefix_cache_tokens_saved +=
+                                hit.len as u64;
+                            self.prefix_cache_restores_host += 1;
+                            // the restored prefix never re-runs, but
+                            // its tokens still route exactly once so
+                            // per-request expert totals stay invariant
+                            // across cache settings
+                            let k = self
+                                .expert_k
+                                .min(q.req.expert_k.unwrap_or(MOCK_TOP_K))
+                                .clamp(1, MOCK_TOP_K);
+                            for &t in &q.req.prompt[..hit.len] {
+                                route_token(&mut self.expert_counts, t, k);
+                            }
+                            prompt_left -= hit.len;
+                        }
+                        None => self.prefix_cache_misses += 1,
+                    }
+                }
                 *slot = Some(MockLane {
-                    prompt_left: q.req.prompt.len(),
+                    prompt_left,
                     generated: Vec::new(),
                     budget: q.req.max_new_tokens.max(1),
                     prompt: q.req.prompt,
@@ -553,6 +614,7 @@ impl EngineBackend for MockBackend {
         self.step_sleep(k_eff);
         self.steps_executed += 1;
         let chunk = self.prefill_chunk;
+        let cache = self.prefix_cache.clone();
         let mut prompt_tokens = 0u64;
         for (i, slot) in self.lanes.iter_mut().enumerate() {
             let Some(lane) = slot else { continue };
@@ -566,6 +628,22 @@ impl EngineBackend for MockBackend {
                 }
                 lane.prompt_left -= k;
                 prompt_tokens += k as u64;
+                if let Some(c) = &cache {
+                    // chunk-boundary snapshot, exactly the real
+                    // engine's post-absorb hook (payload-free: the
+                    // synthetic weight keeps eviction honest)
+                    let consumed = lane.prompt.len() - lane.prompt_left;
+                    if consumed % chunk == 0
+                        && c.wants(&lane.prompt[..consumed])
+                        && c.insert_weighted(
+                            &lane.prompt[..consumed],
+                            Vec::new(),
+                            consumed as u64 * MOCK_SNAPSHOT_TOKEN_BYTES,
+                        )
+                    {
+                        self.prefix_cache_snapshots += 1;
+                    }
+                }
                 if lane.prompt_left > 0 {
                     continue;
                 }
@@ -622,6 +700,22 @@ impl EngineBackend for MockBackend {
         self.expert_k = k.clamp(1, MOCK_TOP_K);
     }
 
+    fn set_prefix_cache(&mut self, cache: Arc<PrefixCache>) {
+        self.prefix_cache = Some(cache);
+    }
+
+    fn set_speculate(&mut self, k: usize) {
+        // spec_k() re-caps at C−1 per pump, so no clamp needed here
+        self.speculate = k;
+    }
+
+    fn take_spec_feedback(&mut self) -> (u64, u64) {
+        let d = self.spec_drafted - self.spec_fb_drained.0;
+        let a = self.spec_accepted - self.spec_fb_drained.1;
+        self.spec_fb_drained = (self.spec_drafted, self.spec_accepted);
+        (d, a)
+    }
+
     fn stats(&self) -> BTreeMap<String, f64> {
         let mut m = BTreeMap::new();
         m.insert("steps_executed".into(), self.steps_executed as f64);
@@ -667,6 +761,30 @@ impl EngineBackend for MockBackend {
                     self.spec_accept_hist.get(n).copied().unwrap_or(0);
                 m.insert(format!("spec_hist_{n}"), count as f64);
             }
+        }
+        // prefix-cache families only on cache-armed backends, same
+        // conditional export as the real engine
+        if self.prefix_cache.is_some() {
+            m.insert(
+                "prefix_cache_hits".into(),
+                self.prefix_cache_hits as f64,
+            );
+            m.insert(
+                "prefix_cache_misses".into(),
+                self.prefix_cache_misses as f64,
+            );
+            m.insert(
+                "prefix_cache_tokens_saved".into(),
+                self.prefix_cache_tokens_saved as f64,
+            );
+            m.insert(
+                "prefix_cache_snapshots".into(),
+                self.prefix_cache_snapshots as f64,
+            );
+            m.insert(
+                "prefix_cache_restores_host".into(),
+                self.prefix_cache_restores_host as f64,
+            );
         }
         m.insert("mock".into(), 1.0);
         m
@@ -1127,6 +1245,134 @@ mod tests {
         assert_eq!(toks, expect);
         assert_eq!(b.spec_rounds, 0);
         assert!(b.stats().get("speculate").is_none());
+    }
+
+    #[test]
+    fn prefix_cache_hit_streams_bitwise_identical_with_fewer_pumps() {
+        // the tentpole property: a request whose prompt prefix is
+        // cached must stream bit-for-bit what the same request served
+        // cold streams, while its prefill costs ⌈tail/C⌉ pumps instead
+        // of ⌈L/C⌉ — swept across ragged tails straddling every chunk
+        // boundary (1, C−1, C, C+1, 2C+3)
+        const C: usize = 4;
+        let budget = 5;
+        let prefix: Vec<i32> = (1..=(2 * C) as i32).collect();
+        for tail_len in [1usize, C - 1, C, C + 1, 2 * C + 3] {
+            let mut b_prompt = prefix.clone();
+            b_prompt.extend((0..tail_len as i32).map(|t| 30 + t % 10));
+
+            // cold reference: no cache anywhere
+            let mut cold = MockBackend::new(1, 50).with_prefill_chunk(C);
+            let (tx, rx) = mpsc::channel();
+            cold.submit_streaming(req(b_prompt.clone(), budget), tx);
+            let (toks_cold, _) = drain(&mut cold, &rx);
+            assert_eq!(
+                cold.steps_executed as usize,
+                b_prompt.len().div_ceil(C) + budget - 1
+            );
+
+            // warm: request A (same prefix, different tail) seeds the
+            // cache at every chunk boundary it crosses
+            let cache = PrefixCache::shared(1 << 20);
+            let mut warm = MockBackend::new(1, 50)
+                .with_prefill_chunk(C)
+                .with_prefix_cache(cache.clone());
+            let mut a_prompt = prefix.clone();
+            a_prompt.extend([91, 92, 93]);
+            let (tx, rx) = mpsc::channel();
+            warm.submit_streaming(req(a_prompt, budget), tx);
+            let _ = drain(&mut warm, &rx);
+            assert_eq!(warm.prefix_cache_misses, 1);
+            assert!(cache.entries() >= 2, "boundaries C and 2C cached");
+
+            let steps_before = warm.steps_executed;
+            let (tx, rx) = mpsc::channel();
+            warm.submit_streaming(req(b_prompt.clone(), budget), tx);
+            let (toks_warm, dones) = drain(&mut warm, &rx);
+            assert_eq!(
+                toks_warm, toks_cold,
+                "tail {tail_len}: a cache hit must never change tokens"
+            );
+            assert_eq!(dones.len(), 1);
+            assert_eq!(dones[0].tokens, toks_cold);
+            assert_eq!(dones[0].prompt_len, b_prompt.len());
+            assert_eq!(warm.prefix_cache_hits, 1);
+            assert_eq!(
+                warm.prefix_cache_tokens_saved,
+                (2 * C) as u64,
+                "tail {tail_len}: the full shared prefix is restored"
+            );
+            let pumps = (warm.steps_executed - steps_before) as usize;
+            assert_eq!(
+                pumps,
+                tail_len.div_ceil(C) + budget - 1,
+                "tail {tail_len}: hit prefill must cost ⌈tail/C⌉ pumps"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_cache_preserves_expert_routing_totals() {
+        // the synthetic router is a pure function of token values, so
+        // per-request expert totals must be identical with the cache
+        // armed or not (cached prefix tokens route once at restore)
+        const C: usize = 4;
+        let run = |armed: bool| -> Vec<Vec<u64>> {
+            let mut b = MockBackend::new(1, 50).with_prefill_chunk(C);
+            if armed {
+                b = b.with_prefix_cache(PrefixCache::shared(1 << 20));
+            }
+            for tail in [vec![70, 71], vec![80, 81, 82]] {
+                let mut p: Vec<i32> = (1..=8).collect();
+                p.extend(tail);
+                let (tx, _rx) = mpsc::channel();
+                b.submit_streaming(req(p, 3), tx);
+                while b.pump().unwrap() > 0 {}
+            }
+            if armed {
+                assert_eq!(b.prefix_cache_hits, 1);
+            }
+            b.take_expert_counts().unwrap()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn prefix_cache_stats_export_only_when_armed() {
+        let plain = MockBackend::new(1, 10);
+        assert!(plain.stats().get("prefix_cache_hits").is_none());
+        let cache = PrefixCache::shared(4096);
+        let mut armed = MockBackend::new(1, 10)
+            .with_prefill_chunk(4)
+            .with_prefix_cache(cache);
+        let (tx, rx) = mpsc::channel();
+        armed.submit_streaming(req((0..10).collect(), 2), tx);
+        let _ = drain(&mut armed, &rx);
+        let m = armed.stats();
+        assert_eq!(m["prefix_cache_misses"], 1.0);
+        assert!(m["prefix_cache_snapshots"] >= 1.0);
+        assert_eq!(m["prefix_cache_hits"], 0.0);
+    }
+
+    #[test]
+    fn spec_feedback_drains_deltas_once() {
+        let mut b = MockBackend::new(1, 10)
+            .with_prefill_chunk(8)
+            .with_speculate(3);
+        assert_eq!(b.take_spec_feedback(), (0, 0));
+        let (tx, rx) = mpsc::channel();
+        b.submit_streaming(req(vec![1, 2, 3], 30), tx);
+        let _ = drain(&mut b, &rx);
+        let (d, a) = b.take_spec_feedback();
+        assert_eq!((d, a), (b.spec_drafted, b.spec_accepted));
+        assert!(d > 0);
+        // drained: a second take reports only new work
+        assert_eq!(b.take_spec_feedback(), (0, 0));
+        // the autotune knob takes effect for subsequent pumps
+        b.set_speculate(1);
+        assert_eq!(b.spec_k(), 1);
+        b.set_speculate(0);
+        assert_eq!(b.spec_k(), 0);
     }
 
     #[test]

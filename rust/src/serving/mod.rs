@@ -52,6 +52,7 @@ pub mod engine;
 pub mod journal;
 pub mod loadgen;
 pub mod mock;
+pub mod prefix_cache;
 pub mod router;
 pub mod sampler;
 pub mod scheduler;
@@ -66,10 +67,12 @@ pub use engine::{
 };
 pub use journal::{Journal, Trace};
 pub use mock::{MockBackend, MockFault};
+pub use prefix_cache::{PrefixCache, PrefixHit};
 pub use router::{Fleet, Placement, RouterCfg};
 pub use sampler::Sampler;
 pub use scheduler::{
     DegradeCfg, Histogram, KTransition, Policy, Rejection, Scheduler,
+    SpecTransition,
 };
 pub use server::{Driver, ServerConfig};
 pub use telemetry::Telemetry;

@@ -1,0 +1,493 @@
+//! Prefix cache: content-hash-keyed snapshots of post-prefill lane
+//! state, shared across the fleet, with LRU eviction under a byte
+//! budget.
+//!
+//! Serving millions of users means heavy prompt overlap — shared
+//! system prompts and few-shot templates re-prefill the same tokens on
+//! every request.  After a lane crosses a prefill chunk boundary, the
+//! engine snapshots its XL-memory rows (one `[n_layers, mem_len,
+//! d_model]` block, gathered on device by the AOT'd `snapshot_lanes`
+//! program) keyed by a content hash of the token prefix *at
+//! chunk-boundary granularity*, so one entry covers a prefix of any
+//! longer prompt sharing those tokens.  On admission the engine probes
+//! longest-boundary-first and seeds the new lane from the match via
+//! `restore_lanes` instead of re-prefilling, leaving only the tail
+//! chunks to dispatch: a hit completes prefill in ⌈tail/C⌉ + 1
+//! dispatches instead of ⌈L/C⌉.
+//!
+//! Because prefill is deterministic and the snapshot captures the
+//! complete per-lane state (the banded XL memory is the *only*
+//! sequence state; position is the prefix length itself), a cache-hit
+//! stream is bitwise identical to the same request served cold — the
+//! equivalence the property tests pin.  The same snapshot/restore
+//! machinery is the paging primitive for prompts longer than
+//! `mem_len`: a follow-up can walk attention state through the banded
+//! window chunk-by-chunk using exactly these two programs.
+//!
+//! Everything is deterministic under the chaos harness: recency is a
+//! logical tick counter (never a wall clock), the table is a
+//! `BTreeMap`, and `metrics_json` renders in fixed key order so replay
+//! can byte-diff the metrics document.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::json::{self, Json};
+
+/// Prompt-length buckets for hit-rate reporting — the same power-of-two
+/// edges loadgen buckets TTFT by, so the two reports line up row for
+/// row (the last bucket is open-ended).
+pub const PROMPT_BUCKETS: [(&str, usize); 9] = [
+    ("1-8", 8),
+    ("9-16", 16),
+    ("17-32", 32),
+    ("33-64", 64),
+    ("65-128", 128),
+    ("129-256", 256),
+    ("257-512", 512),
+    ("513-1024", 1024),
+    (">1024", usize::MAX),
+];
+
+fn bucket_idx(len: usize) -> usize {
+    PROMPT_BUCKETS
+        .iter()
+        .position(|&(_, hi)| len <= hi)
+        .unwrap_or(PROMPT_BUCKETS.len() - 1)
+}
+
+/// FNV-1a over the token prefix — stable across runs/platforms (no
+/// RandomState), cheap enough to hash every boundary of every probe.
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One cached snapshot: the exact token prefix it covers (the
+/// collision guard — a hash match alone never seeds a lane) plus the
+/// flattened `[n_layers, mem_len, d_model]` memory payload.
+struct Entry {
+    tokens: Vec<i32>,
+    payload: Arc<Vec<f32>>,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// A successful probe: seed the lane from `payload` and prefill only
+/// `prompt[len..]`.
+#[derive(Clone)]
+pub struct PrefixHit {
+    /// Number of prompt tokens the snapshot covers (a multiple of the
+    /// chunk width, always < the prompt length so at least one tail
+    /// token remains to produce the first logits).
+    pub len: usize,
+    /// Flattened `[n_layers, mem_len, d_model]` memory rows; empty in
+    /// device-free mirrors (the mock backend caches weight, not state).
+    pub payload: Arc<Vec<f32>>,
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    rejected_oversize: u64,
+    collisions: u64,
+    tokens_saved: u64,
+    bucket_hits: [u64; PROMPT_BUCKETS.len()],
+    bucket_misses: [u64; PROMPT_BUCKETS.len()],
+}
+
+struct Inner {
+    entries: BTreeMap<u64, Entry>,
+    bytes: u64,
+    /// Logical recency clock: bumped on every probe hit / insert.
+    /// Deterministic (unlike `Instant`) so chaos replay can byte-diff
+    /// eviction order.
+    tick: u64,
+    c: Counters,
+}
+
+/// The fleet-shared snapshot store.  One `Arc<PrefixCache>` is handed
+/// to every backend and to the scheduler (which prices admissions at
+/// the residual chunk count via [`peek`](PrefixCache::peek)).
+pub struct PrefixCache {
+    budget_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: u64) -> Self {
+        PrefixCache {
+            budget_bytes,
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                bytes: 0,
+                tick: 0,
+                c: Counters::default(),
+            }),
+        }
+    }
+
+    pub fn shared(budget_bytes: u64) -> Arc<Self> {
+        Arc::new(Self::new(budget_bytes))
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// The chunk boundaries a probe walks for an `len`-token prompt,
+    /// longest first: ⌊(len−1)/C⌋·C down to C.  Capping at `len − 1`
+    /// (not `len`) keeps at least one tail token uncached, so a hit
+    /// still runs a prefill dispatch that produces the first logits.
+    fn boundaries(len: usize, chunk: usize) -> impl Iterator<Item = usize> {
+        let chunk = chunk.max(1);
+        let top = if len == 0 { 0 } else { (len - 1) / chunk * chunk };
+        (1..=top / chunk).rev().map(move |i| i * chunk)
+    }
+
+    /// Longest-boundary match for `prompt`, counting hit/miss (per
+    /// prompt-length bucket) and touching LRU recency.
+    pub fn probe(&self, prompt: &[i32], chunk: usize) -> Option<PrefixHit> {
+        let mut inner = self.inner.lock().unwrap();
+        let b = bucket_idx(prompt.len());
+        for k in Self::boundaries(prompt.len(), chunk) {
+            let h = hash_tokens(&prompt[..k]);
+            if let Some(e) = inner.entries.get(&h) {
+                if e.tokens != prompt[..k] {
+                    continue; // hash collision: never seed from it
+                }
+                let payload = e.payload.clone();
+                inner.tick += 1;
+                let tick = inner.tick;
+                inner.entries.get_mut(&h).unwrap().last_used = tick;
+                inner.c.hits += 1;
+                inner.c.bucket_hits[b] += 1;
+                inner.c.tokens_saved += k as u64;
+                return Some(PrefixHit { len: k, payload });
+            }
+        }
+        inner.c.misses += 1;
+        inner.c.bucket_misses[b] += 1;
+        None
+    }
+
+    /// Longest-boundary match length without touching counters or
+    /// recency — the scheduler's admission-cost probe (costing a queue
+    /// must not perturb eviction order or hit-rate accounting).
+    pub fn peek(&self, prompt: &[i32], chunk: usize) -> usize {
+        let inner = self.inner.lock().unwrap();
+        for k in Self::boundaries(prompt.len(), chunk) {
+            if let Some(e) = inner.entries.get(&hash_tokens(&prompt[..k])) {
+                if e.tokens == prompt[..k] {
+                    return k;
+                }
+            }
+        }
+        0
+    }
+
+    /// Is `prefix` worth snapshotting?  False when an entry for these
+    /// exact tokens already exists (dedupe before spending a snapshot
+    /// dispatch on it).
+    pub fn wants(&self, prefix: &[i32]) -> bool {
+        let inner = self.inner.lock().unwrap();
+        match inner.entries.get(&hash_tokens(prefix)) {
+            Some(e) => e.tokens != prefix,
+            None => true,
+        }
+    }
+
+    /// Insert a snapshot, charging `payload` + key bytes against the
+    /// budget and evicting least-recently-used entries until it fits.
+    /// Returns false (and leaves the cache untouched) when the entry
+    /// alone exceeds the whole budget, when these tokens are already
+    /// cached, or on a hash collision with a different prefix.
+    pub fn insert(&self, tokens: &[i32], payload: Vec<f32>) -> bool {
+        let bytes = (payload.len() * 4 + tokens.len() * 4) as u64;
+        self.insert_weighted(tokens, payload, bytes)
+    }
+
+    /// [`insert`](Self::insert) with an explicit byte weight — the
+    /// device-free mock charges the bytes a real snapshot *would*
+    /// occupy so budget/eviction behave identically without the
+    /// payload allocation.
+    pub fn insert_weighted(
+        &self,
+        tokens: &[i32],
+        payload: Vec<f32>,
+        bytes: u64,
+    ) -> bool {
+        if tokens.is_empty() {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if bytes > self.budget_bytes {
+            inner.c.rejected_oversize += 1;
+            return false;
+        }
+        let h = hash_tokens(tokens);
+        if let Some(e) = inner.entries.get(&h) {
+            if e.tokens != tokens {
+                inner.c.collisions += 1;
+            }
+            return false; // already cached (or unusably aliased)
+        }
+        while inner.bytes + bytes > self.budget_bytes {
+            let lru = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("bytes > 0 implies a resident entry");
+            let evicted = inner.entries.remove(&lru).unwrap();
+            inner.bytes -= evicted.bytes;
+            inner.c.evictions += 1;
+        }
+        inner.tick += 1;
+        let last_used = inner.tick;
+        inner.entries.insert(
+            h,
+            Entry {
+                tokens: tokens.to_vec(),
+                payload: Arc::new(payload),
+                bytes,
+                last_used,
+            },
+        );
+        inner.bytes += bytes;
+        inner.c.insertions += 1;
+        true
+    }
+
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// (hits, misses) so far — loadgen derives the headline hit rate
+    /// from the same counters `/metrics` exports.
+    pub fn hit_miss(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.c.hits, inner.c.misses)
+    }
+
+    /// The `prefix_cache` section of `/metrics`: global store state +
+    /// hit/miss per prompt-length bucket.  Fixed key order and
+    /// logical-tick recency keep the document byte-stable under chaos
+    /// replay.
+    pub fn metrics_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let c = &inner.c;
+        let total = c.hits + c.misses;
+        let rate = if total > 0 {
+            c.hits as f64 / total as f64
+        } else {
+            0.0
+        };
+        let buckets: Vec<(String, Json)> = PROMPT_BUCKETS
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| c.bucket_hits[i] + c.bucket_misses[i] > 0)
+            .map(|(i, &(label, _))| {
+                (
+                    label.to_string(),
+                    json::obj(vec![
+                        ("hits", json::num(c.bucket_hits[i] as f64)),
+                        ("misses", json::num(c.bucket_misses[i] as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("budget_bytes", json::num(self.budget_bytes as f64)),
+            ("bytes", json::num(inner.bytes as f64)),
+            ("entries", json::num(inner.entries.len() as f64)),
+            ("hits", json::num(c.hits as f64)),
+            ("misses", json::num(c.misses as f64)),
+            ("hit_rate", json::num(rate)),
+            ("insertions", json::num(c.insertions as f64)),
+            ("evictions", json::num(c.evictions as f64)),
+            (
+                "rejected_oversize",
+                json::num(c.rejected_oversize as f64),
+            ),
+            ("collisions", json::num(c.collisions as f64)),
+            ("tokens_saved", json::num(c.tokens_saved as f64)),
+            ("buckets", Json::Obj(buckets.into_iter().collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: i32) -> Vec<i32> {
+        (0..n).map(|i| seed + i as i32).collect()
+    }
+
+    #[test]
+    fn probe_matches_longest_chunk_boundary_only() {
+        let c = PrefixCache::new(1 << 20);
+        let p = toks(13, 0);
+        // entries at boundaries 4 and 8 of the same prompt family
+        assert!(c.insert(&p[..4], vec![1.0; 4]));
+        assert!(c.insert(&p[..8], vec![2.0; 4]));
+        let hit = c.probe(&p, 4).expect("hit");
+        assert_eq!(hit.len, 8, "longest boundary wins");
+        assert_eq!(*hit.payload, vec![2.0; 4]);
+        // ragged boundary cases: hit length relative to C
+        assert!(c.insert(&p[..12], vec![3.0; 4]));
+        for (plen, want) in [(5, 4), (8, 4), (9, 8), (12, 8), (13, 12)] {
+            assert_eq!(c.peek(&p[..plen], 4), want, "prompt len {plen}");
+        }
+        // a hit never covers the whole prompt: len 4 with a 4-entry
+        // present still leaves the final token to prefill
+        assert_eq!(c.peek(&p[..4], 4), 0);
+        // different tail beyond the boundary still hits the prefix
+        let mut q = p[..8].to_vec();
+        q.extend(toks(5, 100));
+        assert_eq!(c.peek(&q, 4), 8);
+        // different tokens *inside* the boundary miss
+        let mut r = p[..8].to_vec();
+        r[2] += 1;
+        r.push(0);
+        assert_eq!(c.peek(&r, 4), 0);
+    }
+
+    #[test]
+    fn lru_eviction_holds_byte_budget_invariant() {
+        // budget fits two 4-token/4-float entries (4*4+4*4 = 32 bytes)
+        let c = PrefixCache::new(64);
+        let a = toks(4, 0);
+        let b = toks(4, 50);
+        let d = toks(4, 90);
+        assert!(c.insert(&a, vec![0.0; 4]));
+        assert!(c.insert(&b, vec![0.0; 4]));
+        assert_eq!((c.entries(), c.bytes()), (2, 64));
+        // touch `a` so `b` is LRU, then insert a third entry
+        let mut pa = a.clone();
+        pa.push(9);
+        assert!(c.probe(&pa, 4).is_some());
+        assert!(c.insert(&d, vec![0.0; 4]));
+        assert!(c.bytes() <= c.budget_bytes(), "budget invariant");
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.peek(&pa, 4), 4, "recently-used survived");
+        let mut pb = b.clone();
+        pb.push(9);
+        assert_eq!(c.peek(&pb, 4), 0, "LRU evicted");
+        let m = c.metrics_json();
+        assert_eq!(m.get("evictions").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(m.get("insertions").unwrap().as_f64().unwrap(), 3.0);
+
+        // an entry bigger than the whole budget is rejected, not
+        // admitted by evicting everything
+        assert!(!c.insert(&toks(4, 200), vec![0.0; 1000]));
+        assert_eq!(c.entries(), 2);
+        assert_eq!(
+            c.metrics_json()
+                .get("rejected_oversize")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn duplicate_insert_is_refused_and_wants_dedupes() {
+        let c = PrefixCache::new(1 << 20);
+        let a = toks(8, 3);
+        assert!(c.wants(&a));
+        assert!(c.insert(&a, vec![1.0; 8]));
+        assert!(!c.wants(&a), "already cached");
+        assert!(!c.insert(&a, vec![2.0; 8]), "dup refused");
+        assert_eq!(c.entries(), 1);
+        let mut p = a.clone();
+        p.push(0);
+        // the original payload is untouched by the refused insert
+        assert_eq!(*c.probe(&p, 8).unwrap().payload, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn peek_is_side_effect_free() {
+        let c = PrefixCache::new(1 << 20);
+        let a = toks(4, 0);
+        c.insert(&a, vec![0.0; 2]);
+        let mut p = a.clone();
+        p.push(1);
+        let before = c.metrics_json().to_string();
+        assert_eq!(c.peek(&p, 4), 4);
+        assert_eq!(c.peek(&toks(9, 77), 4), 0);
+        assert_eq!(c.metrics_json().to_string(), before);
+    }
+
+    #[test]
+    fn counters_and_buckets_track_probe_traffic() {
+        let c = PrefixCache::new(1 << 20);
+        let a = toks(16, 0);
+        c.insert(&a[..16], vec![0.0; 4]);
+        let mut long = a.clone();
+        long.extend(toks(4, 500)); // 20 tokens → bucket "17-32"
+        assert!(c.probe(&long, 16).is_some());
+        assert!(c.probe(&toks(6, 900), 16).is_none());
+        let (h, m) = c.hit_miss();
+        assert_eq!((h, m), (1, 1));
+        let doc = c.metrics_json();
+        assert_eq!(doc.get("hit_rate").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(
+            doc.get("tokens_saved").unwrap().as_f64().unwrap(),
+            16.0
+        );
+        let buckets = doc.get("buckets").unwrap();
+        assert_eq!(
+            buckets
+                .get("17-32")
+                .unwrap()
+                .get("hits")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+        assert_eq!(
+            buckets
+                .get("1-8")
+                .unwrap()
+                .get("misses")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+        // untouched buckets are omitted, not zero-filled
+        assert!(buckets.opt("513-1024").is_none());
+    }
+
+    #[test]
+    fn boundary_walk_respects_chunk_and_leaves_a_tail() {
+        let walk = |len, chunk| {
+            PrefixCache::boundaries(len, chunk).collect::<Vec<_>>()
+        };
+        assert_eq!(walk(13, 4), [12, 8, 4]);
+        assert_eq!(walk(12, 4), [8, 4], "full-length cover excluded");
+        assert_eq!(walk(4, 4), Vec::<usize>::new());
+        assert_eq!(walk(5, 4), [4]);
+        assert_eq!(walk(0, 4), Vec::<usize>::new());
+        assert_eq!(walk(7, 1), [6, 5, 4, 3, 2, 1]);
+        // chunk 0 is clamped, not a divide-by-zero
+        assert_eq!(walk(3, 0), [2, 1]);
+    }
+}

@@ -50,6 +50,7 @@ use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, EngineBackend, GenRequest, StreamEvent};
 use crate::serving::journal::Journal;
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::scheduler::{DegradeCfg, Policy, QueuedRequest, Scheduler};
 use crate::serving::server::{self, ServeState, ServerConfig};
 use crate::serving::telemetry::Telemetry;
@@ -260,6 +261,10 @@ pub struct Fleet {
     /// Quarantined engines returned to rotation after `readmit_after`
     /// consecutive clean pumps.
     readmissions: AtomicU64,
+    /// Shared post-prefill snapshot cache (`--prefix-cache BYTES`):
+    /// one cache for the whole fleet, so a prefix prefilled on any
+    /// engine seeds cache-hit admissions on every engine.  `None` = off.
+    prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 impl Fleet {
@@ -331,6 +336,7 @@ impl Fleet {
             retries_exhausted: AtomicU64::new(0),
             dropped_deadline: AtomicU64::new(0),
             readmissions: AtomicU64::new(0),
+            prefix_cache: None,
         }
     }
 
@@ -400,6 +406,28 @@ impl Fleet {
     pub fn with_degrade_k(mut self, cfg: DegradeCfg, k_max: usize) -> Self {
         self.sched = self.sched.with_degrade_k(cfg, k_max);
         self
+    }
+
+    /// Thread the CLI speculative draft length K into the shared
+    /// scheduler: spf prices decode in verify dispatches, and the
+    /// spec-K autotune hysteresis gets its ceiling/initial target.
+    pub fn with_speculate(mut self, k: usize) -> Self {
+        self.sched = self.sched.with_speculate(k);
+        self
+    }
+
+    /// Arm the fleet-wide prefix cache: every driver hands its backend
+    /// a clone at startup, and the shared scheduler prices cache-hit
+    /// prompts at their residual (uncached) chunk count.
+    pub fn with_prefix_cache(mut self, cache: Arc<PrefixCache>) -> Self {
+        self.sched.set_prefix_cache(cache.clone());
+        self.prefix_cache = Some(cache);
+        self
+    }
+
+    /// The fleet-wide prefix cache, when armed.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.prefix_cache.as_ref()
     }
 
     /// Replace the fleet's telemetry (ring size / sampling come from
@@ -838,6 +866,10 @@ impl Fleet {
         // and replay deterministically; drivers pick the target up on
         // their next step
         self.sched.eval_degrade();
+        // same sequencing point for the speculative-K autotune: the
+        // accept-rate window the drivers feed is evaluated once here,
+        // so spec_k_lower/raise transitions journal in one total order
+        self.sched.eval_spec();
         self.health_check(now);
         if self.healthy_count() == 0 {
             // nothing can ever run; fail pending work fast (new
@@ -1029,6 +1061,16 @@ impl Fleet {
         if let Some(k) = self.sched.target_expert_k() {
             backend.set_expert_k(k);
         }
+        // speculative-K autotune: feed this backend's accept-rate
+        // deltas into the shared window and run at the fleet target
+        // (the placer evaluates the hysteresis; target-not-transition
+        // keeps late-started drivers consistent)
+        let (drafted, accepted) = backend.take_spec_feedback();
+        self.sched.observe_spec(drafted, accepted);
+        let spec = self.sched.target_speculate();
+        if spec > 0 {
+            backend.set_speculate(spec);
+        }
         // submit placed work (ownership re-checked under the
         // registry lock: a request re-placed since its mailbox
         // entry was written must not run here too)
@@ -1146,6 +1188,11 @@ impl Fleet {
         if let Some(k) = backend.expert_k_max() {
             self.sched.observe_expert_k_max(k);
         }
+        // arm the fleet-wide prefix cache (Engine no-ops when the
+        // artifact lacks the snapshot/restore programs)
+        if let Some(cache) = self.prefix_cache.clone() {
+            backend.set_prefix_cache(cache);
+        }
         self.publish(id, backend);
         let mut result = Ok(());
         loop {
@@ -1250,99 +1297,103 @@ impl Fleet {
                 .map(|(k, v)| (k.clone(), json::num(*v)))
                 .collect(),
         );
-        json::obj(vec![
+        let mut doc = vec![
             ("engine", engine_totals),
             ("engines", json::arr(rows)),
             ("experts", self.telemetry.experts_json()),
             ("stages", self.telemetry.stages_json()),
-            (
-                "journal",
-                json::obj(vec![
-                    (
-                        "enabled",
-                        Json::Bool(self.journal.is_enabled()),
+        ];
+        if let Some(cache) = &self.prefix_cache {
+            doc.push(("prefix_cache", cache.metrics_json()));
+        }
+        doc.push((
+            "journal",
+            json::obj(vec![
+                (
+                    "enabled",
+                    Json::Bool(self.journal.is_enabled()),
+                ),
+                (
+                    "events_recorded",
+                    json::num(self.journal.total_recorded() as f64),
+                ),
+                (
+                    "dropped_events",
+                    json::num(self.journal.dropped_events() as f64),
+                ),
+                (
+                    "truncated",
+                    Json::Bool(self.journal.dropped_events() > 0),
+                ),
+            ]),
+        ));
+        doc.push((
+            "router",
+            json::obj(vec![
+                (
+                    "placement",
+                    json::s(self.cfg.placement.as_str()),
+                ),
+                (
+                    "engines",
+                    json::num(self.engines.len() as f64),
+                ),
+                (
+                    "healthy_engines",
+                    json::num(self.healthy_count() as f64),
+                ),
+                (
+                    "failovers",
+                    json::num(
+                        self.failovers.load(Ordering::Relaxed) as f64
                     ),
-                    (
-                        "events_recorded",
-                        json::num(self.journal.total_recorded() as f64),
+                ),
+                (
+                    "requeues",
+                    json::num(
+                        self.requeues.load(Ordering::Relaxed) as f64
                     ),
-                    (
-                        "dropped_events",
-                        json::num(self.journal.dropped_events() as f64),
+                ),
+                (
+                    "retries_exhausted",
+                    json::num(self
+                        .retries_exhausted
+                        .load(Ordering::Relaxed)
+                        as f64),
+                ),
+                (
+                    "readmissions",
+                    json::num(
+                        self.readmissions.load(Ordering::Relaxed)
+                            as f64,
                     ),
-                    (
-                        "truncated",
-                        Json::Bool(self.journal.dropped_events() > 0),
+                ),
+                (
+                    "readmit_after",
+                    json::num(self.cfg.readmit_after as f64),
+                ),
+                (
+                    "dropped_deadline_post_admission",
+                    json::num(self
+                        .dropped_deadline
+                        .load(Ordering::Relaxed)
+                        as f64),
+                ),
+                (
+                    "inflight",
+                    json::num(
+                        self.registry.lock().unwrap().len() as f64
                     ),
-                ]),
-            ),
-            (
-                "router",
-                json::obj(vec![
-                    (
-                        "placement",
-                        json::s(self.cfg.placement.as_str()),
+                ),
+                (
+                    "retry_queue_depth",
+                    json::num(
+                        self.retry_queue.lock().unwrap().len() as f64,
                     ),
-                    (
-                        "engines",
-                        json::num(self.engines.len() as f64),
-                    ),
-                    (
-                        "healthy_engines",
-                        json::num(self.healthy_count() as f64),
-                    ),
-                    (
-                        "failovers",
-                        json::num(
-                            self.failovers.load(Ordering::Relaxed) as f64
-                        ),
-                    ),
-                    (
-                        "requeues",
-                        json::num(
-                            self.requeues.load(Ordering::Relaxed) as f64
-                        ),
-                    ),
-                    (
-                        "retries_exhausted",
-                        json::num(self
-                            .retries_exhausted
-                            .load(Ordering::Relaxed)
-                            as f64),
-                    ),
-                    (
-                        "readmissions",
-                        json::num(
-                            self.readmissions.load(Ordering::Relaxed)
-                                as f64,
-                        ),
-                    ),
-                    (
-                        "readmit_after",
-                        json::num(self.cfg.readmit_after as f64),
-                    ),
-                    (
-                        "dropped_deadline_post_admission",
-                        json::num(self
-                            .dropped_deadline
-                            .load(Ordering::Relaxed)
-                            as f64),
-                    ),
-                    (
-                        "inflight",
-                        json::num(
-                            self.registry.lock().unwrap().len() as f64
-                        ),
-                    ),
-                    (
-                        "retry_queue_depth",
-                        json::num(
-                            self.retry_queue.lock().unwrap().len() as f64,
-                        ),
-                    ),
-                ]),
-            ),
-        ])
+                ),
+            ]),
+        ));
+        json::obj(doc)
     }
 }
 
@@ -1436,6 +1487,17 @@ where
     let fleet = match (cfg.degrade_k, cfg.expert_k_max) {
         (Some(d), Some(k)) => fleet.with_degrade_k(d, k),
         _ => fleet,
+    };
+    let fleet = match cfg.prefix_cache {
+        Some(budget) => {
+            fleet.with_prefix_cache(PrefixCache::shared(budget))
+        }
+        None => fleet,
+    };
+    let fleet = if cfg.speculate > 0 {
+        fleet.with_speculate(cfg.speculate)
+    } else {
+        fleet
     };
     let telemetry = if cfg.telemetry {
         Telemetry::new(fleet.clock().clone())

@@ -22,6 +22,7 @@ use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{DropReason, GenRequest, StreamEvent};
 use crate::serving::journal::Journal;
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::telemetry::Telemetry;
 
 /// Admission ordering policy.
@@ -129,6 +130,33 @@ pub struct KTransition {
     pub depth: usize,
     /// Deadline drops since the previous evaluation.
     pub drop_delta: u64,
+}
+
+/// Accept-rate floor: a decision window whose rate falls below this
+/// steps the effective speculative K down by one (wasted draft work —
+/// each rejected token cost a share of a verify dispatch plus a
+/// possible rollback commit).
+pub const SPEC_TUNE_LO: f64 = 0.4;
+/// Accept-rate ceiling: a window above this steps K back up toward the
+/// CLI `--speculate K` (the drafter is predicting well; longer drafts
+/// amortize more dispatches).
+pub const SPEC_TUNE_HI: f64 = 0.75;
+/// Drafted tokens one autotune decision integrates over — windows
+/// shorter than this carry too much sampling noise to act on.
+pub const SPEC_TUNE_WINDOW: u64 = 64;
+
+/// One effective-speculative-K transition decided by
+/// [`Scheduler::eval_spec`].  The driver applies `to` to its backend
+/// via [`crate::serving::EngineBackend::set_speculate`]; the decision
+/// is already journaled (`spec_k_lower` / `spec_k_raise`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecTransition {
+    pub from: usize,
+    pub to: usize,
+    /// Accept rate of the decision window.
+    pub accept_rate: f64,
+    /// Drafted tokens the window integrated.
+    pub drafted: u64,
 }
 
 /// Why an enqueue was refused (the HTTP layer maps this to a status).
@@ -290,12 +318,27 @@ struct DegradeState {
     last_deadline_drops: u64,
 }
 
+/// Mutable speculative-K autotune state (behind the scheduler lock):
+/// a rolling (drafted, accepted) window fed by the drivers'
+/// [`crate::serving::EngineBackend::take_spec_feedback`] drains.
+#[derive(Debug)]
+struct SpecTuneState {
+    /// Effective draft length drivers should run at (≤ the CLI K).
+    target: usize,
+    /// Drafted tokens accumulated since the last closed window.
+    drafted: u64,
+    accepted: u64,
+    lowers: u64,
+    raises: u64,
+}
+
 #[derive(Debug)]
 struct Inner {
     queue: VecDeque<QueuedRequest>,
     next_id: u64,
     metrics: SchedMetrics,
     degrade: DegradeState,
+    spec_tune: SpecTuneState,
     /// set by [`Scheduler::drain_shutdown`]; enqueues after it would
     /// never be consumed, so they are rejected under the same lock
     draining: bool,
@@ -330,6 +373,12 @@ pub struct Scheduler {
     /// Compile-time expert top-k ceiling from the artifact manifest
     /// (0 = unknown / non-MoE: adaptive k disabled, no k gauges).
     expert_k_max: AtomicUsize,
+    /// Fleet-shared prefix cache: the shortest-prompt policy prices a
+    /// prompt whose prefix is cached at its *residual* chunk count
+    /// (side-effect-free [`PrefixCache::peek`] probes, so admission
+    /// ordering never perturbs hit/miss counters or LRU order).
+    /// `None` costs every prompt cold.
+    prefix_cache: Mutex<Option<Arc<PrefixCache>>>,
     /// Decision recorder (the disabled no-op journal in production).
     journal: Arc<Journal>,
     /// Request-lifecycle span recorder (always-on in the server/fleet
@@ -351,6 +400,7 @@ impl Scheduler {
             speculate: AtomicUsize::new(0),
             degrade: None,
             expert_k_max: AtomicUsize::new(0),
+            prefix_cache: Mutex::new(None),
             journal: Arc::new(Journal::disabled(clock.clone())),
             telemetry: Arc::new(Telemetry::disabled(clock.clone())),
             clock,
@@ -363,6 +413,13 @@ impl Scheduler {
                     degrades: 0,
                     restores: 0,
                     last_deadline_drops: 0,
+                },
+                spec_tune: SpecTuneState {
+                    target: 0,
+                    drafted: 0,
+                    accepted: 0,
+                    lowers: 0,
+                    raises: 0,
                 },
                 draining: false,
             }),
@@ -417,11 +474,107 @@ impl Scheduler {
     /// behavior).
     pub fn with_speculate(self, k: usize) -> Self {
         self.speculate.store(k, Ordering::Relaxed);
+        // the autotune controller starts at the CLI ceiling (full
+        // draft length until the live accept rate argues otherwise)
+        self.inner.lock().unwrap().spec_tune.target = k;
         self
     }
 
     pub fn speculate(&self) -> usize {
         self.speculate.load(Ordering::Relaxed)
+    }
+
+    /// Cost cache-hit prompts at their residual chunk count (builder
+    /// form of [`Scheduler::set_prefix_cache`]).
+    pub fn with_prefix_cache(self, cache: Arc<PrefixCache>) -> Self {
+        self.set_prefix_cache(cache);
+        self
+    }
+
+    /// Attach the fleet-shared prefix cache after construction (the
+    /// fleet arms its scheduler and every engine from the same `Arc`).
+    pub fn set_prefix_cache(&self, cache: Arc<PrefixCache>) {
+        *self.prefix_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// Fold the per-window (drafted, accepted) speculative feedback a
+    /// driver drained from its backend into the autotune window.
+    pub fn observe_spec(&self, drafted: u64, accepted: u64) {
+        if drafted == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.spec_tune.drafted += drafted;
+        inner.spec_tune.accepted += accepted;
+    }
+
+    /// Effective speculative draft length drivers should run at: the
+    /// CLI `--speculate K` adjusted by the accept-rate autotune (0 when
+    /// the fleet isn't speculating at all).
+    pub fn target_speculate(&self) -> usize {
+        let k = self.speculate();
+        if k == 0 {
+            return 0;
+        }
+        self.inner.lock().unwrap().spec_tune.target.clamp(1, k)
+    }
+
+    /// Evaluate the speculative-K autotune hysteresis once (the driver
+    /// calls this every loop iteration, after feeding
+    /// [`Scheduler::observe_spec`]).  A decision closes only when the
+    /// window holds at least [`SPEC_TUNE_WINDOW`] drafted tokens; its
+    /// accept rate below [`SPEC_TUNE_LO`] steps the effective K down by
+    /// one (floor 1), above [`SPEC_TUNE_HI`] steps it back up toward
+    /// the CLI K, and the band between holds — so a borderline drafter
+    /// never flaps K every iteration.  Returns the transition when the
+    /// target changed; the decision is already journaled
+    /// (`spec_k_lower` / `spec_k_raise`).
+    pub fn eval_spec(&self) -> Option<SpecTransition> {
+        let k_cli = self.speculate();
+        if k_cli == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let st = &mut inner.spec_tune;
+        if st.drafted < SPEC_TUNE_WINDOW {
+            return None;
+        }
+        let drafted = st.drafted;
+        let rate = st.accepted as f64 / st.drafted as f64;
+        // the window is consumed by the decision either way (holds
+        // included) — stale acceptance must not dilute the next one
+        st.drafted = 0;
+        st.accepted = 0;
+        let from = st.target.clamp(1, k_cli);
+        let to = if rate < SPEC_TUNE_LO {
+            (from - 1).max(1)
+        } else if rate > SPEC_TUNE_HI {
+            (from + 1).min(k_cli)
+        } else {
+            from
+        };
+        if to == from {
+            return None;
+        }
+        st.target = to;
+        let event = if to < from {
+            st.lowers += 1;
+            "spec_k_lower"
+        } else {
+            st.raises += 1;
+            "spec_k_raise"
+        };
+        drop(inner);
+        self.journal.record(
+            event,
+            vec![
+                ("from", json::num(from as f64)),
+                ("to", json::num(to as f64)),
+                ("accept_rate", json::num(rate)),
+                ("drafted", json::num(drafted as f64)),
+            ],
+        );
+        Some(SpecTransition { from, to, accept_rate: rate, drafted })
     }
 
     /// Enable adaptive expert top-k under load.  `k_max` is the
@@ -553,6 +706,23 @@ impl Scheduler {
         prompt_len.div_ceil(self.prefill_chunk())
     }
 
+    /// Admission cost of a *specific* prompt, folding in the prefix
+    /// cache when one is armed: a prompt whose longest cached prefix
+    /// covers `h` tokens costs ⌈(len−h)/C⌉ + 1 (residual chunks plus
+    /// the restore dispatch) instead of ⌈len/C⌉.  The probe is the
+    /// side-effect-free [`PrefixCache::peek`], so costing a queue full
+    /// of candidates touches neither hit/miss counters nor LRU order.
+    pub fn prompt_cost_cached(&self, prompt: &[i32]) -> usize {
+        if let Some(cache) = self.prefix_cache.lock().unwrap().as_ref() {
+            let c = self.prefill_chunk();
+            let hit = cache.peek(prompt, c);
+            if hit > 0 {
+                return (prompt.len() - hit).div_ceil(c) + 1;
+            }
+        }
+        self.prompt_cost(prompt.len())
+    }
+
     /// Dispatch cost of a whole request under the shortest-prompt
     /// policy.  Prefill chunks as in [`Scheduler::prompt_cost`]; on a
     /// speculating fleet (`--speculate K`) the decode budget adds its
@@ -569,6 +739,23 @@ impl Scheduler {
             0
         };
         self.prompt_cost(prompt_len) + decode
+    }
+
+    /// [`request_cost`](Self::request_cost) with the actual prompt
+    /// tokens, so the prefix-cache residual discount applies — the
+    /// form the shortest-prompt policy orders the queue by.
+    pub fn request_cost_cached(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> usize {
+        let spec = self.speculate();
+        let decode = if spec > 0 {
+            2 * max_new.div_ceil(spec + 1)
+        } else {
+            0
+        };
+        self.prompt_cost_cached(prompt) + decode
     }
 
     /// Enqueue a request, or reject it synchronously when the queue is
@@ -692,8 +879,8 @@ impl Scheduler {
                 Policy::ShortestPrompt => {
                     let mut best: Option<(usize, usize)> = None;
                     for (i, q) in inner.queue.iter().enumerate() {
-                        let cost = self.request_cost(
-                            q.req.prompt.len(),
+                        let cost = self.request_cost_cached(
+                            &q.req.prompt,
                             q.req.max_new_tokens,
                         );
                         if best.is_none_or(|(_, b)| cost < b) {
@@ -808,6 +995,13 @@ impl Scheduler {
         let spec = self.speculate();
         if spec > 0 {
             fields.push(("speculate", json::num(spec as f64)));
+            let st = &inner.spec_tune;
+            fields.push((
+                "spec_k_target",
+                json::num(st.target.clamp(1, spec) as f64),
+            ));
+            fields.push(("spec_k_lowers", json::num(st.lowers as f64)));
+            fields.push(("spec_k_raises", json::num(st.raises as f64)));
         }
         let k_max = self.expert_k_max.load(Ordering::Relaxed);
         if k_max > 0 {
@@ -914,6 +1108,46 @@ mod tests {
         assert_eq!(s.prompt_cost(17), 17);
         s.observe_prefill_chunk(8);
         assert_eq!(s.prompt_cost(17), 17);
+    }
+
+    #[test]
+    fn shortest_prompt_costs_cache_hits_at_the_residual() {
+        // C=4, an 8-token prefix snapshot cached: a 20-token prompt
+        // sharing it costs 3 residual chunks + 1 restore dispatch = 4,
+        // beating an uncached 17-token prompt (5 chunks) that plain
+        // length ordering would admit first
+        let cache = PrefixCache::shared(1 << 20);
+        let s = Scheduler::new(8, Policy::ShortestPrompt)
+            .with_prefill_chunk(4)
+            .with_prefix_cache(cache.clone());
+        let prefix: Vec<i32> = (1..=8).collect();
+        assert!(cache.insert_weighted(&prefix, Vec::new(), 1024));
+        let mut long = prefix.clone();
+        long.extend(9..=20);
+        assert_eq!(s.prompt_cost(long.len()), 5);
+        assert_eq!(s.prompt_cost_cached(&long), 4);
+        // an uncached prompt of equal length stays at the cold cost
+        let cold: Vec<i32> = (100..120).collect();
+        assert_eq!(s.prompt_cost_cached(&cold), 5);
+        let mk = |prompt: Vec<i32>| GenRequest {
+            prompt,
+            max_new_tokens: 4,
+            sampler: Sampler::greedy(),
+            ..Default::default()
+        };
+        let mut held = Vec::new();
+        let (tx, rx) = chan();
+        held.push(rx);
+        let uncached =
+            s.enqueue(mk((100..117).collect()), None, tx).unwrap();
+        let (tx, rx) = chan();
+        held.push(rx);
+        let cached = s.enqueue(mk(long), None, tx).unwrap();
+        let now = Instant::now();
+        assert_eq!(s.take_next(now).unwrap().id, cached);
+        assert_eq!(s.take_next(now).unwrap().id, uncached);
+        // ordering probes are peek-only: no hit/miss counter movement
+        assert_eq!(cache.hit_miss(), (0, 0));
     }
 
     #[test]
@@ -1247,6 +1481,56 @@ mod tests {
                 "{key}"
             );
         }
+    }
+
+    #[test]
+    fn spec_autotune_hysteresis_on_accept_rate() {
+        let s = Scheduler::new(8, Policy::Fifo).with_speculate(3);
+        assert_eq!(s.target_speculate(), 3);
+        // a sub-window of feedback decides nothing (and is retained)
+        s.observe_spec(SPEC_TUNE_WINDOW / 2, 0);
+        assert!(s.eval_spec().is_none());
+        // the window fills with poor acceptance: K steps down by one
+        s.observe_spec(SPEC_TUNE_WINDOW, 0);
+        let t = s.eval_spec().unwrap();
+        assert_eq!((t.from, t.to), (3, 2));
+        assert!(t.accept_rate < SPEC_TUNE_LO);
+        assert_eq!(s.target_speculate(), 2);
+        // mid-band acceptance holds — the hysteresis band, no flapping
+        s.observe_spec(SPEC_TUNE_WINDOW, SPEC_TUNE_WINDOW / 2);
+        assert!(s.eval_spec().is_none());
+        assert_eq!(s.target_speculate(), 2);
+        // sustained high acceptance raises K back toward the CLI K...
+        s.observe_spec(SPEC_TUNE_WINDOW, SPEC_TUNE_WINDOW);
+        let t = s.eval_spec().unwrap();
+        assert_eq!((t.from, t.to), (2, 3));
+        // ...but never above it
+        s.observe_spec(SPEC_TUNE_WINDOW, SPEC_TUNE_WINDOW);
+        assert!(s.eval_spec().is_none());
+        // and never below 1 on the way down
+        for _ in 0..5 {
+            s.observe_spec(SPEC_TUNE_WINDOW, 0);
+            let _ = s.eval_spec();
+        }
+        assert_eq!(s.target_speculate(), 1);
+        let m = s.metrics_json();
+        assert_eq!(
+            m.get("spec_k_target").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert!(
+            m.get("spec_k_lowers").unwrap().as_f64().unwrap() >= 2.0
+        );
+        assert_eq!(
+            m.get("spec_k_raises").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        // a non-speculating fleet has no controller and no gauges
+        let off = Scheduler::new(8, Policy::Fifo);
+        off.observe_spec(10 * SPEC_TUNE_WINDOW, 0);
+        assert!(off.eval_spec().is_none());
+        assert_eq!(off.target_speculate(), 0);
+        assert!(off.metrics_json().opt("spec_k_target").is_none());
     }
 
     #[test]

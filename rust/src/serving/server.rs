@@ -37,6 +37,7 @@ use crate::error::{Error, Result};
 use crate::json::{self, Json};
 use crate::serving::clock::{Clock, SharedClock, WallClock};
 use crate::serving::engine::{EngineBackend, GenRequest, StreamEvent};
+use crate::serving::prefix_cache::PrefixCache;
 use crate::serving::sampler::Sampler;
 use crate::serving::scheduler::{DegradeCfg, Policy, Rejection, Scheduler};
 use crate::serving::telemetry::{self, Telemetry};
@@ -100,6 +101,11 @@ pub struct ServerConfig {
     /// config time; flows into the scheduler's shortest-prompt cost
     /// model, and the engine backend is armed by the caller.
     pub speculate: usize,
+    /// Prefix-cache byte budget (`--prefix-cache BYTES`; `None` = off).
+    /// Post-prefill lane snapshots are kept keyed by a content hash of
+    /// the chunk-aligned token prefix; admissions that share a cached
+    /// prefix skip straight to the residual tail.
+    pub prefix_cache: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -121,6 +127,7 @@ impl Default for ServerConfig {
             expert_k_max: None,
             degrade_k: None,
             speculate: 0,
+            prefix_cache: None,
         }
     }
 }
@@ -503,6 +510,10 @@ struct Shared {
     started: Instant,
     clock: SharedClock,
     telemetry: Arc<Telemetry>,
+    /// Shared post-prefill snapshot cache (`--prefix-cache BYTES`).
+    /// The driver arms its backend with a clone; `/metrics` reads the
+    /// global entry/byte/eviction state from here.
+    prefix_cache: Option<Arc<PrefixCache>>,
 }
 
 impl ServeState for Shared {
@@ -582,6 +593,12 @@ impl Driver {
         if let Some(k) = backend.expert_k_max() {
             sh.sched.observe_expert_k_max(k);
         }
+        // arm the shared prefix cache: the backend snapshots lanes on
+        // chunk boundaries and seeds cache-hit admissions from them
+        // (Engine no-ops if the artifact lacks the snapshot programs)
+        if let Some(cache) = sh.prefix_cache.clone() {
+            backend.set_prefix_cache(cache);
+        }
         self.publish(backend);
         let mut last_publish = sh.clock.now();
         while !sh.shutdown.load(Ordering::Relaxed) {
@@ -597,6 +614,15 @@ impl Driver {
             sh.sched.eval_degrade();
             if let Some(k) = sh.sched.target_expert_k() {
                 backend.set_expert_k(k);
+            }
+            // speculative-K autotune: feed the live accept-rate window,
+            // evaluate the hysteresis (journals spec_k_lower/raise),
+            // and run the backend at the current target — same
+            // target-not-transition discipline as adaptive expert-k
+            let (drafted, accepted) = backend.take_spec_feedback();
+            sh.sched.observe_spec(drafted, accepted);
+            if sh.sched.eval_spec().is_some() {
+                backend.set_speculate(sh.sched.target_speculate());
             }
             while backend.free_lanes() > 0 {
                 match sh.sched.take_next(now) {
@@ -662,6 +688,11 @@ where
         (Some(d), Some(k)) => sched.with_degrade_k(d, k),
         _ => sched,
     };
+    let prefix_cache = cfg.prefix_cache.map(PrefixCache::shared);
+    let sched = match &prefix_cache {
+        Some(c) => sched.with_prefix_cache(c.clone()),
+        None => sched,
+    };
     let shared = Arc::new(Shared {
         sched,
         cfg,
@@ -671,6 +702,7 @@ where
         started: clock.now(),
         clock,
         telemetry,
+        prefix_cache,
     });
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {
@@ -836,30 +868,34 @@ fn metrics_document(sh: &Shared) -> Json {
             .map(|(k, v)| (k.clone(), json::num(*v)))
             .collect(),
     );
-    json::obj(vec![
+    let mut doc = vec![
         ("engine", engine),
         ("experts", sh.telemetry.experts_json()),
         ("scheduler", sh.sched.metrics_json()),
         ("stages", sh.telemetry.stages_json()),
-        (
-            "server",
-            json::obj(vec![
-                (
-                    "uptime_s",
-                    json::num(
-                        sh.clock
-                            .now()
-                            .duration_since(sh.started)
-                            .as_secs_f64(),
-                    ),
+    ];
+    if let Some(cache) = &sh.prefix_cache {
+        doc.push(("prefix_cache", cache.metrics_json()));
+    }
+    doc.push((
+        "server",
+        json::obj(vec![
+            (
+                "uptime_s",
+                json::num(
+                    sh.clock
+                        .now()
+                        .duration_since(sh.started)
+                        .as_secs_f64(),
                 ),
-                (
-                    "driver_alive",
-                    Json::Bool(!sh.driver_dead.load(Ordering::Relaxed)),
-                ),
-            ]),
-        ),
-    ])
+            ),
+            (
+                "driver_alive",
+                Json::Bool(!sh.driver_dead.load(Ordering::Relaxed)),
+            ),
+        ]),
+    ));
+    json::obj(doc)
 }
 
 fn handle_completion<S: ServeState>(

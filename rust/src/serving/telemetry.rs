@@ -919,6 +919,30 @@ pub fn render_prom(doc: &Json) -> String {
     if let Some(v) = doc.opt("stages") {
         put_section(&mut reg, "sigma_moe_stage", &[], v);
     }
+    if let Some(v) = doc.opt("prefix_cache") {
+        // the shared cache's document section: scalar counters flatten
+        // as usual, the per-prompt-length hit/miss buckets become
+        // labeled families
+        put_section(&mut reg, "sigma_moe_prefix_cache", &[], v);
+        if let Some(buckets) = v.opt("buckets").and_then(|b| b.as_obj().ok())
+        {
+            for (bucket, row) in buckets {
+                let labels = vec![("prompt_len", bucket.clone())];
+                for key in ["hits", "misses"] {
+                    if let Some(n) =
+                        row.opt(key).and_then(|n| n.as_f64().ok())
+                    {
+                        reg.put(
+                            &format!("sigma_moe_prefix_cache_bucket_{key}"),
+                            &label_set(&labels),
+                            "counter",
+                            n,
+                        );
+                    }
+                }
+            }
+        }
+    }
     if let Some(v) = doc.opt("experts") {
         if let Some(u) = v.opt("unavailable").and_then(|u| u.as_f64().ok())
         {
@@ -1548,6 +1572,47 @@ mod tests {
         assert!(
             validate_prom(&plain, &["sigma_moe_engine_spec_"]).is_err(),
             "the required-prefix gate must fail closed without speculation"
+        );
+    }
+
+    #[test]
+    fn prom_rendering_exposes_prefix_cache_families() {
+        // the shared cache's document section renders as the
+        // `sigma_moe_prefix_cache_*` families — scalars as gauges, the
+        // per-prompt-length buckets as labeled counters — and a
+        // cache-less document exposes none of them (absent, not zero)
+        use crate::serving::PrefixCache;
+        let cache = PrefixCache::new(1 << 20);
+        let prompt: Vec<i32> = (0..12).collect();
+        assert!(cache.probe(&prompt, 4).is_none()); // cold miss
+        assert!(cache.insert(&prompt[..8], vec![0.5f32; 16]));
+        assert!(cache.probe(&prompt, 4).is_some()); // warm hit
+        let doc = json::obj(vec![("prefix_cache", cache.metrics_json())]);
+        let text = render_prom(&doc);
+        for needle in [
+            "sigma_moe_prefix_cache_budget_bytes 1048576",
+            "sigma_moe_prefix_cache_entries 1",
+            "sigma_moe_prefix_cache_hits 1",
+            "sigma_moe_prefix_cache_misses 1",
+            "sigma_moe_prefix_cache_hit_rate 0.5",
+            "sigma_moe_prefix_cache_bucket_hits{prompt_len=",
+            "sigma_moe_prefix_cache_bucket_misses{prompt_len=",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // the CI smoke gates on this prefix being present AND populated
+        validate_prom(&text, &["sigma_moe_prefix_cache_"]).unwrap();
+        let cold = render_prom(&json::obj(vec![(
+            "scheduler",
+            json::obj(vec![("depth", json::num(0.0))]),
+        )]));
+        assert!(
+            !cold.contains("prefix_cache"),
+            "cache-less documents must omit the families"
+        );
+        assert!(
+            validate_prom(&cold, &["sigma_moe_prefix_cache_"]).is_err(),
+            "the required-prefix gate must fail closed without the cache"
         );
     }
 

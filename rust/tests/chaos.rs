@@ -33,6 +33,7 @@ fn storm_cfg(seed: u64) -> ChaosCfg {
         storm: true,
         degrade: None,
         speculate: 0,
+        prefix_cache: None,
     }
 }
 

@@ -594,3 +594,61 @@ fn loadgen_dry_run_writes_a_parsable_report() {
     assert_eq!(sched.get("completed").unwrap().as_usize().unwrap(), 12);
     let _ = std::fs::remove_file(&out);
 }
+
+#[test]
+fn loadgen_dry_run_with_prefix_cache_reports_hits_end_to_end() {
+    // shared-prefix workload over an armed mock fleet: the report row
+    // carries the cache columns, the embedded metrics document carries
+    // the shared-cache section, and the validated prom scrape (inside
+    // dry_run_with_prom) proves both new families render populated
+    let cfg = LoadgenCfg {
+        requests: 12,
+        rps: 50.0,
+        prompt_len: (16, 32),
+        prompt_dist: loadgen::PromptDist::SharedPrefix,
+        shared_prefix_overlap: 0.5,
+        max_new: (2, 4),
+        vocab: 64,
+        stream_fraction: 1.0, // every request reports a TTFT
+        prefill_chunk: 8,
+        prefix_cache: Some(1 << 20),
+        seed: 7,
+        timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let (row, prom) =
+        loadgen::dry_run_with_prom(&cfg, 4, 1).expect("armed dry run");
+    assert_eq!(row.get("ok").unwrap().as_usize().unwrap(), 12);
+    assert_eq!(
+        row.get("prefix_cache_budget_bytes").unwrap().as_f64().unwrap(),
+        (1u64 << 20) as f64
+    );
+    // the 16-token shared prefix spans two chunk-8 boundaries, so the
+    // arrival-ordered client prediction sees repeats
+    assert!(
+        row.get("prefix_cache_predicted_hit_rate")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            > 0.0
+    );
+    for col in ["ttft_cache_hit", "ttft_cache_miss"] {
+        row.get(col).unwrap_or_else(|_| panic!("missing column {col}"));
+    }
+    // authoritative server-side counters: every admitted prompt probed,
+    // and at 50 rps the first prompt's snapshot lands long before the
+    // next arrival, so at least one later prompt restored from it
+    let cache =
+        row.get("server_metrics").unwrap().get("prefix_cache").unwrap();
+    let hits = cache.get("hits").unwrap().as_f64().unwrap();
+    let misses = cache.get("misses").unwrap().as_f64().unwrap();
+    assert!(hits >= 1.0, "no cache hits: {cache:?}");
+    assert_eq!(hits + misses, 12.0);
+    assert!(
+        row.get("prefix_cache_hit_rate").unwrap().as_f64().unwrap() > 0.0
+    );
+    assert!(cache.get("bytes").unwrap().as_f64().unwrap() > 0.0);
+    // both exposition families made it through the renderer
+    assert!(prom.contains("sigma_moe_prefix_cache_hits"));
+    assert!(prom.contains("sigma_moe_engine_prefix_cache_hits"));
+}
